@@ -1,0 +1,171 @@
+"""AOT pipeline: lower every variant to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per variant we emit:
+  <name>.step.hlo.txt    (train..., frozen..., x, target, mask) -> (loss, grads...)
+  <name>.fwd.hlo.txt     (train..., frozen..., x) -> logits
+  <name>.decode.hlo.txt  (params..., token, conv_st, ssm_st) -> (logits, st')
+  <name>.params.bin      f32-LE initial values, train-then-frozen order
+plus a single artifacts/manifest.json describing all of it for the Rust
+runtime (which is fully layout-agnostic).
+
+Usage:  python -m compile.aot --out ../artifacts [--filter mamba1_xs]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model as model_mod
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_of(arr):
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def export_variant(v, outdir):
+    spec, peft = v["spec"], v["peft"]
+    B, L = v["B"], v["L"]
+    params, trainable = model_mod.init_model(0, spec, peft)
+    train = {k: params[k] for k in trainable}
+    frozen = {k: v2 for k, v2 in params.items() if k not in train}
+    tnames = sorted(train)
+    fnames = sorted(frozen)
+
+    if spec.is_reg:
+        x_s = jax.ShapeDtypeStruct((B, L, spec.d_model), jnp.float32)
+        t_s = jax.ShapeDtypeStruct((B, L, spec.d_model), jnp.float32)
+    else:
+        x_s = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        t_s = jax.ShapeDtypeStruct((B, L), jnp.int32)
+    m_s = jax.ShapeDtypeStruct((B, L), jnp.float32)
+
+    step, _ = model_mod.step_fn(spec, peft, trainable)
+
+    def step_flat(*args):
+        tr = dict(zip(tnames, args[:len(tnames)]))
+        fr = dict(zip(fnames, args[len(tnames):len(tnames) + len(fnames)]))
+        x, tgt, msk = args[len(tnames) + len(fnames):]
+        loss, grads = step(tr, fr, x, tgt, msk)
+        return (loss, *[grads[n] for n in tnames])
+
+    fwd = model_mod.forward_fn(spec, peft)
+
+    def fwd_flat(*args):
+        tr = dict(zip(tnames, args[:len(tnames)]))
+        fr = dict(zip(fnames, args[len(tnames):len(tnames) + len(fnames)]))
+        return (fwd({**tr, **fr}, args[-1]),)
+
+    arg_specs = [spec_of(train[n]) for n in tnames] + \
+                [spec_of(frozen[n]) for n in fnames]
+
+    files = {}
+    step_hlo = to_hlo_text(jax.jit(step_flat).lower(*arg_specs, x_s, t_s, m_s))
+    files["step"] = f"{v['name']}.step.hlo.txt"
+    open(os.path.join(outdir, files["step"]), "w").write(step_hlo)
+
+    fwd_hlo = to_hlo_text(jax.jit(fwd_flat).lower(*arg_specs, x_s))
+    files["fwd"] = f"{v['name']}.fwd.hlo.txt"
+    open(os.path.join(outdir, files["fwd"]), "w").write(fwd_hlo)
+
+    if v["decode"]:
+        dec = model_mod.decode_fn(spec, peft)
+        anames = tnames + fnames
+
+        def dec_flat(*args):
+            p = dict(zip(anames, args[:len(anames)]))
+            token, conv_st, ssm_st = args[len(anames):]
+            return dec(p, token, conv_st, ssm_st)
+
+        tok_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+        conv_s = jax.ShapeDtypeStruct(
+            (spec.n_layer, B, spec.d_conv - 1, spec.d_inner), jnp.float32)
+        ssm_s = jax.ShapeDtypeStruct(
+            (spec.n_layer, B, spec.d_inner, spec.d_state), jnp.float32)
+        dec_hlo = to_hlo_text(jax.jit(dec_flat).lower(*arg_specs, tok_s,
+                                                      conv_s, ssm_s))
+        files["decode"] = f"{v['name']}.decode.hlo.txt"
+        open(os.path.join(outdir, files["decode"]), "w").write(dec_hlo)
+
+    # ---- params.bin + manifest entry ---------------------------------------
+    blob = bytearray()
+    def entry(n, src):
+        arr = np.asarray(src[n], np.float32)
+        off = len(blob)
+        blob.extend(arr.tobytes())
+        return {"name": n, "shape": list(arr.shape), "offset": off,
+                "numel": int(arr.size)}
+
+    train_meta = [entry(n, train) for n in tnames]
+    frozen_meta = [entry(n, frozen) for n in fnames]
+    bin_name = f"{v['name']}.params.bin"
+    open(os.path.join(outdir, bin_name), "wb").write(bytes(blob))
+
+    return {
+        "name": v["name"],
+        "arch": {
+            "kind": spec.kind, "vocab": spec.vocab, "d_model": spec.d_model,
+            "n_layer": spec.n_layer, "d_inner": spec.d_inner,
+            "d_state": spec.d_state, "d_conv": spec.d_conv,
+            "dt_rank": spec.dt_rank, "n_head": spec.n_head,
+            "h_add": spec.h_add,
+        },
+        "peft": {"method": peft["method"],
+                 "rank": peft.get("rank", 0),
+                 "targets": peft.get("targets", []),
+                 "n_tokens": peft.get("n_tokens", 0)},
+        "batch": {"B": B, "L": L},
+        "reg": spec.is_reg,
+        "files": files,
+        "params_bin": bin_name,
+        "train_params": train_meta,
+        "frozen_params": frozen_meta,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--filter", default="")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    vs = configs.variants()
+    if args.filter:
+        vs = [v for v in vs if args.filter in v["name"]]
+    if args.list:
+        for v in vs:
+            print(v["name"])
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    for i, v in enumerate(vs):
+        print(f"[{i + 1}/{len(vs)}] {v['name']}", flush=True)
+        entries.append(export_variant(v, args.out))
+    manifest = {"version": 1, "variants": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} variants to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Variant registry: every (architecture × PEFT) artifact the benches need.
+
+Sizes are scaled for the CPU testbed (DESIGN.md §Substitutions): the paper's
+130M–2.8B pretrained checkpoints become 0.1M–1M-param models pretrained from
+scratch by the Rust coordinator. Shapes (batch B, seq len L) are baked into
+each artifact; the manifest records them.
+"""
+
+from .ssm.common import ArchSpec
+
+# -- architecture presets ----------------------------------------------------
+ARCHS = {
+    "mamba1_xs": ArchSpec(kind="mamba1", d_model=64, n_layer=2, d_inner=128,
+                          d_state=16, d_conv=4, dt_rank=4),
+    "mamba1_s": ArchSpec(kind="mamba1", d_model=128, n_layer=4, d_inner=256,
+                         d_state=16, d_conv=4, dt_rank=8),
+    "mamba2_xs": ArchSpec(kind="mamba2", d_model=64, n_layer=2, d_inner=128,
+                          d_state=16, d_conv=4, dt_rank=4),
+    "s4reg": ArchSpec(kind="s4reg", d_model=64, n_layer=4, d_state=16),
+    "s4reg_t": ArchSpec(kind="s4reg", d_model=64, n_layer=1, d_state=4),
+    "s4lm": ArchSpec(kind="s4lm", d_model=64, n_layer=4, d_state=16),
+    "hybrid_xs": ArchSpec(kind="hybrid", d_model=64, n_layer=4, d_inner=128,
+                          d_state=16, d_conv=4, dt_rank=4, n_head=4),
+}
+
+# -- PEFT presets ------------------------------------------------------------
+PEFTS = {
+    "full": {"method": "full"},
+    "lora_lin": {"method": "lora", "targets": ["linproj"], "rank": 8, "alpha": 8},
+    "lora_ssm": {"method": "lora", "targets": ["ssm"], "rank": 8, "alpha": 8},
+    "lora_both": {"method": "lora", "targets": ["both"], "rank": 8, "alpha": 8},
+    "lora_out": {"method": "lora", "targets": ["out"], "rank": 8, "alpha": 8},
+    "dora_lin": {"method": "dora", "targets": ["linproj"], "rank": 8, "alpha": 8},
+    "dora_ssm": {"method": "dora", "targets": ["ssm"], "rank": 8, "alpha": 8},
+    "dora_both": {"method": "dora", "targets": ["both"], "rank": 8, "alpha": 8},
+    "bitfit": {"method": "bitfit"},
+    "prompt": {"method": "prompt", "n_tokens": 16},
+    "prefix": {"method": "prefix", "n_tokens": 4},
+    "initstate": {"method": "initstate"},
+    "addscan": {"method": "addscan"},
+    "sdt": {"method": "sdt"},
+    "sdtlora": {"method": "sdtlora", "rank": 4, "alpha": 4},
+    # s4-specific LoRA targets (Fig. 2: LoRA on the SSM tensors themselves)
+    "s4_lora_proj": {"method": "lora", "targets": ["s4w"], "rank": 4, "alpha": 4},
+    "s4_lora_ssm": {"method": "lora", "targets": ["s4w", "A_log", "C"],
+                    "rank": 2, "alpha": 2},
+}
+
+MAMBA1_PEFTS = ["full", "lora_lin", "lora_ssm", "lora_both", "lora_out",
+                "dora_lin", "dora_ssm", "dora_both", "bitfit", "prompt",
+                "prefix", "initstate", "addscan", "sdt", "sdtlora"]
+MAMBA2_PEFTS = ["full", "lora_lin", "lora_ssm", "sdt", "sdtlora"]
+S4REG_PEFTS = ["full", "s4_lora_proj", "s4_lora_ssm", "sdt", "sdtlora"]
+S4LM_PEFTS = ["full", "s4_lora_proj", "sdt", "sdtlora"]
+HYBRID_PEFTS = ["full", "lora_lin", "dora_lin", "bitfit", "prompt", "prefix",
+                "addscan", "sdt", "sdtlora"]
+
+
+def variants():
+    """Yield dicts {name, arch_name, spec, peft_name, peft, B, L, decode}."""
+    out = []
+
+    def add(arch, pefts, B, L, decode_for=()):
+        for p in pefts:
+            out.append(dict(
+                name=f"{arch}_{p}", arch=arch, spec=ARCHS[arch],
+                peft_name=p, peft=PEFTS[p], B=B, L=L,
+                decode=(p in decode_for)))
+
+    add("mamba1_xs", MAMBA1_PEFTS, B=8, L=128, decode_for=("full",))
+    add("mamba1_s", ["full", "sdtlora", "lora_lin"], B=8, L=192,
+        decode_for=("full",))
+    add("mamba2_xs", MAMBA2_PEFTS, B=8, L=128, decode_for=("full",))
+    add("s4reg", S4REG_PEFTS, B=4, L=200)
+    add("s4reg_t", ["full"], B=4, L=200)
+    add("s4lm", S4LM_PEFTS, B=8, L=128)
+    add("hybrid_xs", HYBRID_PEFTS, B=8, L=96)
+    return out

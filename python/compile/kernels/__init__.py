@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+from .ref import selective_scan_ref, s4_scan_ref, s4_conv_ref  # noqa: F401
+from .selective_scan import selective_scan  # noqa: F401
+from .s4_scan import s4_scan  # noqa: F401

@@ -1,0 +1,105 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels (selective_scan.py, s4_scan.py)
+are tested against, and they are differentiable by plain jax autodiff so the
+custom-VJP backward kernels can be checked against `jax.grad` of these.
+
+Shapes (batch B, length L, channels D, states H):
+  selective scan (S6, Mamba):
+      x     (B, L, D)   per-channel input
+      delta (B, L, D)   input-dependent step size (post-softplus)
+      A     (D, H)      continuous diagonal state matrix (negative real)
+      Bmat  (B, L, H)   input-dependent input-transition (shared over D)
+      C     (B, L, H)   input-dependent output map (shared over D)
+      h0    (B, D, H)   initial hidden state (zeros unless initial-state
+                        tuning / stepwise decode)
+    returns y (B, L, D), h_last (B, D, H)
+
+  S4 scan (LTI, per-channel parameters):
+      x    (B, L, D)
+      Abar (D, H)       discretized diagonal state matrix
+      Bbar (D, H)       discretized input transition
+      C    (D, H)       output map
+      h0   (B, D, H)
+    returns y (B, L, D), h_last (B, D, H)
+
+Discretization (ZOH, as in the paper Sec. 3.1):
+  Ābar = exp(Δ A);  B̄bar = Δ B   (the standard Mamba simplification of ZOH
+  for B, which the paper also adopts: B̄_t = Δ_t B_t).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, delta, A, Bmat, C, h0):
+    """Reference S6 selective scan via lax.scan over time.
+
+    Returns (y, h_last): y (B, L, D), h_last (B, D, H).
+    """
+    B_, L, D = x.shape
+    H = A.shape[1]
+    assert A.shape == (D, H)
+    assert delta.shape == (B_, L, D)
+    assert Bmat.shape == (B_, L, H)
+    assert C.shape == (B_, L, H)
+    assert h0.shape == (B_, D, H)
+
+    def step(h, inp):
+        x_t, d_t, b_t, c_t = inp          # (B,D) (B,D) (B,H) (B,H)
+        abar = jnp.exp(d_t[..., None] * A[None])          # (B, D, H)
+        bbar_x = (d_t * x_t)[..., None] * b_t[:, None, :]  # (B, D, H)
+        h = abar * h + bbar_x                              # (B, D, H)
+        y_t = jnp.einsum("bdh,bh->bd", h, c_t)             # (B, D)
+        return h, y_t
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(delta, 1, 0),
+        jnp.moveaxis(Bmat, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def s4_scan_ref(x, Abar, Bbar, C, h0):
+    """Reference LTI diagonal SSM scan (S4 after discretization).
+
+    Returns (y, h_last): y (B, L, D), h_last (B, D, H).
+    """
+    B_, L, D = x.shape
+    H = Abar.shape[1]
+    assert Abar.shape == (D, H) and Bbar.shape == (D, H) and C.shape == (D, H)
+    assert h0.shape == (B_, D, H)
+
+    def step(h, x_t):
+        h = Abar[None] * h + Bbar[None] * x_t[..., None]   # (B, D, H)
+        y_t = jnp.einsum("bdh,dh->bd", h, C)
+        return h, y_t
+
+    h_last, ys = jax.lax.scan(step, h0, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def s4_conv_ref(x, Abar, Bbar, C, h0):
+    """Alternative S4 oracle via the convolutional form (Eq. 3 of the paper).
+
+    y_n = sum_{m<=n} C Ābar^{n-m} B̄bar x_m  (+ contribution of h0).
+    Quadratic in L — used only as a second, independently-derived oracle in
+    tests (it shares no code path with s4_scan_ref).
+    """
+    B_, L, D = x.shape
+    n = jnp.arange(L)
+    # kern[l, d] = sum_h C[d,h] * Abar[d,h]^l * Bbar[d,h]
+    powers = Abar[None, :, :] ** n[:, None, None]            # (L, D, H)
+    kern = jnp.einsum("ldh,dh,dh->ld", powers, C, Bbar)      # (L, D)
+
+    idx = n[:, None] - n[None, :]                            # (L, L)
+    mask = idx >= 0
+    gath = jnp.where(mask[:, :, None], kern[jnp.clip(idx, 0), :], 0.0)  # (L,L,D)
+    y = jnp.einsum("bmd,nmd->bnd", x, gath)
+    # initial-state contribution: C Ābar^{n+1} h0
+    hpow = Abar[None, :, :] ** (n[:, None, None] + 1)        # (L, D, H)
+    y0 = jnp.einsum("bdh,ldh,dh->bld", h0, hpow, C)
+    return y + y0

@@ -1,0 +1,160 @@
+"""Layer-1 Pallas kernel: LTI diagonal SSM scan (deep S4, paper Sec. 3.1).
+
+Same kernel architecture as selective_scan.py but with time-invariant,
+per-channel (Ābar, B̄bar, C): the (TILE_D, H) parameter tiles are loaded into
+the VMEM block once per grid step and reused across all L time steps —
+exactly the data-reuse structure a TPU kernel wants (and what the
+convolutional form of S4 exploits on parallel hardware).
+
+Backward recomputes the hidden trajectory (rematerialization) like the S6
+kernel. Correctness is pinned against BOTH ref.s4_scan_ref (recurrent oracle)
+and ref.s4_conv_ref (independently-derived convolutional oracle).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .selective_scan import INTERPRET, _tile_d
+
+
+def _fwd_kernel(x_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hl_ref):
+    L = x_ref.shape[1]
+    Ab = a_ref[...]                     # (TD, H) resident across the scan
+    Bb = b_ref[...]
+    Cc = c_ref[...]
+
+    def body(t, h):
+        x_t = x_ref[0, t, :]                            # (TD,)
+        h = Ab * h + Bb * x_t[:, None]                  # (TD, H)
+        y_ref[0, t, :] = jnp.sum(h * Cc, axis=1)        # (TD,)
+        return h
+
+    hl_ref[0] = jax.lax.fori_loop(0, L, body, h0_ref[0])
+
+
+def _fwd_call(x, Abar, Bbar, C, h0):
+    B_, L, D = x.shape
+    H = Abar.shape[1]
+    TD = _tile_d(D)
+    grid = (B_, D // TD)
+    par = pl.BlockSpec((TD, H), lambda b, d: (d, 0))
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),
+            par, par, par,
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_, L, D), x.dtype),
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, Abar, Bbar, C, h0)
+
+
+def _bwd_kernel(x_ref, a_ref, b_ref, c_ref, h0_ref, gy_ref, ghl_ref,
+                dx_ref, da_ref, db_ref, dc_ref, dh0_ref, hbuf_ref):
+    """Adjoint of the LTI scan (one batch × channel-tile grid step).
+
+        λ_t = g_t C + Ābar λ_{t+1};   dx_t = Σ_h λ B̄bar
+        dĀ += λ_t ⊙ h_{t-1};  dB̄ += λ_t x_t;  dC += g_t h_t;  dh0 = Ābar λ_1
+    """
+    L = x_ref.shape[1]
+    Ab = a_ref[...]
+    Bb = b_ref[...]
+    Cc = c_ref[...]
+
+    def fwd_body(t, h):
+        h = Ab * h + Bb * x_ref[0, t, :][:, None]
+        hbuf_ref[0, t] = h
+        return h
+
+    jax.lax.fori_loop(0, L, fwd_body, h0_ref[0])
+
+    zero = jnp.zeros_like(Ab)
+
+    def bwd_body(i, carry):
+        lam, dA, dB, dC = carry
+        t = L - 1 - i
+        x_t = x_ref[0, t, :]
+        g_t = gy_ref[0, t, :]
+        h_t = hbuf_ref[0, t]
+        h_prev = jnp.where(t == 0, h0_ref[0], hbuf_ref[0, jnp.maximum(t - 1, 0)])
+        lam = lam + g_t[:, None] * Cc
+        dC = dC + g_t[:, None] * h_t
+        dx_ref[0, t, :] = jnp.sum(lam * Bb, axis=1)
+        dA = dA + lam * h_prev
+        dB = dB + lam * x_t[:, None]
+        lam = Ab * lam
+        return lam, dA, dB, dC
+
+    lam, dA, dB, dC = jax.lax.fori_loop(
+        0, L, bwd_body, (ghl_ref[0], zero, zero, zero)
+    )
+    da_ref[0] = dA
+    db_ref[0] = dB
+    dc_ref[0] = dC
+    dh0_ref[0] = lam
+
+
+def _bwd_call(x, Abar, Bbar, C, h0, gy, ghl):
+    B_, L, D = x.shape
+    H = Abar.shape[1]
+    TD = _tile_d(D)
+    grid = (B_, D // TD)
+    par = pl.BlockSpec((TD, H), lambda b, d: (d, 0))
+    pout = pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0))
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),
+            par, par, par,
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),
+            pout, pout, pout,
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, L, TD, H), lambda b, d: (b, 0, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_, L, D), x.dtype),
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),   # dA per batch
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),   # dB per batch
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),   # dC per batch
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),   # dh0
+            jax.ShapeDtypeStruct((B_, L, D, H), x.dtype),  # hbuf (discarded)
+        ],
+        interpret=INTERPRET,
+    )(x, Abar, Bbar, C, h0, gy, ghl)
+    dx, dA_b, dB_b, dC_b, dh0, _ = outs
+    return dx, jnp.sum(dA_b, 0), jnp.sum(dB_b, 0), jnp.sum(dC_b, 0), dh0
+
+
+@jax.custom_vjp
+def s4_scan(x, Abar, Bbar, C, h0):
+    """LTI diagonal SSM scan. Returns (y, h_last). See ref.s4_scan_ref."""
+    return _fwd_call(x, Abar, Bbar, C, h0)
+
+
+def _vjp_fwd(x, Abar, Bbar, C, h0):
+    out = _fwd_call(x, Abar, Bbar, C, h0)
+    return out, (x, Abar, Bbar, C, h0)
+
+
+def _vjp_bwd(res, g):
+    gy, ghl = g
+    return _bwd_call(*res, gy, ghl)
+
+
+s4_scan.defvjp(_vjp_fwd, _vjp_bwd)

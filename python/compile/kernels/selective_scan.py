@@ -1,0 +1,245 @@
+"""Layer-1 Pallas kernel: S6 selective scan (the Mamba compute hot-spot).
+
+Forward and backward are hand-written Pallas kernels joined by
+`jax.custom_vjp`, so the whole train-step graph (L2) lowers through the same
+HLO pipeline and autodiff never has to differentiate through `pallas_call`.
+
+TPU mapping of the paper's CUDA kernel (DESIGN.md §Hardware-Adaptation):
+  * grid = (B, D // TILE_D): each grid step owns a channel tile; its working
+    set — the (L, TILE_D) x/delta tiles, the (L, H) B/C tiles and the
+    (TILE_D, H) hidden-state carry — is the VMEM-resident block, expressed
+    with BlockSpecs instead of CUDA threadblock shared memory.
+  * the discretized Ābar_t = exp(Δ_t A) is (re)computed inside the scan body
+    rather than materialized as an (B, L, D, H) tensor in HBM — the same
+    memory-traffic insight as the paper's recomputation trick.
+  * the backward kernel recomputes the hidden-state trajectory into a kernel
+    buffer instead of saving it from the forward pass (activation
+    rematerialization at the kernel level).
+
+CPU execution uses interpret=True (the CPU PJRT plugin cannot run Mosaic
+custom-calls); numerics are identical, and correctness is pinned against
+ref.selective_scan_ref by pytest + hypothesis sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT target; flip to False for a real TPU build.
+
+
+def _tile_d(D: int) -> int:
+    """Channel tile: largest power-of-two divisor of D, capped at 32.
+
+    Chosen so a grid step's VMEM block (x, delta tiles (L,TILE_D), B/C tiles
+    (L,H), carry (TILE_D,H)) stays ≈O(100KB) for the shapes we export.
+    """
+    t = 1
+    while t < 32 and D % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, d_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hl_ref):
+    """One (batch, channel-tile) grid step: scan L steps over time.
+
+    Refs (leading batch block dim of size 1 squeezed by indexing [0]):
+      x_ref, d_ref : (1, L, TD)   input / step size
+      a_ref        : (TD, H)      continuous A (time-invariant)
+      b_ref, c_ref : (1, L, H)    input-dependent B_t / C_t
+      h0_ref       : (1, TD, H)   initial hidden state
+      y_ref        : (1, L, TD)   output
+      hl_ref       : (1, TD, H)   final hidden state (for decode/prefill)
+    """
+    L = x_ref.shape[1]
+    A = a_ref[...]                      # (TD, H) — stays resident all L steps
+    h_init = h0_ref[0]                  # (TD, H)
+
+    def body(t, h):
+        x_t = x_ref[0, t, :]            # (TD,)
+        d_t = d_ref[0, t, :]            # (TD,)
+        b_t = b_ref[0, t, :]            # (H,)
+        c_t = c_ref[0, t, :]            # (H,)
+        abar = jnp.exp(d_t[:, None] * A)                   # (TD, H)
+        h = abar * h + (d_t * x_t)[:, None] * b_t[None, :]  # (TD, H)
+        y_ref[0, t, :] = h @ c_t                            # (TD,)
+        return h
+
+    h_last = jax.lax.fori_loop(0, L, body, h_init)
+    hl_ref[0] = h_last
+
+
+def _fwd_call(x, delta, A, Bmat, C, h0):
+    B_, L, D = x.shape
+    H = A.shape[1]
+    TD = _tile_d(D)
+    grid = (B_, D // TD)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),   # x
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),   # delta
+            pl.BlockSpec((TD, H), lambda b, d: (d, 0)),         # A
+            pl.BlockSpec((1, L, H), lambda b, d: (b, 0, 0)),    # Bmat
+            pl.BlockSpec((1, L, H), lambda b, d: (b, 0, 0)),    # C
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),   # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),   # y
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),   # h_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_, L, D), x.dtype),
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, delta, A, Bmat, C, h0)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(x_ref, d_ref, a_ref, b_ref, c_ref, h0_ref, gy_ref, ghl_ref,
+                dx_ref, dd_ref, da_ref, db_ref, dc_ref, dh0_ref, hbuf_ref):
+    """Backward for one (batch, channel-tile) grid step.
+
+    Pass 1 recomputes the hidden trajectory h_t into hbuf (kernel-level
+    rematerialization; the forward pass saves nothing but its inputs).
+    Pass 2 runs the adjoint recurrence in reverse:
+        λ_t = g_t ⊗ C_t + Ābar_{t+1} ⊙ λ_{t+1}        (+ ghl at t = L)
+        dx_t[d]   = Δ_t[d] Σ_h λ[d,h] B_t[h]
+        dΔ_t[d]   = Σ_h λ[d,h] (A Ābar_t h_{t-1} + B_t x_t)[d,h]
+        dA[d,h]  += λ[d,h] Δ_t[d] Ābar_t[d,h] h_{t-1}[d,h]
+        dB_t[h]   = Σ_d λ[d,h] Δ_t[d] x_t[d]           (per-tile partial)
+        dC_t[h]   = Σ_d g_t[d] h_t[d,h]                (per-tile partial)
+        dh0       = Ābar_1 ⊙ λ_1
+    dB/dC are summed over channel tiles and dA over batch outside the kernel.
+    """
+    L = x_ref.shape[1]
+    A = a_ref[...]
+
+    # ---- pass 1: recompute h trajectory ------------------------------------
+    def fwd_body(t, h):
+        x_t = x_ref[0, t, :]
+        d_t = d_ref[0, t, :]
+        b_t = b_ref[0, t, :]
+        abar = jnp.exp(d_t[:, None] * A)
+        h = abar * h + (d_t * x_t)[:, None] * b_t[None, :]
+        hbuf_ref[0, t] = h
+        return h
+
+    jax.lax.fori_loop(0, L, fwd_body, h0_ref[0])
+
+    # ---- pass 2: reverse adjoint scan ---------------------------------------
+    da_init = jnp.zeros_like(A)
+    lam_init = ghl_ref[0]               # (TD, H) adjoint of h_last
+
+    def bwd_body(i, carry):
+        lam, dA = carry
+        t = L - 1 - i
+        x_t = x_ref[0, t, :]
+        d_t = d_ref[0, t, :]
+        b_t = b_ref[0, t, :]
+        c_t = c_ref[0, t, :]
+        g_t = gy_ref[0, t, :]           # (TD,)
+        h_t = hbuf_ref[0, t]            # (TD, H)
+        h_prev = jnp.where(t == 0, h0_ref[0], hbuf_ref[0, jnp.maximum(t - 1, 0)])
+
+        lam = lam + g_t[:, None] * c_t[None, :]             # (TD, H)
+        abar = jnp.exp(d_t[:, None] * A)
+        # parameter/input grads at step t
+        dc_ref[0, 0, t, :] = g_t @ h_t                       # (H,)
+        dx_ref[0, t, :] = d_t * (lam @ b_t)                  # (TD,)
+        dd_ref[0, t, :] = jnp.sum(
+            lam * (A * abar * h_prev + b_t[None, :] * x_t[:, None]), axis=1
+        )
+        db_ref[0, 0, t, :] = (d_t * x_t) @ lam               # (H,)
+        dA = dA + lam * d_t[:, None] * abar * h_prev
+        lam = abar * lam                                     # push through Ābar_t
+        return lam, dA
+
+    lam_final, dA = jax.lax.fori_loop(0, L, bwd_body, (lam_init, da_init))
+    da_ref[0] = dA
+    dh0_ref[0] = lam_final
+
+
+def _bwd_call(x, delta, A, Bmat, C, h0, gy, ghl):
+    B_, L, D = x.shape
+    H = A.shape[1]
+    TD = _tile_d(D)
+    ND = D // TD
+    grid = (B_, ND)
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),   # x
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),   # delta
+            pl.BlockSpec((TD, H), lambda b, d: (d, 0)),         # A
+            pl.BlockSpec((1, L, H), lambda b, d: (b, 0, 0)),    # Bmat
+            pl.BlockSpec((1, L, H), lambda b, d: (b, 0, 0)),    # C
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),   # h0
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),   # gy
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),   # ghl
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),       # dx
+            pl.BlockSpec((1, L, TD), lambda b, d: (b, 0, d)),       # ddelta
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),       # dA (per b)
+            pl.BlockSpec((1, 1, L, H), lambda b, d: (b, d, 0, 0)),  # dB partial
+            pl.BlockSpec((1, 1, L, H), lambda b, d: (b, d, 0, 0)),  # dC partial
+            pl.BlockSpec((1, TD, H), lambda b, d: (b, d, 0)),       # dh0
+            pl.BlockSpec((1, L, TD, H), lambda b, d: (b, 0, d, 0)),  # hbuf
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_, L, D), x.dtype),
+            jax.ShapeDtypeStruct((B_, L, D), x.dtype),
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),
+            jax.ShapeDtypeStruct((B_, ND, L, H), x.dtype),
+            jax.ShapeDtypeStruct((B_, ND, L, H), x.dtype),
+            jax.ShapeDtypeStruct((B_, D, H), x.dtype),
+            jax.ShapeDtypeStruct((B_, L, D, H), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, delta, A, Bmat, C, h0, gy, ghl)
+    dx, dd, dA_b, dB_p, dC_p, dh0, _hbuf = outs
+    dA = jnp.sum(dA_b, axis=0)          # reduce batch
+    dB = jnp.sum(dB_p, axis=1)          # reduce channel tiles -> (B, L, H)
+    dC = jnp.sum(dC_p, axis=1)
+    return dx, dd, dA, dB, dC, dh0
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp wrapper — public API
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def selective_scan(x, delta, A, Bmat, C, h0):
+    """S6 selective scan. Returns (y, h_last). See ref.selective_scan_ref."""
+    return _fwd_call(x, delta, A, Bmat, C, h0)
+
+
+def _vjp_fwd(x, delta, A, Bmat, C, h0):
+    y, hl = _fwd_call(x, delta, A, Bmat, C, h0)
+    return (y, hl), (x, delta, A, Bmat, C, h0)
+
+
+def _vjp_bwd(res, g):
+    gy, ghl = g
+    return _bwd_call(*res, gy, ghl)
+
+
+selective_scan.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def selective_scan_jit(x, delta, A, Bmat, C, h0):
+    return selective_scan(x, delta, A, Bmat, C, h0)

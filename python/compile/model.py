@@ -1,0 +1,93 @@
+"""Layer-2 assembly: (architecture, PEFT) -> pure functions for AOT export.
+
+Produces, per variant:
+  fwd(params_flat..., tokens)                     -> logits
+  step(train..., frozen..., tokens, tgt, mask)    -> (loss, grads over train)
+  decode(params..., token, conv_st, ssm_st)       -> (logits, conv_st', ssm_st')
+Parameters travel as flat lists in sorted-name order; the AOT manifest records
+the exact order/shapes so the Rust runtime is layout-agnostic.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import peft as peft_mod
+from .ssm import common as cm
+from .ssm import hybrid, s4, s6
+from .ssm.common import ArchSpec  # noqa: F401  (re-export)
+
+FORWARDS = {
+    "mamba1": s6.forward,
+    "mamba2": s6.forward,
+    "s4lm": s4.forward,
+    "s4reg": s4.forward_reg,
+    "hybrid": hybrid.forward,
+}
+
+
+def init_model(seed, spec, peft):
+    rng = jax.random.PRNGKey(seed)
+    if spec.kind in ("mamba1", "mamba2"):
+        params = s6.init_params(rng, spec)
+    elif spec.kind.startswith("s4"):
+        params = s4.init_params(rng, spec)
+    elif spec.kind == "hybrid":
+        params = hybrid.init_params(rng, spec)
+    else:
+        raise ValueError(spec.kind)
+    params, trainable = peft_mod.init_peft(jax.random.fold_in(rng, 1),
+                                           params, spec, peft)
+    return params, trainable
+
+
+def forward_fn(spec, peft):
+    fwd = FORWARDS[spec.kind]
+
+    def f(params, x):
+        eff = peft_mod.make_eff(params, peft)
+        return fwd(params, eff, spec, x)
+
+    return f
+
+
+def loss_fn(spec, peft):
+    f = forward_fn(spec, peft)
+
+    if spec.is_reg:
+        def loss(params, x, target, mask):
+            y = f(params, x)
+            # masked MSE, averaged over all tokens (paper Sec. 6.1)
+            err = (y - target) ** 2 * mask[..., None]
+            return jnp.sum(err) / jnp.maximum(jnp.sum(mask) * y.shape[-1], 1.0)
+    else:
+        def loss(params, tokens, targets, mask):
+            logits = f(params, tokens)
+            return cm.cross_entropy_loss(logits, targets, mask)
+
+    return loss
+
+
+def step_fn(spec, peft, trainable):
+    """(train_dict, frozen_dict, batch...) -> (loss, grads over train)."""
+    loss = loss_fn(spec, peft)
+    tset = set(trainable)
+
+    def step(train, frozen, x, targets, mask):
+        def inner(train):
+            params = {**frozen, **train}
+            return loss(params, x, targets, mask)
+
+        l, g = jax.value_and_grad(inner)(train)
+        return l, g
+
+    return step, tset
+
+
+def decode_fn(spec, peft):
+    assert spec.kind in ("mamba1", "mamba2")
+
+    def decode(params, token, conv_states, ssm_states):
+        eff = peft_mod.make_eff(params, peft)
+        return s6.decode_step(params, eff, spec, token, conv_states, ssm_states)
+
+    return decode

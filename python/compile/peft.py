@@ -1,0 +1,168 @@
+"""PEFT wiring (Layer 2): parameter transforms for every method in the paper.
+
+A PEFT config is a plain dict:
+    {"method": "lora", "targets": ["Win_x", "Win_z"], "rank": 8, "alpha": 8}
+Methods (paper Sec. 3.2 / 4.1):
+    full       — every parameter trainable
+    lora       — low-rank adapters  W + (α/r)·A·B  on target matrices
+    dora       — weight-decomposed LoRA:  m ⊙ (W+ΔW)/‖W+ΔW‖_col
+    bitfit     — bias terms only (conv.b, dtproj.b; s4: beta)
+    prompt     — soft prompt (M, Dm) prepended to the embedded input
+    prefix     — per-layer soft prefixes (affix-tuning; outputs dropped)
+    initstate  — per-layer trainable initial SSM state (Prop. 1 equivalent)
+    addscan    — additional-scan: extra trainable state dims (Yoshimura'25)
+    sdt        — Sparse Dimension Tuning: trainable = SSM tensors (A_log +
+                 B/C columns of xproj; s4: A_log + C); the channel/state
+                 masks of Alg. 1 are applied to GRADIENTS by the Rust
+                 coordinator, so one artifact serves any selection.
+    sdtlora    — SDT on the SSM module + LoRA on Wout (paper Sec. 6.2 setup)
+
+Target-module shorthands (resolved per architecture):
+    "linproj" → Win_x, Win_z           "out" → Wout
+    "ssm"     → xproj, dtproj.w        "both" → linproj + ssm
+LoRA naming: for weight "layers.0.Wout" the factors are
+"layers.0.Wout.lora_a" (din, r) and "layers.0.Wout.lora_b" (r, dout);
+DoRA adds "layers.0.Wout.dora_m" (dout,).
+"""
+
+import jax
+import jax.numpy as jnp
+
+TARGET_GROUPS = {
+    "linproj": ["Win_x", "Win_z"],
+    "out": ["Wout"],
+    "ssm": ["xproj", "dtproj.w"],
+    "both": ["Win_x", "Win_z", "xproj", "dtproj.w"],
+    "s4w": ["W"],
+    "s4ssm": [],  # S4 SSM tensors are tuned directly (sdt), not via LoRA here
+    "head": ["head"],
+}
+
+
+def resolve_targets(spec, peft):
+    """Expand target shorthands to concrete per-layer weight names."""
+    names = []
+    raw = peft.get("targets", [])
+    leaves = []
+    for t in raw:
+        leaves.extend(TARGET_GROUPS.get(t, [t]))
+    for i in range(spec.n_layer):
+        if spec.kind == "hybrid" and i % 2 == 1:
+            continue  # PEFT targets only the Mamba layers of the hybrid
+        for leaf in leaves:
+            if leaf in ("head",):
+                continue
+            names.append(f"layers.{i}.{leaf}")
+    if "head" in leaves:
+        names.append("head")
+    return names
+
+
+def init_peft(rng, params, spec, peft):
+    """Add PEFT parameters to `params`; return (params, trainable_names)."""
+    method = peft["method"]
+    params = dict(params)
+    ks = iter(jax.random.split(rng, 4 * max(len(params), 8)))
+    trainable = []
+
+    def add_lora(names, rank):
+        for n in names:
+            W = params[n]
+            a = 0.02 * jax.random.normal(next(ks), (W.shape[0], rank))
+            b = jnp.zeros((rank, W.shape[1]))
+            params[n + ".lora_a"] = a
+            params[n + ".lora_b"] = b
+            trainable.extend([n + ".lora_a", n + ".lora_b"])
+
+    if method == "full":
+        trainable = list(params.keys())
+    elif method == "lora":
+        add_lora(resolve_targets(spec, peft), peft.get("rank", 8))
+    elif method == "dora":
+        names = resolve_targets(spec, peft)
+        add_lora(names, peft.get("rank", 8))
+        for n in names:
+            params[n + ".dora_m"] = jnp.linalg.norm(params[n], axis=0)
+            trainable.append(n + ".dora_m")
+    elif method == "bitfit":
+        for n in params:
+            if n.endswith("conv.b") or n.endswith("dtproj.b") or n.endswith("beta"):
+                trainable.append(n)
+    elif method == "prompt":
+        M = peft.get("n_tokens", 16)
+        params["prompt"] = 0.02 * jax.random.normal(next(ks), (M, spec.d_model))
+        trainable = ["prompt"]
+    elif method == "prefix":
+        M = peft.get("n_tokens", 4)
+        for i in range(spec.n_layer):
+            if spec.kind == "hybrid" and i % 2 == 1:
+                continue
+            n = f"layers.{i}.prefix"
+            params[n] = 0.02 * jax.random.normal(next(ks), (M, spec.d_model))
+            trainable.append(n)
+    elif method == "initstate":
+        dim = spec.d_model if spec.kind.startswith("s4") else spec.d_inner
+        for i in range(spec.n_layer):
+            if spec.kind == "hybrid" and i % 2 == 1:
+                continue
+            n = f"layers.{i}.h0"
+            params[n] = jnp.zeros((dim, spec.d_state))
+            trainable.append(n)
+    elif method == "addscan":
+        Ha = spec.h_add
+        for i in range(spec.n_layer):
+            if spec.kind == "hybrid" and i % 2 == 1:
+                continue
+            pre = f"layers.{i}."
+            params[pre + "A_log_add"] = jnp.log(
+                jnp.full((spec.d_inner, Ha), float(spec.d_state + 1)))
+            params[pre + "xproj_add"] = jnp.zeros((spec.d_inner, 2 * Ha))
+            trainable.extend([pre + "A_log_add", pre + "xproj_add"])
+    elif method in ("sdt", "sdtlora"):
+        for i in range(spec.n_layer):
+            if spec.kind == "hybrid" and i % 2 == 1:
+                continue
+            pre = f"layers.{i}."
+            if spec.kind.startswith("s4"):
+                trainable.extend([pre + "A_log", pre + "C"])
+            else:
+                trainable.extend([pre + "A_log", pre + "xproj"])
+        if method == "sdtlora":
+            names = []
+            for i in range(spec.n_layer):
+                if spec.kind == "hybrid" and i % 2 == 1:
+                    continue
+                names.append(
+                    f"layers.{i}.W" if spec.kind.startswith("s4")
+                    else f"layers.{i}.Wout")
+            add_lora(names, peft.get("rank", 4))
+    else:
+        raise ValueError(f"unknown PEFT method {method!r}")
+    return params, sorted(set(trainable))
+
+
+def make_eff(params, peft):
+    """Effective-weight resolver used by all model forwards."""
+    scale = peft.get("alpha", peft.get("rank", 8)) / max(peft.get("rank", 8), 1)
+
+    def eff(name):
+        W = params[name]
+        if name + ".lora_a" in params:
+            W = W + scale * (params[name + ".lora_a"] @ params[name + ".lora_b"])
+            if name + ".dora_m" in params:
+                norm = jnp.linalg.norm(W, axis=0, keepdims=True)
+                W = params[name + ".dora_m"][None, :] * W / (norm + 1e-6)
+        return W
+
+    return eff
+
+
+def merge_lora(params, peft):
+    """Fold LoRA/DoRA factors into base weights (post-training, for decode)."""
+    eff = make_eff(params, peft)
+    merged = {}
+    for n, v in params.items():
+        if ".lora_a" in n or ".lora_b" in n or ".dora_m" in n:
+            continue
+        merged[n] = eff(n) if (n + ".lora_a") in params else v
+    return merged

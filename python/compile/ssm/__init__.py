@@ -1,0 +1,1 @@
+"""Layer-2 SSM model zoo."""

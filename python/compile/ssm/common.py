@@ -1,0 +1,102 @@
+"""Shared building blocks for the SSM model zoo (Layer 2)."""
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """Architecture hyperparameters for one model variant.
+
+    kind: "mamba1" | "mamba2" | "s4lm" | "s4reg" | "hybrid"
+    """
+
+    kind: str
+    vocab: int = 258          # 256 bytes + BOS(256) + PAD(257)
+    d_model: int = 64
+    n_layer: int = 2
+    d_inner: int = 128        # mamba expansion (2x d_model)
+    d_state: int = 16         # H
+    d_conv: int = 4           # causal conv width (mamba)
+    dt_rank: int = 4          # R (low-rank Δ projection)
+    n_head: int = 4           # hybrid attention heads
+    h_add: int = 4            # additional-scan extra states
+
+    @property
+    def is_reg(self) -> bool:
+        return self.kind == "s4reg"
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x (B, L, D), w (K, D), b (D,)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # small K: sum of K shifted slices — XLA fuses this into one loop.
+    L = x.shape[1]
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        y = y + pad[:, k:k + L, :] * w[k][None, None, :]
+    return y + b[None, None, :]
+
+
+def conv1d_step(x_t, conv_state, w, b):
+    """Single-token causal conv given the last K-1 inputs.
+
+    x_t (B, D); conv_state (B, K-1, D) holding previous inputs (oldest first).
+    Returns (y_t (B, D), new_conv_state).
+    """
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,D)
+    y = jnp.einsum("bkd,kd->bd", window, w) + b[None, :]
+    return y, window[:, 1:, :]
+
+
+def glorot(rng, shape, scale=1.0):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    fan_out = shape[-1]
+    lim = scale * (6.0 / (fan_in + fan_out)) ** 0.5
+    return jax.random.uniform(rng, shape, jnp.float32, -lim, lim)
+
+
+def init_a_log(rng, d, h):
+    """S4D-real style init: A = -(1..H) per state, shared over channels."""
+    base = jnp.tile(jnp.arange(1, h + 1, dtype=jnp.float32)[None, :], (d, 1))
+    jitter = 0.1 * jax.random.uniform(rng, (d, h))
+    return jnp.log(base + jitter)
+
+
+def init_log_dt(rng, d, lo=1e-3, hi=1e-1):
+    u = jax.random.uniform(rng, (d,))
+    return jnp.log(lo) + u * (jnp.log(hi) - jnp.log(lo))
+
+
+def cross_entropy_loss(logits, targets, mask):
+    """Masked token-level cross entropy.
+
+    logits (B, L, V); targets (B, L) int32; mask (B, L) f32.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    total = jnp.sum(mask)
+    return jnp.sum(nll * mask) / jnp.maximum(total, 1.0)
+
+
+def split_names(rng, n):
+    return list(jax.random.split(rng, n))

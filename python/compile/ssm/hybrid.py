@@ -1,0 +1,83 @@
+"""Jamba-like hybrid model: interleaved Mamba and Transformer blocks.
+
+Layer schedule: even layers are Mamba-I blocks (ssm.s6.block), odd layers are
+causal multi-head attention blocks with a gated-MLP, mirroring Jamba's
+interleave (Lieber et al., 2025) at small scale. As in the paper's Jamba
+experiments, PEFT methods target ONLY the Mamba layers; attention/MLP
+parameters stay frozen (they are still listed in the manifest so the Rust
+side can verify the frozen partition).
+
+Attention layer params (prefix "layers.{i}."):
+  attn_norm.w (Dm,), Wq/Wk/Wv/Wo (Dm, Dm),
+  mlp_norm.w (Dm,), Wmlp_up (Dm, 4Dm), Wmlp_gate (Dm, 4Dm), Wmlp_down (4Dm, Dm)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import s6
+
+
+def is_attn_layer(i: int) -> bool:
+    return i % 2 == 1
+
+
+def init_params(rng, spec):
+    # start from full mamba params, replace odd layers with attention blocks
+    p = s6.init_params(rng, spec)
+    ks = iter(jax.random.split(jax.random.fold_in(rng, 7), 8 * spec.n_layer))
+    Dm = spec.d_model
+    for i in range(spec.n_layer):
+        if not is_attn_layer(i):
+            continue
+        pre = f"layers.{i}."
+        for k in list(p):
+            if k.startswith(pre):
+                del p[k]
+        p[pre + "attn_norm.w"] = jnp.ones((Dm,))
+        for w in ("Wq", "Wk", "Wv", "Wo"):
+            p[pre + w] = cm.glorot(next(ks), (Dm, Dm))
+        p[pre + "mlp_norm.w"] = jnp.ones((Dm,))
+        p[pre + "Wmlp_up"] = cm.glorot(next(ks), (Dm, 4 * Dm))
+        p[pre + "Wmlp_gate"] = cm.glorot(next(ks), (Dm, 4 * Dm))
+        p[pre + "Wmlp_down"] = cm.glorot(next(ks), (4 * Dm, Dm))
+    return p
+
+
+def attn_block(params, pre, spec, u):
+    """Causal MHA + gated MLP, both with residuals. u (B, L, Dm)."""
+    Bsz, L, Dm = u.shape
+    nh = spec.n_head
+    hd = Dm // nh
+    x = cm.rmsnorm(u, params[pre + "attn_norm.w"])
+    q = (x @ params[pre + "Wq"]).reshape(Bsz, L, nh, hd)
+    k = (x @ params[pre + "Wk"]).reshape(Bsz, L, nh, hd)
+    v = (x @ params[pre + "Wv"]).reshape(Bsz, L, nh, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(Bsz, L, Dm)
+    u = u + o @ params[pre + "Wo"]
+    x = cm.rmsnorm(u, params[pre + "mlp_norm.w"])
+    h = cm.silu(x @ params[pre + "Wmlp_gate"]) * (x @ params[pre + "Wmlp_up"])
+    return u + h @ params[pre + "Wmlp_down"]
+
+
+def forward(params, eff, spec, tokens):
+    x = params["embed"][tokens]
+    if "prompt" in params:
+        P = params["prompt"]
+        x = jnp.concatenate([jnp.tile(P[None], (x.shape[0], 1, 1)), x], axis=1)
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        if is_attn_layer(i):
+            x = attn_block(params, pre, spec, x)
+        else:
+            x, _ = s6.block(params, eff, pre, spec, x)
+    x = cm.rmsnorm(x, params["norm_f.w"])
+    logits = x @ eff("head")
+    if "prompt" in params:
+        logits = logits[:, params["prompt"].shape[0]:, :]
+    return logits

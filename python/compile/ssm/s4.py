@@ -1,0 +1,112 @@
+"""Deep S4 layer and models (paper Eq. 4 and Sec. 6.1).
+
+A deep S4 layer is  y_t = ReLU(W · S4_t(x) + β + u ⊙ x_t)  with per-channel
+LTI SSM parameters (A diagonal, B, C, log-Δ), a position-wise linear layer
+(W, β) and a residual coefficient u.
+
+Two model flavours:
+  s4lm  — embedding → L deep-S4 layers → RMSNorm → LM head (token tasks,
+          Table 19 pixel classification analogue).
+  s4reg — raw vector-sequence regression, no embedding/head: the synthetic
+          Fig. 2 / Fig. 6 setting (1-layer target vs deeper frozen model).
+
+Parameter names (layer i prefix "layers.{i}."):
+  A_log (D, H)   A = -exp(A_log)
+  B     (D, H)   input transition (continuous)
+  C     (D, H)   output map
+  log_dt (D,)    per-channel step size
+  W     (D, D)   position-wise linear
+  beta  (D,)     bias
+  u     (D,)     residual coefficient
+s4lm adds embed (V, D), norm_f.w (D,), head (D, V).
+
+Discretization: ZOH  Ābar = exp(Δ A), B̄bar = Δ B (paper's simplification).
+PEFT hooks: eff() for W (LoRA/DoRA), "layers.{i}.h0" initial states, model
+"prompt" (s4lm), per-layer "prefix" (s4lm).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import s4_scan
+from . import common as cm
+
+
+def init_params(rng, spec, activation="relu"):
+    p = {}
+    ks = iter(jax.random.split(rng, 4 + 8 * spec.n_layer))
+    D, H = spec.d_model, spec.d_state
+    if not spec.is_reg:
+        p["embed"] = 0.02 * jax.random.normal(next(ks), (spec.vocab, D))
+        p["norm_f.w"] = jnp.ones((D,))
+        p["head"] = cm.glorot(next(ks), (D, spec.vocab))
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        p[pre + "A_log"] = cm.init_a_log(next(ks), D, H)
+        p[pre + "B"] = jax.random.normal(next(ks), (D, H)) / (H ** 0.5)
+        p[pre + "C"] = jax.random.normal(next(ks), (D, H)) / (H ** 0.5)
+        p[pre + "log_dt"] = cm.init_log_dt(next(ks), D, 1e-2, 0.5)
+        p[pre + "W"] = cm.glorot(next(ks), (D, D))
+        p[pre + "beta"] = jnp.zeros((D,))
+        p[pre + "u"] = jnp.ones((D,))
+    return p
+
+
+def discretize(params, eff, pre):
+    """ZOH-discretized per-channel (Ābar, B̄bar).
+
+    A_log/B go through eff() so LoRA-on-SSM (Fig. 2's baseline, which
+    treats the stacked diagonal A as a (D, H) matrix) composes here.
+    """
+    A = -jnp.exp(eff(pre + "A_log"))                 # (D, H)
+    dt = jnp.exp(params[pre + "log_dt"])[:, None]    # (D, 1)
+    Abar = jnp.exp(dt * A)
+    Bbar = dt * eff(pre + "B")
+    return Abar, Bbar
+
+
+def layer(params, eff, pre, spec, x, activation="relu"):
+    """One deep S4 layer. x (B, L, D) -> (B, L, D)."""
+    Bsz, L, D = x.shape
+    M = 0
+    xin = x
+    if pre + "prefix" in params:
+        P = params[pre + "prefix"]
+        M = P.shape[0]
+        xin = jnp.concatenate([jnp.tile(P[None], (Bsz, 1, 1)), xin], axis=1)
+    Abar, Bbar = discretize(params, eff, pre)
+    if pre + "h0" in params:
+        h0 = jnp.tile(params[pre + "h0"][None], (Bsz, 1, 1))
+    else:
+        h0 = jnp.zeros((Bsz, D, spec.d_state), x.dtype)
+    s4out, _ = s4_scan(xin, Abar, Bbar, eff(pre + "C"), h0)
+    y = s4out @ eff(pre + "W") + params[pre + "beta"] \
+        + params[pre + "u"][None, None, :] * xin
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    if M:
+        y = y[:, M:, :]
+    return y
+
+
+def forward_reg(params, eff, spec, x, activation="relu"):
+    """Regression model: x (B, L, D) float -> y (B, L, D)."""
+    for i in range(spec.n_layer):
+        act = activation if i + 1 < spec.n_layer else "none"
+        x = layer(params, eff, f"layers.{i}.", spec, x, act)
+    return x
+
+
+def forward(params, eff, spec, tokens):
+    """LM model: tokens (B, L) -> logits (B, L, V)."""
+    x = params["embed"][tokens]
+    if "prompt" in params:
+        P = params["prompt"]
+        x = jnp.concatenate([jnp.tile(P[None], (x.shape[0], 1, 1)), x], axis=1)
+    for i in range(spec.n_layer):
+        x = layer(params, eff, f"layers.{i}.", spec, x)
+    x = cm.rmsnorm(x, params["norm_f.w"])
+    logits = x @ eff("head")
+    if "prompt" in params:
+        logits = logits[:, params["prompt"].shape[0]:, :]
+    return logits

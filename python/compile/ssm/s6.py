@@ -1,0 +1,149 @@
+"""Mamba-I block and LM (S6 selective SSM), paper Sec. 3.1.
+
+Parameter names (layer i prefix "layers.{i}."):
+  norm.w        (Dm,)        RMSNorm weight
+  Win_x         (Dm, Di)     input projection, SSM branch  (paper W_in,x)
+  Win_z         (Dm, Di)     input projection, gate branch (paper W_in,z)
+  conv.w        (K, Di)      depthwise causal conv
+  conv.b        (Di,)
+  xproj         (Di, R+2H)   x_proj: [Δ-low | B | C] columns (paper W_Δ,↓ / W_B / W_C)
+  dtproj.w      (R, Di)      dt_proj weight (paper W_Δ,↑)
+  dtproj.b      (Di,)        Δ bias β_Δ
+  A_log         (Di, H)      A = -exp(A_log)  (Mamba-II: (Di, 1) scalar per channel)
+  Dskip         (Di,)        skip connection coefficient
+  Wout          (Di, Dm)     output projection
+Model-level: embed (V, Dm), norm_f.w (Dm,), head (Dm, V).
+
+PEFT hooks: every weight matmul goes through `eff(name)` so LoRA/DoRA factors
+apply; optional per-layer soft prefix ("layers.{i}.prefix"), initial SSM state
+("layers.{i}.h0"), additional-scan extensions ("...A_log_add", "...xproj_add"),
+and a model-level soft prompt ("prompt") are consumed here when present.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import selective_scan
+from . import common as cm
+
+
+def init_params(rng, spec):
+    p = {}
+    ks = iter(jax.random.split(rng, 8 + 12 * spec.n_layer))
+    p["embed"] = 0.02 * jax.random.normal(next(ks), (spec.vocab, spec.d_model))
+    p["norm_f.w"] = jnp.ones((spec.d_model,))
+    p["head"] = cm.glorot(next(ks), (spec.d_model, spec.vocab))
+    h = 1 if spec.kind == "mamba2" else spec.d_state
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        p[pre + "norm.w"] = jnp.ones((spec.d_model,))
+        p[pre + "Win_x"] = cm.glorot(next(ks), (spec.d_model, spec.d_inner))
+        p[pre + "Win_z"] = cm.glorot(next(ks), (spec.d_model, spec.d_inner))
+        p[pre + "conv.w"] = cm.glorot(next(ks), (spec.d_conv, spec.d_inner))
+        p[pre + "conv.b"] = jnp.zeros((spec.d_inner,))
+        p[pre + "xproj"] = cm.glorot(
+            next(ks), (spec.d_inner, spec.dt_rank + 2 * spec.d_state))
+        p[pre + "dtproj.w"] = cm.glorot(next(ks), (spec.dt_rank, spec.d_inner))
+        # bias init so softplus(β) lands in [1e-3, 1e-1] like mamba's dt init
+        p[pre + "dtproj.b"] = cm.init_log_dt(next(ks), spec.d_inner) + 0.55
+        p[pre + "A_log"] = cm.init_a_log(next(ks), spec.d_inner, h)
+        p[pre + "Dskip"] = jnp.ones((spec.d_inner,))
+        p[pre + "Wout"] = cm.glorot(next(ks), (spec.d_inner, spec.d_model))
+    return p
+
+
+def _ssm_params(params, eff, pre, spec, x):
+    """Compute (delta, A, Bmat, C) from the conv output x (B, L, Di)."""
+    R, H = spec.dt_rank, spec.d_state
+    xproj = eff(pre + "xproj")
+    dbl = x @ xproj                                   # (B, L, R+2H)
+    dt_low, Bm, C = dbl[..., :R], dbl[..., R:R + H], dbl[..., R + H:]
+    delta = cm.softplus(dt_low @ eff(pre + "dtproj.w") + params[pre + "dtproj.b"])
+    A = -jnp.exp(params[pre + "A_log"])               # (Di, H) or (Di, 1)
+    if spec.kind == "mamba2":
+        A = jnp.broadcast_to(A, (spec.d_inner, H))
+    # additional-scan: append trainable extra state dimensions (Yoshimura'25)
+    if pre + "A_log_add" in params:
+        Ha = spec.h_add
+        A = jnp.concatenate([A, -jnp.exp(params[pre + "A_log_add"])], axis=1)
+        ext = x @ params[pre + "xproj_add"]           # (B, L, 2*Ha)
+        Bm = jnp.concatenate([Bm, ext[..., :Ha]], axis=-1)
+        C = jnp.concatenate([C, ext[..., Ha:]], axis=-1)
+    return delta, A, Bm, C
+
+
+def block(params, eff, pre, spec, u, h0=None):
+    """One Mamba block. u (B, L, Dm) -> (B, L, Dm) with residual."""
+    Bsz, L, _ = u.shape
+    un = cm.rmsnorm(u, params[pre + "norm.w"])
+    # per-layer soft prefix (affix-tuning): prepend M virtual inputs, drop
+    # their outputs after the block (paper Sec. 3.2 / C.3).
+    M = 0
+    if pre + "prefix" in params:
+        P = params[pre + "prefix"]                    # (M, Dm)
+        M = P.shape[0]
+        un = jnp.concatenate([jnp.tile(P[None], (Bsz, 1, 1)), un], axis=1)
+    x = un @ eff(pre + "Win_x")
+    z = un @ eff(pre + "Win_z")
+    x = cm.silu(cm.causal_conv1d(x, params[pre + "conv.w"], params[pre + "conv.b"]))
+    delta, A, Bm, C = _ssm_params(params, eff, pre, spec, x)
+    if h0 is None:
+        if pre + "h0" in params:                      # initial-state tuning
+            h0v = jnp.tile(params[pre + "h0"][None], (Bsz, 1, 1))
+            if A.shape[1] != h0v.shape[2]:            # additional-scan pad
+                padh = A.shape[1] - h0v.shape[2]
+                h0v = jnp.pad(h0v, ((0, 0), (0, 0), (0, padh)))
+        else:
+            h0v = jnp.zeros((Bsz, spec.d_inner, A.shape[1]), x.dtype)
+    else:
+        h0v = h0
+    y, hl = selective_scan(x, delta, A, Bm, C, h0v)
+    y = y + params[pre + "Dskip"][None, None, :] * x
+    y = y * cm.silu(z)
+    out = y @ eff(pre + "Wout")
+    if M:
+        out = out[:, M:, :]
+    return u + out, hl
+
+
+def forward(params, eff, spec, tokens):
+    """tokens (B, L) int32 -> logits (B, L', V). L' = L + prompt length."""
+    x = params["embed"][tokens]                       # (B, L, Dm)
+    if "prompt" in params:                            # soft prompt tuning
+        P = params["prompt"]
+        x = jnp.concatenate([jnp.tile(P[None], (x.shape[0], 1, 1)), x], axis=1)
+    for i in range(spec.n_layer):
+        x, _ = block(params, eff, f"layers.{i}.", spec, x)
+    x = cm.rmsnorm(x, params["norm_f.w"])
+    logits = x @ eff("head")
+    if "prompt" in params:
+        logits = logits[:, params["prompt"].shape[0]:, :]
+    return logits
+
+
+def decode_step(params, eff, spec, token, conv_states, ssm_states):
+    """Single-token stepwise decode using recurrent state.
+
+    token (B,) int32; conv_states (n_layer, B, K-1, Di);
+    ssm_states (n_layer, B, Di, H). Returns (logits (B, V), states').
+    """
+    x = params["embed"][token]                        # (B, Dm)
+    new_conv, new_ssm = [], []
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        un = cm.rmsnorm(x, params[pre + "norm.w"])
+        xi = un @ eff(pre + "Win_x")
+        z = un @ eff(pre + "Win_z")
+        xi, cs = cm.conv1d_step(xi, conv_states[i], params[pre + "conv.w"],
+                                params[pre + "conv.b"])
+        xi = cm.silu(xi)
+        delta, A, Bm, C = _ssm_params(params, eff, pre, spec, xi[:, None, :])
+        y, hl = selective_scan(xi[:, None, :], delta, A, Bm, C, ssm_states[i])
+        y = y[:, 0, :] + params[pre + "Dskip"][None, :] * xi
+        y = y * cm.silu(z)
+        x = x + y @ eff(pre + "Wout")
+        new_conv.append(cs)
+        new_ssm.append(hl)
+    x = cm.rmsnorm(x, params["norm_f.w"])
+    logits = x @ eff("head")
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)

@@ -1,0 +1,54 @@
+"""AOT pipeline: HLO text export + manifest integrity for one tiny variant."""
+
+import json
+import os
+import tempfile
+
+from compile import aot, configs
+
+
+def tiny_variant():
+    from compile.ssm.common import ArchSpec
+    spec = ArchSpec(kind="mamba1", d_model=8, n_layer=1, d_inner=16,
+                    d_state=4, d_conv=4, dt_rank=2, vocab=32)
+    return dict(name="tiny_test", arch="tiny", spec=spec, peft_name="lora_lin",
+                peft={"method": "lora", "targets": ["linproj"], "rank": 2,
+                      "alpha": 2},
+                B=2, L=8, decode=True)
+
+
+def test_export_variant_writes_everything():
+    with tempfile.TemporaryDirectory() as d:
+        entry = aot.export_variant(tiny_variant(), d)
+        # files exist and HLO text parses as HLO (starts with HloModule)
+        for key in ("step", "fwd", "decode"):
+            path = os.path.join(d, entry["files"][key])
+            assert os.path.exists(path)
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), key
+        # params.bin has the right size
+        total = sum(p["numel"] for p in
+                    entry["train_params"] + entry["frozen_params"])
+        assert os.path.getsize(os.path.join(d, entry["params_bin"])) == 4 * total
+        # offsets are disjoint and ordered train-then-frozen
+        offs = [p["offset"] for p in entry["train_params"] + entry["frozen_params"]]
+        assert offs == sorted(offs)
+        # manifest entry is JSON-serializable
+        json.dumps(entry)
+
+
+def test_trainable_partition_is_exact():
+    with tempfile.TemporaryDirectory() as d:
+        entry = aot.export_variant(tiny_variant(), d)
+        train = {p["name"] for p in entry["train_params"]}
+        frozen = {p["name"] for p in entry["frozen_params"]}
+        assert train.isdisjoint(frozen)
+        assert all(".lora_" in n for n in train)
+        assert "embed" in frozen
+
+
+def test_registry_names_are_prefix_consistent():
+    for v in configs.variants():
+        assert v["name"].startswith(v["arch"]), v["name"]
+        assert v["name"].endswith(v["peft_name"]), v["name"]

@@ -1,0 +1,208 @@
+"""Numerical verification of the paper's theoretical results.
+
+- Lemma 1  (Sec. 4 / C.4): fine-tuning the input projection W_in,1 can absorb
+  any change to (W_B, W_C, W_Δ↑) via the SVD construction of Eq. (15).
+- Proposition 1 (Sec. C.3): prefix-tuning an S4 mechanism is equivalent to
+  tuning the initial hidden state; the converse holds iff M ≥ H.
+- Lemma 2  (Sec. 5.1 / D.1): a frozen single-channel S4 can match a smaller
+  target by aligning (Ā, B̄⊙C) on H* dims and zeroing the rest, with the
+  permutation-invariance the proof relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import s4_scan_ref, selective_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1
+# ---------------------------------------------------------------------------
+
+def s6_two_proj_forward(x, A, WB, WC, Wdn, Wup, Win1, Win2):
+    """S6 with two input projections (paper Sec. C.4 notation).
+
+    x (B, N, D); parameters as in Eq. (9)-(10) with β_Δ = 0.
+    """
+    u1 = x @ Win1.T                       # input for parameter computation
+    u2 = x @ Win2.T                       # input fed to the SSM
+    delta = jax.nn.softplus(u1 @ (Wdn @ Wup).T)     # (B, N, D)
+    Bmat = u1 @ WB.T                                # (B, N, H)
+    C = u1 @ WC.T                                   # (B, N, H)
+    y, _ = selective_scan_ref(u2, delta, A, Bmat, C,
+                              jnp.zeros((x.shape[0], A.shape[0], A.shape[1])))
+    return y
+
+
+def test_lemma1_svd_construction_matches_target():
+    D, H, R, B, N = 12, 3, 2, 2, 6  # D > 2H + R
+    rng = np.random.default_rng(0)
+
+    def mat(*shape, scale=0.5):
+        return jnp.asarray(scale * rng.normal(size=shape), jnp.float32)
+
+    A = -jnp.asarray(rng.uniform(0.2, 1.0, size=(D, H)), jnp.float32)
+    Wdn = mat(D, R)          # W_Δ,↓ shared
+    Win2 = mat(D, D)         # shared
+    # target parameters (starred)
+    WB_t, WC_t, Wup_t, Win1_t = mat(H, D), mat(H, D), mat(R, D), mat(D, D)
+    # frozen parameters
+    WB_f, WC_f, Wup_f = mat(H, D), mat(H, D), mat(R, D)
+
+    # construct Ŵ_in,1 via Eq. (15): W_S6 = [W_B; W_C; W_Δ↑] (2H+R, D)
+    WS6_f = jnp.concatenate([WB_f, WC_f, Wup_f], axis=0)
+    WS6_t = jnp.concatenate([WB_t, WC_t, Wup_t], axis=0)
+    U, S, Vt = jnp.linalg.svd(WS6_f, full_matrices=True)   # (k,k),(k,),(D,D)
+    k = 2 * H + R
+    target_prod = WS6_t @ Win1_t                            # (k, D)
+    top = jnp.diag(1.0 / S) @ U.T @ target_prod             # (k, D)
+    Q = jnp.zeros((D - k, D), jnp.float32)                  # arbitrary
+    Win1_hat = Vt.T @ jnp.concatenate([top, Q], axis=0)     # (D, D)
+
+    # the construction must satisfy W_S6^f Ŵ_in,1 = W_S6* W_in,1*
+    np.testing.assert_allclose(WS6_f @ Win1_hat, target_prod, rtol=2e-4, atol=2e-4)
+
+    x = mat(B, N, D, scale=1.0)
+    y_target = s6_two_proj_forward(x, A, WB_t, WC_t, Wdn, Wup_t, Win1_t, Win2)
+    y_frozen_hat = s6_two_proj_forward(x, A, WB_f, WC_f, Wdn, Wup_f, Win1_hat, Win2)
+    np.testing.assert_allclose(y_frozen_hat, y_target, rtol=2e-3, atol=2e-3)
+
+
+def test_lemma1_requires_capacity():
+    """With D < 2H+R the construction is impossible in general: W_S6^f has
+    rank ≤ D < rows, so some targets are unreachable."""
+    D, H, R = 4, 3, 2  # 2H+R = 8 > 4
+    rng = np.random.default_rng(1)
+    WS6_f = jnp.asarray(rng.normal(size=(2 * H + R, D)), jnp.float32)
+    # a random full-rank target product is (generically) outside the column
+    # space of W_S6^f ∘ (D×D matrices), which has rank ≤ D
+    target = jnp.asarray(rng.normal(size=(2 * H + R, D)), jnp.float32)
+    # least-squares best approximation still has large residual
+    sol, *_ = jnp.linalg.lstsq(WS6_f, target)
+    residual = jnp.linalg.norm(WS6_f @ sol - target)
+    assert float(residual) > 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1
+# ---------------------------------------------------------------------------
+
+def s4_single_channel(x, Abar, Bbar, C, h0):
+    """Single-channel discrete S4: x (N,), diag(Abar),Bbar,C (H,)."""
+    y, hl = s4_scan_ref(
+        x[None, :, None],
+        Abar[None, :], Bbar[None, :], C[None, :],
+        h0[None, None, :],
+    )
+    return y[0, :, 0], hl[0, 0]
+
+
+def test_prop1_prefix_equals_initial_state():
+    H, M, N = 4, 6, 10
+    rng = np.random.default_rng(2)
+    Abar = jnp.asarray(rng.uniform(0.3, 0.9, size=H), jnp.float32)
+    Bbar = jnp.asarray(rng.normal(size=H), jnp.float32)
+    C = jnp.asarray(rng.normal(size=H), jnp.float32)
+    p = jnp.asarray(rng.normal(size=M), jnp.float32)
+    x = jnp.asarray(rng.normal(size=N), jnp.float32)
+    zeros = jnp.zeros(H, jnp.float32)
+
+    # run prefix + input with zero initial state
+    y_pref, _ = s4_single_channel(jnp.concatenate([p, x]), Abar, Bbar, C, zeros)
+    y_pref = y_pref[M:]
+    # equivalent initial state: h0* = sum_m Abar^{M-m} Bbar p_m
+    h0 = jnp.zeros(H)
+    for m in range(M):
+        h0 = Abar * h0 + Bbar * p[m]
+    y_ist, _ = s4_single_channel(x, Abar, Bbar, C, h0)
+    np.testing.assert_allclose(y_pref, y_ist, rtol=1e-5, atol=1e-5)
+
+
+def test_prop1_converse_iff_m_geq_h():
+    """The reachable set of initial states is span(Abar^{M-1}B,...,B):
+    full-rank iff M >= H (distinct Abar, nonzero Bbar)."""
+    H = 4
+    rng = np.random.default_rng(3)
+    Abar = jnp.asarray(np.linspace(0.3, 0.9, H), jnp.float32)  # distinct
+    Bbar = jnp.asarray(rng.normal(size=H) + 2.0, jnp.float32)  # nonzero
+
+    def reach_rank(M):
+        cols = []
+        for m in range(M):
+            cols.append((Abar ** (M - 1 - m)) * Bbar)
+        mat = np.stack(cols, axis=1)
+        return np.linalg.matrix_rank(mat, tol=1e-5)
+
+    assert reach_rank(H - 1) < H      # M < H: not all h0 reachable
+    assert reach_rank(H) == H         # M = H: all h0 reachable
+    assert reach_rank(H + 3) == H
+
+
+def test_prop1_rank_deficient_when_assumptions_fail():
+    """Repeated Abar eigenvalues (Vandermonde zero) break the converse even
+    with M = H — exactly the paper's non-degeneracy assumption."""
+    H = 4
+    Abar = jnp.asarray([0.5, 0.5, 0.7, 0.9], jnp.float32)  # repeated
+    Bbar = jnp.ones(H, jnp.float32)
+    cols = [np.asarray((Abar ** (H - 1 - m)) * Bbar) for m in range(H)]
+    assert np.linalg.matrix_rank(np.stack(cols, 1), tol=1e-5) < H
+
+
+# ---------------------------------------------------------------------------
+# Lemma 2
+# ---------------------------------------------------------------------------
+
+def test_lemma2_alignment_achieves_equivalence():
+    """Frozen H=6 model matches a target H*=2 model by (i) permuting, (ii)
+    aligning Ā and B̄⊙C on the first H* dims, (iii) zeroing C elsewhere."""
+    H, Hs, N = 6, 2, 12
+    rng = np.random.default_rng(4)
+    # target
+    Abar_t = jnp.asarray(rng.uniform(0.3, 0.9, size=Hs), jnp.float32)
+    Bbar_t = jnp.asarray(rng.normal(size=Hs), jnp.float32)
+    C_t = jnp.asarray(rng.normal(size=Hs), jnp.float32)
+    # frozen (random)
+    Abar_f = jnp.asarray(rng.uniform(0.3, 0.9, size=H), jnp.float32)
+    Bbar_f = jnp.asarray(rng.normal(size=H) + 1.5, jnp.float32)
+    C_f = jnp.asarray(rng.normal(size=H), jnp.float32)
+
+    # updated model: align first Hs dims, zero the rest via C (B̄⊙C equivalence)
+    Abar_u = Abar_f.at[:Hs].set(Abar_t)
+    C_u = C_f.at[:Hs].set(Bbar_t * C_t / Bbar_f[:Hs])   # tune C only (B frozen)
+    C_u = C_u.at[Hs:].set(0.0)
+
+    x = jnp.asarray(rng.normal(size=N), jnp.float32)
+    y_t, _ = s4_single_channel(x, Abar_t, Bbar_t, C_t, jnp.zeros(Hs))
+    y_u, _ = s4_single_channel(x, Abar_u, Bbar_f, C_u, jnp.zeros(H))
+    np.testing.assert_allclose(y_u, y_t, rtol=1e-4, atol=1e-5)
+
+
+def test_lemma2_permutation_invariance():
+    """Permuting hidden dims leaves the S4 function unchanged (the search
+    space of Lemma 2)."""
+    H, N = 5, 9
+    rng = np.random.default_rng(5)
+    Abar = jnp.asarray(rng.uniform(0.2, 0.9, size=H), jnp.float32)
+    Bbar = jnp.asarray(rng.normal(size=H), jnp.float32)
+    C = jnp.asarray(rng.normal(size=H), jnp.float32)
+    x = jnp.asarray(rng.normal(size=N), jnp.float32)
+    perm = np.asarray([3, 1, 4, 0, 2])
+    y1, _ = s4_single_channel(x, Abar, Bbar, C, jnp.zeros(H))
+    y2, _ = s4_single_channel(x, Abar[perm], Bbar[perm], C[perm], jnp.zeros(H))
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+
+
+def test_lemma2_b_c_interchangeable():
+    """B̄ and C only enter through B̄⊙C: scaling one and inverse-scaling the
+    other is a no-op (third term of Eq. (5))."""
+    H, N = 4, 8
+    rng = np.random.default_rng(6)
+    Abar = jnp.asarray(rng.uniform(0.3, 0.9, size=H), jnp.float32)
+    Bbar = jnp.asarray(rng.normal(size=H) + 2.0, jnp.float32)
+    C = jnp.asarray(rng.normal(size=H), jnp.float32)
+    s = jnp.asarray(rng.uniform(0.5, 2.0, size=H), jnp.float32)
+    x = jnp.asarray(rng.normal(size=N), jnp.float32)
+    y1, _ = s4_single_channel(x, Abar, Bbar, C, jnp.zeros(H))
+    y2, _ = s4_single_channel(x, Abar, Bbar * s, C / s, jnp.zeros(H))
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)

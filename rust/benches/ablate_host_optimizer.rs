@@ -1,0 +1,79 @@
+//! Ablation (DESIGN.md §ablations): cost of the grads-in-graph design.
+//!
+//! We chose to compute gradients inside the AOT artifact and run
+//! masking/AdamW on the host so the PEFT engine lives in Rust. This bench
+//! measures what that costs: XLA step (device) time vs host optimizer time
+//! per training step, with and without SDT masks, at two model sizes.
+//!
+//! Expected shape: host optimizer time is a small fraction of the XLA step
+//! (grads dominate), so the design is essentially free — and the masked
+//! update is not slower than the unmasked one.
+
+use ssm_peft::bench::{time, TablePrinter};
+use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::data::{tasks, BatchIter};
+use ssm_peft::manifest::Manifest;
+use ssm_peft::optim::AdamW;
+use ssm_peft::peft::Masks;
+use ssm_peft::runtime::Engine;
+use ssm_peft::tensor::{Rng, Tensor};
+use ssm_peft::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    let p = Pipeline::new(&engine, &manifest);
+    let mut table = TablePrinter::new(&[
+        "variant", "masked", "full step (s)", "host-opt only (s)", "host share",
+    ]);
+
+    for variant in ["mamba1_xs_full", "mamba1_s_full"] {
+        let arch = arch_of(&manifest, variant)?.to_string();
+        let base = p.pretrained(&arch, 150, 0)?;
+        for masked in [false, true] {
+            let mut tr = Trainer::new(&engine, &manifest, variant,
+                                      &TrainConfig::default())?;
+            tr.load_base(&base);
+            if masked {
+                // half-random masks exercise the masking path
+                let mut rng = Rng::new(0);
+                tr.masks = ssm_peft::peft::random_masks(&tr.variant, 0.5, &mut rng);
+            } else {
+                tr.masks = Masks::none(tr.variant.train_params.len());
+            }
+            let ds = tasks::by_name("dart", 0, 64);
+            let mut rng = Rng::new(2);
+            let mut it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b,
+                                        tr.variant.batch_l);
+            let (batch, _) = it.next().unwrap();
+            let full = time("step", 1, 6, || {
+                tr.step(&batch).unwrap();
+            });
+            // host-only: AdamW update on fake grads of the same shapes
+            let mut params: Vec<Tensor> = tr.train_params.clone();
+            let grads: Vec<Tensor> =
+                params.iter().map(|t| Tensor::from_vec(&t.shape,
+                    vec![0.01; t.numel()])).collect();
+            let mut opt = AdamW::new(&params);
+            let masks = tr.masks.clone();
+            let host = time("host", 1, 6, || {
+                let mut g = grads.clone();
+                masks.apply(&mut g);
+                ssm_peft::optim::clip_global_norm(&mut g, 1.0);
+                opt.step(&mut params, &g, 1e-3);
+            });
+            table.row(vec![
+                variant.into(),
+                masked.to_string(),
+                format!("{:.4}", full.mean_s),
+                format!("{:.4}", host.mean_s),
+                format!("{:.1}%", 100.0 * host.mean_s / full.mean_s.max(1e-12)),
+            ]);
+            table.print();
+        }
+    }
+    println!("\n=== grads-in-graph vs host-optimizer ablation ===");
+    table.print();
+    table.save_csv("ablate_host_optimizer.csv");
+    Ok(())
+}

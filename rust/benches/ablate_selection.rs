@@ -1,0 +1,37 @@
+//! Ablation (DESIGN.md §ablations): SDT's dimension-selection criterion.
+//! ‖ΔĀ‖ after warmup (paper Alg. 1) vs accumulated |grad| magnitude
+//! (Song et al. 2024 style) vs random channels/states.
+//!
+//! Expected shape: ΔĀ ≈ grad-magnitude > random, motivating the paper's
+//! warmup-based criterion.
+
+use ssm_peft::bench::{bench_cfg, TablePrinter};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::manifest::Manifest;
+use ssm_peft::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    let p = Pipeline::new(&engine, &manifest);
+
+    let mut table = TablePrinter::new(&["criterion", "rte(acc)", "dart(RL)"]);
+    for crit in ["abar", "grad", "random"] {
+        let mut cells = vec![crit.to_string()];
+        for ds in ["glue/rte", "dart"] {
+            let mut cfg = bench_cfg("mamba1_xs_sdtlora", ds);
+            cfg.set("sdt.criterion", &ssm_peft::json::Value::Str(crit.into()))?;
+            let out = p.finetune(&cfg)?;
+            cells.push(format!(
+                "{:.3}",
+                if ds == "dart" { out.scores["rougeL"] } else { out.metric }
+            ));
+        }
+        table.row(cells);
+        table.print();
+    }
+    println!("\n=== SDT selection-criterion ablation ===");
+    table.print();
+    table.save_csv("ablate_selection.csv");
+    Ok(())
+}

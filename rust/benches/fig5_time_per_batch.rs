@@ -1,0 +1,72 @@
+//! Regenerates **Figure 5**: average training time per batch, SDT vs LoRA,
+//! across model sizes (paper also sweeps sequence length; our artifacts fix
+//! L per export, so the size axis carries the comparison — L=128 for XS,
+//! L=192 for S).
+//!
+//! Expected shape: SDT&LoRA is consistently faster per batch than LoRA at
+//! matched budgets (no low-rank matmuls on the SSM tensors; masked-grad
+//! updates touch fewer optimizer slots).
+
+use ssm_peft::bench::{bench_cfg, time, TablePrinter};
+use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::data::{tasks, BatchIter};
+use ssm_peft::manifest::Manifest;
+use ssm_peft::runtime::Engine;
+use ssm_peft::tensor::Rng;
+use ssm_peft::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    let p = Pipeline::new(&engine, &manifest);
+
+    let mut table = TablePrinter::new(&[
+        "model", "L", "method", "s/batch (mean)", "std",
+    ]);
+    for (variant, label) in [
+        ("mamba1_xs_lora_both", "LoRA"),
+        ("mamba1_xs_sdtlora", "LoRA & SDT"),
+        ("mamba1_s_lora_lin", "LoRA"),
+        ("mamba1_s_sdtlora", "LoRA & SDT"),
+    ] {
+        let arch = arch_of(&manifest, variant)?.to_string();
+        let base = p.pretrained(&arch, 150, 0)?;
+        let mut tr = Trainer::new(&engine, &manifest, variant, &TrainConfig::default())?;
+        tr.load_base(&base);
+        if variant.contains("sdt") {
+            let cfg = bench_cfg(variant, "dart");
+            let ds = tasks::by_name("dart", 0, 64);
+            let before = tr.train_map();
+            let mut rng = Rng::new(1);
+            let it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b,
+                                    tr.variant.batch_l);
+            for (batch, _) in it.take(4) {
+                tr.step(&batch)?;
+            }
+            let after = tr.train_map();
+            let (masks, _) =
+                ssm_peft::peft::select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
+            tr.masks = masks;
+        }
+        let ds = tasks::by_name("dart", 0, 64);
+        let mut rng = Rng::new(3);
+        let mut it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b,
+                                    tr.variant.batch_l);
+        let (batch, _) = it.next().unwrap();
+        let stats = time(variant, 2, 8, || {
+            tr.step(&batch).unwrap();
+        });
+        table.row(vec![
+            arch.clone(),
+            tr.variant.batch_l.to_string(),
+            label.into(),
+            format!("{:.4}", stats.mean_s),
+            format!("{:.4}", stats.std_s),
+        ]);
+        table.print();
+    }
+    println!("\n=== Figure 5 (reproduction): time per training batch ===");
+    table.print();
+    table.save_csv("fig5.csv");
+    Ok(())
+}

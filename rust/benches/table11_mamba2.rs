@@ -1,0 +1,48 @@
+//! Regenerates **Tables 11/12/20/21**: Mamba-II (scalar state matrix A).
+//! LoRA on linear projections vs LoRA on the SSM module vs SDT.
+//!
+//! Expected shape (paper): LinProj > SSM for LoRA, and LoRA&SDT > LoRA.
+
+use ssm_peft::bench::{bench_cfg, TablePrinter};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::manifest::Manifest;
+use ssm_peft::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    let p = Pipeline::new(&engine, &manifest);
+
+    let rows: &[(&str, &str)] = &[
+        ("mamba2_xs_lora_lin", "LoRA (LinProj)"),
+        ("mamba2_xs_lora_ssm", "LoRA (S6)"),
+        ("mamba2_xs_sdtlora", "LoRA & SDT"),
+        ("mamba2_xs_full", "Full fine-tuning"),
+    ];
+    let datasets = ["dart", "glue/rte"];
+    let mut table = TablePrinter::new(&[
+        "method", "params%", "dart(MET)", "dart(BLEU)", "rte(acc)",
+    ]);
+    for (variant, label) in rows {
+        let mut cells = vec![label.to_string(), String::new()];
+        for ds in &datasets {
+            let cfg = bench_cfg(variant, ds);
+            let out = p.finetune(&cfg)?;
+            if cells[1].is_empty() {
+                cells[1] = format!("{:.2}", out.budget_pct);
+            }
+            if *ds == "dart" {
+                cells.push(format!("{:.3}", out.scores["meteor"]));
+                cells.push(format!("{:.3}", out.scores["bleu"]));
+            } else {
+                cells.push(format!("{:.3}", out.metric));
+            }
+        }
+        table.row(cells);
+        table.print();
+    }
+    println!("\n=== Tables 11/12/20/21 (reproduction, Mamba-II) ===");
+    table.print();
+    table.save_csv("table11.csv");
+    Ok(())
+}

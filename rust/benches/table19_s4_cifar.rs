@@ -1,0 +1,48 @@
+//! Regenerates **Table 19**: deep S4 on pixel-sequence classification
+//! (CIFAR-10 analogue) — frozen vs LoRA(proj) vs LoRA&SDT vs full FT.
+//!
+//! Expected shape (paper): LoRA&SDT matches/beats LoRA with fewer trainable
+//! parameters; all beat the frozen model.
+
+use ssm_peft::bench::{bench_cfg, TablePrinter};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::eval::eval_classification;
+use ssm_peft::manifest::Manifest;
+use ssm_peft::runtime::Engine;
+use ssm_peft::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    let p = Pipeline::new(&engine, &manifest);
+    let mut table = TablePrinter::new(&["method", "params%", "accuracy"]);
+
+    // frozen baseline: pretrained model, no fine-tuning
+    {
+        let base = p.pretrained("s4lm", 150, 0)?;
+        let mut tr = Trainer::new(&engine, &manifest, "s4lm_full", &TrainConfig::default())?;
+        tr.load_base(&base);
+        let ds = ssm_peft::data::tasks::by_name("cifar10", 0, 8);
+        let acc = eval_classification(&tr, &ds.test, ds.metric)?;
+        table.row(vec!["Frozen".into(), "0.00".into(), format!("{acc:.3}")]);
+    }
+
+    for (variant, label) in [
+        ("s4lm_s4_lora_proj", "LoRA (Proj)"),
+        ("s4lm_sdtlora", "LoRA & SDT"),
+        ("s4lm_full", "Full Fine-Tuning"),
+    ] {
+        let cfg = bench_cfg(variant, "cifar10");
+        let out = p.finetune(&cfg)?;
+        table.row(vec![
+            label.into(),
+            format!("{:.2}", out.budget_pct),
+            format!("{:.3}", out.metric),
+        ]);
+        table.print();
+    }
+    println!("\n=== Table 19 (reproduction) ===");
+    table.print();
+    table.save_csv("table19.csv");
+    Ok(())
+}

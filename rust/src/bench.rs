@@ -1,0 +1,184 @@
+//! Timing/memory harness for the `cargo bench` targets.
+//!
+//! `criterion` is not available in the offline vendor set, so benches are
+//! `harness = false` binaries built on this module: warmup + timed
+//! iterations with mean/std, plus RSS sampling from /proc for the memory
+//! figures (Fig. 4 / Table 16).
+
+use std::time::Instant;
+
+use crate::tensor::{mean, std_dev};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>10.4}s ± {:>8.4}s (min {:>8.4}s, n={})",
+            self.name, self.mean_s, self.std_s, self.min_s, self.iters
+        )
+    }
+}
+
+/// Time a closure: `warmup` unrecorded runs, then `iters` recorded runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats {
+        name: name.to_string(),
+        mean_s: mean(&samples),
+        std_s: std_dev(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters,
+    }
+}
+
+/// Current resident set size in bytes (Linux).
+pub fn rss_bytes() -> usize {
+    read_status_kb("VmRSS:") * 1024
+}
+
+/// Peak resident set size in bytes (Linux, monotone per process).
+pub fn peak_rss_bytes() -> usize {
+    read_status_kb("VmHWM:") * 1024
+}
+
+fn read_status_kb(key: &str) -> usize {
+    let Ok(s) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            return rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// Analytic fine-tuning memory model (bytes): parameters + gradients over
+/// trainable + AdamW moments (2×trainable) + activation estimate. Used for
+/// the Fig. 4 memory comparison where same-process RSS is too noisy to
+/// attribute (documented in EXPERIMENTS.md).
+pub fn training_memory_model(total_params: usize, trainable: usize,
+                             act_floats: usize) -> usize {
+    4 * (total_params + 3 * trainable + act_floats)
+}
+
+/// Simple aligned table printer for bench outputs that mirror paper tables.
+pub struct TablePrinter {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str]) -> Self {
+        TablePrinter { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+    /// Write as CSV into results/ for EXPERIMENTS.md.
+    pub fn save_csv(&self, name: &str) {
+        let mut s = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        let path = crate::results_dir().join(name);
+        std::fs::write(&path, s).ok();
+        println!("[saved {}]", path.display());
+    }
+}
+
+/// Shared bench defaults: small-but-real runs sized for the 1-core CPU
+/// testbed. `SSM_PEFT_BENCH_SCALE` (float) scales epochs/batches up or down.
+pub fn bench_cfg(variant: &str, dataset: &str) -> crate::config::ExperimentConfig {
+    let scale: f32 = std::env::var("SSM_PEFT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let mut cfg = crate::config::ExperimentConfig::default();
+    cfg.variant = variant.into();
+    cfg.dataset = dataset.into();
+    cfg.n_train = 256;
+    cfg.epochs = ((2.0 * scale).round() as usize).max(1);
+    cfg.max_batches_per_epoch = ((12.0 * scale).round() as usize).max(2);
+    cfg.pretrain_steps = 150;
+    cfg.lr_grid = vec![3e-3];
+    cfg.sdt.warmup_batches = 6;
+    cfg.gen_max_new = 48;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures() {
+        let st = time("sleep", 1, 3, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(st.mean_s >= 0.004, "{}", st.mean_s);
+        assert_eq!(st.iters, 3);
+    }
+
+    #[test]
+    fn rss_positive() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes() / 2);
+    }
+
+    #[test]
+    fn memory_model_monotone_in_trainable() {
+        let a = training_memory_model(1000, 10, 0);
+        let b = training_memory_model(1000, 500, 0);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn table_printer_csv() {
+        let mut t = TablePrinter::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

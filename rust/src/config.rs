@@ -1,0 +1,189 @@
+//! Experiment configuration: JSON config files + `key=value` CLI overrides
+//! + grid expansion (the paper's LR sweep, Sec. C.1).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::json::{self, Value};
+use crate::peft::{Criterion, SdtConfig};
+
+/// One fine-tuning experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// artifact variant, e.g. "mamba1_xs_sdtlora"
+    pub variant: String,
+    /// dataset name, e.g. "glue/rte", "dart", "spider"
+    pub dataset: String,
+    pub n_train: usize,
+    pub epochs: usize,
+    /// candidate learning rates; >1 entries trigger a short grid search
+    pub lr_grid: Vec<f32>,
+    pub seed: u64,
+    pub sdt: SdtConfig,
+    /// generation eval settings
+    pub gen_max_new: usize,
+    pub beam: usize,
+    /// pretraining steps for the frozen base model
+    pub pretrain_steps: usize,
+    pub weight_decay: f32,
+    /// cap on train batches per epoch (CPU budget guard; 0 = no cap)
+    pub max_batches_per_epoch: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            variant: "mamba1_xs_lora_lin".into(),
+            dataset: "glue/rte".into(),
+            n_train: 256,
+            epochs: 3,
+            lr_grid: vec![1e-3],
+            seed: 0,
+            sdt: SdtConfig::default(),
+            gen_max_new: 48,
+            beam: 1,
+            pretrain_steps: 300,
+            weight_decay: 0.01,
+            max_batches_per_epoch: 24,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = ExperimentConfig::default();
+        let obj = match v {
+            Value::Obj(m) => m,
+            _ => return Err(anyhow!("config must be an object")),
+        };
+        for (k, val) in obj {
+            c.set(k, val)?;
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let src = std::fs::read_to_string(path)?;
+        let v = json::parse(&src).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Apply one key (JSON value), shared by file/CLI paths.
+    pub fn set(&mut self, key: &str, val: &Value) -> Result<()> {
+        let f = |v: &Value| v.as_f64().ok_or_else(|| anyhow!("{key}: expected number"));
+        match key {
+            "variant" => self.variant = req_str(val, key)?,
+            "dataset" => self.dataset = req_str(val, key)?,
+            "n_train" => self.n_train = f(val)? as usize,
+            "epochs" => self.epochs = f(val)? as usize,
+            "seed" => self.seed = f(val)? as u64,
+            "gen_max_new" => self.gen_max_new = f(val)? as usize,
+            "beam" => self.beam = f(val)? as usize,
+            "pretrain_steps" => self.pretrain_steps = f(val)? as usize,
+            "weight_decay" => self.weight_decay = f(val)? as f32,
+            "max_batches_per_epoch" => self.max_batches_per_epoch = f(val)? as usize,
+            "lr" => self.lr_grid = vec![f(val)? as f32],
+            "lr_grid" => {
+                self.lr_grid = val
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("lr_grid: expected array"))?
+                    .iter()
+                    .filter_map(Value::as_f64)
+                    .map(|x| x as f32)
+                    .collect()
+            }
+            "sdt.channel_freeze" => self.sdt.channel_freeze = f(val)? as f32,
+            "sdt.state_freeze" => self.sdt.state_freeze = f(val)? as f32,
+            "sdt.warmup_batches" => self.sdt.warmup_batches = f(val)? as usize,
+            "sdt.warmup_lr" => self.sdt.warmup_lr = f(val)? as f32,
+            "sdt.prune_frac" => self.sdt.prune_frac = f(val)? as f32,
+            "sdt.criterion" => {
+                self.sdt.criterion = match req_str(val, key)?.as_str() {
+                    "abar" => Criterion::AbarChange,
+                    "grad" => Criterion::GradMagnitude,
+                    "random" => Criterion::Random,
+                    other => return Err(anyhow!("unknown criterion {other}")),
+                }
+            }
+            _ => return Err(anyhow!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    /// Apply `key=value` CLI overrides (values parsed as JSON when possible,
+    /// else taken as strings).
+    pub fn apply_overrides(&mut self, kvs: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kvs {
+            let val = json::parse(v).unwrap_or_else(|_| Value::Str(v.clone()));
+            self.set(k, &val)?;
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.as_str()
+        .map(String::from)
+        .ok_or_else(|| anyhow!("{key}: expected string"))
+}
+
+/// Split argv into (key=value overrides, positional args).
+pub fn parse_args(args: &[String]) -> (BTreeMap<String, String>, Vec<String>) {
+    let mut kvs = BTreeMap::new();
+    let mut pos = Vec::new();
+    for a in args {
+        if let Some((k, v)) = a.split_once('=') {
+            kvs.insert(k.to_string(), v.to_string());
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    (kvs, pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = ExperimentConfig::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("variant".to_string(), "mamba1_xs_sdt".to_string());
+        kv.insert("lr".to_string(), "0.01".to_string());
+        kv.insert("sdt.state_freeze".to_string(), "0.75".to_string());
+        kv.insert("sdt.criterion".to_string(), "random".to_string());
+        c.apply_overrides(&kv).unwrap();
+        assert_eq!(c.variant, "mamba1_xs_sdt");
+        assert_eq!(c.lr_grid, vec![0.01]);
+        assert_eq!(c.sdt.state_freeze, 0.75);
+        assert_eq!(c.sdt.criterion, Criterion::Random);
+    }
+
+    #[test]
+    fn from_json_full() {
+        let v = json::parse(
+            r#"{"variant":"x","dataset":"dart","epochs":5,"lr_grid":[0.1,0.01]}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(c.dataset, "dart");
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.lr_grid.len(), 2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let v = json::parse(r#"{"nope":1}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parse_args_split() {
+        let args = vec!["finetune".to_string(), "lr=0.1".to_string(), "x".to_string()];
+        let (kv, pos) = parse_args(&args);
+        assert_eq!(kv["lr"], "0.1");
+        assert_eq!(pos, vec!["finetune", "x"]);
+    }
+}

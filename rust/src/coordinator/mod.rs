@@ -1,0 +1,340 @@
+//! Experiment coordinator: the paper's full pipeline as staged jobs.
+//!
+//!   pretrain (stand-in for the public checkpoints)
+//!     → [SDT only] warmup on a data subset + dimension selection + revert
+//!     → LR grid search (short runs, paper Sec. C.1)
+//!     → fine-tune with early stopping on val loss
+//!     → evaluate (classification fwd / generation decode / regression)
+//!
+//! Every bench target (one per paper table/figure) drives this module.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{tasks, BatchIter, Dataset};
+use crate::eval::{self, Generator};
+use crate::manifest::Manifest;
+use crate::peft::{self, select_dimensions, Budget, Criterion};
+use crate::runtime::Engine;
+use crate::tensor::{Rng, Tensor};
+use crate::train::{checkpoint, TrainConfig, Trainer};
+
+/// All scores from one experiment.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub variant: String,
+    pub dataset: String,
+    /// main metric value (acc / matthews / R-L / BLEU / exec acc)
+    pub metric: f64,
+    /// all computed scores by name
+    pub scores: BTreeMap<String, f64>,
+    pub budget_pct: f64,
+    pub chosen_lr: f32,
+    pub steps: usize,
+    pub history: Vec<(usize, f32)>,
+    /// wall-clock seconds spent in dimension selection (SDT only)
+    pub dim_select_s: f64,
+    /// wall-clock seconds per training epoch (mean)
+    pub epoch_s: f64,
+}
+
+pub struct Pipeline<'a> {
+    pub engine: &'a Engine,
+    pub manifest: &'a Manifest,
+}
+
+/// Extract the architecture prefix of a variant name by matching the
+/// manifest's `_full` variants (longest match wins).
+pub fn arch_of<'m>(manifest: &'m Manifest, variant: &str) -> Result<&'m str> {
+    let mut best: Option<&str> = None;
+    for name in manifest.variants.keys() {
+        if let Some(arch) = name.strip_suffix("_full") {
+            if variant.starts_with(arch)
+                && best.map_or(true, |b| arch.len() > b.len())
+            {
+                best = Some(arch);
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow!("no _full variant matching {variant}"))
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(engine: &'a Engine, manifest: &'a Manifest) -> Self {
+        Pipeline { engine, manifest }
+    }
+
+    /// Pretrain (or load cached) the frozen base model for an architecture.
+    /// Stand-in for the paper's pretrained checkpoints — see DESIGN.md
+    /// §Substitutions.
+    pub fn pretrained(&self, arch: &str, steps: usize, seed: u64)
+        -> Result<BTreeMap<String, Tensor>> {
+        let ckpt_path = crate::results_dir().join(format!("pretrained_{arch}_{steps}.ckpt"));
+        if ckpt_path.exists() {
+            return checkpoint::load(&ckpt_path);
+        }
+        let variant = format!("{arch}_full");
+        let cfg = TrainConfig { lr: 3e-3, schedule_total: steps.max(1), ..Default::default() };
+        let mut tr = Trainer::new(self.engine, self.manifest, &variant, &cfg)?;
+        let mut rng = Rng::new(seed ^ 0xbeef);
+        if tr.variant.reg {
+            // regression archs need no pretraining (random init = "frozen")
+            let map = tr.params_map();
+            checkpoint::save(&map, &ckpt_path)?;
+            return Ok(map);
+        }
+        let corpus = tasks::pretrain_corpus(seed, 1 << 17);
+        let (b, l) = (tr.variant.batch_b, tr.variant.batch_l);
+        for s in 0..steps {
+            let batch = crate::data::make_lm_batch(&corpus, &mut rng, b, l);
+            let loss = tr.step(&batch)?;
+            if s % 50 == 0 {
+                eprintln!("[pretrain {arch}] step {s}/{steps} loss {loss:.4}");
+            }
+        }
+        let map = tr.params_map();
+        checkpoint::save(&map, &ckpt_path)?;
+        Ok(map)
+    }
+
+    /// SDT stage: warmup on a subset, select dimensions, revert, mask.
+    /// Returns selection wall-clock seconds.
+    fn sdt_stage(&self, tr: &mut Trainer, ds: &Dataset, cfg: &ExperimentConfig)
+        -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let before = tr.train_map();
+        let snap = tr.snapshot_train();
+        let mut rng = Rng::new(cfg.seed ^ 0x5d7);
+        let (b, l) = (tr.variant.batch_b, tr.variant.batch_l);
+        let mut grad_acc: BTreeMap<String, Tensor> = BTreeMap::new();
+        let mut it = BatchIter::new(&ds.train, &mut rng, b, l);
+        for _ in 0..cfg.sdt.warmup_batches {
+            let Some((batch, _)) = it.next() else { break };
+            tr.step(&batch)?;
+            if cfg.sdt.criterion == Criterion::GradMagnitude {
+                for (meta, g) in tr.variant.train_params.clone().iter()
+                    .zip(tr.last_grads())
+                {
+                    let e = grad_acc
+                        .entry(meta.name.clone())
+                        .or_insert_with(|| Tensor::zeros(&g.shape));
+                    for (a, &x) in e.data.iter_mut().zip(&g.data) {
+                        *a += x.abs();
+                    }
+                }
+            }
+        }
+        let after = if cfg.sdt.criterion == Criterion::GradMagnitude {
+            // |grad| accumulation plays the role of the post-warmup snapshot
+            let mut m = before.clone();
+            for (k, v) in &grad_acc {
+                // log-space: selection exponentiates, so take ln(1+acc)
+                let t = m.get_mut(k).unwrap();
+                for (x, &a) in t.data.iter_mut().zip(&v.data) {
+                    *x += (1.0 + a).ln();
+                }
+            }
+            m
+        } else {
+            tr.train_map()
+        };
+        let (masks, _sel) = select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
+        tr.restore_train(snap);
+        tr.masks = masks;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn run_epochs(&self, tr: &mut Trainer, ds: &Dataset, cfg: &ExperimentConfig,
+                  epochs: usize, seed_tag: u64) -> Result<(f64, f64)> {
+        let (b, l) = (tr.variant.batch_b, tr.variant.batch_l);
+        let mut best_val = f64::INFINITY;
+        let mut best_params: Option<Vec<Tensor>> = None;
+        let mut epoch_times = Vec::new();
+        for ep in 0..epochs {
+            let t0 = std::time::Instant::now();
+            let mut rng = Rng::new(cfg.seed ^ seed_tag ^ (ep as u64 + 1));
+            let it = BatchIter::new(&ds.train, &mut rng, b, l);
+            let cap = if cfg.max_batches_per_epoch == 0 {
+                usize::MAX
+            } else {
+                cfg.max_batches_per_epoch
+            };
+            for (batch, _) in it.take(cap) {
+                tr.step(&batch)?;
+            }
+            epoch_times.push(t0.elapsed().as_secs_f64());
+            let val = eval::eval_split_loss(tr, &ds.val, cfg.seed ^ 0x7a1)?;
+            if val < best_val {
+                best_val = val;
+                best_params = Some(tr.snapshot_train());
+            }
+        }
+        if let Some(p) = best_params {
+            tr.train_params = p; // early stopping: keep best epoch
+        }
+        Ok((best_val, crate::tensor::mean(&epoch_times)))
+    }
+
+    /// LR grid search: short runs on a training subset, pick best val loss.
+    fn pick_lr(&self, ds: &Dataset, cfg: &ExperimentConfig,
+               base: &BTreeMap<String, Tensor>) -> Result<f32> {
+        if cfg.lr_grid.len() == 1 {
+            return Ok(cfg.lr_grid[0]);
+        }
+        let mut best = (f64::INFINITY, cfg.lr_grid[0]);
+        for &lr in &cfg.lr_grid {
+            let tcfg = TrainConfig {
+                lr,
+                weight_decay: cfg.weight_decay,
+                schedule_total: 8,
+                ..Default::default()
+            };
+            let mut tr = Trainer::new(self.engine, self.manifest, &cfg.variant, &tcfg)?;
+            tr.load_base(base);
+            let mut sub = Dataset {
+                name: ds.name.clone(),
+                train: ds.train.iter().take(8 * tr.variant.batch_b).cloned().collect(),
+                val: ds.val.clone(),
+                test: vec![],
+                generative: ds.generative,
+                metric: ds.metric,
+            };
+            sub.val.truncate(4 * tr.variant.batch_b);
+            let (val, _) = self.run_epochs(&mut tr, &sub, cfg, 1, 0x99)?;
+            if val < best.0 {
+                best = (val, lr);
+            }
+        }
+        Ok(best.1)
+    }
+
+    /// Full experiment: returns scores on the test split.
+    pub fn finetune(&self, cfg: &ExperimentConfig) -> Result<Outcome> {
+        let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train);
+        let arch = arch_of(self.manifest, &cfg.variant)?.to_string();
+        let base = self.pretrained(&arch, cfg.pretrain_steps, cfg.seed)?;
+        let lr = self.pick_lr(&ds, cfg, &base)?;
+
+        let steps_per_epoch = if cfg.max_batches_per_epoch > 0 {
+            cfg.max_batches_per_epoch
+        } else {
+            cfg.n_train / 8
+        };
+        let tcfg = TrainConfig {
+            lr,
+            weight_decay: cfg.weight_decay,
+            schedule_total: (cfg.epochs * steps_per_epoch).max(1),
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(self.engine, self.manifest, &cfg.variant, &tcfg)?;
+        tr.load_base(&base);
+
+        let method = tr.variant.peft.method.clone();
+        let dim_select_s = if method == "sdt" || method == "sdtlora" {
+            self.sdt_stage(&mut tr, &ds, cfg)?
+        } else {
+            0.0
+        };
+
+        let (_best_val, epoch_s) = self.run_epochs(&mut tr, &ds, cfg, cfg.epochs, 0x7a11)?;
+
+        // ---- evaluation ------------------------------------------------------
+        let budget = Budget::of(&tr.variant, Some(&tr.masks));
+        let mut scores = BTreeMap::new();
+        let metric;
+        if ds.generative {
+            let mut merged = tr.params_map();
+            peft::merge_lora(&mut merged, tr.variant.peft.rank.max(1),
+                             tr.variant.peft.rank.max(1));
+            let decode_variant = format!("{arch}_full");
+            let gen = Generator::new(self.engine, self.manifest, &decode_variant, &merged)?;
+            let h0 = if merged.keys().any(|k| k.ends_with(".h0")) {
+                Some(&merged)
+            } else {
+                None
+            };
+            let g = eval::eval_generation(&gen, &ds, &ds.test, cfg.gen_max_new,
+                                          cfg.seed, h0)?;
+            scores.insert("rouge1".into(), g.rouge1);
+            scores.insert("rouge2".into(), g.rouge2);
+            scores.insert("rougeL".into(), g.rougel);
+            scores.insert("bleu".into(), g.bleu);
+            scores.insert("meteor".into(), g.meteor);
+            scores.insert("exec".into(), g.exec_acc);
+            metric = match ds.metric {
+                "rouge" => g.rougel,
+                "exec" => g.exec_acc,
+                _ => g.bleu,
+            };
+        } else {
+            let m = eval::eval_classification(&tr, &ds.test, ds.metric)?;
+            scores.insert(ds.metric.to_string(), m);
+            metric = m;
+        }
+
+        Ok(Outcome {
+            variant: cfg.variant.clone(),
+            dataset: cfg.dataset.clone(),
+            metric,
+            scores,
+            budget_pct: budget.percent(),
+            chosen_lr: lr,
+            steps: tr.step_count,
+            history: tr.history.clone(),
+            dim_select_s,
+            epoch_s,
+        })
+    }
+
+    /// Synthetic Fig. 2 data: random inputs through the 1-layer target model
+    /// (`s4reg_t_full` with its random init) to produce regression targets.
+    pub fn synthetic_s4_data(&self, seed: u64, n_batches: usize, seqlen: usize)
+        -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let tgt = Trainer::new(self.engine, self.manifest, "s4reg_t_full",
+                               &TrainConfig::default())?;
+        let (b, d) = (tgt.variant.batch_b, tgt.variant.arch.d_model);
+        anyhow::ensure!(
+            seqlen == tgt.variant.batch_l,
+            "s4reg artifacts are shape-specialized to L={}, got {seqlen}",
+            tgt.variant.batch_l
+        );
+        let mut rng = Rng::new(seed ^ 0xf162);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n_batches {
+            let data: Vec<f32> = (0..b * seqlen * d)
+                .map(|_| rng.below(10) as f32) // ints 0..9 as in the paper
+                .collect();
+            let x = Tensor::from_vec(&[b, seqlen, d], data);
+            let y = tgt.forward_reg(&x)?;
+            xs.push(x);
+            ys.push(y);
+        }
+        Ok((xs, ys))
+    }
+}
+
+/// Save an outcome's loss curve as CSV (results/<name>.csv).
+pub fn save_history(name: &str, history: &[(usize, f32)]) {
+    let mut s = String::from("step,loss\n");
+    for (st, l) in history {
+        s.push_str(&format!("{st},{l}\n"));
+    }
+    std::fs::write(crate::results_dir().join(name), s).ok();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_history_writes() {
+        save_history("test_hist.csv", &[(1, 0.5), (2, 0.25)]);
+        let p = crate::results_dir().join("test_hist.csv");
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("2,0.25"));
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,170 @@
+//! Mini in-memory relational store + query evaluator.
+//!
+//! The Spider benchmark measures *execution accuracy*: the predicted SQL and
+//! the gold SQL are run against the database and their result sets compared.
+//! Our Spider analogue does the real thing at small scale: tasks carry a
+//! generated table, the model emits a query string, and this evaluator
+//! executes both queries so the metric is genuine execution match — not
+//! string match.
+//!
+//! Query grammar (uppercase keywords, single table):
+//!   GET <col> FROM <table> [WHERE <col> IS <val>] [COUNT]
+
+use std::collections::BTreeMap;
+
+/// A single table: named columns over string values.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn col_index(&self, col: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == col)
+    }
+
+    /// Render the schema as prompt context: "table(colA,colB,colC)".
+    pub fn schema_str(&self) -> String {
+        format!("{}({})", self.name, self.columns.join(","))
+    }
+}
+
+/// Parsed query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    pub select: String,
+    pub table: String,
+    pub filter: Option<(String, String)>,
+    pub count: bool,
+}
+
+/// Parse the mini query grammar; returns None on malformed input (a
+/// malformed model prediction simply scores 0, like real Spider).
+pub fn parse_query(q: &str) -> Option<Query> {
+    let toks: Vec<&str> = q.split_whitespace().collect();
+    if toks.len() < 4 || toks[0] != "GET" || toks[2] != "FROM" {
+        return None;
+    }
+    let select = toks[1].to_string();
+    let table = toks[3].to_string();
+    let mut filter = None;
+    let mut count = false;
+    let mut i = 4;
+    while i < toks.len() {
+        match toks[i] {
+            "WHERE" if i + 3 < toks.len() && toks[i + 2] == "IS" => {
+                filter = Some((toks[i + 1].to_string(), toks[i + 3].to_string()));
+                i += 4;
+            }
+            "COUNT" => {
+                count = true;
+                i += 1;
+            }
+            _ => return None,
+        }
+    }
+    Some(Query { select, table, filter, count })
+}
+
+/// Execute a query; result is a sorted multiset of output strings
+/// (order-insensitive comparison, like Spider's evaluator).
+pub fn execute(table: &Table, q: &Query) -> Option<Vec<String>> {
+    if q.table != table.name {
+        return None;
+    }
+    let sel = table.col_index(&q.select)?;
+    let flt = match &q.filter {
+        Some((c, v)) => Some((table.col_index(c)?, v.clone())),
+        None => None,
+    };
+    let mut out: Vec<String> = table
+        .rows
+        .iter()
+        .filter(|r| flt.as_ref().map_or(true, |(ci, v)| &r[*ci] == v))
+        .map(|r| r[sel].clone())
+        .collect();
+    if q.count {
+        return Some(vec![out.len().to_string()]);
+    }
+    out.sort();
+    Some(out)
+}
+
+/// Execution-accuracy comparison of a predicted query string vs gold.
+pub fn exec_match(table: &Table, pred: &str, gold: &str) -> bool {
+    let (Some(pq), Some(gq)) = (parse_query(pred), parse_query(gold)) else {
+        return false;
+    };
+    match (execute(table, &pq), execute(table, &gq)) {
+        (Some(a), Some(b)) => a == b,
+        _ => false,
+    }
+}
+
+/// Deterministic value pools used by the task generator.
+pub fn value_pool() -> BTreeMap<&'static str, Vec<&'static str>> {
+    let mut m = BTreeMap::new();
+    m.insert("city", vec!["rome", "oslo", "lima", "baku", "kiev"]);
+    m.insert("team", vec!["red", "blue", "gold", "jade"]);
+    m.insert("year", vec!["1999", "2005", "2012", "2020"]);
+    m.insert("size", vec!["s", "m", "l"]);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        Table {
+            name: "t".into(),
+            columns: vec!["city".into(), "team".into()],
+            rows: vec![
+                vec!["rome".into(), "red".into()],
+                vec!["oslo".into(), "red".into()],
+                vec!["rome".into(), "blue".into()],
+            ],
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let q = parse_query("GET city FROM t WHERE team IS red").unwrap();
+        assert_eq!(q.select, "city");
+        assert_eq!(q.filter, Some(("team".into(), "red".into())));
+        assert!(!q.count);
+        assert!(parse_query("SELECT x").is_none());
+        assert!(parse_query("GET a FROM t WHERE b ISNT c").is_none());
+    }
+
+    #[test]
+    fn execute_filter_and_count() {
+        let t = table();
+        let q = parse_query("GET city FROM t WHERE team IS red").unwrap();
+        assert_eq!(execute(&t, &q).unwrap(), vec!["oslo", "rome"]);
+        let qc = parse_query("GET city FROM t COUNT").unwrap();
+        assert_eq!(execute(&t, &qc).unwrap(), vec!["3"]);
+    }
+
+    #[test]
+    fn exec_match_semantics_not_strings() {
+        let t = table();
+        // different filter but same result multiset -> exec match true
+        assert!(exec_match(&t,
+            "GET team FROM t WHERE city IS oslo",
+            "GET team FROM t WHERE city IS oslo"));
+        // malformed pred -> false
+        assert!(!exec_match(&t, "garbage", "GET city FROM t"));
+        // wrong column -> false
+        assert!(!exec_match(&t, "GET team FROM t", "GET city FROM t"));
+    }
+
+    #[test]
+    fn unknown_column_is_none() {
+        let t = table();
+        let q = parse_query("GET nope FROM t").unwrap();
+        assert!(execute(&t, &q).is_none());
+    }
+}

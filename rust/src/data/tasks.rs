@@ -1,0 +1,512 @@
+//! Synthetic task generators: the six dataset analogues (DESIGN.md
+//! §Substitutions) plus the pretraining corpus.
+//!
+//! Every task's labels are computed from the input by a small latent program
+//! so fine-tuning progress is real signal, and every generator is
+//! deterministic in its seed. Text tasks share a small word lexicon so the
+//! (byte-level) pretrained LM transfers.
+
+use super::minidb::{self, Table};
+use super::{Dataset, Example};
+use crate::tensor::Rng;
+
+const WORDS: &[&str] = &[
+    "cat", "dog", "sun", "map", "tree", "bird", "rock", "wave", "star", "leaf",
+    "wind", "fish", "moon", "sand", "rain", "fire", "cloud", "seed", "wolf", "bear",
+];
+const POS_WORDS: &[&str] = &["good", "fine", "warm", "kind", "calm", "glad"];
+const NEG_WORDS: &[&str] = &["bad", "cold", "grim", "sad", "harsh", "dark"];
+const VERBS: &[&str] = &["meets", "calls", "helps", "asks", "joins", "warns"];
+const NAMES: &[&str] = &["ann", "bob", "cem", "dia", "eli", "fay"];
+
+fn pick_words(rng: &mut Rng, n: usize) -> Vec<&'static str> {
+    (0..n).map(|_| *rng.choice(WORDS)).collect()
+}
+
+fn join(words: &[&str]) -> Vec<u8> {
+    words.join(" ").into_bytes()
+}
+
+/// Generic split builder.
+fn splits(
+    mut gen: impl FnMut(&mut Rng) -> Example,
+    seed: u64,
+    n_train: usize,
+    n_val: usize,
+    n_test: usize,
+) -> (Vec<Example>, Vec<Example>, Vec<Example>) {
+    let mut rng = Rng::new(seed);
+    let train = (0..n_train).map(|_| gen(&mut rng)).collect();
+    let val = (0..n_val).map(|_| gen(&mut rng)).collect();
+    let test = (0..n_test).map(|_| gen(&mut rng)).collect();
+    (train, val, test)
+}
+
+fn cls(prompt: Vec<u8>, label: usize, label_bytes: &[u8]) -> Example {
+    Example { prompt, target: vec![], label: Some(label), label_bytes: label_bytes.to_vec() }
+}
+
+fn genr(prompt: Vec<u8>, target: Vec<u8>) -> Example {
+    Example { prompt, target, label: None, label_bytes: vec![] }
+}
+
+// ---------------------------------------------------------------------------
+// GLUE analogue: seven classification subtasks
+// ---------------------------------------------------------------------------
+
+/// RTE-like entailment: hypothesis words ⊆ premise words → entail.
+fn gen_rte(rng: &mut Rng) -> Example {
+    let premise = pick_words(rng, 6);
+    let entail = rng.uniform() < 0.5;
+    let hypothesis: Vec<&str> = if entail {
+        (0..3).map(|_| *rng.choice(&premise)).collect()
+    } else {
+        let mut h = vec![*rng.choice(&premise), *rng.choice(&premise)];
+        loop {
+            let w = *rng.choice(WORDS);
+            if !premise.contains(&w) {
+                h.push(w);
+                break;
+            }
+        }
+        h
+    };
+    let mut p = join(&premise);
+    p.extend(b" ; ");
+    p.extend(join(&hypothesis));
+    cls(p, entail as usize, b"01")
+}
+
+/// MRPC-like paraphrase: second sentence is a shuffle of the first or not.
+fn gen_mrpc(rng: &mut Rng) -> Example {
+    let s1 = pick_words(rng, 5);
+    let para = rng.uniform() < 0.5;
+    let s2: Vec<&str> = if para {
+        let mut s = s1.clone();
+        rng.shuffle(&mut s);
+        s
+    } else {
+        let mut s = pick_words(rng, 5);
+        // ensure different multiset
+        s[0] = WORDS[(WORDS.iter().position(|w| *w == s1[0]).unwrap() + 1) % WORDS.len()];
+        s
+    };
+    let mut p = join(&s1);
+    p.extend(b" ; ");
+    p.extend(join(&s2));
+    cls(p, para as usize, b"01")
+}
+
+/// CoLA-like acceptability: grammar is "name verb name"-chains; corruption
+/// swaps a verb into a name slot.
+fn gen_cola(rng: &mut Rng) -> Example {
+    let n = 2 + rng.below(2);
+    let mut toks: Vec<&str> = Vec::new();
+    for i in 0..n {
+        if i > 0 {
+            toks.push("and");
+        }
+        toks.push(*rng.choice(NAMES));
+        toks.push(*rng.choice(VERBS));
+        toks.push(*rng.choice(NAMES));
+    }
+    let ok = rng.uniform() < 0.5;
+    if !ok {
+        let slot = rng.below(toks.len());
+        toks[slot] = *rng.choice(VERBS);
+    }
+    cls(join(&toks), ok as usize, b"01")
+}
+
+/// SST-2-like sentiment: majority lexicon polarity.
+fn gen_sst2(rng: &mut Rng) -> Example {
+    let pos = rng.uniform() < 0.5;
+    let (maj, min) = if pos { (POS_WORDS, NEG_WORDS) } else { (NEG_WORDS, POS_WORDS) };
+    let mut toks: Vec<&str> = Vec::new();
+    for _ in 0..3 {
+        toks.push(*rng.choice(maj));
+        toks.push(*rng.choice(WORDS));
+    }
+    toks.push(*rng.choice(min));
+    let mut t2 = toks.clone();
+    rng.shuffle(&mut t2);
+    cls(join(&t2), pos as usize, b"01")
+}
+
+/// QNLI-like: does the sentence contain the question's key word?
+fn gen_qnli(rng: &mut Rng) -> Example {
+    let key = *rng.choice(WORDS);
+    let sent = pick_words(rng, 6);
+    let contains = sent.contains(&key);
+    let mut p = format!("where {key} ?").into_bytes();
+    p.extend(b" ; ");
+    p.extend(join(&sent));
+    cls(p, contains as usize, b"01")
+}
+
+/// QQP-like duplicate detection: same word multiset?
+fn gen_qqp(rng: &mut Rng) -> Example {
+    let q1 = pick_words(rng, 4);
+    let dup = rng.uniform() < 0.5;
+    let q2: Vec<&str> = if dup {
+        let mut s = q1.clone();
+        rng.shuffle(&mut s);
+        s
+    } else {
+        let mut s = q1.clone();
+        s[rng.below(4)] = *rng.choice(WORDS);
+        rng.shuffle(&mut s);
+        s
+    };
+    // relabel by the actual program (mutation may be identity)
+    let mut a = q1.clone();
+    let mut b = q2.clone();
+    a.sort();
+    b.sort();
+    let label = (a == b) as usize;
+    let mut p = join(&q1);
+    p.extend(b" ; ");
+    p.extend(join(&q2));
+    cls(p, label, b"01")
+}
+
+/// MNLI-like 3-class: word-overlap bands (0: contradict, 1: neutral, 2: entail).
+fn gen_mnli(rng: &mut Rng) -> Example {
+    let premise = pick_words(rng, 6);
+    let k = rng.below(4); // 0..3 shared words
+    let mut hyp: Vec<&str> = (0..k).map(|i| premise[i]).collect();
+    while hyp.len() < 4 {
+        let w = *rng.choice(WORDS);
+        if !premise.contains(&w) {
+            hyp.push(w);
+        }
+    }
+    let mut h2 = hyp.clone();
+    rng.shuffle(&mut h2);
+    let shared = h2.iter().filter(|w| premise.contains(*w)).count();
+    let label = match shared {
+        0 => 0,
+        1 | 2 => 1,
+        _ => 2,
+    };
+    let mut p = join(&premise);
+    p.extend(b" ; ");
+    p.extend(join(&h2));
+    cls(p, label, b"012")
+}
+
+pub const GLUE_SUBTASKS: &[&str] = &["rte", "mrpc", "cola", "sst2", "qnli", "qqp", "mnli"];
+
+pub fn glue(sub: &str, seed: u64, n_train: usize) -> Dataset {
+    let gen: fn(&mut Rng) -> Example = match sub {
+        "rte" => gen_rte,
+        "mrpc" => gen_mrpc,
+        "cola" => gen_cola,
+        "sst2" => gen_sst2,
+        "qnli" => gen_qnli,
+        "qqp" => gen_qqp,
+        "mnli" => gen_mnli,
+        _ => panic!("unknown GLUE subtask {sub}"),
+    };
+    let (train, val, test) = splits(gen, seed ^ fnv(sub), n_train, 96, 96);
+    Dataset {
+        name: format!("glue/{sub}"),
+        train, val, test,
+        generative: false,
+        metric: if sub == "cola" { "matthews" } else { "acc" },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DART analogue: record-to-text
+// ---------------------------------------------------------------------------
+
+fn gen_dart(rng: &mut Rng) -> Example {
+    let keys = ["name", "team", "city"];
+    let vals = [*rng.choice(NAMES), *rng.choice(&["red", "blue", "gold", "jade"]),
+                *rng.choice(&["rome", "oslo", "lima", "baku"])];
+    let n = 2 + rng.below(2);
+    let mut rec = String::new();
+    let mut text = String::new();
+    for i in 0..n {
+        if i > 0 {
+            rec.push('|');
+            text.push(' ');
+        }
+        rec.push_str(&format!("{}={}", keys[i], vals[i]));
+        text.push_str(&format!("the {} is {} .", keys[i], vals[i]));
+    }
+    genr(rec.into_bytes(), text.into_bytes())
+}
+
+pub fn dart(seed: u64, n_train: usize) -> Dataset {
+    let (train, val, test) = splits(gen_dart, seed ^ fnv("dart"), n_train, 64, 64);
+    Dataset { name: "dart".into(), train, val, test, generative: true, metric: "bleu_meteor" }
+}
+
+// ---------------------------------------------------------------------------
+// SAMSum analogue: dialogue summarization
+// ---------------------------------------------------------------------------
+
+fn gen_samsum(rng: &mut Rng) -> Example {
+    let a = *rng.choice(NAMES);
+    let mut b = *rng.choice(NAMES);
+    while b == a {
+        b = *rng.choice(NAMES);
+    }
+    let v1 = *rng.choice(VERBS);
+    let v2 = *rng.choice(VERBS);
+    let filler1 = pick_words(rng, 3).join(" ");
+    let filler2 = pick_words(rng, 3).join(" ");
+    let dialog = format!("{a}: i {v1} {b} {filler1}\n{b}: ok i {v2} {a} {filler2}");
+    let summary = format!("{a} {v1} {b} and {b} {v2} {a}");
+    genr(dialog.into_bytes(), summary.into_bytes())
+}
+
+pub fn samsum(seed: u64, n_train: usize) -> Dataset {
+    let (train, val, test) = splits(gen_samsum, seed ^ fnv("samsum"), n_train, 64, 64);
+    Dataset { name: "samsum".into(), train, val, test, generative: true, metric: "rouge" }
+}
+
+// ---------------------------------------------------------------------------
+// Spider analogue: text-to-query with real execution accuracy
+// ---------------------------------------------------------------------------
+
+/// The shared task table (also used by eval's exec-match metric).
+pub fn spider_table(seed: u64) -> Table {
+    let mut rng = Rng::new(seed ^ fnv("spider_table"));
+    let pool = minidb::value_pool();
+    let columns: Vec<String> = pool.keys().map(|s| s.to_string()).collect();
+    let rows = (0..12)
+        .map(|_| {
+            columns
+                .iter()
+                .map(|c| pool[c.as_str()][rng.below(pool[c.as_str()].len())].to_string())
+                .collect()
+        })
+        .collect();
+    Table { name: "t".into(), columns, rows }
+}
+
+fn gen_spider(rng: &mut Rng, table: &Table) -> Example {
+    let sel = &table.columns[rng.below(table.columns.len())];
+    let use_where = rng.uniform() < 0.7;
+    let (question, query) = if use_where {
+        let fc = &table.columns[rng.below(table.columns.len())];
+        let row = &table.rows[rng.below(table.rows.len())];
+        let fv = &row[table.col_index(fc).unwrap()];
+        (
+            format!("which {sel} has {fc} {fv} ? schema {}", table.schema_str()),
+            format!("GET {sel} FROM t WHERE {fc} IS {fv}"),
+        )
+    } else {
+        (
+            format!("list all {sel} . schema {}", table.schema_str()),
+            format!("GET {sel} FROM t"),
+        )
+    };
+    genr(question.into_bytes(), query.into_bytes())
+}
+
+pub fn spider(seed: u64, n_train: usize) -> Dataset {
+    let table = spider_table(seed);
+    let mut rng = Rng::new(seed ^ fnv("spider"));
+    let mut gen = |rng: &mut Rng| gen_spider(rng, &table);
+    let train = (0..n_train).map(|_| gen(&mut rng)).collect();
+    let val = (0..64).map(|_| gen(&mut rng)).collect();
+    let test = (0..64).map(|_| gen(&mut rng)).collect();
+    Dataset { name: "spider".into(), train, val, test, generative: true, metric: "exec" }
+}
+
+// ---------------------------------------------------------------------------
+// CIFAR-10 / CelebA analogues: pixel-sequence classification
+// ---------------------------------------------------------------------------
+
+/// 8×8 grayscale patterns, 10 classes; pixels quantized to 16 levels and
+/// emitted as bytes 'a'..'p' (keeps the byte-LM vocabulary dense).
+fn gen_cifar(rng: &mut Rng) -> Example {
+    let class = rng.below(10);
+    let n = 8;
+    let mut img = vec![0.0f32; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let (fy, fx) = (y as f32 / n as f32, x as f32 / n as f32);
+            let v = match class {
+                0 => fx,                                   // horizontal gradient
+                1 => fy,                                   // vertical gradient
+                2 => ((x / 2 + y / 2) % 2) as f32,         // checker
+                3 => ((x / 2) % 2) as f32,                 // v-stripes
+                4 => ((y / 2) % 2) as f32,                 // h-stripes
+                5 => 1.0 - ((fx - 0.5).abs() + (fy - 0.5).abs()), // diamond
+                6 => (((fx - 0.5).powi(2) + (fy - 0.5).powi(2)).sqrt() < 0.3) as i32 as f32,
+                7 => (fx + fy) / 2.0,                      // diagonal gradient
+                8 => ((x + y) % 2) as f32,                 // fine checker
+                _ => (x == y) as i32 as f32,               // diagonal line
+            };
+            img[y * n + x] = v + 0.15 * rng.normal();
+        }
+    }
+    let bytes: Vec<u8> = img
+        .iter()
+        .map(|&v| b'a' + (v.clamp(0.0, 0.999) * 16.0) as u8)
+        .collect();
+    cls(bytes, class, b"0123456789")
+}
+
+/// CelebA-like binary attribute: is the bright blob in the left half?
+fn gen_celeba(rng: &mut Rng) -> Example {
+    let n = 8;
+    let left = rng.uniform() < 0.5;
+    let cx = if left { 1 + rng.below(2) } else { 5 + rng.below(2) } as f32;
+    let cy = (2 + rng.below(4)) as f32;
+    let mut bytes = Vec::with_capacity(n * n);
+    for y in 0..n {
+        for x in 0..n {
+            let d = ((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)).sqrt();
+            let v = (-d / 2.0).exp() + 0.1 * rng.normal();
+            bytes.push(b'a' + (v.clamp(0.0, 0.999) * 16.0) as u8);
+        }
+    }
+    cls(bytes, left as usize, b"01")
+}
+
+pub fn cifar(seed: u64, n_train: usize) -> Dataset {
+    let (train, val, test) = splits(gen_cifar, seed ^ fnv("cifar"), n_train, 96, 96);
+    Dataset { name: "cifar10".into(), train, val, test, generative: false, metric: "acc" }
+}
+
+pub fn celeba(seed: u64, n_train: usize) -> Dataset {
+    let (train, val, test) = splits(gen_celeba, seed ^ fnv("celeba"), n_train, 96, 96);
+    Dataset { name: "celeba".into(), train, val, test, generative: false, metric: "acc" }
+}
+
+/// Pretraining corpus: concatenated samples from all text generators, so the
+/// "pretrained" frozen model has seen the lexicon and formats (the stand-in
+/// for the paper's web-scale pretrained checkpoints).
+pub fn pretrain_corpus(seed: u64, approx_bytes: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed ^ fnv("corpus"));
+    let table = spider_table(seed);
+    let mut out = Vec::with_capacity(approx_bytes + 256);
+    while out.len() < approx_bytes {
+        let ex = match rng.below(6) {
+            0 => gen_rte(&mut rng),
+            1 => gen_dart(&mut rng),
+            2 => gen_samsum(&mut rng),
+            3 => gen_spider(&mut rng, &table),
+            4 => gen_sst2(&mut rng),
+            _ => gen_cola(&mut rng),
+        };
+        out.extend(&ex.prompt);
+        out.push(b' ');
+        out.extend(&ex.target);
+        if let Some(l) = ex.label {
+            out.push(ex.label_bytes[l]);
+        }
+        out.push(b'\n');
+    }
+    out
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Dataset registry by name (the config system's `dataset` field).
+pub fn by_name(name: &str, seed: u64, n_train: usize) -> Dataset {
+    match name {
+        "dart" => dart(seed, n_train),
+        "samsum" => samsum(seed, n_train),
+        "spider" => spider(seed, n_train),
+        "cifar10" => cifar(seed, n_train),
+        "celeba" => celeba(seed, n_train),
+        g if g.starts_with("glue/") => glue(&g[5..], seed, n_train),
+        _ => panic!("unknown dataset {name}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::minidb::exec_match;
+
+    #[test]
+    fn generators_deterministic() {
+        let d1 = glue("rte", 7, 32);
+        let d2 = glue("rte", 7, 32);
+        assert_eq!(d1.train[0].prompt, d2.train[0].prompt);
+        assert_eq!(d1.train[0].label, d2.train[0].label);
+        let d3 = glue("rte", 8, 32);
+        assert_ne!(d3.train[0].prompt, d1.train[0].prompt);
+    }
+
+    #[test]
+    fn glue_labels_balanced_and_valid() {
+        for sub in GLUE_SUBTASKS {
+            let d = glue(sub, 3, 200);
+            let n_classes = d.train[0].label_bytes.len();
+            let mut counts = vec![0usize; n_classes];
+            for ex in &d.train {
+                counts[ex.label.unwrap()] += 1;
+            }
+            // no class should be empty, majority class < 90%
+            assert!(counts.iter().all(|&c| c > 0), "{sub}: {counts:?}");
+            assert!(*counts.iter().max().unwrap() < 180, "{sub}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn rte_program_is_consistent() {
+        let d = glue("rte", 11, 100);
+        for ex in &d.train {
+            let s = String::from_utf8(ex.prompt.clone()).unwrap();
+            let (prem, hyp) = s.split_once(" ; ").unwrap();
+            let pw: Vec<&str> = prem.split(' ').collect();
+            let subset = hyp.split(' ').all(|w| pw.contains(&w));
+            assert_eq!(subset, ex.label == Some(1));
+        }
+    }
+
+    #[test]
+    fn spider_gold_queries_execute() {
+        let d = spider(5, 64);
+        let t = spider_table(5);
+        for ex in d.train.iter().take(32) {
+            let q = String::from_utf8(ex.target.clone()).unwrap();
+            assert!(exec_match(&t, &q, &q), "gold query must exec-match itself: {q}");
+        }
+    }
+
+    #[test]
+    fn dart_target_mentions_values() {
+        let d = dart(9, 32);
+        for ex in &d.train {
+            let rec = String::from_utf8(ex.prompt.clone()).unwrap();
+            let txt = String::from_utf8(ex.target.clone()).unwrap();
+            for kv in rec.split('|') {
+                let (_, v) = kv.split_once('=').unwrap();
+                assert!(txt.contains(v), "{txt} missing {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn cifar_pixels_in_alphabet() {
+        let d = cifar(1, 16);
+        for ex in &d.train {
+            assert_eq!(ex.prompt.len(), 64);
+            assert!(ex.prompt.iter().all(|&b| (b'a'..=b'p').contains(&b)));
+        }
+    }
+
+    #[test]
+    fn corpus_has_requested_size() {
+        let c = pretrain_corpus(1, 4096);
+        assert!(c.len() >= 4096);
+        assert!(c.len() < 4096 + 512);
+    }
+}

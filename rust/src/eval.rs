@@ -1,0 +1,372 @@
+//! Evaluation: classification scoring via the `fwd` artifact and
+//! autoregressive generation (greedy + beam) via the stepwise `decode`
+//! artifact, with the Mamba recurrent state held in Rust buffers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::data::{make_batch, Dataset, Example, BOS, PAD};
+use crate::data::minidb::exec_match;
+use crate::data::tasks::spider_table;
+use crate::data::words_to_ids;
+use crate::manifest::{Manifest, Variant};
+use crate::metrics;
+use crate::runtime::{Engine, Executable, Input};
+use crate::tensor::{argmax, IntTensor, Tensor};
+use crate::train::Trainer;
+
+/// Classification accuracy/metric over a split using the fwd artifact:
+/// logits at the label position, restricted to the task's label bytes.
+pub fn eval_classification(trainer: &Trainer, split: &[Example], metric: &str) -> Result<f64> {
+    let b = trainer.variant.batch_b;
+    let l = trainer.variant.batch_l;
+    let mut preds = Vec::new();
+    let mut golds = Vec::new();
+    let mut i = 0;
+    while i < split.len() {
+        let end = (i + b).min(split.len());
+        let mut refs: Vec<&Example> = split[i..end].iter().collect();
+        while refs.len() < b {
+            refs.push(&split[0]); // pad batch; extra rows ignored below
+        }
+        let batch = make_batch(&refs, b, l);
+        let logits = trainer.logits(&batch)?; // (B, L, V)
+        let v = logits.shape[2];
+        for (r, ex) in split[i..end].iter().enumerate() {
+            let pos = batch.label_pos[r];
+            let row = &logits.data[(r * l + pos) * v..(r * l + pos + 1) * v];
+            let scores: Vec<f32> =
+                ex.label_bytes.iter().map(|&bb| row[bb as usize]).collect();
+            preds.push(argmax(&scores));
+            golds.push(ex.label.unwrap());
+        }
+        i = end;
+    }
+    Ok(match metric {
+        "matthews" => metrics::matthews_corr(&preds, &golds),
+        _ => metrics::accuracy(&preds, &golds),
+    })
+}
+
+/// Regression MSE over generated (x, y) pairs (Fig. 2 synthetic setting).
+pub fn eval_regression(trainer: &Trainer, xs: &[Tensor], ys: &[Tensor]) -> Result<f64> {
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (x, y) in xs.iter().zip(ys) {
+        let pred = trainer.forward_reg(x)?;
+        total += metrics::mse(&pred.data, &y.data) * pred.numel() as f64;
+        n += pred.numel();
+    }
+    Ok(total / n.max(1) as f64)
+}
+
+/// Batched greedy generator over the stepwise decode artifact.
+pub struct Generator {
+    decode: Executable,
+    /// parameter tensors in the decode variant's argument order
+    params: Vec<Tensor>,
+    pub arch_b: usize,
+    n_layer: usize,
+    d_conv: usize,
+    d_inner: usize,
+    d_state: usize,
+}
+
+impl Generator {
+    /// `params_map` must contain every base parameter of the decode variant
+    /// (merge LoRA first: `peft::merge_lora`). Initial-state tuning passes
+    /// its trained h0 via the ssm-state input automatically when the map
+    /// contains "layers.{i}.h0".
+    pub fn new(engine: &Engine, manifest: &Manifest, decode_variant: &str,
+               params_map: &BTreeMap<String, Tensor>) -> Result<Self> {
+        let v: &Variant = manifest.variant(decode_variant)?;
+        let file = v.decode_file.clone()
+            .with_context(|| format!("{decode_variant} has no decode artifact"))?;
+        let decode = engine.load(manifest.hlo_path(&file))?;
+        let mut params = Vec::new();
+        for meta in v.train_params.iter().chain(v.frozen_params.iter()) {
+            let t = params_map.get(&meta.name).with_context(|| {
+                format!("merged params missing {} for decode", meta.name)
+            })?;
+            params.push(t.clone());
+        }
+        Ok(Generator {
+            decode,
+            params,
+            arch_b: v.batch_b,
+            n_layer: v.arch.n_layer,
+            d_conv: v.arch.d_conv,
+            d_inner: v.arch.d_inner,
+            d_state: v.arch.d_state,
+        })
+    }
+
+    fn init_states(&self, h0: Option<&BTreeMap<String, Tensor>>) -> (Tensor, Tensor) {
+        let conv = Tensor::zeros(&[self.n_layer, self.arch_b, self.d_conv - 1, self.d_inner]);
+        let mut ssm = Tensor::zeros(&[self.n_layer, self.arch_b, self.d_inner, self.d_state]);
+        if let Some(map) = h0 {
+            for layer in 0..self.n_layer {
+                if let Some(h) = map.get(&format!("layers.{layer}.h0")) {
+                    let per = self.d_inner * self.d_state;
+                    for b in 0..self.arch_b {
+                        let dst = (layer * self.arch_b + b) * per;
+                        ssm.data[dst..dst + per].copy_from_slice(&h.data);
+                    }
+                }
+            }
+        }
+        (conv, ssm)
+    }
+
+    fn step(&self, tokens: &IntTensor, conv: &Tensor, ssm: &Tensor)
+        -> Result<(Tensor, Tensor, Tensor)> {
+        let mut inputs: Vec<Input> = self.params.iter().map(Input::F).collect();
+        inputs.push(Input::I(tokens));
+        inputs.push(Input::F(conv));
+        inputs.push(Input::F(ssm));
+        let mut outs = self.decode.run(&inputs)?;
+        let ssm_out = outs.pop().unwrap();
+        let conv_out = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, conv_out, ssm_out))
+    }
+
+    /// Greedy generation for up to `arch_b` prompts at once. Rows still in
+    /// prefill keep consuming their prompt; finished rows emit until
+    /// `stop_byte` or `max_new`.
+    pub fn greedy(&self, prompts: &[Vec<u8>], max_new: usize, stop_byte: u8,
+                  h0: Option<&BTreeMap<String, Tensor>>) -> Result<Vec<Vec<u8>>> {
+        assert!(prompts.len() <= self.arch_b);
+        let b = self.arch_b;
+        let (mut conv, mut ssm) = self.init_states(h0);
+        let max_prompt = prompts.iter().map(Vec::len).max().unwrap_or(0);
+        let mut outs: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
+        let mut done = vec![false; prompts.len()];
+        let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
+        for t in 0..max_prompt + max_new {
+            let (logits, c2, s2) = self.step(&cur, &conv, &ssm)?;
+            conv = c2;
+            ssm = s2;
+            let v = logits.shape[1];
+            for r in 0..prompts.len() {
+                let next: i32 = if t < prompts[r].len() {
+                    prompts[r][t] as i32 // still prefilling
+                } else if done[r] || outs[r].len() >= max_new {
+                    PAD
+                } else {
+                    let row = &logits.data[r * v..(r + 1) * v];
+                    // generate over byte vocabulary only (no BOS/PAD)
+                    let tok = argmax(&row[..256]) as u8;
+                    if tok == stop_byte {
+                        done[r] = true;
+                        PAD
+                    } else {
+                        outs[r].push(tok);
+                        tok as i32
+                    }
+                };
+                cur.data[r] = next;
+            }
+            for r in prompts.len()..b {
+                cur.data[r] = PAD;
+            }
+            if (0..prompts.len()).all(|r| t >= prompts[r].len()
+                && (done[r] || outs[r].len() >= max_new)) {
+                break;
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Beam search for ONE prompt, packing beams into the batch dimension
+    /// (beam width ≤ arch_b). Length-normalized log-prob scoring.
+    pub fn beam(&self, prompt: &[u8], width: usize, max_new: usize, stop_byte: u8)
+        -> Result<Vec<u8>> {
+        let width = width.min(self.arch_b);
+        let b = self.arch_b;
+        let (mut conv, mut ssm) = self.init_states(None);
+        // prefill all rows with the same prompt
+        let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
+        let mut logits = Tensor::zeros(&[b, 256]);
+        for t in 0..=prompt.len() {
+            let (lg, c2, s2) = self.step(&cur, &conv, &ssm)?;
+            conv = c2;
+            ssm = s2;
+            logits = lg;
+            if t < prompt.len() {
+                for r in 0..b {
+                    cur.data[r] = prompt[t] as i32;
+                }
+            }
+        }
+        #[derive(Clone)]
+        struct Beam {
+            toks: Vec<u8>,
+            score: f64,
+            done: bool,
+        }
+        let v = logits.shape[1];
+        let lp0 = log_softmax(&logits.data[..v]);
+        let mut order: Vec<usize> = (0..256).collect();
+        order.sort_by(|&a, &bb| lp0[bb].partial_cmp(&lp0[a]).unwrap());
+        let mut beams: Vec<Beam> = order[..width]
+            .iter()
+            .map(|&t| Beam {
+                toks: vec![t as u8],
+                score: lp0[t],
+                done: t as u8 == stop_byte,
+            })
+            .collect();
+        for r in 0..b {
+            cur.data[r] = beams[r.min(width - 1)].toks.last().map(|&t| t as i32).unwrap_or(PAD);
+        }
+        // replicate states across beams (identical after same prefill)
+        for _ in 1..max_new {
+            if beams.iter().all(|bm| bm.done) {
+                break;
+            }
+            let (lg, c2, s2) = self.step(&cur, &conv, &ssm)?;
+            let mut cand: Vec<(usize, u8, f64)> = Vec::new(); // (beam, tok, score)
+            for (bi, bm) in beams.iter().enumerate() {
+                if bm.done {
+                    cand.push((bi, stop_byte, bm.score));
+                    continue;
+                }
+                let lp = log_softmax(&lg.data[bi * v..bi * v + 256]);
+                let mut idx: Vec<usize> = (0..256).collect();
+                idx.sort_by(|&a, &bb| lp[bb].partial_cmp(&lp[a]).unwrap());
+                for &t in &idx[..width] {
+                    cand.push((bi, t as u8, bm.score + lp[t]));
+                }
+            }
+            cand.sort_by(|a, bc| {
+                let la = (beams[a.0].toks.len() + 1) as f64;
+                let lb = (beams[bc.0].toks.len() + 1) as f64;
+                (bc.2 / lb).partial_cmp(&(a.2 / la)).unwrap()
+            });
+            let mut new_beams = Vec::with_capacity(width);
+            let mut new_conv = c2.clone();
+            let mut new_ssm = s2.clone();
+            let conv_per = (self.d_conv - 1) * self.d_inner;
+            let ssm_per = self.d_inner * self.d_state;
+            for (slot, &(bi, tok, score)) in cand.iter().take(width).enumerate() {
+                let src = beams[bi].clone();
+                let done = src.done || tok == stop_byte;
+                let mut toks = src.toks;
+                if !src.done && tok != stop_byte {
+                    toks.push(tok);
+                }
+                new_beams.push(Beam { toks, score, done });
+                // copy parent state into this slot
+                for layer in 0..self.n_layer {
+                    let cfrom = (layer * b + bi) * conv_per;
+                    let cto = (layer * b + slot) * conv_per;
+                    let tmp: Vec<f32> = c2.data[cfrom..cfrom + conv_per].to_vec();
+                    new_conv.data[cto..cto + conv_per].copy_from_slice(&tmp);
+                    let sfrom = (layer * b + bi) * ssm_per;
+                    let sto = (layer * b + slot) * ssm_per;
+                    let tmp: Vec<f32> = s2.data[sfrom..sfrom + ssm_per].to_vec();
+                    new_ssm.data[sto..sto + ssm_per].copy_from_slice(&tmp);
+                }
+            }
+            beams = new_beams;
+            conv = new_conv;
+            ssm = new_ssm;
+            for r in 0..b {
+                let bm = &beams[r.min(width - 1)];
+                cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
+            }
+        }
+        Ok(beams.into_iter().next().map(|bm| bm.toks).unwrap_or_default())
+    }
+}
+
+fn log_softmax(row: &[f32]) -> Vec<f64> {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    row.iter().map(|&x| (x as f64) - m - z.ln()).collect()
+}
+
+/// Generation metrics over a test split: ROUGE / BLEU+METEOR / exec-match.
+pub struct GenScores {
+    pub rouge1: f64,
+    pub rouge2: f64,
+    pub rougel: f64,
+    pub bleu: f64,
+    pub meteor: f64,
+    pub exec_acc: f64,
+}
+
+pub fn eval_generation(gen: &Generator, ds: &Dataset, split: &[Example],
+                       max_new: usize, seed: u64,
+                       h0: Option<&BTreeMap<String, Tensor>>) -> Result<GenScores> {
+    let mut preds_ids = Vec::new();
+    let mut golds_ids = Vec::new();
+    let mut r1 = Vec::new();
+    let mut r2 = Vec::new();
+    let mut rl = Vec::new();
+    let mut met = Vec::new();
+    let mut exec_hits = 0usize;
+    let table = spider_table(seed);
+    let mut i = 0;
+    while i < split.len() {
+        let end = (i + gen.arch_b).min(split.len());
+        let prompts: Vec<Vec<u8>> = split[i..end].iter().map(|e| e.prompt.clone()).collect();
+        let outs = gen.greedy(&prompts, max_new, b'\n', h0)?;
+        for (ex, out) in split[i..end].iter().zip(&outs) {
+            let p_ids = words_to_ids(out);
+            let g_ids = words_to_ids(&ex.target);
+            r1.push(metrics::rouge_n(&p_ids, &g_ids, 1));
+            r2.push(metrics::rouge_n(&p_ids, &g_ids, 2));
+            rl.push(metrics::rouge_l(&p_ids, &g_ids));
+            met.push(metrics::meteor(&p_ids, &g_ids));
+            if ds.metric == "exec" {
+                let pred_s = String::from_utf8_lossy(out).to_string();
+                let gold_s = String::from_utf8_lossy(&ex.target).to_string();
+                if exec_match(&table, &pred_s, &gold_s) {
+                    exec_hits += 1;
+                }
+            }
+            preds_ids.push(p_ids);
+            golds_ids.push(g_ids);
+        }
+        i = end;
+    }
+    let n = preds_ids.len().max(1) as f64;
+    Ok(GenScores {
+        rouge1: crate::tensor::mean(&r1),
+        rouge2: crate::tensor::mean(&r2),
+        rougel: crate::tensor::mean(&rl),
+        bleu: metrics::bleu(&preds_ids, &golds_ids),
+        meteor: crate::tensor::mean(&met),
+        exec_acc: exec_hits as f64 / n,
+    })
+}
+
+/// Convenience: eval loss over a split (early-stopping signal shared by all
+/// task types).
+pub fn eval_split_loss(trainer: &Trainer, split: &[Example], rng_seed: u64) -> Result<f64> {
+    let b = trainer.variant.batch_b;
+    let l = trainer.variant.batch_l;
+    let mut rng = crate::tensor::Rng::new(rng_seed);
+    let mut losses = Vec::new();
+    let it = crate::data::BatchIter::new(split, &mut rng, b, l);
+    for (batch, _) in it.take(8) {
+        losses.push(trainer.eval_loss(&batch)? as f64);
+    }
+    Ok(crate::tensor::mean(&losses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f64 = lp.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(lp[2] > lp[0]);
+    }
+}

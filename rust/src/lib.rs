@@ -1,0 +1,61 @@
+//! # ssm-peft
+//!
+//! Reproduction of **“Parameter-Efficient Fine-Tuning of State Space Models”**
+//! (ICML 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is Layer 3: the fine-tuning coordinator. It loads AOT-compiled
+//! HLO artifacts (produced once by `python -m compile.aot` from the JAX/Pallas
+//! layers) and runs the paper's full experimental pipeline — pretraining,
+//! PEFT benchmarking, SDT dimension selection, fine-tuning, generation-based
+//! evaluation — with Python never on the training path.
+//!
+//! Module map (see DESIGN.md for the paper↔module index):
+//! - [`runtime`] — PJRT CPU client, artifact loading/compile cache
+//! - [`manifest`] — the Python↔Rust artifact contract
+//! - [`tensor`], [`json`] — dependency-free substrates
+//! - [`optim`] — AdamW/SGD, LR schedules, gradient clipping
+//! - [`peft`] — PEFT engine: budgets, masks, **SDT dimension selection**
+//! - [`data`] — synthetic analogues of GLUE/DART/SAMSum/Spider/CIFAR/CelebA
+//! - [`metrics`] — accuracy, Matthews, ROUGE-1/2/L, BLEU, METEOR-lite, MSE
+//! - [`train`] — the training engine (epochs, early stopping, checkpoints)
+//! - [`eval`] — greedy/beam generation over the stepwise decode artifact
+//! - [`coordinator`] — experiment scheduler + table reporting
+//! - [`bench`] — timing harness used by `cargo bench` targets
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod manifest;
+pub mod metrics;
+pub mod optim;
+pub mod peft;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default artifacts directory (overridable via `SSM_PEFT_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SSM_PEFT_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| {
+            // works from repo root and from target/ subprocesses
+            let here = std::path::Path::new("artifacts");
+            if here.exists() {
+                here.to_path_buf()
+            } else {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            }
+        })
+}
+
+/// Default results directory for bench/experiment CSV output.
+pub fn results_dir() -> std::path::PathBuf {
+    let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}

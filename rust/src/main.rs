@@ -1,0 +1,150 @@
+//! ssm-peft CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         list artifact variants + parameter budgets
+//!   pretrain arch=<a> steps=<n>  build/cache the frozen base checkpoint
+//!   finetune [config=<file>] [key=value ...]
+//!                                run one fine-tuning experiment
+//!   sdt-report [key=value ...]   run SDT selection and print the chosen
+//!                                channels/states per layer
+//!   generate variant=<v> prompt=<text>
+//!                                greedy generation demo from a checkpoint
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use ssm_peft::config::{parse_args, ExperimentConfig};
+use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::data::tasks;
+use ssm_peft::eval::Generator;
+use ssm_peft::manifest::Manifest;
+use ssm_peft::peft::{select_dimensions, Budget};
+use ssm_peft::runtime::Engine;
+use ssm_peft::tensor::Rng;
+use ssm_peft::train::{TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (kvs, pos) = parse_args(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "pretrain" => pretrain(&kvs),
+        "finetune" => finetune(&kvs),
+        "sdt-report" => sdt_report(&kvs),
+        "generate" => generate(&kvs),
+        other => {
+            eprintln!("unknown command {other}; see src/main.rs header");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_all() -> Result<(Engine, Manifest)> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    Ok((engine, manifest))
+}
+
+fn info() -> Result<()> {
+    let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+    println!("{:<28} {:>10} {:>12} {:>8}  files", "variant", "trainable", "total", "%");
+    for (name, v) in &manifest.variants {
+        let b = Budget::of(v, None);
+        println!(
+            "{:<28} {:>10} {:>12} {:>7.2}%  step={} fwd={} decode={}",
+            name,
+            b.trainable,
+            b.total,
+            b.percent(),
+            v.step_file.is_some() as u8,
+            v.fwd_file.is_some() as u8,
+            v.decode_file.is_some() as u8,
+        );
+    }
+    Ok(())
+}
+
+fn pretrain(kvs: &BTreeMap<String, String>) -> Result<()> {
+    let (engine, manifest) = load_all()?;
+    let arch = kvs.get("arch").map(String::as_str).unwrap_or("mamba1_xs");
+    let steps: usize = kvs.get("steps").and_then(|s| s.parse().ok()).unwrap_or(300);
+    let seed: u64 = kvs.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let p = Pipeline::new(&engine, &manifest);
+    let ckpt = p.pretrained(arch, steps, seed)?;
+    println!("pretrained {arch}: {} tensors cached in results/", ckpt.len());
+    Ok(())
+}
+
+fn finetune(kvs: &BTreeMap<String, String>) -> Result<()> {
+    let (engine, manifest) = load_all()?;
+    let mut cfg = match kvs.get("config") {
+        Some(f) => ExperimentConfig::from_file(f)?,
+        None => ExperimentConfig::default(),
+    };
+    let mut rest = kvs.clone();
+    rest.remove("config");
+    cfg.apply_overrides(&rest)?;
+    let p = Pipeline::new(&engine, &manifest);
+    let out = p.finetune(&cfg)?;
+    println!("variant={} dataset={} lr={} steps={}", out.variant, out.dataset,
+             out.chosen_lr, out.steps);
+    println!("trainable budget: {:.3}%", out.budget_pct);
+    for (k, v) in &out.scores {
+        println!("  {k:<8} {v:.4}");
+    }
+    ssm_peft::coordinator::save_history(
+        &format!("finetune_{}_{}.csv", out.variant, out.dataset.replace('/', "_")),
+        &out.history,
+    );
+    Ok(())
+}
+
+fn sdt_report(kvs: &BTreeMap<String, String>) -> Result<()> {
+    let (engine, manifest) = load_all()?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.variant = "mamba1_xs_sdt".into();
+    cfg.apply_overrides(kvs)?;
+    let p = Pipeline::new(&engine, &manifest);
+    let arch = arch_of(&manifest, &cfg.variant)?.to_string();
+    let base = p.pretrained(&arch, cfg.pretrain_steps, cfg.seed)?;
+    let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train);
+    let tcfg = TrainConfig { lr: cfg.sdt.warmup_lr, ..Default::default() };
+    let mut tr = Trainer::new(&engine, &manifest, &cfg.variant, &tcfg)?;
+    tr.load_base(&base);
+    let before = tr.train_map();
+    let mut rng = Rng::new(cfg.seed);
+    let it = ssm_peft::data::BatchIter::new(&ds.train, &mut rng,
+                                            tr.variant.batch_b, tr.variant.batch_l);
+    for (batch, _) in it.take(cfg.sdt.warmup_batches) {
+        tr.step(&batch)?;
+    }
+    let after = tr.train_map();
+    let (masks, sels) = select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
+    let b = Budget::of(&tr.variant, Some(&masks));
+    println!("SDT selection on {} / {}:", cfg.variant, cfg.dataset);
+    println!("effective trainable: {} ({:.3}%)", b.trainable, b.percent());
+    for (l, s) in sels.iter().enumerate() {
+        println!("layer {l}: channels {:?}", s.trainable_channels);
+        for (c, st) in s.trainable_channels.iter().zip(&s.trainable_states) {
+            println!("   ch {c}: states {st:?}");
+        }
+    }
+    Ok(())
+}
+
+fn generate(kvs: &BTreeMap<String, String>) -> Result<()> {
+    let (engine, manifest) = load_all()?;
+    let variant = kvs.get("variant").cloned().unwrap_or("mamba1_xs_full".into());
+    let prompt = kvs.get("prompt").cloned().unwrap_or("name=ann|team=red".into());
+    let steps: usize = kvs.get("pretrain_steps").and_then(|s| s.parse().ok()).unwrap_or(300);
+    let p = Pipeline::new(&engine, &manifest);
+    let arch = arch_of(&manifest, &variant)?.to_string();
+    let base = p.pretrained(&arch, steps, 0)?;
+    let gen = Generator::new(&engine, &manifest, &format!("{arch}_full"), &base)?;
+    let out = gen.greedy(&[prompt.clone().into_bytes()], 48, b'\n', None)?;
+    println!("prompt: {prompt}");
+    println!("output: {}", String::from_utf8_lossy(&out[0]));
+    Ok(())
+}

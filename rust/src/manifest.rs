@@ -1,0 +1,271 @@
+//! AOT manifest loader: the contract between the Python compile path (L2)
+//! and the Rust runtime (L3).
+//!
+//! `artifacts/manifest.json` is written once by `python -m compile.aot`; the
+//! Rust side is completely layout-agnostic — parameter names, shapes, order
+//! and the initial values (`<variant>.params.bin`, f32 little-endian,
+//! train-then-frozen order) all come from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::tensor::Tensor;
+
+/// One named parameter slot in an artifact's flat argument list.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// byte offset into params.bin
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// Architecture hyperparameters (mirrors python ArchSpec).
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub kind: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub d_inner: usize,
+    pub d_state: usize,
+    pub d_conv: usize,
+    pub dt_rank: usize,
+    pub n_head: usize,
+    pub h_add: usize,
+}
+
+/// PEFT description for budget accounting and SDT column layouts.
+#[derive(Debug, Clone)]
+pub struct PeftMeta {
+    pub method: String,
+    pub rank: usize,
+    pub targets: Vec<String>,
+    pub n_tokens: usize,
+}
+
+/// One exported (architecture × PEFT) variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub arch: Arch,
+    pub peft: PeftMeta,
+    pub batch_b: usize,
+    pub batch_l: usize,
+    pub reg: bool,
+    pub step_file: Option<String>,
+    pub fwd_file: Option<String>,
+    pub decode_file: Option<String>,
+    pub params_bin: String,
+    pub train_params: Vec<ParamMeta>,
+    pub frozen_params: Vec<ParamMeta>,
+}
+
+impl Variant {
+    pub fn n_train(&self) -> usize {
+        self.train_params.iter().map(|p| p.numel).sum()
+    }
+    pub fn n_total(&self) -> usize {
+        self.n_train() + self.frozen_params.iter().map(|p| p.numel).sum::<usize>()
+    }
+    /// Trainable fraction — the paper's parameter-budget column.
+    pub fn train_fraction(&self) -> f64 {
+        self.n_train() as f64 / self.n_total() as f64
+    }
+    pub fn param(&self, name: &str) -> Option<&ParamMeta> {
+        self.train_params
+            .iter()
+            .chain(self.frozen_params.iter())
+            .find(|p| p.name == name)
+    }
+    /// Index of a parameter inside the trainable list.
+    pub fn train_index(&self, name: &str) -> Option<usize> {
+        self.train_params.iter().position(|p| p.name == name)
+    }
+}
+
+/// The whole manifest plus its directory (for resolving file names).
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+fn parse_params(v: &Value) -> Result<Vec<ParamMeta>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("params not an array"))?;
+    arr.iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.path("name").and_then(Value::as_str).unwrap_or("").to_string(),
+                shape: p
+                    .path("shape")
+                    .and_then(Value::as_arr)
+                    .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                    .unwrap_or_default(),
+                offset: p.path("offset").and_then(Value::as_usize).unwrap_or(0),
+                numel: p.path("numel").and_then(Value::as_usize).unwrap_or(0),
+            })
+        })
+        .collect()
+}
+
+fn get_usize(v: &Value, key: &str) -> usize {
+    v.path(key).and_then(Value::as_usize).unwrap_or(0)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut variants = BTreeMap::new();
+        for v in root
+            .path("variants")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+        {
+            let name = v
+                .path("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("variant missing name"))?
+                .to_string();
+            let arch = v.path("arch").ok_or_else(|| anyhow!("missing arch"))?;
+            let peft = v.path("peft").ok_or_else(|| anyhow!("missing peft"))?;
+            let var = Variant {
+                name: name.clone(),
+                arch: Arch {
+                    kind: arch.path("kind").and_then(Value::as_str).unwrap_or("").into(),
+                    vocab: get_usize(arch, "vocab"),
+                    d_model: get_usize(arch, "d_model"),
+                    n_layer: get_usize(arch, "n_layer"),
+                    d_inner: get_usize(arch, "d_inner"),
+                    d_state: get_usize(arch, "d_state"),
+                    d_conv: get_usize(arch, "d_conv"),
+                    dt_rank: get_usize(arch, "dt_rank"),
+                    n_head: get_usize(arch, "n_head"),
+                    h_add: get_usize(arch, "h_add"),
+                },
+                peft: PeftMeta {
+                    method: peft.path("method").and_then(Value::as_str).unwrap_or("").into(),
+                    rank: get_usize(peft, "rank"),
+                    targets: peft
+                        .path("targets")
+                        .and_then(Value::as_arr)
+                        .map(|a| {
+                            a.iter().filter_map(Value::as_str).map(String::from).collect()
+                        })
+                        .unwrap_or_default(),
+                    n_tokens: get_usize(peft, "n_tokens"),
+                },
+                batch_b: get_usize(v, "batch.B"),
+                batch_l: get_usize(v, "batch.L"),
+                reg: v.path("reg").and_then(Value::as_bool).unwrap_or(false),
+                step_file: v.path("files.step").and_then(Value::as_str).map(String::from),
+                fwd_file: v.path("files.fwd").and_then(Value::as_str).map(String::from),
+                decode_file: v.path("files.decode").and_then(Value::as_str).map(String::from),
+                params_bin: v
+                    .path("params_bin")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                train_params: parse_params(
+                    v.path("train_params").ok_or_else(|| anyhow!("missing train_params"))?,
+                )?,
+                frozen_params: parse_params(
+                    v.path("frozen_params").ok_or_else(|| anyhow!("missing frozen_params"))?,
+                )?,
+            };
+            variants.insert(name, var);
+        }
+        Ok(Manifest { dir, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in manifest (have: {:?})",
+                self.variants.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    /// Load initial parameter values for a variant, keyed by name.
+    pub fn load_params(&self, v: &Variant) -> Result<BTreeMap<String, Tensor>> {
+        let raw = std::fs::read(self.dir.join(&v.params_bin))
+            .with_context(|| format!("reading {}", v.params_bin))?;
+        let mut out = BTreeMap::new();
+        for p in v.train_params.iter().chain(v.frozen_params.iter()) {
+            let bytes = &raw[p.offset..p.offset + 4 * p.numel];
+            let mut data = Vec::with_capacity(p.numel);
+            for c in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            if p.shape.iter().product::<usize>() != p.numel {
+                bail!("{}: shape/numel mismatch", p.name);
+            }
+            out.insert(p.name.clone(), Tensor::from_vec(&p.shape, data));
+        }
+        Ok(out)
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_manifest(dir: &Path) {
+        // one variant, two params
+        let bin: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes: Vec<u8> = bin.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("v.params.bin"), &bytes).unwrap();
+        let m = r#"{"version":1,"variants":[{
+            "name":"v","arch":{"kind":"mamba1","vocab":8,"d_model":2,"n_layer":1,
+            "d_inner":4,"d_state":2,"d_conv":4,"dt_rank":1,"n_head":1,"h_add":1},
+            "peft":{"method":"lora","rank":2,"targets":["linproj"],"n_tokens":0},
+            "batch":{"B":2,"L":4},"reg":false,
+            "files":{"step":"v.step.hlo.txt","fwd":"v.fwd.hlo.txt"},
+            "params_bin":"v.params.bin",
+            "train_params":[{"name":"a","shape":[2,2],"offset":0,"numel":4}],
+            "frozen_params":[{"name":"b","shape":[2],"offset":16,"numel":2}]
+        }]}"#;
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(m.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ssmpeft_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("v").unwrap();
+        assert_eq!(v.batch_b, 2);
+        assert_eq!(v.n_train(), 4);
+        assert_eq!(v.n_total(), 6);
+        assert!((v.train_fraction() - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(v.train_index("a"), Some(0));
+        let params = m.load_params(v).unwrap();
+        assert_eq!(params["a"].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(params["b"].data, vec![5.0, 6.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_variant_errors() {
+        let dir = std::env::temp_dir().join(format!("ssmpeft_mani2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variant("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

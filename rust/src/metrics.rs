@@ -1,0 +1,263 @@
+//! Evaluation metrics, implemented from their published definitions:
+//! accuracy, Matthews correlation (CoLA), ROUGE-1/2/L (SAMSum), BLEU and a
+//! METEOR-lite (DART), execution-match accuracy hooks (Spider analogue),
+//! and MSE (synthetic Fig. 2).
+
+use std::collections::HashMap;
+
+/// Plain classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hit as f64 / pred.len() as f64
+}
+
+/// Matthews correlation coefficient for binary labels (GLUE CoLA metric).
+pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fne) / denom
+    }
+}
+
+fn ngrams(tokens: &[u32], n: usize) -> HashMap<Vec<u32>, usize> {
+    let mut m = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// ROUGE-N recall-oriented F1 (as reported by the standard rouge package).
+pub fn rouge_n(pred: &[u32], gold: &[u32], n: usize) -> f64 {
+    let pg = ngrams(pred, n);
+    let gg = ngrams(gold, n);
+    let overlap: usize = gg
+        .iter()
+        .map(|(k, &c)| c.min(pg.get(k).copied().unwrap_or(0)))
+        .sum();
+    let p_total: usize = pg.values().sum();
+    let g_total: usize = gg.values().sum();
+    if p_total == 0 || g_total == 0 || overlap == 0 {
+        return 0.0;
+    }
+    let p = overlap as f64 / p_total as f64;
+    let r = overlap as f64 / g_total as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Longest common subsequence length (for ROUGE-L).
+fn lcs(a: &[u32], b: &[u32]) -> usize {
+    let mut dp = vec![0usize; b.len() + 1];
+    for &x in a {
+        let mut prev = 0;
+        for (j, &y) in b.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if x == y { prev + 1 } else { dp[j + 1].max(dp[j]) };
+            prev = cur;
+        }
+    }
+    dp[b.len()]
+}
+
+/// ROUGE-L F1 based on LCS.
+pub fn rouge_l(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    let l = lcs(pred, gold) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let p = l / pred.len() as f64;
+    let r = l / gold.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Corpus BLEU-4 with brevity penalty (Papineni et al., 2002), with +1
+/// smoothing on higher-order precisions (standard "smooth1").
+pub fn bleu(preds: &[Vec<u32>], golds: &[Vec<u32>]) -> f64 {
+    assert_eq!(preds.len(), golds.len());
+    let max_n = 4;
+    let mut match_n = vec![0usize; max_n];
+    let mut total_n = vec![0usize; max_n];
+    let (mut pred_len, mut gold_len) = (0usize, 0usize);
+    for (p, g) in preds.iter().zip(golds) {
+        pred_len += p.len();
+        gold_len += g.len();
+        for n in 1..=max_n {
+            let pg = ngrams(p, n);
+            let gg = ngrams(g, n);
+            for (k, &c) in pg.iter() {
+                match_n[n - 1] += c.min(gg.get(k).copied().unwrap_or(0));
+            }
+            total_n[n - 1] += pg.values().sum::<usize>();
+        }
+    }
+    if total_n[0] == 0 {
+        return 0.0;
+    }
+    let mut log_p = 0.0;
+    for n in 0..max_n {
+        let (m, t) = if n == 0 {
+            (match_n[0] as f64, total_n[0] as f64)
+        } else {
+            (match_n[n] as f64 + 1.0, total_n[n] as f64 + 1.0)
+        };
+        if m == 0.0 || t == 0.0 {
+            return 0.0;
+        }
+        log_p += (m / t).ln() / max_n as f64;
+    }
+    let bp = if pred_len >= gold_len || pred_len == 0 {
+        1.0
+    } else {
+        (1.0 - gold_len as f64 / pred_len as f64).exp()
+    };
+    bp * log_p.exp()
+}
+
+/// METEOR-lite: unigram F-mean (recall-weighted 9:1 as in METEOR) with a
+/// fragmentation penalty from the number of matched chunks. Uses exact
+/// matches only (no stemming/synonyms — byte-token tasks don't need them).
+pub fn meteor(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    // greedy alignment: for each pred position, match first unused gold occurrence
+    let mut used = vec![false; gold.len()];
+    let mut align: Vec<Option<usize>> = vec![None; pred.len()];
+    for (i, &t) in pred.iter().enumerate() {
+        for (j, &gtok) in gold.iter().enumerate() {
+            if !used[j] && gtok == t {
+                used[j] = true;
+                align[i] = Some(j);
+                break;
+            }
+        }
+    }
+    let m = align.iter().flatten().count() as f64;
+    if m == 0.0 {
+        return 0.0;
+    }
+    let p = m / pred.len() as f64;
+    let r = m / gold.len() as f64;
+    let fmean = 10.0 * p * r / (r + 9.0 * p);
+    // chunks: maximal runs of adjacent-in-both matches
+    let mut chunks = 0.0;
+    let mut prev: Option<usize> = None;
+    for a in align.iter() {
+        match (a, prev) {
+            (Some(j), Some(pj)) if *j == pj + 1 => {}
+            (Some(_), _) => chunks += 1.0,
+            (None, _) => {}
+        }
+        prev = *a;
+    }
+    let penalty = 0.5 * (chunks / m).powi(3);
+    fmean * (1.0 - penalty)
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        assert!((matthews_corr(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews_corr(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews_corr(&[1, 1, 1, 1], &[1, 0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn rouge1_identical_is_one() {
+        let s = vec![1, 2, 3, 4];
+        assert!((rouge_n(&s, &s, 1) - 1.0).abs() < 1e-12);
+        assert!((rouge_n(&s, &s, 2) - 1.0).abs() < 1e-12);
+        assert!((rouge_l(&s, &s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_disjoint_is_zero() {
+        assert_eq!(rouge_n(&[1, 2], &[3, 4], 1), 0.0);
+        assert_eq!(rouge_l(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn rouge_l_order_sensitivity() {
+        // same unigrams, scrambled order: R1 stays 1, RL drops
+        let gold = vec![1, 2, 3, 4, 5];
+        let scrambled = vec![5, 4, 3, 2, 1];
+        assert!((rouge_n(&scrambled, &gold, 1) - 1.0).abs() < 1e-12);
+        assert!(rouge_l(&scrambled, &gold) < 0.5);
+    }
+
+    #[test]
+    fn bleu_identical_is_one() {
+        let c = vec![vec![1, 2, 3, 4, 5, 6]];
+        assert!((bleu(&c, &c) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_partial_and_brevity() {
+        let pred = vec![vec![1, 2, 3]];
+        let gold = vec![vec![1, 2, 3, 4, 5, 6]];
+        let b = bleu(&pred, &gold);
+        assert!(b > 0.0 && b < 1.0);
+        // longer hypothesis with garbage scores lower than exact
+        let pred2 = vec![vec![1, 2, 3, 9, 9, 9]];
+        assert!(bleu(&pred2, &gold) < 1.0);
+    }
+
+    #[test]
+    fn meteor_identity_and_fragmentation() {
+        let gold = vec![1, 2, 3, 4, 5, 6];
+        let m_same = meteor(&gold, &gold);
+        assert!(m_same > 0.99, "{m_same}");
+        // same tokens but fragmented order should score lower
+        let frag = vec![2, 1, 4, 3, 6, 5];
+        assert!(meteor(&frag, &gold) < m_same);
+        assert_eq!(meteor(&[9, 9], &gold), 0.0);
+    }
+
+    #[test]
+    fn mse_known() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+    }
+}

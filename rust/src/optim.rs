@@ -1,0 +1,262 @@
+//! Optimizers, learning-rate schedules, and gradient clipping.
+//!
+//! The AOT `step` artifacts return raw gradients over the trainable leaves;
+//! the optimizer lives here so the PEFT engine (SDT masks, LoRA+ per-group
+//! learning rates) can intervene between gradient and update — exactly the
+//! boundary the paper's methods need.
+
+use crate::tensor::Tensor;
+
+/// Linear-decay schedule with optional warmup, as used in the paper's
+/// fine-tuning setup (AdamW + linear decay, Sec. C.1).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub kind: ScheduleKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleKind {
+    Constant,
+    Linear,
+    Cosine,
+}
+
+impl Schedule {
+    pub fn constant(lr: f32) -> Self {
+        Schedule { base_lr: lr, warmup_steps: 0, total_steps: 1, kind: ScheduleKind::Constant }
+    }
+    pub fn linear(lr: f32, warmup: usize, total: usize) -> Self {
+        Schedule { base_lr: lr, warmup_steps: warmup, total_steps: total.max(1),
+                   kind: ScheduleKind::Linear }
+    }
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        match self.kind {
+            ScheduleKind::Constant => self.base_lr,
+            ScheduleKind::Linear => {
+                let p = (step - self.warmup_steps) as f32
+                    / (self.total_steps - self.warmup_steps).max(1) as f32;
+                self.base_lr * (1.0 - p.min(1.0))
+            }
+            ScheduleKind::Cosine => {
+                let p = (step - self.warmup_steps) as f32
+                    / (self.total_steps - self.warmup_steps).max(1) as f32;
+                self.base_lr * 0.5 * (1.0 + (std::f32::consts::PI * p.min(1.0)).cos())
+            }
+        }
+    }
+}
+
+/// Global-norm gradient clipping. Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
+    let total: f64 = grads.iter().map(|g| g.sq_norm()).sum();
+    let norm = total.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in g.data.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+/// AdamW with decoupled weight decay (Loshchilov & Hutter).
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: usize,
+    /// Per-parameter LR multiplier (LoRA+ uses e.g. 16× on the B factors).
+    pub lr_mult: Vec<f32>,
+}
+
+impl AdamW {
+    pub fn new(params: &[Tensor]) -> Self {
+        AdamW {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            m: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            v: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            t: 0,
+            lr_mult: vec![1.0; params.len()],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for m in &mut self.m {
+            m.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in &mut self.v {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.t = 0;
+    }
+
+    /// One update step: params[i] -= lr * (m̂/(√v̂+ε) + wd·p).
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let lr_i = lr * self.lr_mult[i];
+            let (m, v) = (&mut self.m[i], &mut self.v[i]);
+            let p = &mut params[i].data;
+            let g = &grads[i].data;
+            debug_assert_eq!(p.len(), g.len(), "param {i} grad shape mismatch");
+            for j in 0..p.len() {
+                let gj = g[j];
+                // Entries that have never received gradient (SDT-masked or
+                // truly untouched) are FROZEN: no decoupled decay either —
+                // decaying a frozen weight would silently train it to zero.
+                if gj == 0.0 && m[j] == 0.0 && v[j] == 0.0 {
+                    continue;
+                }
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * gj;
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * gj * gj;
+                let mhat = m[j] / b1t;
+                let vhat = v[j] / b2t;
+                p[j] -= lr_i * (mhat / (vhat.sqrt() + self.eps)
+                    + self.weight_decay * p[j]);
+            }
+        }
+    }
+}
+
+/// Plain SGD (used by the synthetic Fig. 2 regression runs).
+pub struct Sgd {
+    pub momentum: f32,
+    vel: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(params: &[Tensor], momentum: f32) -> Self {
+        Sgd { momentum, vel: params.iter().map(|p| vec![0.0; p.numel()]).collect() }
+    }
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        for i in 0..params.len() {
+            let vel = &mut self.vel[i];
+            let p = &mut params[i].data;
+            let g = &grads[i].data;
+            for j in 0..p.len() {
+                vel[j] = self.momentum * vel[j] + g[j];
+                p[j] -= lr * vel[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(p: &Tensor) -> Tensor {
+        // grad of f(p) = ||p - 3||^2 / 2
+        Tensor::from_vec(&p.shape, p.data.iter().map(|x| x - 3.0).collect())
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        let mut params = vec![Tensor::from_vec(&[4], vec![0.0, 10.0, -5.0, 3.0])];
+        let mut opt = AdamW::new(&params);
+        opt.weight_decay = 0.0;
+        for _ in 0..2000 {
+            let g = vec![quad_grad(&params[0])];
+            opt.step(&mut params, &g, 0.05);
+        }
+        for &x in &params[0].data {
+            assert!((x - 3.0).abs() < 1e-2, "got {x}");
+        }
+    }
+
+    #[test]
+    fn adamw_weight_decay_shrinks() {
+        let mut params = vec![Tensor::from_vec(&[1], vec![5.0])];
+        let mut opt = AdamW::new(&params);
+        opt.weight_decay = 0.1;
+        // tiny grads: decay dominates the trajectory
+        let g = vec![Tensor::from_vec(&[1], vec![1e-12])];
+        for _ in 0..10 {
+            opt.step(&mut params, &g, 0.1);
+        }
+        assert!(params[0].data[0] < 5.0);
+    }
+
+    #[test]
+    fn adamw_skips_never_touched_entries() {
+        // entries with zero grad and zero moments are frozen: neither the
+        // update nor decoupled decay moves them (SDT mask invariant)
+        let mut params = vec![Tensor::from_vec(&[2], vec![5.0, 5.0])];
+        let mut opt = AdamW::new(&params);
+        opt.weight_decay = 0.1;
+        let g = vec![Tensor::from_vec(&[2], vec![1.0, 0.0])];
+        opt.step(&mut params, &g, 0.1);
+        assert!(params[0].data[0] < 5.0);
+        assert_eq!(params[0].data[1], 5.0);
+    }
+
+    #[test]
+    fn lr_mult_scales_update() {
+        let mut p1 = vec![Tensor::from_vec(&[1], vec![0.0]), Tensor::from_vec(&[1], vec![0.0])];
+        let g = vec![Tensor::from_vec(&[1], vec![1.0]), Tensor::from_vec(&[1], vec![1.0])];
+        let mut opt = AdamW::new(&p1);
+        opt.weight_decay = 0.0;
+        opt.lr_mult = vec![1.0, 4.0];
+        opt.step(&mut p1, &g, 0.01);
+        assert!((p1[1].data[0] / p1[0].data[0] - 4.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sgd_momentum_accelerates() {
+        let mut pa = vec![Tensor::from_vec(&[1], vec![10.0])];
+        let mut pb = vec![Tensor::from_vec(&[1], vec![10.0])];
+        let mut plain = Sgd::new(&pa, 0.0);
+        let mut mom = Sgd::new(&pb, 0.9);
+        for _ in 0..5 {
+            let ga = vec![quad_grad(&pa[0])];
+            plain.step(&mut pa, &ga, 0.01);
+            let gb = vec![quad_grad(&pb[0])];
+            mom.step(&mut pb, &gb, 0.01);
+        }
+        assert!((pb[0].data[0] - 3.0).abs() < (pa[0].data[0] - 3.0).abs());
+    }
+
+    #[test]
+    fn clip_reduces_norm() {
+        let mut g = vec![Tensor::from_vec(&[2], vec![3.0, 4.0])];
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post: f64 = g.iter().map(|t| t.sq_norm()).sum();
+        assert!((post.sqrt() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_noop_below_threshold() {
+        let mut g = vec![Tensor::from_vec(&[2], vec![0.3, 0.4])];
+        clip_global_norm(&mut g, 1.0);
+        assert_eq!(g[0].data, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn schedules() {
+        let s = Schedule::linear(1.0, 10, 110);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-6);
+        assert!((s.lr_at(60) - 0.5).abs() < 1e-6);
+        assert!(s.lr_at(110) <= 1e-6);
+        let c = Schedule::constant(0.3);
+        assert_eq!(c.lr_at(1000), 0.3);
+    }
+}

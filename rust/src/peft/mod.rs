@@ -1,0 +1,257 @@
+//! PEFT engine: trainable masks, **SDT dimension selection** (paper Alg. 1/2),
+//! LoRA merging, and parameter-budget accounting.
+//!
+//! The AOT `step` artifacts compute gradients over whole trainable tensors;
+//! sparse methods (SDT, SDT-P) are realized here by masking gradients before
+//! the optimizer — mathematically identical to freezing the masked entries,
+//! and it lets ONE artifact serve every channel/state selection.
+//!
+//! SDT pipeline (paper Sec. 5.4, Alg. 1):
+//!   1. warmup: fully update the SSM tensors on a small data subset;
+//!   2. rank channels d by the change of ‖Ābar^{(d)}‖ between the pre- and
+//!      post-warmup snapshots; freeze the bottom `channel_freeze` fraction;
+//!   3. within trainable channels, rank state dims the same way and freeze
+//!      the bottom `state_freeze` fraction;
+//!   4. revert parameters to the pre-warmup snapshot and fine-tune with the
+//!      masks applied (plus optional pruning = SDT-P: masked dims set to 0).
+
+use std::collections::BTreeMap;
+
+use crate::manifest::Variant;
+use crate::tensor::{Rng, Tensor};
+
+pub mod sdt;
+
+pub use sdt::{select_dimensions, Criterion, SdtConfig};
+
+/// Per-trainable-parameter gradient masks, aligned with
+/// `variant.train_params` order. `None` = fully trainable.
+#[derive(Debug, Clone)]
+pub struct Masks {
+    pub masks: Vec<Option<Vec<f32>>>,
+}
+
+impl Masks {
+    pub fn none(n: usize) -> Self {
+        Masks { masks: vec![None; n] }
+    }
+
+    /// Zero out masked gradient entries (in place, hot path).
+    pub fn apply(&self, grads: &mut [Tensor]) {
+        for (g, m) in grads.iter_mut().zip(self.masks.iter()) {
+            if let Some(m) = m {
+                debug_assert_eq!(g.data.len(), m.len());
+                for (x, &k) in g.data.iter_mut().zip(m.iter()) {
+                    *x *= k;
+                }
+            }
+        }
+    }
+
+    /// Effective trainable parameter count under the masks.
+    pub fn effective_params(&self, variant: &Variant) -> usize {
+        variant
+            .train_params
+            .iter()
+            .zip(self.masks.iter())
+            .map(|(p, m)| match m {
+                None => p.numel,
+                Some(m) => m.iter().filter(|&&x| x != 0.0).count(),
+            })
+            .sum()
+    }
+
+    /// SDT-P pruning: zero the *parameter values* wherever the mask freezes
+    /// an A entry AND the paper's Alg. 2 marked it as a zero dimension.
+    pub fn prune(&self, params: &mut [Tensor], prune_masks: &[Option<Vec<f32>>]) {
+        for (p, m) in params.iter_mut().zip(prune_masks.iter()) {
+            if let Some(m) = m {
+                for (x, &k) in p.data.iter_mut().zip(m.iter()) {
+                    if k == 0.0 {
+                        *x = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parameter-budget report (the paper's "# Params (%)" column).
+#[derive(Debug, Clone)]
+pub struct Budget {
+    pub trainable: usize,
+    pub total: usize,
+}
+
+impl Budget {
+    pub fn of(variant: &Variant, masks: Option<&Masks>) -> Self {
+        let trainable = match masks {
+            Some(m) => m.effective_params(variant),
+            None => variant.n_train(),
+        };
+        Budget { trainable, total: variant.n_total() }
+    }
+    pub fn fraction(&self) -> f64 {
+        self.trainable as f64 / self.total.max(1) as f64
+    }
+    pub fn percent(&self) -> f64 {
+        100.0 * self.fraction()
+    }
+}
+
+/// Small row-major matmul: (m,k)·(k,n) -> (m,n). Used by LoRA merging only
+/// (not on the training hot path, which stays inside XLA).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Fold trained LoRA/DoRA factors into their base weights so the (adapter-
+/// free) decode artifact can serve the fine-tuned model. Mirrors
+/// python/compile/peft.py::merge_lora.
+pub fn merge_lora(params: &mut BTreeMap<String, Tensor>, rank: usize, alpha: usize) {
+    let scale = if rank == 0 { 1.0 } else { alpha as f32 / rank as f32 };
+    let names: Vec<String> = params
+        .keys()
+        .filter(|k| k.ends_with(".lora_a"))
+        .map(|k| k.trim_end_matches(".lora_a").to_string())
+        .collect();
+    for base in names {
+        let a = params[&format!("{base}.lora_a")].clone();
+        let b = params[&format!("{base}.lora_b")].clone();
+        let delta = matmul(&a, &b);
+        let dora_m = params.get(&format!("{base}.dora_m")).cloned();
+        let w = params.get_mut(&base).expect("lora base weight");
+        for (x, d) in w.data.iter_mut().zip(delta.data.iter()) {
+            *x += scale * d;
+        }
+        if let Some(m) = dora_m {
+            // column-normalize then scale by magnitude vector (DoRA)
+            let (rows, cols) = (w.shape[0], w.shape[1]);
+            for j in 0..cols {
+                let mut norm = 0.0f64;
+                for i in 0..rows {
+                    let v = w.data[i * cols + j] as f64;
+                    norm += v * v;
+                }
+                let norm = (norm.sqrt() as f32) + 1e-6;
+                let s = m.data[j] / norm;
+                for i in 0..rows {
+                    w.data[i * cols + j] *= s;
+                }
+            }
+        }
+    }
+    params.retain(|k, _| {
+        !k.ends_with(".lora_a") && !k.ends_with(".lora_b") && !k.ends_with(".dora_m")
+    });
+}
+
+/// Random masks with a given keep-fraction (ablation baseline for SDT's
+/// selection criterion — DESIGN.md §ablations).
+pub fn random_masks(variant: &Variant, keep: f32, rng: &mut Rng) -> Masks {
+    let masks = variant
+        .train_params
+        .iter()
+        .map(|p| {
+            Some(
+                (0..p.numel)
+                    .map(|_| if rng.uniform() < keep { 1.0 } else { 0.0 })
+                    .collect(),
+            )
+        })
+        .collect();
+    Masks { masks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Arch, ParamMeta, PeftMeta};
+
+    fn dummy_variant() -> Variant {
+        Variant {
+            name: "t".into(),
+            arch: Arch {
+                kind: "mamba1".into(), vocab: 8, d_model: 4, n_layer: 1,
+                d_inner: 4, d_state: 2, d_conv: 4, dt_rank: 1, n_head: 1, h_add: 1,
+            },
+            peft: PeftMeta { method: "sdt".into(), rank: 0, targets: vec![], n_tokens: 0 },
+            batch_b: 1, batch_l: 4, reg: false,
+            step_file: None, fwd_file: None, decode_file: None,
+            params_bin: String::new(),
+            train_params: vec![
+                ParamMeta { name: "layers.0.A_log".into(), shape: vec![4, 2], offset: 0, numel: 8 },
+            ],
+            frozen_params: vec![
+                ParamMeta { name: "embed".into(), shape: vec![8, 4], offset: 32, numel: 32 },
+            ],
+        }
+    }
+
+    #[test]
+    fn mask_apply_zeros() {
+        let masks = Masks { masks: vec![Some(vec![1.0, 0.0, 1.0, 0.0])] };
+        let mut g = vec![Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0])];
+        masks.apply(&mut g);
+        assert_eq!(g[0].data, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn budget_counts_masked() {
+        let v = dummy_variant();
+        let m = Masks { masks: vec![Some(vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])] };
+        let b = Budget::of(&v, Some(&m));
+        assert_eq!(b.trainable, 2);
+        assert_eq!(b.total, 40);
+        let b2 = Budget::of(&v, None);
+        assert_eq!(b2.trainable, 8);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::from_vec(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn merge_lora_adds_delta() {
+        let mut p = BTreeMap::new();
+        p.insert("W".to_string(), Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        p.insert("W.lora_a".to_string(), Tensor::from_vec(&[2, 1], vec![1.0, 2.0]));
+        p.insert("W.lora_b".to_string(), Tensor::from_vec(&[1, 2], vec![3.0, 4.0]));
+        merge_lora(&mut p, 1, 1);
+        assert!(!p.contains_key("W.lora_a"));
+        assert_eq!(p["W"].data, vec![4.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn random_mask_keep_fraction() {
+        let v = dummy_variant();
+        let mut rng = Rng::new(0);
+        let m = random_masks(&v, 0.5, &mut rng);
+        let kept = m.effective_params(&v);
+        assert!(kept > 0 && kept < 8);
+    }
+}

@@ -1,0 +1,310 @@
+//! SDT dimension selection (paper Alg. 1) and SDT-P (Alg. 2).
+//!
+//! Operates on parameter snapshots taken before/after a short warmup phase
+//! run by the trainer. The selection criterion follows the paper: channels
+//! (and, within trainable channels, state dims) are ranked by the change of
+//! ‖Ābar^{(d)}‖ — we use |exp(A_log_after) − exp(A_log_before)| as the
+//! discretization-free magnitude of the Ā change, summed per channel.
+//!
+//! Masks are emitted for the SSM tensors the paper's update scheme trains:
+//!   S6:  A_log (Di,H)   — entry trainable iff channel ∧ state trainable
+//!        xproj (Di,R+2H) — B/C columns gated per channel (rows); the Δ-low
+//!                          columns are always frozen under SDT
+//!   S4:  A_log, C (D,H) — same channel ∧ state gating
+//! LoRA factors and other trainable leaves in the same variant (sdtlora)
+//! pass through unmasked.
+
+use std::collections::BTreeMap;
+
+use crate::manifest::Variant;
+use crate::tensor::{Rng, Tensor};
+
+use super::Masks;
+
+/// Selection criterion; `AbarChange` is the paper's, the others are
+/// ablation baselines (DESIGN.md §ablations, `ablate_selection` bench).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Criterion {
+    /// ‖ΔĀ‖ between warmup snapshots (paper Alg. 1).
+    AbarChange,
+    /// Accumulated |grad| magnitude (Song et al. 2024 style).
+    GradMagnitude,
+    /// Uniform random channels/states (control).
+    Random,
+}
+
+#[derive(Debug, Clone)]
+pub struct SdtConfig {
+    /// Fraction of channels frozen (paper uses 0.99 in Sec. 6.2).
+    pub channel_freeze: f32,
+    /// Fraction of state dims frozen within trainable channels (α).
+    pub state_freeze: f32,
+    /// Number of warmup batches for the selection phase.
+    pub warmup_batches: usize,
+    pub warmup_lr: f32,
+    pub criterion: Criterion,
+    /// SDT-P: additionally prune (set to zero) the bottom `prune_frac` of
+    /// channels by |Ābar| magnitude. 0.0 = plain SDT.
+    pub prune_frac: f32,
+    pub seed: u64,
+}
+
+impl Default for SdtConfig {
+    fn default() -> Self {
+        SdtConfig {
+            channel_freeze: 0.99,
+            state_freeze: 0.90,
+            warmup_batches: 16,
+            warmup_lr: 1e-2,
+            criterion: Criterion::AbarChange,
+            prune_frac: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-channel score: Σ_h |exp(after) − exp(before)| for one layer's A_log.
+fn channel_scores(before: &Tensor, after: &Tensor) -> Vec<f64> {
+    let (d, h) = (before.shape[0], before.shape[1]);
+    let mut scores = vec![0.0f64; d];
+    for di in 0..d {
+        for hi in 0..h {
+            let b = before.data[di * h + hi].exp() as f64;
+            let a = after.data[di * h + hi].exp() as f64;
+            scores[di] += (a - b).abs();
+        }
+    }
+    scores
+}
+
+/// Indices of the top-k entries by score (stable order).
+fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// The selection result for one layer, exposed for tests/reporting.
+#[derive(Debug, Clone)]
+pub struct LayerSelection {
+    pub trainable_channels: Vec<usize>,
+    /// per trainable channel: trainable state dims
+    pub trainable_states: Vec<Vec<usize>>,
+    /// SDT-P only: channels whose dims get pruned to zero
+    pub pruned_channels: Vec<usize>,
+}
+
+/// Run Alg. 1 (and the Alg. 2 pruning step if `prune_frac > 0`) from the two
+/// parameter snapshots. Returns gradient masks aligned with
+/// `variant.train_params`, plus per-layer selections for reporting.
+pub fn select_dimensions(
+    variant: &Variant,
+    before: &BTreeMap<String, Tensor>,
+    after: &BTreeMap<String, Tensor>,
+    cfg: &SdtConfig,
+) -> (Masks, Vec<LayerSelection>) {
+    let mut rng = Rng::new(cfg.seed ^ 0x5d7_ea51);
+    let mut masks: Vec<Option<Vec<f32>>> = vec![None; variant.train_params.len()];
+    let mut selections = Vec::new();
+
+    for layer in 0..variant.arch.n_layer {
+        let a_name = format!("layers.{layer}.A_log");
+        let Some(a_idx) = variant.train_index(&a_name) else { continue };
+        let b_t = &before[&a_name];
+        let a_t = &after[&a_name];
+        let (d, h) = (b_t.shape[0], b_t.shape[1]);
+
+        // ---- channel selection ---------------------------------------------
+        let ch_scores = match cfg.criterion {
+            Criterion::AbarChange | Criterion::GradMagnitude => channel_scores(b_t, a_t),
+            Criterion::Random => (0..d).map(|_| rng.uniform() as f64).collect(),
+        };
+        let n_train_ch = ((1.0 - cfg.channel_freeze) * d as f32).ceil().max(1.0) as usize;
+        let train_ch = top_k(&ch_scores, n_train_ch);
+
+        // ---- SDT-P pruning: bottom channels by |Ābar| magnitude -------------
+        let pruned: Vec<usize> = if cfg.prune_frac > 0.0 {
+            let mag: Vec<f64> = (0..d)
+                .map(|di| {
+                    (0..h).map(|hi| a_t.data[di * h + hi].exp() as f64).sum()
+                })
+                .collect();
+            let n_prune = (cfg.prune_frac * d as f32).floor() as usize;
+            let mut idx: Vec<usize> = (0..d).collect();
+            idx.sort_by(|&x, &y| mag[x].partial_cmp(&mag[y]).unwrap());
+            idx.truncate(n_prune);
+            idx.into_iter().filter(|i| !train_ch.contains(i)).collect()
+        } else {
+            Vec::new()
+        };
+
+        // ---- state selection within trainable channels ----------------------
+        let n_train_st = ((1.0 - cfg.state_freeze) * h as f32).ceil().max(1.0) as usize;
+        let mut states_per_ch = Vec::with_capacity(train_ch.len());
+        let mut a_mask = vec![0.0f32; d * h];
+        for &di in &train_ch {
+            let st_scores: Vec<f64> = match cfg.criterion {
+                Criterion::AbarChange | Criterion::GradMagnitude => (0..h)
+                    .map(|hi| {
+                        let bb = b_t.data[di * h + hi].exp() as f64;
+                        let aa = a_t.data[di * h + hi].exp() as f64;
+                        (aa - bb).abs()
+                    })
+                    .collect(),
+                Criterion::Random => (0..h).map(|_| rng.uniform() as f64).collect(),
+            };
+            let train_st = top_k(&st_scores, n_train_st);
+            for &hi in &train_st {
+                a_mask[di * h + hi] = 1.0;
+            }
+            states_per_ch.push(train_st);
+        }
+        masks[a_idx] = Some(a_mask);
+
+        // ---- companion tensors gated by channel ------------------------------
+        // S6: xproj rows (channels); only the B/C columns train.
+        let x_name = format!("layers.{layer}.xproj");
+        if let Some(x_idx) = variant.train_index(&x_name) {
+            let meta = variant.param(&x_name).unwrap();
+            let cols = meta.shape[1];
+            let r = variant.arch.dt_rank;
+            let mut m = vec![0.0f32; meta.numel];
+            for &di in &train_ch {
+                for c in r..cols {
+                    m[di * cols + c] = 1.0;
+                }
+            }
+            masks[x_idx] = Some(m);
+        }
+        // S4: C gated like A_log (channel ∧ state).
+        let c_name = format!("layers.{layer}.C");
+        if let Some(c_idx) = variant.train_index(&c_name) {
+            let meta = variant.param(&c_name).unwrap();
+            let mut m = vec![0.0f32; meta.numel];
+            for (ci, &di) in train_ch.iter().enumerate() {
+                for &hi in &states_per_ch[ci] {
+                    m[di * h + hi] = 1.0;
+                }
+            }
+            masks[c_idx] = Some(m);
+        }
+
+        selections.push(LayerSelection {
+            trainable_channels: train_ch,
+            trainable_states: states_per_ch,
+            pruned_channels: pruned,
+        });
+    }
+
+    (Masks { masks }, selections)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Arch, ParamMeta, PeftMeta};
+
+    fn variant(d: usize, h: usize, r: usize) -> Variant {
+        Variant {
+            name: "t".into(),
+            arch: Arch {
+                kind: "mamba1".into(), vocab: 8, d_model: 4, n_layer: 1,
+                d_inner: d, d_state: h, d_conv: 4, dt_rank: r, n_head: 1, h_add: 1,
+            },
+            peft: PeftMeta { method: "sdt".into(), rank: 0, targets: vec![], n_tokens: 0 },
+            batch_b: 1, batch_l: 4, reg: false,
+            step_file: None, fwd_file: None, decode_file: None,
+            params_bin: String::new(),
+            train_params: vec![
+                ParamMeta { name: "layers.0.A_log".into(), shape: vec![d, h], offset: 0, numel: d * h },
+                ParamMeta { name: "layers.0.xproj".into(), shape: vec![d, r + 2 * h],
+                            offset: 0, numel: d * (r + 2 * h) },
+            ],
+            frozen_params: vec![],
+        }
+    }
+
+    fn snapshots(d: usize, h: usize, hot_ch: usize, hot_st: usize)
+        -> (BTreeMap<String, Tensor>, BTreeMap<String, Tensor>) {
+        let before = Tensor::zeros(&[d, h]);
+        let mut after = Tensor::zeros(&[d, h]);
+        // channel hot_ch moved a lot, mostly at state hot_st
+        after.data[hot_ch * h + hot_st] = 1.0;
+        after.data[hot_ch * h + (hot_st + 1) % h] = 0.2;
+        let mut b = BTreeMap::new();
+        let mut a = BTreeMap::new();
+        b.insert("layers.0.A_log".into(), before);
+        a.insert("layers.0.A_log".into(), after);
+        (b, a)
+    }
+
+    #[test]
+    fn picks_the_changed_channel_and_state() {
+        let v = variant(8, 4, 2);
+        let (b, a) = snapshots(8, 4, 5, 2);
+        let cfg = SdtConfig {
+            channel_freeze: 0.875, // keep 1 of 8
+            state_freeze: 0.75,    // keep 1 of 4
+            ..Default::default()
+        };
+        let (masks, sel) = select_dimensions(&v, &b, &a, &cfg);
+        assert_eq!(sel[0].trainable_channels, vec![5]);
+        assert_eq!(sel[0].trainable_states[0], vec![2]);
+        // A mask: exactly one entry on
+        let am = masks.masks[0].as_ref().unwrap();
+        assert_eq!(am.iter().filter(|&&x| x == 1.0).count(), 1);
+        assert_eq!(am[5 * 4 + 2], 1.0);
+        // xproj mask: row 5, columns r..r+2h on
+        let xm = masks.masks[1].as_ref().unwrap();
+        let cols = 2 + 8;
+        assert_eq!(xm.iter().filter(|&&x| x == 1.0).count(), 8);
+        assert_eq!(xm[5 * cols + 2], 1.0); // first B column
+        assert_eq!(xm[5 * cols], 0.0); // Δ-low column frozen
+    }
+
+    #[test]
+    fn respects_freeze_ratios() {
+        let v = variant(16, 8, 2);
+        let (b, mut a) = snapshots(16, 8, 3, 1);
+        // make every channel move a little so ordering is total
+        for (i, x) in a.get_mut("layers.0.A_log").unwrap().data.iter_mut().enumerate() {
+            *x += 1e-4 * (i as f32);
+        }
+        let cfg = SdtConfig { channel_freeze: 0.75, state_freeze: 0.5, ..Default::default() };
+        let (_, sel) = select_dimensions(&v, &b, &a, &cfg);
+        assert_eq!(sel[0].trainable_channels.len(), 4); // 25% of 16
+        assert!(sel[0].trainable_states.iter().all(|s| s.len() == 4)); // 50% of 8
+    }
+
+    #[test]
+    fn random_criterion_is_deterministic_per_seed() {
+        let v = variant(8, 4, 2);
+        let (b, a) = snapshots(8, 4, 0, 0);
+        let cfg = SdtConfig { criterion: Criterion::Random, seed: 9, ..Default::default() };
+        let (_, s1) = select_dimensions(&v, &b, &a, &cfg);
+        let (_, s2) = select_dimensions(&v, &b, &a, &cfg);
+        assert_eq!(s1[0].trainable_channels, s2[0].trainable_channels);
+    }
+
+    #[test]
+    fn prune_marks_low_magnitude_channels() {
+        let v = variant(8, 4, 2);
+        let (b, mut a) = snapshots(8, 4, 5, 2);
+        // give channels distinct magnitudes
+        for di in 0..8 {
+            for hi in 0..4 {
+                a.get_mut("layers.0.A_log").unwrap().data[di * 4 + hi] += di as f32 * 0.1 - 2.0;
+            }
+        }
+        let cfg = SdtConfig { prune_frac: 0.25, channel_freeze: 0.875, ..Default::default() };
+        let (_, sel) = select_dimensions(&v, &b, &a, &cfg);
+        // bottom 25% of 8 = 2 channels, minus any overlap with the trainable set
+        let n = sel[0].pruned_channels.len();
+        assert!((1..=2).contains(&n), "pruned {n}");
+        // pruned channels must be disjoint from trainable ones
+        for c in &sel[0].pruned_channels {
+            assert!(!sel[0].trainable_channels.contains(c));
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. It wraps:
+//!   PjRtClient::cpu() → HloModuleProto::from_text_file → compile → execute
+//! behind an `Engine` with an executable cache, plus Tensor↔Literal
+//! conversion. Everything above (trainer, PEFT engine, benches) works with
+//! plain host tensors.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{IntTensor, Tensor};
+
+/// Process-wide PJRT engine: one CPU client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// A host-side input for an executable: either float or int tensor.
+pub enum Input<'a> {
+    F(&'a Tensor),
+    I(&'a IntTensor),
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok(Executable { exe: exe.clone() });
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.as_ref())
+            .with_context(|| format!("parsing HLO text {:?}", path.as_ref()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {:?}", path.as_ref()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(Executable { exe })
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// A compiled computation, executable with host tensors.
+#[derive(Clone)]
+pub struct Executable {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+}
+
+/// Convert a float tensor to an XLA literal (one memcpy).
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
+        .map_err(|e| anyhow!("literal_f32: {e:?}"))
+}
+
+/// Convert an int tensor to an s32 literal.
+pub fn literal_i32(t: &IntTensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &t.shape, bytes)
+        .map_err(|e| anyhow!("literal_i32: {e:?}"))
+}
+
+/// Read a literal back into a host tensor (shape from the literal).
+pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+impl Executable {
+    /// Execute with mixed f32/i32 inputs; returns the flattened output tuple
+    /// as host tensors (all exported artifacts return f32 leaves).
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let lits = self.run_literals(inputs)?;
+        lits.iter().map(tensor_from_literal).collect()
+    }
+
+    /// Execute with pre-built literals (hot path: the trainer caches the
+    /// frozen-parameter literals across steps — §Perf L3 optimization).
+    pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        let lits = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        lits.iter().map(tensor_from_literal).collect()
+    }
+
+    /// Execute and return raw literals (used when outputs are reused as-is).
+    pub fn run_literals(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        let mut args = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            args.push(match inp {
+                Input::F(t) => literal_f32(t)?,
+                Input::I(t) => literal_i32(t)?,
+            });
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = literal_f32(&t).unwrap();
+        let back = tensor_from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_i32_shape() {
+        let t = IntTensor::from_vec(&[4], vec![1, 2, 3, 4]);
+        let lit = literal_i32(&t).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+}

@@ -1,0 +1,100 @@
+//! Checkpoint format: JSON header (names/shapes/offsets) + raw f32-LE blob,
+//! in one file. Used for the pretrained base models and fine-tuned results.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"SSMPEFT1";
+
+pub fn save(params: &BTreeMap<String, Tensor>, path: impl AsRef<Path>) -> Result<()> {
+    let mut header = Vec::new();
+    let mut blob: Vec<u8> = Vec::new();
+    for (name, t) in params {
+        header.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("shape", Value::Arr(t.shape.iter().map(|&d| json::num(d as f64)).collect())),
+            ("offset", json::num(blob.len() as f64)),
+        ]));
+        for &x in &t.data {
+            blob.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let header = json::emit(&Value::Arr(header));
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(&blob)?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a ssm-peft checkpoint: {:?}", path.as_ref());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+    let mut blob = Vec::new();
+    f.read_to_end(&mut blob)?;
+    let mut out = BTreeMap::new();
+    for ent in header.as_arr().ok_or_else(|| anyhow!("bad header"))? {
+        let name = ent.path("name").and_then(Value::as_str).unwrap().to_string();
+        let shape: Vec<usize> = ent
+            .path("shape")
+            .and_then(Value::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Value::as_usize)
+            .collect();
+        let off = ent.path("offset").and_then(Value::as_usize).unwrap();
+        let numel: usize = shape.iter().product();
+        let bytes = &blob[off..off + 4 * numel];
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::from_vec(&shape, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a.b".to_string(), Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]));
+        m.insert("c".to_string(), Tensor::from_vec(&[3], vec![9.0, 8.0, 7.0]));
+        let p = std::env::temp_dir().join(format!("ckpt_test_{}.bin", std::process::id()));
+        save(&m, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let p = std::env::temp_dir().join(format!("ckpt_bad_{}.bin", std::process::id()));
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,234 @@
+//! Training engine: drives the AOT `step` artifact — upload params+batch,
+//! read back (loss, grads), apply PEFT masks, clip, optimizer update.
+//!
+//! Python is never invoked here; the full fine-tuning loop is Rust + the
+//! compiled XLA executable.
+
+pub mod checkpoint;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Batch;
+use crate::manifest::{Manifest, Variant};
+use crate::optim::{clip_global_norm, AdamW, Schedule};
+use crate::peft::Masks;
+use crate::runtime::{Engine, Executable, Input};
+use crate::tensor::Tensor;
+
+/// Training-loop configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub clip_norm: f32,
+    pub schedule_total: usize,
+    pub warmup_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 1e-3,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            schedule_total: 1000,
+            warmup_steps: 0,
+        }
+    }
+}
+
+/// A live training session for one artifact variant.
+pub struct Trainer {
+    pub variant: Variant,
+    step_exe: Executable,
+    fwd_exe: Executable,
+    pub train_params: Vec<Tensor>,
+    pub frozen_params: Vec<Tensor>,
+    /// frozen-parameter literals, built once and reused every step
+    /// (§Perf L3: avoids re-serializing the (large) frozen set per step)
+    frozen_lits: Vec<xla::Literal>,
+    pub masks: Masks,
+    opt: AdamW,
+    pub sched: Schedule,
+    pub step_count: usize,
+    /// (step, loss) history for loss-curve output.
+    pub history: Vec<(usize, f32)>,
+    /// scratch for gradient tensors (allocation reuse on the hot path)
+    grad_buf: Vec<Tensor>,
+}
+
+impl Trainer {
+    pub fn new(engine: &Engine, manifest: &Manifest, variant_name: &str,
+               cfg: &TrainConfig) -> Result<Self> {
+        let variant = manifest.variant(variant_name)?.clone();
+        let step_file = variant.step_file.clone()
+            .with_context(|| format!("{variant_name} has no step artifact"))?;
+        let fwd_file = variant.fwd_file.clone()
+            .with_context(|| format!("{variant_name} has no fwd artifact"))?;
+        let step_exe = engine.load(manifest.hlo_path(&step_file))?;
+        let fwd_exe = engine.load(manifest.hlo_path(&fwd_file))?;
+        let params = manifest.load_params(&variant)?;
+        let train_params: Vec<Tensor> = variant.train_params.iter()
+            .map(|p| params[&p.name].clone()).collect();
+        let frozen_params: Vec<Tensor> = variant.frozen_params.iter()
+            .map(|p| params[&p.name].clone()).collect();
+        let mut opt = AdamW::new(&train_params);
+        opt.weight_decay = cfg.weight_decay;
+        let n = variant.train_params.len();
+        let frozen_lits = frozen_params
+            .iter()
+            .map(crate::runtime::literal_f32)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer {
+            variant,
+            step_exe,
+            fwd_exe,
+            train_params,
+            frozen_params,
+            frozen_lits,
+            masks: Masks::none(n),
+            opt,
+            sched: Schedule::linear(cfg.lr, cfg.warmup_steps, cfg.schedule_total),
+            step_count: 0,
+            history: Vec::new(),
+            grad_buf: Vec::new(),
+        })
+    }
+
+    /// Overlay pretrained base weights by name (PEFT-specific leaves that
+    /// don't exist in the checkpoint keep their fresh initialization).
+    pub fn load_base(&mut self, ckpt: &BTreeMap<String, Tensor>) {
+        for (i, meta) in self.variant.train_params.iter().enumerate() {
+            if let Some(t) = ckpt.get(&meta.name) {
+                assert_eq!(t.shape, meta.shape, "{} shape drift", meta.name);
+                self.train_params[i] = t.clone();
+            }
+        }
+        for (i, meta) in self.variant.frozen_params.iter().enumerate() {
+            if let Some(t) = ckpt.get(&meta.name) {
+                assert_eq!(t.shape, meta.shape, "{} shape drift", meta.name);
+                self.frozen_params[i] = t.clone();
+            }
+        }
+        self.refresh_frozen_lits();
+    }
+
+    /// Rebuild the cached frozen-parameter literals (call after mutating
+    /// `frozen_params` directly).
+    pub fn refresh_frozen_lits(&mut self) {
+        self.frozen_lits = self
+            .frozen_params
+            .iter()
+            .map(|t| crate::runtime::literal_f32(t).expect("frozen literal"))
+            .collect();
+    }
+
+    /// Current parameters as a name-keyed map (checkpointing / merging).
+    pub fn params_map(&self) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        for (meta, t) in self.variant.train_params.iter().zip(&self.train_params) {
+            m.insert(meta.name.clone(), t.clone());
+        }
+        for (meta, t) in self.variant.frozen_params.iter().zip(&self.frozen_params) {
+            m.insert(meta.name.clone(), t.clone());
+        }
+        m
+    }
+
+    /// Snapshot just the trainable tensors (SDT warmup bookkeeping).
+    pub fn snapshot_train(&self) -> Vec<Tensor> {
+        self.train_params.clone()
+    }
+    pub fn restore_train(&mut self, snap: Vec<Tensor>) {
+        assert_eq!(snap.len(), self.train_params.len());
+        self.train_params = snap;
+        self.opt.reset();
+    }
+
+    /// Map of trainable tensors keyed by name (for SDT selection input).
+    pub fn train_map(&self) -> BTreeMap<String, Tensor> {
+        self.variant.train_params.iter().zip(&self.train_params)
+            .map(|(m, t)| (m.name.clone(), t.clone())).collect()
+    }
+
+    /// Build the full literal argument list: fresh literals for the
+    /// (mutating) trainable params and the batch, cached literals for the
+    /// frozen set.
+    fn exec(&self, exe: &crate::runtime::Executable, batch_inputs: &[Input])
+        -> Result<Vec<Tensor>> {
+        let train_lits = self
+            .train_params
+            .iter()
+            .map(crate::runtime::literal_f32)
+            .collect::<Result<Vec<_>>>()?;
+        let batch_lits = batch_inputs
+            .iter()
+            .map(|b| match b {
+                Input::F(t) => crate::runtime::literal_f32(t),
+                Input::I(t) => crate::runtime::literal_i32(t),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = train_lits
+            .iter()
+            .chain(self.frozen_lits.iter())
+            .chain(batch_lits.iter())
+            .collect();
+        exe.run_refs(&refs)
+    }
+
+    fn step_impl(&mut self, batch_inputs: &[Input]) -> Result<f32> {
+        let mut outs = self.exec(&self.step_exe.clone(), batch_inputs)?;
+        if outs.len() != 1 + self.train_params.len() {
+            bail!("step returned {} outputs, expected {}", outs.len(),
+                  1 + self.train_params.len());
+        }
+        let loss = outs[0].data[0];
+        let mut grads: Vec<Tensor> = outs.drain(1..).collect();
+        self.masks.apply(&mut grads);
+        clip_global_norm(&mut grads, 1.0);
+        let lr = self.sched.lr_at(self.step_count);
+        self.opt.step(&mut self.train_params, &grads, lr);
+        self.grad_buf = grads; // keep allocation for reuse-by-inspection
+        self.step_count += 1;
+        self.history.push((self.step_count, loss));
+        Ok(loss)
+    }
+
+    /// One optimization step on a token batch.
+    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        self.step_impl(&[Input::I(&batch.tokens), Input::I(&batch.targets),
+                         Input::F(&batch.mask)])
+    }
+
+    /// One optimization step on a regression batch (s4reg variants).
+    pub fn step_reg(&mut self, x: &Tensor, y: &Tensor, mask: &Tensor) -> Result<f32> {
+        self.step_impl(&[Input::F(x), Input::F(y), Input::F(mask)])
+    }
+
+    /// Forward pass: logits (B, L, V) for a token batch.
+    pub fn logits(&self, batch: &Batch) -> Result<Tensor> {
+        let outs = self.exec(&self.fwd_exe, &[Input::I(&batch.tokens)])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Forward pass for regression variants: y (B, L, D).
+    pub fn forward_reg(&self, x: &Tensor) -> Result<Tensor> {
+        let outs = self.exec(&self.fwd_exe, &[Input::F(x)])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Eval loss on a batch without updating (runs step, discards grads).
+    pub fn eval_loss(&self, batch: &Batch) -> Result<f32> {
+        let outs = self.exec(&self.step_exe, &[Input::I(&batch.tokens),
+                                               Input::I(&batch.targets),
+                                               Input::F(&batch.mask)])?;
+        Ok(outs[0].data[0])
+    }
+
+    /// Last gradient set (profiling/diagnostics).
+    pub fn last_grads(&self) -> &[Tensor] {
+        &self.grad_buf
+    }
+}
