@@ -90,13 +90,10 @@ fn main() -> Result<()> {
 
     // quick qualitative sample
     println!("\n=== sample generation ===");
-    let mut merged = {
-        let ds_cfg = &cfg;
-        let _ = ds_cfg;
-        base.clone()
-    };
+    let mut merged = (*base).clone();
     // show base-model generation for contrast with fine-tuned scores above
-    ssm_peft::peft::merge_lora(&mut merged, 1, 1);
+    // (the full-variant base has no adapters; the merge is a no-op)
+    ssm_peft::peft::merge_lora(&mut merged, &v.peft);
     let gen = ssm_peft::eval::Generator::new(&engine, &manifest, "mamba1_s_full", &merged)?;
     let prompt = b"name=ann|team=red".to_vec();
     let outs = gen.greedy(&[prompt.clone()], 48, b'\n', None)?;

@@ -7,7 +7,8 @@
 
 use anyhow::Result;
 use ssm_peft::config::ExperimentConfig;
-use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::suite::VariantId;
 use ssm_peft::data::minidb::exec_match;
 use ssm_peft::data::tasks::{self, spider_table};
 use ssm_peft::eval::Generator;
@@ -39,8 +40,8 @@ fn main() -> Result<()> {
     // ---- beam-search demo on a few test questions ---------------------------
     // re-run the training quickly to get the parameters (finetune() consumed
     // its trainer); in a service you would checkpoint instead.
-    let arch = arch_of(&manifest, &cfg.variant)?.to_string();
-    let base = pipeline.pretrained(&arch, cfg.pretrain_steps, cfg.seed)?;
+    let vid = VariantId::parse(&cfg.variant)?;
+    let base = pipeline.pretrained(&vid.arch, cfg.pretrain_steps, cfg.seed)?;
     let tcfg = TrainConfig { lr: out.chosen_lr, schedule_total: 80, ..Default::default() };
     let mut tr = Trainer::new(&engine, &manifest, &cfg.variant, &tcfg)?;
     tr.load_base(&base);
@@ -54,15 +55,15 @@ fn main() -> Result<()> {
         }
     }
     let mut merged = tr.params_map();
-    merge_lora(&mut merged, tr.variant.peft.rank.max(1), tr.variant.peft.rank.max(1));
-    let gen = Generator::new(&engine, &manifest, &format!("{arch}_full"), &merged)?;
+    merge_lora(&mut merged, &tr.variant.peft);
+    let gen = Generator::new(&engine, &manifest, &vid.decode_variant(), &merged)?;
     let table = spider_table(cfg.seed);
 
     println!("\nbeam-search (width 4) vs greedy on 4 test questions:");
     let mut beam_hits = 0;
     for ex in ds.test.iter().take(4) {
         let gold = String::from_utf8_lossy(&ex.target).to_string();
-        let beam = gen.beam(&ex.prompt, 4, 40, b'\n')?;
+        let beam = gen.beam(&ex.prompt, 4, 40, b'\n', None)?;
         let beam_s = String::from_utf8_lossy(&beam).to_string();
         let hit = exec_match(&table, &beam_s, &gold);
         beam_hits += hit as usize;

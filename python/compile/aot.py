@@ -130,6 +130,9 @@ def export_variant(v, outdir):
         },
         "peft": {"method": peft["method"],
                  "rank": peft.get("rank", 0),
+                 # merge scale numerator; mirrors peft.make_eff's
+                 # alpha default (= rank, i.e. scale 1.0)
+                 "alpha": peft.get("alpha", peft.get("rank", 0)),
                  "targets": peft.get("targets", []),
                  "n_tokens": peft.get("n_tokens", 0)},
         "batch": {"B": B, "L": L},

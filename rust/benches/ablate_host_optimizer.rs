@@ -10,7 +10,8 @@
 //! update is not slower than the unmasked one.
 
 use ssm_peft::bench::{time, TablePrinter};
-use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::suite::VariantId;
 use ssm_peft::data::{tasks, BatchIter};
 use ssm_peft::manifest::Manifest;
 use ssm_peft::optim::AdamW;
@@ -28,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     for variant in ["mamba1_xs_full", "mamba1_s_full"] {
-        let arch = arch_of(&manifest, variant)?.to_string();
+        let arch = VariantId::parse(variant)?.arch;
         let base = p.pretrained(&arch, 150, 0)?;
         for masked in [false, true] {
             let mut tr = Trainer::new(&engine, &manifest, variant,

@@ -9,7 +9,8 @@
 //! adapter activations + their optimizer state on the SSM path).
 
 use ssm_peft::bench::{bench_cfg, rss_bytes, training_memory_model, TablePrinter};
-use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::suite::VariantId;
 use ssm_peft::data::{tasks, BatchIter};
 use ssm_peft::manifest::Manifest;
 use ssm_peft::peft::Budget;
@@ -31,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         ("mamba1_s_lora_lin", "LoRA"),
         ("mamba1_s_sdtlora", "LoRA & SDT"),
     ] {
-        let arch = arch_of(&manifest, variant)?.to_string();
+        let arch = VariantId::parse(variant)?.arch;
         let base = p.pretrained(&arch, 150, 0)?;
         let tcfg = TrainConfig::default();
         let mut tr = Trainer::new(&engine, &manifest, variant, &tcfg)?;

@@ -8,7 +8,8 @@
 //! updates touch fewer optimizer slots).
 
 use ssm_peft::bench::{bench_cfg, time, TablePrinter};
-use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::coordinator::Pipeline;
+use ssm_peft::suite::VariantId;
 use ssm_peft::data::{tasks, BatchIter};
 use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         ("mamba1_s_lora_lin", "LoRA"),
         ("mamba1_s_sdtlora", "LoRA & SDT"),
     ] {
-        let arch = arch_of(&manifest, variant)?.to_string();
+        let arch = VariantId::parse(variant)?.arch;
         let base = p.pretrained(&arch, 150, 0)?;
         let mut tr = Trainer::new(&engine, &manifest, variant, &TrainConfig::default())?;
         tr.load_base(&base);

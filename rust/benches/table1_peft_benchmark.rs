@@ -1,102 +1,87 @@
 //! Regenerates **Table 1**: benchmarking popular PEFT methods on Mamba and
 //! the hybrid (Jamba-like) model across the dataset analogues.
 //!
+//! Declarative suite spec on the parallel runner: the full method×dataset
+//! grid fans out over `SSM_PEFT_WORKERS` workers (default 2) sharing the
+//! engine's compiled-executable cache, streams machine-readable records to
+//! results/table1.jsonl, and pivots them into the paper table.
+//!
 //! Paper columns: GLUE avg / DART / SAMSum / Spider / CIFAR-10 / CelebA.
 //! Testbed subset (CPU budget): GLUE-rte + GLUE-sst2, DART, CIFAR-10 for
 //! Mamba; GLUE-rte for the hybrid. The *expected shape* (paper finding):
 //! LoRA* > {BitFit, Additional-scan} > {prompt, prefix}; LinProj ≥ Both >
 //! SSM-only for LoRA.
 
-use ssm_peft::bench::{bench_cfg, TablePrinter};
-use ssm_peft::coordinator::Pipeline;
+use ssm_peft::bench::bench_template;
 use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::{pivot, worker_count, PeftMethod, PivotCol, Suite, VariantId};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
-    let p = Pipeline::new(&engine, &manifest);
 
-    let mamba_methods: &[(&str, &str, &str)] = &[
-        ("mamba1_xs_prompt", "Prompt Tuning", "Other"),
-        ("mamba1_xs_prefix", "Prefix-Tuning", "SSM"),
-        ("mamba1_xs_initstate", "Initial-State Tuning", "SSM"),
-        ("mamba1_xs_bitfit", "BitFit", "Both"),
-        ("mamba1_xs_lora_ssm", "LoRA", "SSM"),
-        ("mamba1_xs_lora_lin", "LoRA", "LinProj"),
-        ("mamba1_xs_lora_both", "LoRA", "Both"),
-        ("mamba1_xs_dora_ssm", "DoRA", "SSM"),
-        ("mamba1_xs_dora_lin", "DoRA", "LinProj"),
-        ("mamba1_xs_dora_both", "DoRA", "Both"),
-        ("mamba1_xs_addscan", "Additional-Scan", "SSM"),
-        ("mamba1_xs_full", "Full Fine-Tuning", "Both"),
+    let mamba_variants: &[&str] = &[
+        "mamba1_xs_prompt", "mamba1_xs_prefix", "mamba1_xs_initstate",
+        "mamba1_xs_bitfit", "mamba1_xs_lora_ssm", "mamba1_xs_lora_lin",
+        "mamba1_xs_lora_both", "mamba1_xs_dora_ssm", "mamba1_xs_dora_lin",
+        "mamba1_xs_dora_both", "mamba1_xs_addscan", "mamba1_xs_full",
     ];
-    let datasets = ["glue/rte", "glue/sst2", "dart", "cifar10"];
-
-    let mut table = TablePrinter::new(&[
-        "model", "method", "target", "params%", "rte", "sst2", "dart(MET)",
-        "dart(BLEU)", "cifar10",
-    ]);
-
-    for (variant, method, target) in mamba_methods {
-        let mut cells = vec!["Mamba".to_string(), method.to_string(), target.to_string()];
-        let mut budget = String::new();
-        let mut scores: Vec<String> = Vec::new();
-        for ds in &datasets {
-            let cfg = bench_cfg(variant, ds);
-            match p.finetune(&cfg) {
-                Ok(out) => {
-                    if budget.is_empty() {
-                        budget = format!("{:.2}", out.budget_pct);
-                    }
-                    if *ds == "dart" {
-                        scores.push(format!("{:.3}", out.scores["meteor"]));
-                        scores.push(format!("{:.3}", out.scores["bleu"]));
-                    } else {
-                        scores.push(format!("{:.3}", out.metric));
-                    }
-                }
-                Err(e) => {
-                    eprintln!("[{variant}/{ds}] failed: {e:#}");
-                    scores.push("ERR".into());
-                    if *ds == "dart" {
-                        scores.push("ERR".into());
-                    }
-                }
-            }
-        }
-        cells.push(budget);
-        cells.extend(scores);
-        table.row(cells);
-        table.print(); // incremental progress
-    }
-
-    // hybrid rows (PEFT on Mamba layers only, attention frozen — Sec. 4.1)
-    let hybrid_methods: &[(&str, &str, &str)] = &[
-        ("hybrid_xs_prompt", "Prompt Tuning", "Other"),
-        ("hybrid_xs_prefix", "Prefix-Tuning", "SSM"),
-        ("hybrid_xs_bitfit", "BitFit", "Other"),
-        ("hybrid_xs_lora_lin", "LoRA", "LinProj"),
-        ("hybrid_xs_dora_lin", "DoRA", "LinProj"),
-        ("hybrid_xs_addscan", "Additional-Scan", "SSM"),
+    let hybrid_variants: &[&str] = &[
+        "hybrid_xs_prompt", "hybrid_xs_prefix", "hybrid_xs_bitfit",
+        "hybrid_xs_lora_lin", "hybrid_xs_dora_lin", "hybrid_xs_addscan",
     ];
-    for (variant, method, target) in hybrid_methods {
-        let cfg = bench_cfg(variant, "glue/rte");
-        let (acc, pct) = match p.finetune(&cfg) {
-            Ok(o) => (format!("{:.3}", o.metric), format!("{:.2}", o.budget_pct)),
-            Err(e) => {
-                eprintln!("[{variant}] failed: {e:#}");
-                ("ERR".into(), "-".into())
-            }
-        };
-        table.row(vec![
-            "Hybrid".into(), method.to_string(), target.to_string(), pct, acc,
-            "-".into(), "-".into(), "-".into(), "-".into(),
-        ]);
-    }
+    let datasets: &[&str] = &["glue/rte", "glue/sst2", "dart", "cifar10"];
 
-    println!("\n=== Table 1 (reproduction) ===");
+    let workers = worker_count(2);
+    let records = Suite::new(&engine, &manifest)
+        .named("table1")
+        .template(bench_template())
+        .grid(mamba_variants, datasets)
+        .grid(hybrid_variants, &["glue/rte"])
+        .run(workers)?;
+
+    // row labels (model / method / target) derive from the typed VariantId
+    let labels: Vec<(String, Vec<String>)> = mamba_variants
+        .iter()
+        .map(|v| (*v, "Mamba"))
+        .chain(hybrid_variants.iter().map(|v| (*v, "Hybrid")))
+        .map(|(v, model)| {
+            let vid = VariantId::parse(v).expect("bench variant name");
+            // paper's Table 1 nuance: on the hybrid only Mamba-layer biases
+            // exist to tune, so BitFit's target reads "Other" there
+            let target = if model == "Hybrid" && vid.method == PeftMethod::BitFit {
+                "Other"
+            } else {
+                vid.method.target_label()
+            };
+            (
+                v.to_string(),
+                vec![model.to_string(), vid.method.label().to_string(), target.to_string()],
+            )
+        })
+        .collect();
+    let label_refs: Vec<Vec<&str>> = labels
+        .iter()
+        .map(|(_, cells)| cells.iter().map(String::as_str).collect())
+        .collect();
+    let rows: Vec<(&str, &[&str])> = labels
+        .iter()
+        .zip(&label_refs)
+        .map(|((v, _), cells)| (v.as_str(), cells.as_slice()))
+        .collect();
+
+    let cols = [
+        PivotCol::main("rte", "glue/rte"),
+        PivotCol::main("sst2", "glue/sst2"),
+        PivotCol::score("dart(MET)", "dart", "meteor"),
+        PivotCol::score("dart(BLEU)", "dart", "bleu"),
+        PivotCol::main("cifar10", "cifar10"),
+    ];
+    let table = pivot(&records, &["model", "method", "target"], &rows, &cols);
+    println!("\n=== Table 1 (reproduction, {workers} workers) ===");
     table.print();
     table.save_csv("table1.csv");
+    println!("[record stream: results/table1.jsonl]");
     Ok(())
 }

@@ -1,58 +1,47 @@
 //! Regenerates **Table 3**: SDT vs LoRA on the SSM module of pretrained
 //! Mamba (LinProj always tuned with LoRA), across GLUE / DART / SAMSum /
-//! Spider analogues.
+//! Spider analogues. Runs as a parallel suite (records in
+//! results/table3.jsonl).
 //!
 //! Expected shape (paper): the SDT rows match or beat the LoRA-on-S6 rows
 //! at comparable (or smaller) trainable budgets.
 
-use ssm_peft::bench::{bench_cfg, TablePrinter};
-use ssm_peft::coordinator::Pipeline;
+use ssm_peft::bench::bench_template;
 use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::{pivot, worker_count, PivotCol, Suite};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
-    let p = Pipeline::new(&engine, &manifest);
 
-    let rows: &[(&str, &str)] = &[
-        ("mamba1_xs_lora_both", "LinProj=LoRA, S6=LoRA"),
-        ("mamba1_xs_sdtlora", "LinProj/Wout=LoRA, S6=SDT"),
+    let rows: &[(&str, &[&str])] = &[
+        ("mamba1_xs_lora_both", &["LinProj=LoRA, S6=LoRA"]),
+        ("mamba1_xs_sdtlora", &["LinProj/Wout=LoRA, S6=SDT"]),
     ];
-    let datasets = ["glue/rte", "dart", "samsum", "spider"];
-    let mut table = TablePrinter::new(&[
-        "setting", "params%", "rte(acc)", "dart(BLEU)", "dart(MET)",
-        "samsum(R1)", "samsum(R2)", "samsum(RL)", "spider(exec)",
-    ]);
-    for (variant, label) in rows {
-        let mut cells = vec![label.to_string()];
-        let mut pct = String::new();
-        for ds in &datasets {
-            let cfg = bench_cfg(variant, ds);
-            let out = p.finetune(&cfg)?;
-            if pct.is_empty() {
-                pct = format!("{:.2}", out.budget_pct);
-                cells.push(pct.clone());
-            }
-            match *ds {
-                "dart" => {
-                    cells.push(format!("{:.3}", out.scores["bleu"]));
-                    cells.push(format!("{:.3}", out.scores["meteor"]));
-                }
-                "samsum" => {
-                    cells.push(format!("{:.3}", out.scores["rouge1"]));
-                    cells.push(format!("{:.3}", out.scores["rouge2"]));
-                    cells.push(format!("{:.3}", out.scores["rougeL"]));
-                }
-                "spider" => cells.push(format!("{:.3}", out.scores["exec"])),
-                _ => cells.push(format!("{:.3}", out.metric)),
-            }
-        }
-        table.row(cells);
-        table.print();
-    }
-    println!("\n=== Table 3 (reproduction) ===");
+    let variants: Vec<&str> = rows.iter().map(|(v, _)| *v).collect();
+    let datasets: &[&str] = &["glue/rte", "dart", "samsum", "spider"];
+
+    let workers = worker_count(2);
+    let records = Suite::new(&engine, &manifest)
+        .named("table3")
+        .template(bench_template())
+        .grid(&variants, datasets)
+        .run(workers)?;
+
+    let cols = [
+        PivotCol::main("rte(acc)", "glue/rte"),
+        PivotCol::score("dart(BLEU)", "dart", "bleu"),
+        PivotCol::score("dart(MET)", "dart", "meteor"),
+        PivotCol::score("samsum(R1)", "samsum", "rouge1"),
+        PivotCol::score("samsum(R2)", "samsum", "rouge2"),
+        PivotCol::score("samsum(RL)", "samsum", "rougeL"),
+        PivotCol::main("spider(exec)", "spider"),
+    ];
+    let table = pivot(&records, &["setting"], rows, &cols);
+    println!("\n=== Table 3 (reproduction, {workers} workers) ===");
     table.print();
     table.save_csv("table3.csv");
+    println!("[record stream: results/table3.jsonl]");
     Ok(())
 }

@@ -1,44 +1,59 @@
 //! Regenerates **Table 4 / 22**: SDT vs DoRA/LoRA on the hybrid
-//! (Jamba-like) model's Mamba layers, GLUE analogue subtasks.
+//! (Jamba-like) model's Mamba layers, GLUE analogue subtasks. Runs as a
+//! parallel suite (records in results/table4.jsonl).
 //!
 //! Expected shape (paper): SDT ≥ DoRA on average, with smaller gains than
 //! on pure Mamba because attention layers are frozen and Mamba layers hold
 //! a smaller parameter share.
 
-use ssm_peft::bench::{bench_cfg, TablePrinter};
-use ssm_peft::coordinator::Pipeline;
+use ssm_peft::bench::bench_template;
 use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::{pivot, worker_count, PivotCol, Suite};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
-    let p = Pipeline::new(&engine, &manifest);
 
-    let rows: &[(&str, &str)] = &[
-        ("hybrid_xs_dora_lin", "LinProj=DoRA"),
-        ("hybrid_xs_sdtlora", "Wout=LoRA, S6=SDT"),
+    let rows: &[(&str, &[&str])] = &[
+        ("hybrid_xs_dora_lin", &["LinProj=DoRA"]),
+        ("hybrid_xs_sdtlora", &["Wout=LoRA, S6=SDT"]),
     ];
-    let subs = ["rte", "mrpc", "cola", "sst2"];
-    let mut table = TablePrinter::new(&["setting", "params%", "rte", "mrpc", "cola", "sst2", "avg"]);
-    for (variant, label) in rows {
-        let mut cells = vec![label.to_string(), String::new()];
-        let mut vals = Vec::new();
-        for sub in &subs {
-            let cfg = bench_cfg(variant, &format!("glue/{sub}"));
-            let out = p.finetune(&cfg)?;
-            if cells[1].is_empty() {
-                cells[1] = format!("{:.2}", out.budget_pct);
-            }
-            vals.push(out.metric);
-            cells.push(format!("{:.3}", out.metric));
-        }
-        cells.push(format!("{:.3}", vals.iter().sum::<f64>() / vals.len() as f64));
-        table.row(cells);
-        table.print();
+    let variants: Vec<&str> = rows.iter().map(|(v, _)| *v).collect();
+    let datasets: &[&str] = &["glue/rte", "glue/mrpc", "glue/cola", "glue/sst2"];
+
+    let workers = worker_count(2);
+    let records = Suite::new(&engine, &manifest)
+        .named("table4")
+        .template(bench_template())
+        .grid(&variants, datasets)
+        .run(workers)?;
+
+    let cols = [
+        PivotCol::main("rte", "glue/rte"),
+        PivotCol::main("mrpc", "glue/mrpc"),
+        PivotCol::main("cola", "glue/cola"),
+        PivotCol::main("sst2", "glue/sst2"),
+    ];
+    let mut table = pivot(&records, &["setting"], rows, &cols);
+    table.headers.push("avg".to_string());
+    for (i, (variant, _)) in rows.iter().enumerate() {
+        let vals: Vec<f64> = records
+            .iter()
+            .filter(|r| r.ok() && r.variant == *variant)
+            .map(|r| r.metric)
+            .collect();
+        // a 4-task average is only honest when all 4 cells succeeded
+        let avg = if vals.len() == datasets.len() {
+            format!("{:.3}", vals.iter().sum::<f64>() / vals.len() as f64)
+        } else {
+            "-".to_string()
+        };
+        table.rows[i].push(avg);
     }
-    println!("\n=== Table 4/22 (reproduction) ===");
+    println!("\n=== Table 4/22 (reproduction, {workers} workers) ===");
     table.print();
     table.save_csv("table4.csv");
+    println!("[record stream: results/table4.jsonl]");
     Ok(())
 }

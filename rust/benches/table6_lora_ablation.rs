@@ -1,51 +1,47 @@
 //! Regenerates **Tables 6–10** (condensed): per-module LoRA ablation on
-//! Mamba — which weight matrices should LoRA target?
+//! Mamba — which weight matrices should LoRA target? Runs as a parallel
+//! suite (records in results/table6.jsonl).
 //!
 //! Expected shape (paper): LinProj targets (W_in,x/W_in,z/W_out) beat the
 //! S6-internal targets (x_proj/dt_proj), and "Both" ≈ "LinProj".
 
-use ssm_peft::bench::{bench_cfg, TablePrinter};
-use ssm_peft::coordinator::Pipeline;
+use ssm_peft::bench::bench_template;
 use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::{pivot, worker_count, PivotCol, Suite};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
-    let p = Pipeline::new(&engine, &manifest);
 
-    let rows: &[(&str, &str)] = &[
-        ("mamba1_xs_lora_lin", "W_in,x + W_in,z"),
-        ("mamba1_xs_lora_out", "W_out"),
-        ("mamba1_xs_lora_ssm", "x_proj + dt_proj (S6)"),
-        ("mamba1_xs_lora_both", "LinProj + S6"),
-        ("mamba1_xs_bitfit", "bias only (BitFit ref)"),
-        ("mamba1_xs_full", "full fine-tuning ref"),
+    let rows: &[(&str, &[&str])] = &[
+        ("mamba1_xs_lora_lin", &["W_in,x + W_in,z"]),
+        ("mamba1_xs_lora_out", &["W_out"]),
+        ("mamba1_xs_lora_ssm", &["x_proj + dt_proj (S6)"]),
+        ("mamba1_xs_lora_both", &["LinProj + S6"]),
+        ("mamba1_xs_bitfit", &["bias only (BitFit ref)"]),
+        ("mamba1_xs_full", &["full fine-tuning ref"]),
     ];
-    let datasets = ["glue/rte", "glue/qnli", "dart"];
-    let mut table = TablePrinter::new(&[
-        "LoRA target", "params%", "rte", "qnli", "dart(MET)", "dart(BLEU)",
-    ]);
-    for (variant, label) in rows {
-        let mut cells = vec![label.to_string(), String::new()];
-        for ds in &datasets {
-            let cfg = bench_cfg(variant, ds);
-            let out = p.finetune(&cfg)?;
-            if cells[1].is_empty() {
-                cells[1] = format!("{:.2}", out.budget_pct);
-            }
-            if *ds == "dart" {
-                cells.push(format!("{:.3}", out.scores["meteor"]));
-                cells.push(format!("{:.3}", out.scores["bleu"]));
-            } else {
-                cells.push(format!("{:.3}", out.metric));
-            }
-        }
-        table.row(cells);
-        table.print();
-    }
-    println!("\n=== Tables 6-10 condensed (reproduction) ===");
+    let variants: Vec<&str> = rows.iter().map(|(v, _)| *v).collect();
+    let datasets: &[&str] = &["glue/rte", "glue/qnli", "dart"];
+
+    let workers = worker_count(2);
+    let records = Suite::new(&engine, &manifest)
+        .named("table6")
+        .template(bench_template())
+        .grid(&variants, datasets)
+        .run(workers)?;
+
+    let cols = [
+        PivotCol::main("rte", "glue/rte"),
+        PivotCol::main("qnli", "glue/qnli"),
+        PivotCol::score("dart(MET)", "dart", "meteor"),
+        PivotCol::score("dart(BLEU)", "dart", "bleu"),
+    ];
+    let table = pivot(&records, &["LoRA target"], rows, &cols);
+    println!("\n=== Tables 6-10 condensed (reproduction, {workers} workers) ===");
     table.print();
     table.save_csv("table6.csv");
+    println!("[record stream: results/table6.jsonl]");
     Ok(())
 }

@@ -131,16 +131,16 @@ impl TablePrinter {
     }
 }
 
-/// Shared bench defaults: small-but-real runs sized for the 1-core CPU
-/// testbed. `SSM_PEFT_BENCH_SCALE` (float) scales epochs/batches up or down.
-pub fn bench_cfg(variant: &str, dataset: &str) -> crate::config::ExperimentConfig {
+/// Shared bench defaults (no variant/dataset): the template the Suite-based
+/// table benches hand to `Suite::template`. Small-but-real runs sized for
+/// the 1-core CPU testbed; `SSM_PEFT_BENCH_SCALE` (float) scales
+/// epochs/batches up or down.
+pub fn bench_template() -> crate::config::ExperimentConfig {
     let scale: f32 = std::env::var("SSM_PEFT_BENCH_SCALE")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1.0);
     let mut cfg = crate::config::ExperimentConfig::default();
-    cfg.variant = variant.into();
-    cfg.dataset = dataset.into();
     cfg.n_train = 256;
     cfg.epochs = ((2.0 * scale).round() as usize).max(1);
     cfg.max_batches_per_epoch = ((12.0 * scale).round() as usize).max(2);
@@ -148,6 +148,15 @@ pub fn bench_cfg(variant: &str, dataset: &str) -> crate::config::ExperimentConfi
     cfg.lr_grid = vec![3e-3];
     cfg.sdt.warmup_batches = 6;
     cfg.gen_max_new = 48;
+    cfg
+}
+
+/// One-cell bench config (single-experiment benches; the table benches go
+/// through `Suite` instead).
+pub fn bench_cfg(variant: &str, dataset: &str) -> crate::config::ExperimentConfig {
+    let mut cfg = bench_template();
+    cfg.variant = variant.into();
+    cfg.dataset = dataset.into();
     cfg
 }
 

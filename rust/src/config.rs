@@ -21,8 +21,12 @@ pub struct ExperimentConfig {
     pub lr_grid: Vec<f32>,
     pub seed: u64,
     pub sdt: SdtConfig,
+    /// LoRA merge alpha override; 0 = use the manifest's per-variant alpha
+    /// (scale = alpha / rank, python/compile/peft.py::make_eff)
+    pub alpha: usize,
     /// generation eval settings
     pub gen_max_new: usize,
+    /// beam width for generation eval; 1 = greedy
     pub beam: usize,
     /// pretraining steps for the frozen base model
     pub pretrain_steps: usize,
@@ -41,6 +45,7 @@ impl Default for ExperimentConfig {
             lr_grid: vec![1e-3],
             seed: 0,
             sdt: SdtConfig::default(),
+            alpha: 0,
             gen_max_new: 48,
             beam: 1,
             pretrain_steps: 300,
@@ -78,6 +83,7 @@ impl ExperimentConfig {
             "n_train" => self.n_train = f(val)? as usize,
             "epochs" => self.epochs = f(val)? as usize,
             "seed" => self.seed = f(val)? as u64,
+            "alpha" => self.alpha = f(val)? as usize,
             "gen_max_new" => self.gen_max_new = f(val)? as usize,
             "beam" => self.beam = f(val)? as usize,
             "pretrain_steps" => self.pretrain_steps = f(val)? as usize,

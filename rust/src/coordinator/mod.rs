@@ -1,16 +1,21 @@
-//! Experiment coordinator: the paper's full pipeline as staged jobs.
+//! Experiment coordinator: the paper's per-cell pipeline as staged jobs.
 //!
-//!   pretrain (stand-in for the public checkpoints)
+//!   pretrain (stand-in for the public checkpoints; cached in-process
+//!   behind a OnceLock map + atomically-written checkpoint file)
 //!     → [SDT only] warmup on a data subset + dimension selection + revert
 //!     → LR grid search (short runs, paper Sec. C.1)
 //!     → fine-tune with early stopping on val loss
 //!     → evaluate (classification fwd / generation decode / regression)
 //!
-//! Every bench target (one per paper table/figure) drives this module.
+//! All method/metric dispatch is typed ([`crate::suite::PeftMethod`],
+//! [`crate::suite::Metric`], [`crate::suite::VariantId`]); multi-cell
+//! scheduling lives in [`crate::suite::Suite`], which drives
+//! [`Pipeline::finetune_with_base`] from a worker pool.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::data::{tasks, BatchIter, Dataset};
@@ -18,6 +23,7 @@ use crate::eval::{self, Generator};
 use crate::manifest::Manifest;
 use crate::peft::{self, select_dimensions, Budget, Criterion};
 use crate::runtime::Engine;
+use crate::suite::VariantId;
 use crate::tensor::{Rng, Tensor};
 use crate::train::{checkpoint, TrainConfig, Trainer};
 
@@ -45,20 +51,15 @@ pub struct Pipeline<'a> {
     pub manifest: &'a Manifest,
 }
 
-/// Extract the architecture prefix of a variant name by matching the
-/// manifest's `_full` variants (longest match wins).
-pub fn arch_of<'m>(manifest: &'m Manifest, variant: &str) -> Result<&'m str> {
-    let mut best: Option<&str> = None;
-    for name in manifest.variants.keys() {
-        if let Some(arch) = name.strip_suffix("_full") {
-            if variant.starts_with(arch)
-                && best.map_or(true, |b| arch.len() > b.len())
-            {
-                best = Some(arch);
-            }
-        }
-    }
-    best.ok_or_else(|| anyhow!("no _full variant matching {variant}"))
+type Ckpt = Arc<BTreeMap<String, Tensor>>;
+
+/// Process-wide pretrained-base cache, keyed like the checkpoint file
+/// (`arch|steps`): concurrent suite workers and repeated `finetune` calls
+/// share one in-memory copy instead of re-reading (or racing to write)
+/// the checkpoint file.
+fn pretrain_cache() -> &'static Mutex<HashMap<String, Ckpt>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, Ckpt>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
 impl<'a> Pipeline<'a> {
@@ -68,8 +69,20 @@ impl<'a> Pipeline<'a> {
 
     /// Pretrain (or load cached) the frozen base model for an architecture.
     /// Stand-in for the paper's pretrained checkpoints — see DESIGN.md
-    /// §Substitutions.
-    pub fn pretrained(&self, arch: &str, steps: usize, seed: u64)
+    /// §Substitutions. The seed only matters the first time a given
+    /// (arch, steps) base is built; afterwards the cached copy is shared.
+    pub fn pretrained(&self, arch: &str, steps: usize, seed: u64) -> Result<Ckpt> {
+        let key = format!("{arch}|{steps}");
+        if let Some(hit) = pretrain_cache().lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let map = Arc::new(self.pretrain_uncached(arch, steps, seed)?);
+        // racing builders both insert equivalent maps; first one wins
+        let mut cache = pretrain_cache().lock().unwrap();
+        Ok(cache.entry(key).or_insert(map).clone())
+    }
+
+    fn pretrain_uncached(&self, arch: &str, steps: usize, seed: u64)
         -> Result<BTreeMap<String, Tensor>> {
         let ckpt_path = crate::results_dir().join(format!("pretrained_{arch}_{steps}.ckpt"));
         if ckpt_path.exists() {
@@ -82,7 +95,7 @@ impl<'a> Pipeline<'a> {
         if tr.variant.reg {
             // regression archs need no pretraining (random init = "frozen")
             let map = tr.params_map();
-            checkpoint::save(&map, &ckpt_path)?;
+            save_atomic(&map, &ckpt_path)?;
             return Ok(map);
         }
         let corpus = tasks::pretrain_corpus(seed, 1 << 17);
@@ -95,7 +108,7 @@ impl<'a> Pipeline<'a> {
             }
         }
         let map = tr.params_map();
-        checkpoint::save(&map, &ckpt_path)?;
+        save_atomic(&map, &ckpt_path)?;
         Ok(map)
     }
 
@@ -198,7 +211,6 @@ impl<'a> Pipeline<'a> {
                 train: ds.train.iter().take(8 * tr.variant.batch_b).cloned().collect(),
                 val: ds.val.clone(),
                 test: vec![],
-                generative: ds.generative,
                 metric: ds.metric,
             };
             sub.val.truncate(4 * tr.variant.batch_b);
@@ -210,12 +222,23 @@ impl<'a> Pipeline<'a> {
         Ok(best.1)
     }
 
-    /// Full experiment: returns scores on the test split.
+    /// Full experiment: resolves the variant's architecture, builds (or
+    /// reuses) the shared pretrained base, then runs
+    /// [`Pipeline::finetune_with_base`].
     pub fn finetune(&self, cfg: &ExperimentConfig) -> Result<Outcome> {
+        let vid = VariantId::parse(&cfg.variant)?;
+        let base = self.pretrained(&vid.arch, cfg.pretrain_steps, cfg.seed)?;
+        self.finetune_with_base(cfg, &base)
+    }
+
+    /// Fine-tune + evaluate one experiment cell against an already-built
+    /// pretrained base (the suite runner stages bases once per arch and
+    /// fans cells out over workers). Returns scores on the test split.
+    pub fn finetune_with_base(&self, cfg: &ExperimentConfig,
+                              base: &BTreeMap<String, Tensor>) -> Result<Outcome> {
+        let vid = VariantId::parse(&cfg.variant)?;
         let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train);
-        let arch = arch_of(self.manifest, &cfg.variant)?.to_string();
-        let base = self.pretrained(&arch, cfg.pretrain_steps, cfg.seed)?;
-        let lr = self.pick_lr(&ds, cfg, &base)?;
+        let lr = self.pick_lr(&ds, cfg, base)?;
 
         let steps_per_epoch = if cfg.max_batches_per_epoch > 0 {
             cfg.max_batches_per_epoch
@@ -229,10 +252,9 @@ impl<'a> Pipeline<'a> {
             ..Default::default()
         };
         let mut tr = Trainer::new(self.engine, self.manifest, &cfg.variant, &tcfg)?;
-        tr.load_base(&base);
+        tr.load_base(base);
 
-        let method = tr.variant.peft.method.clone();
-        let dim_select_s = if method == "sdt" || method == "sdtlora" {
+        let dim_select_s = if vid.method.is_sdt() {
             self.sdt_stage(&mut tr, &ds, cfg)?
         } else {
             0.0
@@ -244,33 +266,37 @@ impl<'a> Pipeline<'a> {
         let budget = Budget::of(&tr.variant, Some(&tr.masks));
         let mut scores = BTreeMap::new();
         let metric;
-        if ds.generative {
+        if ds.metric.generative() {
             let mut merged = tr.params_map();
-            peft::merge_lora(&mut merged, tr.variant.peft.rank.max(1),
-                             tr.variant.peft.rank.max(1));
-            let decode_variant = format!("{arch}_full");
-            let gen = Generator::new(self.engine, self.manifest, &decode_variant, &merged)?;
+            let mut peft_meta = tr.variant.peft.clone();
+            if cfg.alpha > 0 {
+                peft_meta.alpha = cfg.alpha;
+            }
+            peft::merge_lora(&mut merged, &peft_meta);
+            let gen = Generator::new(self.engine, self.manifest, &vid.decode_variant(),
+                                     &merged)?;
             let h0 = if merged.keys().any(|k| k.ends_with(".h0")) {
                 Some(&merged)
             } else {
                 None
             };
-            let g = eval::eval_generation(&gen, &ds, &ds.test, cfg.gen_max_new,
-                                          cfg.seed, h0)?;
+            let g = if cfg.beam > 1 {
+                eval::eval_generation_beam(&gen, &ds, &ds.test, cfg.beam,
+                                           cfg.gen_max_new, cfg.seed, h0)?
+            } else {
+                eval::eval_generation(&gen, &ds, &ds.test, cfg.gen_max_new,
+                                      cfg.seed, h0)?
+            };
             scores.insert("rouge1".into(), g.rouge1);
             scores.insert("rouge2".into(), g.rouge2);
             scores.insert("rougeL".into(), g.rougel);
             scores.insert("bleu".into(), g.bleu);
             scores.insert("meteor".into(), g.meteor);
             scores.insert("exec".into(), g.exec_acc);
-            metric = match ds.metric {
-                "rouge" => g.rougel,
-                "exec" => g.exec_acc,
-                _ => g.bleu,
-            };
+            metric = ds.metric.main_gen_score(&g);
         } else {
             let m = eval::eval_classification(&tr, &ds.test, ds.metric)?;
-            scores.insert(ds.metric.to_string(), m);
+            scores.insert(ds.metric.name().to_string(), m);
             metric = m;
         }
 
@@ -314,6 +340,18 @@ impl<'a> Pipeline<'a> {
         }
         Ok((xs, ys))
     }
+}
+
+/// Write a checkpoint atomically (unique tmp file + rename) so concurrent
+/// builders — other processes AND racing threads in this one — never
+/// publish a torn file; each writes its own tmp, last rename wins whole.
+fn save_atomic(map: &BTreeMap<String, Tensor>, path: &std::path::Path) -> Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{n}", std::process::id()));
+    checkpoint::save(map, &tmp)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
 }
 
 /// Save an outcome's loss curve as CSV (results/<name>.csv).

@@ -40,10 +40,9 @@ pub struct Dataset {
     pub train: Vec<Example>,
     pub val: Vec<Example>,
     pub test: Vec<Example>,
-    /// true when evaluated by generation (ROUGE/BLEU/METEOR/exec-match)
-    pub generative: bool,
-    /// metric id: "acc" | "matthews" | "rouge" | "bleu_meteor" | "exec"
-    pub metric: &'static str,
+    /// headline evaluation metric; generation-based vs classification
+    /// follows from it (`Metric::generative`)
+    pub metric: crate::suite::Metric,
 }
 
 /// An encoded batch ready for the `step`/`fwd` artifacts.

@@ -8,6 +8,7 @@
 
 use super::minidb::{self, Table};
 use super::{Dataset, Example};
+use crate::suite::Metric;
 use crate::tensor::Rng;
 
 const WORDS: &[&str] = &[
@@ -212,8 +213,7 @@ pub fn glue(sub: &str, seed: u64, n_train: usize) -> Dataset {
     Dataset {
         name: format!("glue/{sub}"),
         train, val, test,
-        generative: false,
-        metric: if sub == "cola" { "matthews" } else { "acc" },
+        metric: if sub == "cola" { Metric::Matthews } else { Metric::Acc },
     }
 }
 
@@ -241,7 +241,7 @@ fn gen_dart(rng: &mut Rng) -> Example {
 
 pub fn dart(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_dart, seed ^ fnv("dart"), n_train, 64, 64);
-    Dataset { name: "dart".into(), train, val, test, generative: true, metric: "bleu_meteor" }
+    Dataset { name: "dart".into(), train, val, test, metric: Metric::BleuMeteor }
 }
 
 // ---------------------------------------------------------------------------
@@ -265,7 +265,7 @@ fn gen_samsum(rng: &mut Rng) -> Example {
 
 pub fn samsum(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_samsum, seed ^ fnv("samsum"), n_train, 64, 64);
-    Dataset { name: "samsum".into(), train, val, test, generative: true, metric: "rouge" }
+    Dataset { name: "samsum".into(), train, val, test, metric: Metric::Rouge }
 }
 
 // ---------------------------------------------------------------------------
@@ -315,7 +315,7 @@ pub fn spider(seed: u64, n_train: usize) -> Dataset {
     let train = (0..n_train).map(|_| gen(&mut rng)).collect();
     let val = (0..64).map(|_| gen(&mut rng)).collect();
     let test = (0..64).map(|_| gen(&mut rng)).collect();
-    Dataset { name: "spider".into(), train, val, test, generative: true, metric: "exec" }
+    Dataset { name: "spider".into(), train, val, test, metric: Metric::Exec }
 }
 
 // ---------------------------------------------------------------------------
@@ -372,12 +372,12 @@ fn gen_celeba(rng: &mut Rng) -> Example {
 
 pub fn cifar(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_cifar, seed ^ fnv("cifar"), n_train, 96, 96);
-    Dataset { name: "cifar10".into(), train, val, test, generative: false, metric: "acc" }
+    Dataset { name: "cifar10".into(), train, val, test, metric: Metric::Acc }
 }
 
 pub fn celeba(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_celeba, seed ^ fnv("celeba"), n_train, 96, 96);
-    Dataset { name: "celeba".into(), train, val, test, generative: false, metric: "acc" }
+    Dataset { name: "celeba".into(), train, val, test, metric: Metric::Acc }
 }
 
 /// Pretraining corpus: concatenated samples from all text generators, so the

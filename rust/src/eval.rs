@@ -13,12 +13,13 @@ use crate::data::words_to_ids;
 use crate::manifest::{Manifest, Variant};
 use crate::metrics;
 use crate::runtime::{Engine, Executable, Input};
+use crate::suite::Metric;
 use crate::tensor::{argmax, IntTensor, Tensor};
 use crate::train::Trainer;
 
 /// Classification accuracy/metric over a split using the fwd artifact:
 /// logits at the label position, restricted to the task's label bytes.
-pub fn eval_classification(trainer: &Trainer, split: &[Example], metric: &str) -> Result<f64> {
+pub fn eval_classification(trainer: &Trainer, split: &[Example], metric: Metric) -> Result<f64> {
     let b = trainer.variant.batch_b;
     let l = trainer.variant.batch_l;
     let mut preds = Vec::new();
@@ -44,7 +45,7 @@ pub fn eval_classification(trainer: &Trainer, split: &[Example], metric: &str) -
         i = end;
     }
     Ok(match metric {
-        "matthews" => metrics::matthews_corr(&preds, &golds),
+        Metric::Matthews => metrics::matthews_corr(&preds, &golds),
         _ => metrics::accuracy(&preds, &golds),
     })
 }
@@ -180,12 +181,14 @@ impl Generator {
     }
 
     /// Beam search for ONE prompt, packing beams into the batch dimension
-    /// (beam width ≤ arch_b). Length-normalized log-prob scoring.
-    pub fn beam(&self, prompt: &[u8], width: usize, max_new: usize, stop_byte: u8)
-        -> Result<Vec<u8>> {
+    /// (beam width ≤ arch_b). Length-normalized log-prob scoring. `h0`
+    /// seeds the SSM state as in [`Generator::greedy`] (initial-state
+    /// tuning).
+    pub fn beam(&self, prompt: &[u8], width: usize, max_new: usize, stop_byte: u8,
+                h0: Option<&BTreeMap<String, Tensor>>) -> Result<Vec<u8>> {
         let width = width.min(self.arch_b);
         let b = self.arch_b;
-        let (mut conv, mut ssm) = self.init_states(None);
+        let (mut conv, mut ssm) = self.init_states(h0);
         // prefill all rows with the same prompt
         let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
         let mut logits = Tensor::zeros(&[b, 256]);
@@ -301,6 +304,34 @@ pub struct GenScores {
 pub fn eval_generation(gen: &Generator, ds: &Dataset, split: &[Example],
                        max_new: usize, seed: u64,
                        h0: Option<&BTreeMap<String, Tensor>>) -> Result<GenScores> {
+    let mut outs: Vec<Vec<u8>> = Vec::with_capacity(split.len());
+    let mut i = 0;
+    while i < split.len() {
+        let end = (i + gen.arch_b).min(split.len());
+        let prompts: Vec<Vec<u8>> = split[i..end].iter().map(|e| e.prompt.clone()).collect();
+        outs.extend(gen.greedy(&prompts, max_new, b'\n', h0)?);
+        i = end;
+    }
+    Ok(score_generation(ds, split, &outs, seed))
+}
+
+/// Beam-search generation metrics: one beam search per example (beams pack
+/// the batch dimension, so examples run serially). Used when
+/// `ExperimentConfig::beam > 1`.
+pub fn eval_generation_beam(gen: &Generator, ds: &Dataset, split: &[Example],
+                            width: usize, max_new: usize, seed: u64,
+                            h0: Option<&BTreeMap<String, Tensor>>) -> Result<GenScores> {
+    let mut outs: Vec<Vec<u8>> = Vec::with_capacity(split.len());
+    for ex in split {
+        outs.push(gen.beam(&ex.prompt, width, max_new, b'\n', h0)?);
+    }
+    Ok(score_generation(ds, split, &outs, seed))
+}
+
+/// Score generated outputs against a split's targets (shared by the
+/// greedy and beam paths).
+fn score_generation(ds: &Dataset, split: &[Example], outs: &[Vec<u8>], seed: u64)
+    -> GenScores {
     let mut preds_ids = Vec::new();
     let mut golds_ids = Vec::new();
     let mut r1 = Vec::new();
@@ -309,39 +340,32 @@ pub fn eval_generation(gen: &Generator, ds: &Dataset, split: &[Example],
     let mut met = Vec::new();
     let mut exec_hits = 0usize;
     let table = spider_table(seed);
-    let mut i = 0;
-    while i < split.len() {
-        let end = (i + gen.arch_b).min(split.len());
-        let prompts: Vec<Vec<u8>> = split[i..end].iter().map(|e| e.prompt.clone()).collect();
-        let outs = gen.greedy(&prompts, max_new, b'\n', h0)?;
-        for (ex, out) in split[i..end].iter().zip(&outs) {
-            let p_ids = words_to_ids(out);
-            let g_ids = words_to_ids(&ex.target);
-            r1.push(metrics::rouge_n(&p_ids, &g_ids, 1));
-            r2.push(metrics::rouge_n(&p_ids, &g_ids, 2));
-            rl.push(metrics::rouge_l(&p_ids, &g_ids));
-            met.push(metrics::meteor(&p_ids, &g_ids));
-            if ds.metric == "exec" {
-                let pred_s = String::from_utf8_lossy(out).to_string();
-                let gold_s = String::from_utf8_lossy(&ex.target).to_string();
-                if exec_match(&table, &pred_s, &gold_s) {
-                    exec_hits += 1;
-                }
+    for (ex, out) in split.iter().zip(outs) {
+        let p_ids = words_to_ids(out);
+        let g_ids = words_to_ids(&ex.target);
+        r1.push(metrics::rouge_n(&p_ids, &g_ids, 1));
+        r2.push(metrics::rouge_n(&p_ids, &g_ids, 2));
+        rl.push(metrics::rouge_l(&p_ids, &g_ids));
+        met.push(metrics::meteor(&p_ids, &g_ids));
+        if ds.metric == Metric::Exec {
+            let pred_s = String::from_utf8_lossy(out).to_string();
+            let gold_s = String::from_utf8_lossy(&ex.target).to_string();
+            if exec_match(&table, &pred_s, &gold_s) {
+                exec_hits += 1;
             }
-            preds_ids.push(p_ids);
-            golds_ids.push(g_ids);
         }
-        i = end;
+        preds_ids.push(p_ids);
+        golds_ids.push(g_ids);
     }
     let n = preds_ids.len().max(1) as f64;
-    Ok(GenScores {
+    GenScores {
         rouge1: crate::tensor::mean(&r1),
         rouge2: crate::tensor::mean(&r2),
         rougel: crate::tensor::mean(&rl),
         bleu: metrics::bleu(&preds_ids, &golds_ids),
         meteor: crate::tensor::mean(&met),
         exec_acc: exec_hits as f64 / n,
-    })
+    }
 }
 
 /// Convenience: eval loss over a split (early-stopping signal shared by all

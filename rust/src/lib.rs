@@ -19,7 +19,9 @@
 //! - [`metrics`] — accuracy, Matthews, ROUGE-1/2/L, BLEU, METEOR-lite, MSE
 //! - [`train`] — the training engine (epochs, early stopping, checkpoints)
 //! - [`eval`] — greedy/beam generation over the stepwise decode artifact
-//! - [`coordinator`] — experiment scheduler + table reporting
+//! - [`coordinator`] — the per-experiment pipeline (pretrain → SDT → tune)
+//! - [`suite`] — typed experiment API (`PeftMethod`/`Metric`/`VariantId`)
+//!   + the parallel suite runner + JSONL `RunRecord` streams
 //! - [`bench`] — timing harness used by `cargo bench` targets
 
 pub mod bench;
@@ -33,6 +35,7 @@ pub mod metrics;
 pub mod optim;
 pub mod peft;
 pub mod runtime;
+pub mod suite;
 pub mod tensor;
 pub mod train;
 
@@ -53,9 +56,13 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         })
 }
 
-/// Default results directory for bench/experiment CSV output.
+/// Results directory for bench/experiment CSV+JSONL output. Overridable
+/// via `SSM_PEFT_RESULTS` (mirroring `SSM_PEFT_ARTIFACTS`) so parallel
+/// suite runs and CI can isolate their output.
 pub fn results_dir() -> std::path::PathBuf {
-    let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    let d = std::env::var("SSM_PEFT_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results"));
     std::fs::create_dir_all(&d).ok();
     d
 }

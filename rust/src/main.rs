@@ -5,6 +5,10 @@
 //!   pretrain arch=<a> steps=<n>  build/cache the frozen base checkpoint
 //!   finetune [config=<file>] [key=value ...]
 //!                                run one fine-tuning experiment
+//!   suite config=<file.json> [par=<n>] [resume=<0|1>]
+//!                                run a declarative experiment suite in
+//!                                parallel; streams results/<name>.jsonl
+//!                                (schema: rust/docs/suite.md)
 //!   sdt-report [key=value ...]   run SDT selection and print the chosen
 //!                                channels/states per layer
 //!   generate variant=<v> prompt=<text>
@@ -12,15 +16,17 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use ssm_peft::bench::TablePrinter;
 use ssm_peft::config::{parse_args, ExperimentConfig};
-use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::coordinator::Pipeline;
 use ssm_peft::data::tasks;
 use ssm_peft::eval::Generator;
 use ssm_peft::manifest::Manifest;
 use ssm_peft::peft::{select_dimensions, Budget};
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::{Suite, SuiteSpec, VariantId};
 use ssm_peft::tensor::Rng;
 use ssm_peft::train::{TrainConfig, Trainer};
 
@@ -32,6 +38,7 @@ fn main() -> Result<()> {
         "info" => info(),
         "pretrain" => pretrain(&kvs),
         "finetune" => finetune(&kvs),
+        "suite" => suite(&kvs),
         "sdt-report" => sdt_report(&kvs),
         "generate" => generate(&kvs),
         other => {
@@ -101,14 +108,71 @@ fn finetune(kvs: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Run a declarative suite file on the parallel runner; prints a summary
+/// table and leaves the machine-readable stream in results/<name>.jsonl.
+fn suite(kvs: &BTreeMap<String, String>) -> Result<()> {
+    let path = kvs
+        .get("config")
+        .ok_or_else(|| anyhow!("suite requires config=<file.json>"))?;
+    let spec = SuiteSpec::from_file(path)?;
+    let par: usize = kvs
+        .get("par")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(spec.par);
+    let mut plan = spec.plan;
+    if let Some(r) = kvs.get("resume") {
+        plan.resume = r.as_str() != "0" && r.as_str() != "false";
+    }
+    let name = plan.name.clone();
+    let (engine, manifest) = load_all()?;
+    let records = Suite::from_plan(&engine, &manifest, plan).run(par)?;
+
+    let mut table = TablePrinter::new(&[
+        "variant", "dataset", "params%", "metric", "lr", "steps", "time(s)",
+    ]);
+    for r in &records {
+        if r.ok() {
+            table.row(vec![
+                r.variant.clone(),
+                r.dataset.clone(),
+                format!("{:.2}", r.budget_pct),
+                format!("{:.4}", r.metric),
+                format!("{}", r.chosen_lr),
+                r.steps.to_string(),
+                format!("{:.1}", r.total_s),
+            ]);
+        } else {
+            table.row(vec![
+                r.variant.clone(),
+                r.dataset.clone(),
+                "-".into(),
+                "ERR".into(),
+                "-".into(),
+                "-".into(),
+                format!("{:.1}", r.total_s),
+            ]);
+        }
+    }
+    println!("\n=== suite {name} ({par} workers) ===");
+    table.print();
+    let failed = records.iter().filter(|r| !r.ok()).count();
+    println!(
+        "{} cells, {} failed; records -> {}",
+        records.len(),
+        failed,
+        ssm_peft::results_dir().join(format!("{name}.jsonl")).display()
+    );
+    Ok(())
+}
+
 fn sdt_report(kvs: &BTreeMap<String, String>) -> Result<()> {
     let (engine, manifest) = load_all()?;
     let mut cfg = ExperimentConfig::default();
     cfg.variant = "mamba1_xs_sdt".into();
     cfg.apply_overrides(kvs)?;
     let p = Pipeline::new(&engine, &manifest);
-    let arch = arch_of(&manifest, &cfg.variant)?.to_string();
-    let base = p.pretrained(&arch, cfg.pretrain_steps, cfg.seed)?;
+    let vid = VariantId::parse(&cfg.variant)?;
+    let base = p.pretrained(&vid.arch, cfg.pretrain_steps, cfg.seed)?;
     let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train);
     let tcfg = TrainConfig { lr: cfg.sdt.warmup_lr, ..Default::default() };
     let mut tr = Trainer::new(&engine, &manifest, &cfg.variant, &tcfg)?;
@@ -140,9 +204,9 @@ fn generate(kvs: &BTreeMap<String, String>) -> Result<()> {
     let prompt = kvs.get("prompt").cloned().unwrap_or("name=ann|team=red".into());
     let steps: usize = kvs.get("pretrain_steps").and_then(|s| s.parse().ok()).unwrap_or(300);
     let p = Pipeline::new(&engine, &manifest);
-    let arch = arch_of(&manifest, &variant)?.to_string();
-    let base = p.pretrained(&arch, steps, 0)?;
-    let gen = Generator::new(&engine, &manifest, &format!("{arch}_full"), &base)?;
+    let vid = VariantId::parse(&variant)?;
+    let base = p.pretrained(&vid.arch, steps, 0)?;
+    let gen = Generator::new(&engine, &manifest, &vid.decode_variant(), &base)?;
     let out = gen.greedy(&[prompt.clone().into_bytes()], 48, b'\n', None)?;
     println!("prompt: {prompt}");
     println!("output: {}", String::from_utf8_lossy(&out[0]));

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::json::{self, Value};
+use crate::suite::PeftMethod;
 use crate::tensor::Tensor;
 
 /// One named parameter slot in an artifact's flat argument list.
@@ -39,11 +40,18 @@ pub struct Arch {
     pub h_add: usize,
 }
 
-/// PEFT description for budget accounting and SDT column layouts.
+/// PEFT description for budget accounting and SDT column layouts. The
+/// method is parsed once at manifest load; all downstream dispatch is on
+/// the [`PeftMethod`] enum.
 #[derive(Debug, Clone)]
 pub struct PeftMeta {
-    pub method: String,
+    pub method: PeftMethod,
     pub rank: usize,
+    /// LoRA merge numerator: scale = alpha / rank (mirrors the scale baked
+    /// into the compiled forward by python/compile/peft.py::make_eff).
+    /// Defaults to `rank` (scale 1.0) when the manifest omits it, matching
+    /// python's `peft.get("alpha", rank)`.
+    pub alpha: usize,
     pub targets: Vec<String>,
     pub n_tokens: usize,
 }
@@ -151,17 +159,22 @@ impl Manifest {
                     n_head: get_usize(arch, "n_head"),
                     h_add: get_usize(arch, "h_add"),
                 },
-                peft: PeftMeta {
-                    method: peft.path("method").and_then(Value::as_str).unwrap_or("").into(),
-                    rank: get_usize(peft, "rank"),
-                    targets: peft
+                peft: {
+                    let targets: Vec<String> = peft
                         .path("targets")
                         .and_then(Value::as_arr)
                         .map(|a| {
                             a.iter().filter_map(Value::as_str).map(String::from).collect()
                         })
-                        .unwrap_or_default(),
-                    n_tokens: get_usize(peft, "n_tokens"),
+                        .unwrap_or_default();
+                    let method_str =
+                        peft.path("method").and_then(Value::as_str).unwrap_or("");
+                    let method = PeftMethod::from_manifest(method_str, &targets)
+                        .with_context(|| format!("variant {name}"))?;
+                    let rank = get_usize(peft, "rank");
+                    let alpha =
+                        peft.path("alpha").and_then(Value::as_usize).unwrap_or(rank);
+                    PeftMeta { method, rank, alpha, targets, n_tokens: get_usize(peft, "n_tokens") }
                 },
                 batch_b: get_usize(v, "batch.B"),
                 batch_l: get_usize(v, "batch.L"),
@@ -248,6 +261,9 @@ mod tests {
         fake_manifest(&dir);
         let m = Manifest::load(&dir).unwrap();
         let v = m.variant("v").unwrap();
+        assert_eq!(v.peft.method, PeftMethod::Lora(crate::suite::Target::LinProj));
+        assert_eq!(v.peft.rank, 2);
+        assert_eq!(v.peft.alpha, 2, "alpha defaults to rank when absent");
         assert_eq!(v.batch_b, 2);
         assert_eq!(v.n_train(), 4);
         assert_eq!(v.n_total(), 6);

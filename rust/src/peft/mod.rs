@@ -126,9 +126,12 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// Fold trained LoRA/DoRA factors into their base weights so the (adapter-
 /// free) decode artifact can serve the fine-tuned model. Mirrors
-/// python/compile/peft.py::merge_lora.
-pub fn merge_lora(params: &mut BTreeMap<String, Tensor>, rank: usize, alpha: usize) {
-    let scale = if rank == 0 { 1.0 } else { alpha as f32 / rank as f32 };
+/// python/compile/peft.py::merge_lora: scale = alpha / rank, both taken
+/// from the variant's [`PeftMeta`] (no more guessing alpha from rank at
+/// call sites). A no-op when the map holds no `.lora_a` keys.
+pub fn merge_lora(params: &mut BTreeMap<String, Tensor>, peft: &crate::manifest::PeftMeta) {
+    let scale =
+        if peft.rank == 0 { 1.0 } else { peft.alpha as f32 / peft.rank as f32 };
     let names: Vec<String> = params
         .keys()
         .filter(|k| k.ends_with(".lora_a"))
@@ -186,6 +189,7 @@ pub fn random_masks(variant: &Variant, keep: f32, rng: &mut Rng) -> Masks {
 mod tests {
     use super::*;
     use crate::manifest::{Arch, ParamMeta, PeftMeta};
+    use crate::suite::PeftMethod;
 
     fn dummy_variant() -> Variant {
         Variant {
@@ -194,7 +198,9 @@ mod tests {
                 kind: "mamba1".into(), vocab: 8, d_model: 4, n_layer: 1,
                 d_inner: 4, d_state: 2, d_conv: 4, dt_rank: 1, n_head: 1, h_add: 1,
             },
-            peft: PeftMeta { method: "sdt".into(), rank: 0, targets: vec![], n_tokens: 0 },
+            peft: PeftMeta {
+                method: PeftMethod::Sdt, rank: 0, alpha: 0, targets: vec![], n_tokens: 0,
+            },
             batch_b: 1, batch_l: 4, reg: false,
             step_file: None, fwd_file: None, decode_file: None,
             params_bin: String::new(),
@@ -235,15 +241,35 @@ mod tests {
         assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
     }
 
+    fn lora_meta(rank: usize, alpha: usize) -> PeftMeta {
+        PeftMeta {
+            method: PeftMethod::Lora(crate::suite::Target::LinProj),
+            rank,
+            alpha,
+            targets: vec![],
+            n_tokens: 0,
+        }
+    }
+
     #[test]
     fn merge_lora_adds_delta() {
         let mut p = BTreeMap::new();
         p.insert("W".to_string(), Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
         p.insert("W.lora_a".to_string(), Tensor::from_vec(&[2, 1], vec![1.0, 2.0]));
         p.insert("W.lora_b".to_string(), Tensor::from_vec(&[1, 2], vec![3.0, 4.0]));
-        merge_lora(&mut p, 1, 1);
+        merge_lora(&mut p, &lora_meta(1, 1));
         assert!(!p.contains_key("W.lora_a"));
         assert_eq!(p["W"].data, vec![4.0, 4.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn merge_lora_scales_by_alpha_over_rank() {
+        let mut p = BTreeMap::new();
+        p.insert("W".to_string(), Tensor::from_vec(&[2, 2], vec![0.0; 4]));
+        p.insert("W.lora_a".to_string(), Tensor::from_vec(&[2, 1], vec![1.0, 2.0]));
+        p.insert("W.lora_b".to_string(), Tensor::from_vec(&[1, 2], vec![3.0, 4.0]));
+        merge_lora(&mut p, &lora_meta(2, 4)); // scale = 2.0
+        assert_eq!(p["W"].data, vec![6.0, 8.0, 12.0, 16.0]);
     }
 
     #[test]

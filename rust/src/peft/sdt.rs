@@ -212,7 +212,10 @@ mod tests {
                 kind: "mamba1".into(), vocab: 8, d_model: 4, n_layer: 1,
                 d_inner: d, d_state: h, d_conv: 4, dt_rank: r, n_head: 1, h_add: 1,
             },
-            peft: PeftMeta { method: "sdt".into(), rank: 0, targets: vec![], n_tokens: 0 },
+            peft: PeftMeta {
+                method: crate::suite::PeftMethod::Sdt,
+                rank: 0, alpha: 0, targets: vec![], n_tokens: 0,
+            },
             batch_b: 1, batch_l: 4, reg: false,
             step_file: None, fwd_file: None, decode_file: None,
             params_bin: String::new(),

@@ -20,6 +20,24 @@ pub struct Engine {
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+// SAFETY: `Engine` is shared by reference across the suite runner's worker
+// threads (`std::thread::scope`), so it must be Send + Sync even though the
+// wrapped PJRT handles hold raw pointers (which makes the auto traits opt
+// out). This is sound because:
+// - the PJRT C API guarantees `Compile` and `Execute` are thread-safe on
+//   the CPU client (XLA serves them from an internal thread pool; the
+//   Python JAX runtime calls them from many threads the same way);
+// - the only interior mutability on the Rust side is the executable cache,
+//   which is Mutex-guarded;
+// - cached executables are handed out as `Arc` clones whose refcount is
+//   atomic; dropping the last clone on a different thread only releases
+//   the PJRT executable, which is thread-safe to destroy;
+// - all per-call state (literals, buffers) is created and consumed on the
+//   calling thread.
+// Audited for the parallel suite runner (see crate::suite::Suite::run).
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
 /// A host-side input for an executable: either float or int tensor.
 pub enum Input<'a> {
     F(&'a Tensor),

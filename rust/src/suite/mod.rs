@@ -1,0 +1,364 @@
+//! Typed experiment suites: the paper's experiment *matrix* as a
+//! first-class object, replacing the one-cell-at-a-time
+//! `Pipeline::finetune` loops the bench targets used to hand-roll.
+//!
+//! - [`types`] — `PeftMethod` / `Target` / `Metric` / `VariantId`: the
+//!   closed vocabulary every layer dispatches on (no string matching).
+//! - [`record`] — `RunRecord` + JSONL sink + table pivoting.
+//! - [`spec`] — declarative JSON suite files (`suite` CLI subcommand).
+//! - [`Suite`] — the staged parallel runner: shared pretrained bases are
+//!   built once per architecture (stage 0), then independent fine-tune
+//!   cells fan out over a scoped worker pool sharing the `Engine`'s
+//!   compiled-executable cache.
+//!
+//! ```no_run
+//! # use ssm_peft::{manifest::Manifest, runtime::Engine, suite::Suite};
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = Engine::cpu()?;
+//! let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
+//! let records = Suite::new(&engine, &manifest)
+//!     .named("demo")
+//!     .grid(&["mamba1_xs_lora_lin", "mamba1_xs_bitfit"], &["glue/rte", "dart"])
+//!     .cell("mamba1_xs_sdtlora", "dart")
+//!     .run(2)?;
+//! # Ok(()) }
+//! ```
+
+pub mod record;
+pub mod spec;
+pub mod types;
+
+pub use record::{git_describe, pivot, JsonlSink, PivotCol, RunRecord};
+pub use spec::SuiteSpec;
+pub use types::{Metric, PeftMethod, Target, VariantId};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Pipeline;
+use crate::manifest::Manifest;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Deterministic per-cell seed: a pure function of the suite seed and the
+/// cell coordinates, so records are reproducible regardless of worker
+/// scheduling and suite composition order.
+pub fn cell_seed(base: u64, variant: &str, dataset: &str) -> u64 {
+    base ^ fnv64(variant) ^ fnv64(dataset).rotate_left(17)
+}
+
+/// Worker count from `SSM_PEFT_WORKERS`, else the given default.
+pub fn worker_count(default: usize) -> usize {
+    std::env::var("SSM_PEFT_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// The engine-independent part of a suite: named cell list + template.
+/// (Unit-testable without PJRT; `Suite` binds it to an engine/manifest.)
+#[derive(Debug, Clone)]
+pub struct SuitePlan {
+    pub name: String,
+    /// Defaults each cell starts from (`cell`/`grid` clone this).
+    pub template: ExperimentConfig,
+    pub cells: Vec<ExperimentConfig>,
+    /// Reuse finished cells from an existing `results/<name>.jsonl`.
+    pub resume: bool,
+}
+
+impl SuitePlan {
+    pub fn new(name: &str) -> SuitePlan {
+        SuitePlan {
+            name: name.to_string(),
+            template: ExperimentConfig::default(),
+            cells: Vec::new(),
+            resume: false,
+        }
+    }
+
+    /// Add one (variant, dataset) cell from the template, with a derived
+    /// deterministic seed.
+    pub fn add_cell(&mut self, variant: &str, dataset: &str) {
+        let mut cfg = self.template.clone();
+        cfg.variant = variant.to_string();
+        cfg.dataset = dataset.to_string();
+        cfg.seed = cell_seed(self.template.seed, variant, dataset);
+        self.cells.push(cfg);
+    }
+
+    /// Add the full variants × datasets grid.
+    pub fn add_grid(&mut self, variants: &[&str], datasets: &[&str]) {
+        for v in variants {
+            for d in datasets {
+                self.add_cell(v, d);
+            }
+        }
+    }
+
+    /// Add a fully-specified cell (seed is kept as given).
+    pub fn push(&mut self, cfg: ExperimentConfig) {
+        self.cells.push(cfg);
+    }
+}
+
+type Ckpt = Arc<BTreeMap<String, Tensor>>;
+
+/// Builder + parallel runner for an experiment suite.
+pub struct Suite<'a> {
+    engine: &'a Engine,
+    manifest: &'a Manifest,
+    pub plan: SuitePlan,
+}
+
+impl<'a> Suite<'a> {
+    pub fn new(engine: &'a Engine, manifest: &'a Manifest) -> Suite<'a> {
+        Suite { engine, manifest, plan: SuitePlan::new("suite") }
+    }
+
+    pub fn from_plan(engine: &'a Engine, manifest: &'a Manifest, plan: SuitePlan) -> Suite<'a> {
+        Suite { engine, manifest, plan }
+    }
+
+    /// Set the suite name (JSONL file stem).
+    pub fn named(mut self, name: &str) -> Self {
+        self.plan.name = name.to_string();
+        self
+    }
+
+    /// Set the template config future `cell`/`grid` calls start from.
+    pub fn template(mut self, cfg: ExperimentConfig) -> Self {
+        self.plan.template = cfg;
+        self
+    }
+
+    pub fn resume(mut self, yes: bool) -> Self {
+        self.plan.resume = yes;
+        self
+    }
+
+    pub fn cell(mut self, variant: &str, dataset: &str) -> Self {
+        self.plan.add_cell(variant, dataset);
+        self
+    }
+
+    pub fn grid(mut self, variants: &[&str], datasets: &[&str]) -> Self {
+        self.plan.add_grid(variants, datasets);
+        self
+    }
+
+    /// Run all cells with `par` workers. Returns one record per cell, in
+    /// cell order; individual cell failures become error records rather
+    /// than aborting the suite. Records stream to `results/<name>.jsonl`
+    /// as cells finish.
+    ///
+    /// Staging: distinct (arch, pretrain_steps) pairs are resolved FIRST
+    /// (training or loading the shared frozen base once, never racing),
+    /// then fine-tune cells fan out over `std::thread::scope` workers that
+    /// share the engine's compiled-executable cache.
+    pub fn run(&self, par: usize) -> Result<Vec<RunRecord>> {
+        let cells = &self.plan.cells;
+        if cells.is_empty() {
+            return Ok(Vec::new());
+        }
+        let name = self.plan.name.clone();
+        let git = git_describe();
+
+        // resume: reuse finished (ok) records keyed by variant|dataset|seed
+        let resumed: BTreeMap<String, RunRecord> = if self.plan.resume {
+            JsonlSink::load(&name)
+                .into_iter()
+                .filter(|r| r.ok())
+                .map(|r| (r.key(), r))
+                .collect()
+        } else {
+            BTreeMap::new()
+        };
+        let sink = Mutex::new(JsonlSink::create(&name, self.plan.resume)?);
+
+        // ---- stage 0: shared pretrained bases, once per (arch, steps) ----
+        let pipeline = Pipeline::new(self.engine, self.manifest);
+        let mut bases: BTreeMap<String, std::result::Result<Ckpt, String>> = BTreeMap::new();
+        for cfg in cells {
+            if resumed.contains_key(&record_key(cfg)) {
+                continue;
+            }
+            // bad cells (unparseable or unknown variant) fail in run_cell
+            // with a clear error; don't build a base for them
+            let Ok(vid) = VariantId::parse(&cfg.variant) else { continue };
+            if !self.manifest.variants.contains_key(&cfg.variant) {
+                continue;
+            }
+            let bkey = base_key(&vid.arch, cfg.pretrain_steps);
+            if !bases.contains_key(&bkey) {
+                eprintln!("[suite {name}] pretraining base {bkey}");
+                let r = pipeline
+                    .pretrained(&vid.arch, cfg.pretrain_steps, self.plan.template.seed)
+                    .map_err(|e| format!("{e:#}"));
+                bases.insert(bkey, r);
+            }
+        }
+
+        // ---- stage 1: fine-tune cells on a scoped worker pool ----
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<RunRecord>>> = Mutex::new(vec![None; cells.len()]);
+        let par = par.clamp(1, cells.len());
+        std::thread::scope(|s| {
+            for _ in 0..par {
+                s.spawn(|| {
+                    let p = Pipeline::new(self.engine, self.manifest);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cells.len() {
+                            break;
+                        }
+                        let cfg = &cells[i];
+                        let (rec, cached) = match resumed.get(&record_key(cfg)) {
+                            Some(r) => (r.clone(), true),
+                            None => (run_cell(&p, &name, cfg, &bases, &git), false),
+                        };
+                        if !cached {
+                            if let Ok(mut sk) = sink.lock() {
+                                sk.write(&rec).ok();
+                            }
+                        }
+                        let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+                        eprintln!(
+                            "[suite {name}] {n}/{} {}/{} {} ({:.1}s{})",
+                            cells.len(),
+                            rec.variant,
+                            rec.dataset,
+                            match &rec.error {
+                                Some(e) => format!("FAILED: {e}"),
+                                None => format!("metric={:.4}", rec.metric),
+                            },
+                            rec.total_s,
+                            if cached { ", resumed" } else { "" },
+                        );
+                        results.lock().unwrap()[i] = Some(rec);
+                    }
+                });
+            }
+        });
+
+        let out: Vec<RunRecord> = results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every cell produces a record"))
+            .collect();
+        Ok(out)
+    }
+}
+
+fn record_key(cfg: &ExperimentConfig) -> String {
+    record::cell_key(&cfg.variant, &cfg.dataset, cfg.seed)
+}
+
+fn base_key(arch: &str, steps: usize) -> String {
+    format!("{arch}|{steps}")
+}
+
+/// Run one cell, folding every failure mode into an error record.
+fn run_cell(
+    p: &Pipeline,
+    suite: &str,
+    cfg: &ExperimentConfig,
+    bases: &BTreeMap<String, std::result::Result<Ckpt, String>>,
+    git: &str,
+) -> RunRecord {
+    let t0 = Instant::now();
+    let vid = match VariantId::parse(&cfg.variant) {
+        Ok(v) => v,
+        Err(e) => {
+            return RunRecord::failed(suite, cfg, format!("{e:#}"), t0.elapsed().as_secs_f64(), git)
+        }
+    };
+    // fail typo'd variants up front with the manifest's clear error
+    // (lists available names) instead of a late artifact-load failure
+    if let Err(e) = p.manifest.variant(&cfg.variant) {
+        return RunRecord::failed(suite, cfg, format!("{e:#}"), t0.elapsed().as_secs_f64(), git);
+    }
+    let base = match bases.get(&base_key(&vid.arch, cfg.pretrain_steps)) {
+        Some(Ok(b)) => b,
+        Some(Err(msg)) => {
+            return RunRecord::failed(
+                suite,
+                cfg,
+                format!("pretrain failed: {msg}"),
+                t0.elapsed().as_secs_f64(),
+                git,
+            )
+        }
+        None => {
+            return RunRecord::failed(
+                suite,
+                cfg,
+                "no pretrained base staged".into(),
+                t0.elapsed().as_secs_f64(),
+                git,
+            )
+        }
+    };
+    match p.finetune_with_base(cfg, base) {
+        Ok(out) => RunRecord::from_outcome(suite, cfg, &out, t0.elapsed().as_secs_f64(), git),
+        Err(e) => RunRecord::failed(suite, cfg, format!("{e:#}"), t0.elapsed().as_secs_f64(), git),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grid_expands_and_derives_seeds() {
+        let mut plan = SuitePlan::new("t");
+        plan.template.seed = 5;
+        plan.add_grid(&["a_full", "b_full"], &["dart", "samsum"]);
+        assert_eq!(plan.cells.len(), 4);
+        assert_eq!(plan.cells[0].variant, "a_full");
+        assert_eq!(plan.cells[0].dataset, "dart");
+        assert_eq!(plan.cells[3].variant, "b_full");
+        assert_eq!(plan.cells[3].dataset, "samsum");
+        // deterministic: rebuilding yields identical seeds
+        let mut plan2 = SuitePlan::new("t");
+        plan2.template.seed = 5;
+        plan2.add_grid(&["a_full", "b_full"], &["dart", "samsum"]);
+        let s1: Vec<u64> = plan.cells.iter().map(|c| c.seed).collect();
+        let s2: Vec<u64> = plan2.cells.iter().map(|c| c.seed).collect();
+        assert_eq!(s1, s2);
+        // ...and composition-order independent for a given cell
+        assert_eq!(plan.cells[3].seed, cell_seed(5, "b_full", "samsum"));
+    }
+
+    #[test]
+    fn cell_seed_depends_on_all_coordinates() {
+        let s = cell_seed(0, "v", "d");
+        assert_ne!(s, cell_seed(1, "v", "d"));
+        assert_ne!(s, cell_seed(0, "w", "d"));
+        assert_ne!(s, cell_seed(0, "v", "e"));
+        // variant/dataset are not interchangeable (rotate breaks symmetry)
+        assert_ne!(cell_seed(0, "a", "b"), cell_seed(0, "b", "a"));
+    }
+
+    #[test]
+    fn worker_count_floor() {
+        assert!(worker_count(2) >= 1);
+    }
+}

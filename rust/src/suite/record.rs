@@ -1,0 +1,426 @@
+//! Structured per-cell results: [`RunRecord`] (one JSON object per finished
+//! experiment cell), the append-only JSONL sink under `results/`, and the
+//! pivot-table builder that regenerates the paper tables from records.
+//!
+//! The JSONL schema is documented in rust/docs/suite.md. Records are
+//! self-describing (variant/dataset/seed key + git stamp), so a table can
+//! be rebuilt — or a suite resumed — from the file alone.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::bench::TablePrinter;
+use crate::config::ExperimentConfig;
+use crate::coordinator::Outcome;
+use crate::json::{self, Value};
+
+/// One experiment cell's result, as written to the JSONL stream.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Suite name (JSONL file stem).
+    pub suite: String,
+    pub variant: String,
+    pub dataset: String,
+    pub seed: u64,
+    /// Headline metric value (0.0 when the cell failed).
+    pub metric: f64,
+    /// All computed scores by name.
+    pub scores: BTreeMap<String, f64>,
+    pub budget_pct: f64,
+    pub chosen_lr: f32,
+    pub steps: usize,
+    pub dim_select_s: f64,
+    pub epoch_s: f64,
+    /// Wall-clock seconds for the whole cell (grid search + train + eval).
+    pub total_s: f64,
+    /// `git describe --always --dirty` at run time.
+    pub git: String,
+    /// Present when the cell failed; scores are empty then.
+    pub error: Option<String>,
+}
+
+impl RunRecord {
+    pub fn from_outcome(
+        suite: &str,
+        cfg: &ExperimentConfig,
+        out: &Outcome,
+        total_s: f64,
+        git: &str,
+    ) -> RunRecord {
+        RunRecord {
+            suite: suite.to_string(),
+            variant: cfg.variant.clone(),
+            dataset: cfg.dataset.clone(),
+            seed: cfg.seed,
+            metric: out.metric,
+            scores: out.scores.clone(),
+            budget_pct: out.budget_pct,
+            chosen_lr: out.chosen_lr,
+            steps: out.steps,
+            dim_select_s: out.dim_select_s,
+            epoch_s: out.epoch_s,
+            total_s,
+            git: git.to_string(),
+            error: None,
+        }
+    }
+
+    pub fn failed(
+        suite: &str,
+        cfg: &ExperimentConfig,
+        err: String,
+        total_s: f64,
+        git: &str,
+    ) -> RunRecord {
+        RunRecord {
+            suite: suite.to_string(),
+            variant: cfg.variant.clone(),
+            dataset: cfg.dataset.clone(),
+            seed: cfg.seed,
+            metric: 0.0,
+            scores: BTreeMap::new(),
+            budget_pct: 0.0,
+            chosen_lr: 0.0,
+            steps: 0,
+            dim_select_s: 0.0,
+            epoch_s: 0.0,
+            total_s,
+            git: git.to_string(),
+            error: Some(err),
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Resume/dedup key: one record per (variant, dataset, seed).
+    pub fn key(&self) -> String {
+        cell_key(&self.variant, &self.dataset, self.seed)
+    }
+
+    /// Score lookup; an empty key means the headline metric.
+    pub fn score(&self, key: &str) -> Option<f64> {
+        if key.is_empty() {
+            if self.ok() { Some(self.metric) } else { None }
+        } else {
+            self.scores.get(key).copied()
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("suite", json::s(&self.suite)),
+            ("variant", json::s(&self.variant)),
+            ("dataset", json::s(&self.dataset)),
+            // stringified: derived seeds span the full u64 range, which a
+            // JSON f64 number cannot round-trip (2^53 mantissa)
+            ("seed", json::s(&self.seed.to_string())),
+            ("metric", json::num(self.metric)),
+            (
+                "scores",
+                Value::Obj(
+                    self.scores.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+                ),
+            ),
+            ("budget_pct", json::num(self.budget_pct)),
+            ("chosen_lr", json::num(self.chosen_lr as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("dim_select_s", json::num(self.dim_select_s)),
+            ("epoch_s", json::num(self.epoch_s)),
+            ("total_s", json::num(self.total_s)),
+            ("git", json::s(&self.git)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => json::s(e),
+                    None => Value::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RunRecord> {
+        let str_of = |k: &str| {
+            v.path(k).and_then(Value::as_str).map(String::from).unwrap_or_default()
+        };
+        let num_of = |k: &str| v.path(k).and_then(Value::as_f64).unwrap_or(0.0);
+        let mut scores = BTreeMap::new();
+        if let Some(Value::Obj(m)) = v.path("scores") {
+            for (k, x) in m {
+                if let Some(n) = x.as_f64() {
+                    scores.insert(k.clone(), n);
+                }
+            }
+        }
+        if str_of("variant").is_empty() || str_of("dataset").is_empty() {
+            return Err(anyhow!("record missing variant/dataset"));
+        }
+        // seed is a stringified u64 (see to_json); accept a plain number
+        // too for hand-written files
+        let seed = v
+            .path("seed")
+            .and_then(Value::as_str)
+            .and_then(|s| s.parse().ok())
+            .or_else(|| v.path("seed").and_then(Value::as_f64).map(|n| n as u64))
+            .unwrap_or(0);
+        Ok(RunRecord {
+            suite: str_of("suite"),
+            variant: str_of("variant"),
+            dataset: str_of("dataset"),
+            seed,
+            metric: num_of("metric"),
+            scores,
+            budget_pct: num_of("budget_pct"),
+            chosen_lr: num_of("chosen_lr") as f32,
+            steps: num_of("steps") as usize,
+            dim_select_s: num_of("dim_select_s"),
+            epoch_s: num_of("epoch_s"),
+            total_s: num_of("total_s"),
+            git: str_of("git"),
+            error: v.path("error").and_then(Value::as_str).map(String::from),
+        })
+    }
+}
+
+/// The one definition of the (variant, dataset, seed) cell key used by
+/// records AND the runner's resume lookup — keep them from drifting.
+pub fn cell_key(variant: &str, dataset: &str, seed: u64) -> String {
+    format!("{variant}|{dataset}|{seed}")
+}
+
+/// `git describe --always --dirty`, or "unknown" outside a work tree.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append-only JSONL record stream (one `RunRecord` per line).
+pub struct JsonlSink {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl JsonlSink {
+    /// Open `results/<name>.jsonl` (append keeps prior records for resume).
+    pub fn create(name: &str, append: bool) -> Result<JsonlSink> {
+        Self::create_at(crate::results_dir().join(format!("{name}.jsonl")), append)
+    }
+
+    pub fn create_at(path: PathBuf, append: bool) -> Result<JsonlSink> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .append(append)
+            .truncate(!append)
+            .open(&path)
+            .with_context(|| format!("opening {path:?}"))?;
+        Ok(JsonlSink { path, file })
+    }
+
+    /// Write one record and flush (the stream stays valid on crash).
+    pub fn write(&mut self, rec: &RunRecord) -> Result<()> {
+        writeln!(self.file, "{}", json::emit(&rec.to_json()))?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Parse all records from `results/<name>.jsonl`; malformed lines are
+    /// skipped (a crashed run may leave a torn tail line).
+    pub fn load(name: &str) -> Vec<RunRecord> {
+        Self::load_at(&crate::results_dir().join(format!("{name}.jsonl")))
+    }
+
+    pub fn load_at(path: &Path) -> Vec<RunRecord> {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            return Vec::new();
+        };
+        src.lines()
+            .filter_map(|line| json::parse(line).ok())
+            .filter_map(|v| RunRecord::from_json(&v).ok())
+            .collect()
+    }
+}
+
+/// One pivot-table column: a (dataset, score) pair.
+#[derive(Debug, Clone)]
+pub struct PivotCol {
+    pub header: String,
+    pub dataset: String,
+    /// Key into `RunRecord::scores`; empty = headline metric.
+    pub score: String,
+}
+
+impl PivotCol {
+    /// Column showing a dataset's headline metric.
+    pub fn main(header: &str, dataset: &str) -> PivotCol {
+        PivotCol { header: header.into(), dataset: dataset.into(), score: String::new() }
+    }
+    /// Column showing a named score of a dataset.
+    pub fn score(header: &str, dataset: &str, score: &str) -> PivotCol {
+        PivotCol { header: header.into(), dataset: dataset.into(), score: score.into() }
+    }
+}
+
+/// Pivot records into a paper-style table: one row per variant (in the
+/// given order, with caller-supplied label cells), one column per
+/// (dataset, score), plus the parameter-budget column. Missing cells
+/// render "-", failed cells "ERR".
+pub fn pivot(
+    records: &[RunRecord],
+    label_headers: &[&str],
+    rows: &[(&str, &[&str])],
+    cols: &[PivotCol],
+) -> TablePrinter {
+    let mut headers: Vec<&str> = label_headers.to_vec();
+    headers.push("params%");
+    let col_headers: Vec<String> = cols.iter().map(|c| c.header.clone()).collect();
+    let mut all_headers: Vec<&str> = headers.clone();
+    all_headers.extend(col_headers.iter().map(String::as_str));
+    let mut table = TablePrinter::new(&all_headers);
+
+    for (variant, labels) in rows {
+        let mut cells: Vec<String> = labels.iter().map(|s| s.to_string()).collect();
+        let budget = records
+            .iter()
+            .rev()
+            .find(|r| r.variant == *variant && r.ok())
+            .map(|r| format!("{:.2}", r.budget_pct))
+            .unwrap_or_else(|| "-".into());
+        cells.push(budget);
+        for col in cols {
+            // prefer the latest ok record (a resumed JSONL may hold a stale
+            // failed attempt before the successful re-run), else latest any
+            let matches =
+                |r: &&RunRecord| r.variant == *variant && r.dataset == col.dataset;
+            let rec = records
+                .iter()
+                .rev()
+                .find(|r| matches(r) && r.ok())
+                .or_else(|| records.iter().rev().find(matches));
+            let cell = match rec {
+                None => "-".into(),
+                Some(r) if !r.ok() => "ERR".into(),
+                Some(r) => r
+                    .score(&col.score)
+                    .map(|x| format!("{x:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+            };
+            cells.push(cell);
+        }
+        table.row(cells);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(variant: &str, dataset: &str, metric: f64) -> RunRecord {
+        let mut scores = BTreeMap::new();
+        scores.insert("bleu".to_string(), metric / 2.0);
+        RunRecord {
+            suite: "t".into(),
+            variant: variant.into(),
+            dataset: dataset.into(),
+            // deliberately above 2^53: full-range u64 seeds must round-trip
+            seed: 0xdead_beef_dead_beef,
+            metric,
+            scores,
+            budget_pct: 1.25,
+            chosen_lr: 3e-3,
+            steps: 10,
+            dim_select_s: 0.5,
+            epoch_s: 2.0,
+            total_s: 9.0,
+            git: "abc123".into(),
+            error: None,
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = rec("mamba1_xs_lora_lin", "glue/rte", 0.75);
+        let back = RunRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.variant, r.variant);
+        assert_eq!(back.dataset, r.dataset);
+        assert_eq!(back.seed, 0xdead_beef_dead_beef, "u64 seed must not pass through f64");
+        assert_eq!(back.metric, 0.75);
+        assert_eq!(back.scores["bleu"], 0.375);
+        assert_eq!(back.git, "abc123");
+        assert!(back.ok());
+        assert_eq!(back.key(), r.key());
+    }
+
+    #[test]
+    fn failed_record_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let r = RunRecord::failed("t", &cfg, "boom".into(), 1.0, "g");
+        let back = RunRecord::from_json(&r.to_json()).unwrap();
+        assert!(!back.ok());
+        assert_eq!(back.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn sink_write_and_load() {
+        let path = std::env::temp_dir()
+            .join(format!("suite_sink_{}.jsonl", std::process::id()));
+        let mut sink = JsonlSink::create_at(path.clone(), false).unwrap();
+        sink.write(&rec("v1", "d1", 0.5)).unwrap();
+        sink.write(&rec("v1", "d2", 0.6)).unwrap();
+        drop(sink);
+        // torn tail line must not poison earlier records
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"variant\":\"v1\",").unwrap();
+        }
+        let recs = JsonlSink::load_at(&path);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].dataset, "d2");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn pivot_layout() {
+        let mut r_err = rec("v2", "d1", 0.0);
+        r_err.error = Some("x".into());
+        // stale failed attempt BEFORE the ok record (resumed-file shape):
+        // the ok re-run must win the cell
+        let mut v1_stale = rec("v1", "d1", 0.0);
+        v1_stale.error = Some("transient".into());
+        let records =
+            vec![v1_stale, rec("v1", "d1", 0.5), rec("v1", "d2", 0.6), r_err];
+        let rows: Vec<(&str, &[&str])> =
+            vec![("v1", &["Mamba", "LoRA"]), ("v2", &["Mamba", "DoRA"])];
+        let cols = vec![
+            PivotCol::main("d1", "d1"),
+            PivotCol::score("d2(BLEU)", "d2", "bleu"),
+        ];
+        let t = pivot(&records, &["model", "method"], &rows, &cols);
+        assert_eq!(t.headers, vec!["model", "method", "params%", "d1", "d2(BLEU)"]);
+        assert_eq!(t.rows[0], vec!["Mamba", "LoRA", "1.25", "0.500", "0.300"]);
+        // v2: failed on d1, absent on d2
+        assert_eq!(t.rows[1], vec!["Mamba", "DoRA", "-", "ERR", "-"]);
+    }
+
+    #[test]
+    fn git_describe_never_panics() {
+        assert!(!git_describe().is_empty());
+    }
+}

@@ -1,0 +1,229 @@
+//! Declarative suite files: a JSON description of an experiment grid that
+//! the `suite` CLI subcommand (and any bench) can run. Schema documented in
+//! rust/docs/suite.md.
+//!
+//! ```json
+//! {
+//!   "name": "table1",
+//!   "par": 2,
+//!   "resume": false,
+//!   "template": {"epochs": 2, "lr": 0.003},
+//!   "variants": ["mamba1_xs_lora_lin", "mamba1_xs_bitfit"],
+//!   "datasets": ["glue/rte", "dart"],
+//!   "cells": [
+//!     {"variant": "mamba1_xs_sdtlora", "dataset": "dart",
+//!      "overrides": {"sdt.warmup_batches": 8}}
+//!   ]
+//! }
+//! ```
+//!
+//! `variants` × `datasets` expand as a grid; `cells` append individual
+//! cells with optional per-cell overrides. Unknown keys anywhere are
+//! rejected (typos fail loudly, mirroring `ExperimentConfig::set`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::json::{self, Value};
+
+use super::{cell_seed, SuitePlan};
+
+/// A parsed suite file: the plan plus runner settings.
+#[derive(Debug)]
+pub struct SuiteSpec {
+    pub plan: SuitePlan,
+    /// Worker count for `Suite::run` (CLI `par=` overrides).
+    pub par: usize,
+}
+
+const TOP_KEYS: &[&str] =
+    &["name", "par", "resume", "template", "variants", "datasets", "cells"];
+const CELL_KEYS: &[&str] = &["variant", "dataset", "overrides"];
+
+fn str_list(v: &Value, key: &str) -> Result<Vec<String>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("{key}: expected array"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_str()
+                .map(String::from)
+                .ok_or_else(|| anyhow!("{key}: expected array of strings"))
+        })
+        .collect()
+}
+
+impl SuiteSpec {
+    pub fn from_file(path: &str) -> Result<SuiteSpec> {
+        let src = std::fs::read_to_string(path)?;
+        let v = json::parse(&src).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<SuiteSpec> {
+        let obj = match v {
+            Value::Obj(m) => m,
+            _ => bail!("suite spec must be an object"),
+        };
+        for k in obj.keys() {
+            if !TOP_KEYS.contains(&k.as_str()) {
+                bail!("unknown suite key {k:?} (expected one of {TOP_KEYS:?})");
+            }
+        }
+        let name = match obj.get("name") {
+            Some(n) => n.as_str().ok_or_else(|| anyhow!("name: expected string"))?.to_string(),
+            None => "suite".to_string(),
+        };
+        let par = obj
+            .get("par")
+            .map(|p| p.as_f64().ok_or_else(|| anyhow!("par: expected number")))
+            .transpose()?
+            .map(|p| p as usize)
+            .unwrap_or(2);
+        let resume = obj
+            .get("resume")
+            .map(|r| r.as_bool().ok_or_else(|| anyhow!("resume: expected bool")))
+            .transpose()?
+            .unwrap_or(false);
+        let template = match obj.get("template") {
+            Some(t) => ExperimentConfig::from_json(t)?,
+            None => ExperimentConfig::default(),
+        };
+
+        let mut plan = SuitePlan::new(&name);
+        plan.template = template;
+        plan.resume = resume;
+
+        let variants = obj.get("variants").map(|v| str_list(v, "variants")).transpose()?;
+        let datasets = obj.get("datasets").map(|v| str_list(v, "datasets")).transpose()?;
+        match (variants, datasets) {
+            (Some(vs), Some(ds)) => {
+                for variant in &vs {
+                    for dataset in &ds {
+                        plan.add_cell(variant, dataset);
+                    }
+                }
+            }
+            (None, None) => {}
+            _ => bail!("variants and datasets must be given together (grid expansion)"),
+        }
+
+        if let Some(cells) = obj.get("cells") {
+            let arr = cells.as_arr().ok_or_else(|| anyhow!("cells: expected array"))?;
+            for (i, cell) in arr.iter().enumerate() {
+                let cobj = match cell {
+                    Value::Obj(m) => m,
+                    _ => bail!("cells[{i}]: expected object"),
+                };
+                for k in cobj.keys() {
+                    if !CELL_KEYS.contains(&k.as_str()) {
+                        bail!("cells[{i}]: unknown key {k:?}");
+                    }
+                }
+                let variant = cobj
+                    .get("variant")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("cells[{i}]: missing variant"))?;
+                let dataset = cobj
+                    .get("dataset")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("cells[{i}]: missing dataset"))?;
+                let mut cfg = plan.template.clone();
+                cfg.variant = variant.to_string();
+                cfg.dataset = dataset.to_string();
+                cfg.seed = cell_seed(plan.template.seed, variant, dataset);
+                if let Some(ov) = cobj.get("overrides") {
+                    let ovm = match ov {
+                        Value::Obj(m) => m,
+                        _ => bail!("cells[{i}].overrides: expected object"),
+                    };
+                    for (k, val) in ovm {
+                        cfg.set(k, val).map_err(|e| anyhow!("cells[{i}]: {e}"))?;
+                    }
+                }
+                plan.push(cfg);
+            }
+        }
+
+        if plan.cells.is_empty() {
+            bail!("suite spec declares no cells (need variants×datasets or cells)");
+        }
+        Ok(SuiteSpec { plan, par: par.max(1) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> Result<SuiteSpec> {
+        SuiteSpec::from_json(&json::parse(src).unwrap())
+    }
+
+    #[test]
+    fn full_spec_parses() {
+        let spec = parse(
+            r#"{
+              "name": "t1", "par": 3, "resume": true,
+              "template": {"epochs": 2, "lr": 0.003, "n_train": 64},
+              "variants": ["mamba1_xs_lora_lin", "mamba1_xs_bitfit"],
+              "datasets": ["glue/rte", "dart"],
+              "cells": [{"variant": "mamba1_xs_sdtlora", "dataset": "dart",
+                         "overrides": {"sdt.warmup_batches": 8, "seed": 42}}]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.plan.name, "t1");
+        assert_eq!(spec.par, 3);
+        assert!(spec.plan.resume);
+        assert_eq!(spec.plan.cells.len(), 5); // 2×2 grid + 1 cell
+        assert_eq!(spec.plan.cells[0].variant, "mamba1_xs_lora_lin");
+        assert_eq!(spec.plan.cells[0].dataset, "glue/rte");
+        assert_eq!(spec.plan.cells[0].epochs, 2);
+        let extra = &spec.plan.cells[4];
+        assert_eq!(extra.variant, "mamba1_xs_sdtlora");
+        assert_eq!(extra.sdt.warmup_batches, 8);
+        assert_eq!(extra.seed, 42); // explicit override beats derived seed
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(parse(r#"{"nope": 1, "variants": ["v_full"], "datasets": ["dart"]}"#).is_err());
+        assert!(parse(
+            r#"{"template": {"bogus_key": 1}, "variants": ["v_full"], "datasets": ["dart"]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"cells": [{"variant": "v_full", "dataset": "dart", "extra": 1}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"cells": [{"variant": "v_full", "dataset": "dart",
+                           "overrides": {"not_a_key": 1}}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn grid_requires_both_axes() {
+        assert!(parse(r#"{"variants": ["v_full"]}"#).is_err());
+        assert!(parse(r#"{"datasets": ["dart"]}"#).is_err());
+    }
+
+    #[test]
+    fn empty_spec_rejected() {
+        assert!(parse(r#"{"name": "empty"}"#).is_err());
+    }
+
+    #[test]
+    fn derived_seeds_are_deterministic_and_distinct() {
+        let src = r#"{"variants": ["a_full", "b_full"], "datasets": ["dart", "samsum"]}"#;
+        let s1 = parse(src).unwrap();
+        let s2 = parse(src).unwrap();
+        let seeds1: Vec<u64> = s1.plan.cells.iter().map(|c| c.seed).collect();
+        let seeds2: Vec<u64> = s2.plan.cells.iter().map(|c| c.seed).collect();
+        assert_eq!(seeds1, seeds2);
+        let mut uniq = seeds1.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4, "per-cell seeds should differ: {seeds1:?}");
+    }
+}

@@ -1,0 +1,478 @@
+//! Typed experiment identifiers: the closed vocabulary of the paper's
+//! experiment matrix — {PEFT method} × {target modules} × {metric} — as
+//! enums, plus [`VariantId`], the parsed form of an artifact variant name.
+//!
+//! These replace the stringly-typed dispatch the coordinator used to do
+//! (`method == "sdt"`, `metric == "rouge"`, `arch_of` longest-suffix
+//! matching): every variant name is parsed ONCE into a `VariantId`, and all
+//! downstream code matches on enums. The suffix vocabulary mirrors
+//! python/compile/configs.py::PEFTS — the two sides share the naming
+//! contract `<arch>_<peft_suffix>`.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Which weight matrices a LoRA/DoRA adapter targets (paper Sec. 4.2:
+/// LinProj ≥ Both > SSM-only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// S6-internal projections (x_proj, dt_proj).
+    Ssm,
+    /// Input linear projections (W_in,x / W_in,z).
+    LinProj,
+    /// Output projection only (W_out).
+    Out,
+    /// LinProj + SSM.
+    Both,
+}
+
+impl Target {
+    /// Variant-name fragment (`lora_<fragment>`).
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Target::Ssm => "ssm",
+            Target::LinProj => "lin",
+            Target::Out => "out",
+            Target::Both => "both",
+        }
+    }
+
+    /// Table label (paper's "Target" column).
+    pub fn label(self) -> &'static str {
+        match self {
+            Target::Ssm => "SSM",
+            Target::LinProj => "LinProj",
+            Target::Out => "Out",
+            Target::Both => "Both",
+        }
+    }
+
+    /// Manifest `peft.targets[0]` vocabulary (python configs.py).
+    fn from_manifest(s: &str) -> Option<Target> {
+        match s {
+            "ssm" => Some(Target::Ssm),
+            "linproj" => Some(Target::LinProj),
+            "out" => Some(Target::Out),
+            "both" => Some(Target::Both),
+            _ => None,
+        }
+    }
+}
+
+/// Every PEFT method the artifact set exports (Table 1 rows + the S4
+/// variants of Fig. 2 / Table 19).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PeftMethod {
+    Full,
+    Lora(Target),
+    Dora(Target),
+    BitFit,
+    Prompt,
+    Prefix,
+    InitState,
+    AddScan,
+    Sdt,
+    SdtLora,
+    /// S4-specific LoRA on the projection weights (`s4_lora_proj`).
+    S4LoraProj,
+    /// S4-specific LoRA on projection + A_log/C (`s4_lora_ssm`).
+    S4LoraSsm,
+}
+
+/// All methods, in suffix-lookup order.
+const ALL_METHODS: &[PeftMethod] = &[
+    PeftMethod::Full,
+    PeftMethod::Lora(Target::Ssm),
+    PeftMethod::Lora(Target::LinProj),
+    PeftMethod::Lora(Target::Out),
+    PeftMethod::Lora(Target::Both),
+    PeftMethod::Dora(Target::Ssm),
+    PeftMethod::Dora(Target::LinProj),
+    PeftMethod::Dora(Target::Out),
+    PeftMethod::Dora(Target::Both),
+    PeftMethod::BitFit,
+    PeftMethod::Prompt,
+    PeftMethod::Prefix,
+    PeftMethod::InitState,
+    PeftMethod::AddScan,
+    PeftMethod::Sdt,
+    PeftMethod::SdtLora,
+    PeftMethod::S4LoraProj,
+    PeftMethod::S4LoraSsm,
+];
+
+impl PeftMethod {
+    pub fn all() -> &'static [PeftMethod] {
+        ALL_METHODS
+    }
+
+    /// The variant-name suffix (python configs.py PEFTS key).
+    pub fn suffix(self) -> &'static str {
+        match self {
+            PeftMethod::Full => "full",
+            PeftMethod::Lora(Target::Ssm) => "lora_ssm",
+            PeftMethod::Lora(Target::LinProj) => "lora_lin",
+            PeftMethod::Lora(Target::Out) => "lora_out",
+            PeftMethod::Lora(Target::Both) => "lora_both",
+            PeftMethod::Dora(Target::Ssm) => "dora_ssm",
+            PeftMethod::Dora(Target::LinProj) => "dora_lin",
+            PeftMethod::Dora(Target::Out) => "dora_out",
+            PeftMethod::Dora(Target::Both) => "dora_both",
+            PeftMethod::BitFit => "bitfit",
+            PeftMethod::Prompt => "prompt",
+            PeftMethod::Prefix => "prefix",
+            PeftMethod::InitState => "initstate",
+            PeftMethod::AddScan => "addscan",
+            PeftMethod::Sdt => "sdt",
+            PeftMethod::SdtLora => "sdtlora",
+            PeftMethod::S4LoraProj => "s4_lora_proj",
+            PeftMethod::S4LoraSsm => "s4_lora_ssm",
+        }
+    }
+
+    pub fn from_suffix(s: &str) -> Option<PeftMethod> {
+        ALL_METHODS.iter().find(|m| m.suffix() == s).copied()
+    }
+
+    /// Human-readable method name (paper's "Method" column).
+    pub fn label(self) -> &'static str {
+        match self {
+            PeftMethod::Full => "Full Fine-Tuning",
+            PeftMethod::Lora(_) => "LoRA",
+            PeftMethod::Dora(_) => "DoRA",
+            PeftMethod::BitFit => "BitFit",
+            PeftMethod::Prompt => "Prompt Tuning",
+            PeftMethod::Prefix => "Prefix-Tuning",
+            PeftMethod::InitState => "Initial-State Tuning",
+            PeftMethod::AddScan => "Additional-Scan",
+            PeftMethod::Sdt => "SDT",
+            PeftMethod::SdtLora => "SDT & LoRA",
+            PeftMethod::S4LoraProj => "LoRA (S4 proj)",
+            PeftMethod::S4LoraSsm => "LoRA (S4 SSM)",
+        }
+    }
+
+    /// Adapter target, when the method is a LoRA family member.
+    pub fn target(self) -> Option<Target> {
+        match self {
+            PeftMethod::Lora(t) | PeftMethod::Dora(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Paper's "Target" column for EVERY method (display only).
+    pub fn target_label(self) -> &'static str {
+        match self {
+            PeftMethod::Lora(t) | PeftMethod::Dora(t) => t.label(),
+            PeftMethod::Prefix
+            | PeftMethod::InitState
+            | PeftMethod::AddScan
+            | PeftMethod::Sdt
+            | PeftMethod::SdtLora
+            | PeftMethod::S4LoraProj
+            | PeftMethod::S4LoraSsm => "SSM",
+            PeftMethod::Full | PeftMethod::BitFit => "Both",
+            PeftMethod::Prompt => "Other",
+        }
+    }
+
+    /// Methods that run the SDT warmup/selection stage (paper Alg. 1).
+    pub fn is_sdt(self) -> bool {
+        matches!(self, PeftMethod::Sdt | PeftMethod::SdtLora)
+    }
+
+    /// Methods whose trained adapters must be merged before decode.
+    pub fn uses_lora(self) -> bool {
+        matches!(
+            self,
+            PeftMethod::Lora(_)
+                | PeftMethod::Dora(_)
+                | PeftMethod::SdtLora
+                | PeftMethod::S4LoraProj
+                | PeftMethod::S4LoraSsm
+        )
+    }
+
+    /// Parse the manifest's `peft` block (`method` string + `targets` list,
+    /// python aot.py vocabulary) into the typed method.
+    pub fn from_manifest(method: &str, targets: &[String]) -> Result<PeftMethod> {
+        let m = match method {
+            "full" => PeftMethod::Full,
+            "bitfit" => PeftMethod::BitFit,
+            "prompt" => PeftMethod::Prompt,
+            "prefix" => PeftMethod::Prefix,
+            "initstate" => PeftMethod::InitState,
+            "addscan" => PeftMethod::AddScan,
+            "sdt" => PeftMethod::Sdt,
+            "sdtlora" => PeftMethod::SdtLora,
+            "lora" | "dora" => {
+                let t0 = targets.first().map(String::as_str).unwrap_or("");
+                if t0 == "s4w" {
+                    // configs.py: ["s4w"] = proj-only, ["s4w","A_log","C"] = ssm
+                    if targets.len() > 1 {
+                        PeftMethod::S4LoraSsm
+                    } else {
+                        PeftMethod::S4LoraProj
+                    }
+                } else {
+                    let t = Target::from_manifest(t0)
+                        .ok_or_else(|| anyhow!("unknown LoRA target {t0:?}"))?;
+                    if method == "lora" {
+                        PeftMethod::Lora(t)
+                    } else {
+                        PeftMethod::Dora(t)
+                    }
+                }
+            }
+            other => bail!("unknown PEFT method {other:?}"),
+        };
+        Ok(m)
+    }
+}
+
+impl std::fmt::Display for PeftMethod {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.suffix())
+    }
+}
+
+impl std::str::FromStr for PeftMethod {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        PeftMethod::from_suffix(s).ok_or_else(|| anyhow!("unknown PEFT suffix {s:?}"))
+    }
+}
+
+/// A parsed `<arch>_<peft_suffix>` variant name. Replaces the old
+/// `arch_of` heuristic (longest `_full`-variant prefix match against the
+/// manifest): the method suffix vocabulary is closed, so the split is
+/// unambiguous and needs no manifest.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct VariantId {
+    /// Architecture preset name, e.g. "mamba1_xs".
+    pub arch: String,
+    pub method: PeftMethod,
+}
+
+impl VariantId {
+    pub fn new(arch: impl Into<String>, method: PeftMethod) -> Self {
+        VariantId { arch: arch.into(), method }
+    }
+
+    /// Split a variant name on its longest known method suffix.
+    pub fn parse(name: &str) -> Result<VariantId> {
+        let mut best: Option<(usize, PeftMethod)> = None;
+        for m in ALL_METHODS {
+            let suf = m.suffix();
+            if name.len() > suf.len() + 1
+                && name.ends_with(suf)
+                && name.as_bytes()[name.len() - suf.len() - 1] == b'_'
+                && best.map_or(true, |(l, _)| suf.len() > l)
+            {
+                best = Some((suf.len(), *m));
+            }
+        }
+        let (len, method) =
+            best.ok_or_else(|| anyhow!("variant {name:?} has no recognized PEFT suffix"))?;
+        Ok(VariantId { arch: name[..name.len() - len - 1].to_string(), method })
+    }
+
+    /// Reassemble the artifact variant name.
+    pub fn name(&self) -> String {
+        format!("{}_{}", self.arch, self.method.suffix())
+    }
+
+    /// The decode-capable variant serving this architecture's fine-tuned
+    /// weights after adapter merging.
+    pub fn decode_variant(&self) -> String {
+        format!("{}_full", self.arch)
+    }
+}
+
+impl std::fmt::Display for VariantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+impl std::str::FromStr for VariantId {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        VariantId::parse(s)
+    }
+}
+
+/// Main evaluation metric of a dataset. Replaces the `"rouge"`/`"exec"`
+/// string ids that eval and the coordinator used to compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Classification accuracy.
+    Acc,
+    /// Matthews correlation (CoLA).
+    Matthews,
+    /// ROUGE-L (SAMSum).
+    Rouge,
+    /// BLEU + METEOR (DART); BLEU is the headline number.
+    BleuMeteor,
+    /// Execution accuracy against the mini database (Spider).
+    Exec,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Acc => "acc",
+            Metric::Matthews => "matthews",
+            Metric::Rouge => "rouge",
+            Metric::BleuMeteor => "bleu_meteor",
+            Metric::Exec => "exec",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "acc" => Some(Metric::Acc),
+            "matthews" => Some(Metric::Matthews),
+            "rouge" => Some(Metric::Rouge),
+            "bleu_meteor" => Some(Metric::BleuMeteor),
+            "exec" => Some(Metric::Exec),
+            _ => None,
+        }
+    }
+
+    /// True when the metric is computed from generated text (decode path)
+    /// rather than classification logits.
+    pub fn generative(self) -> bool {
+        matches!(self, Metric::Rouge | Metric::BleuMeteor | Metric::Exec)
+    }
+
+    /// Pick the headline number out of a generation-score bundle.
+    pub fn main_gen_score(self, g: &crate::eval::GenScores) -> f64 {
+        match self {
+            Metric::Rouge => g.rougel,
+            Metric::Exec => g.exec_acc,
+            _ => g.bleu,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every variant name python/compile/configs.py exports (the manifest
+    /// contract). An integration test re-checks this against the real
+    /// manifest when artifacts are present.
+    const MANIFEST_NAMES: &[&str] = &[
+        // mamba1_xs × MAMBA1_PEFTS
+        "mamba1_xs_full", "mamba1_xs_lora_lin", "mamba1_xs_lora_ssm",
+        "mamba1_xs_lora_both", "mamba1_xs_lora_out", "mamba1_xs_dora_lin",
+        "mamba1_xs_dora_ssm", "mamba1_xs_dora_both", "mamba1_xs_bitfit",
+        "mamba1_xs_prompt", "mamba1_xs_prefix", "mamba1_xs_initstate",
+        "mamba1_xs_addscan", "mamba1_xs_sdt", "mamba1_xs_sdtlora",
+        // mamba1_s
+        "mamba1_s_full", "mamba1_s_sdtlora", "mamba1_s_lora_lin",
+        // mamba2_xs × MAMBA2_PEFTS
+        "mamba2_xs_full", "mamba2_xs_lora_lin", "mamba2_xs_lora_ssm",
+        "mamba2_xs_sdt", "mamba2_xs_sdtlora",
+        // s4reg × S4REG_PEFTS (+ the s4reg_t target model)
+        "s4reg_full", "s4reg_s4_lora_proj", "s4reg_s4_lora_ssm",
+        "s4reg_sdt", "s4reg_sdtlora", "s4reg_t_full",
+        // s4lm × S4LM_PEFTS
+        "s4lm_full", "s4lm_s4_lora_proj", "s4lm_sdt", "s4lm_sdtlora",
+        // hybrid_xs × HYBRID_PEFTS
+        "hybrid_xs_full", "hybrid_xs_lora_lin", "hybrid_xs_dora_lin",
+        "hybrid_xs_bitfit", "hybrid_xs_prompt", "hybrid_xs_prefix",
+        "hybrid_xs_addscan", "hybrid_xs_sdt", "hybrid_xs_sdtlora",
+    ];
+
+    #[test]
+    fn variant_id_roundtrips_every_manifest_name() {
+        for name in MANIFEST_NAMES {
+            let vid = VariantId::parse(name)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(vid.name(), *name, "round-trip failed");
+            assert!(!vid.arch.is_empty());
+        }
+    }
+
+    #[test]
+    fn variant_id_splits_arch_correctly() {
+        let v = VariantId::parse("mamba1_xs_sdtlora").unwrap();
+        assert_eq!(v.arch, "mamba1_xs");
+        assert_eq!(v.method, PeftMethod::SdtLora);
+        assert_eq!(v.decode_variant(), "mamba1_xs_full");
+        // longest-suffix: s4_lora_ssm, not lora_ssm
+        let v = VariantId::parse("s4reg_s4_lora_ssm").unwrap();
+        assert_eq!(v.arch, "s4reg");
+        assert_eq!(v.method, PeftMethod::S4LoraSsm);
+        // trailing arch segments survive
+        assert_eq!(VariantId::parse("s4reg_t_full").unwrap().arch, "s4reg_t");
+        assert_eq!(VariantId::parse("mamba1_s_lora_lin").unwrap().arch, "mamba1_s");
+    }
+
+    #[test]
+    fn variant_id_rejects_unknown() {
+        assert!(VariantId::parse("nonexistent_arch_x").is_err());
+        assert!(VariantId::parse("full").is_err()); // no arch prefix
+        assert!(VariantId::parse("").is_err());
+    }
+
+    #[test]
+    fn method_suffixes_are_unique_and_roundtrip() {
+        for m in PeftMethod::all() {
+            assert_eq!(PeftMethod::from_suffix(m.suffix()), Some(*m));
+        }
+        let mut sufs: Vec<&str> = PeftMethod::all().iter().map(|m| m.suffix()).collect();
+        sufs.sort_unstable();
+        sufs.dedup();
+        assert_eq!(sufs.len(), PeftMethod::all().len());
+    }
+
+    #[test]
+    fn manifest_method_mapping() {
+        let lin = vec!["linproj".to_string()];
+        assert_eq!(
+            PeftMethod::from_manifest("lora", &lin).unwrap(),
+            PeftMethod::Lora(Target::LinProj)
+        );
+        assert_eq!(
+            PeftMethod::from_manifest("dora", &["both".to_string()]).unwrap(),
+            PeftMethod::Dora(Target::Both)
+        );
+        assert_eq!(
+            PeftMethod::from_manifest("lora", &["s4w".to_string()]).unwrap(),
+            PeftMethod::S4LoraProj
+        );
+        let s4ssm: Vec<String> =
+            ["s4w", "A_log", "C"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(
+            PeftMethod::from_manifest("lora", &s4ssm).unwrap(),
+            PeftMethod::S4LoraSsm
+        );
+        assert_eq!(PeftMethod::from_manifest("sdtlora", &[]).unwrap(), PeftMethod::SdtLora);
+        assert!(PeftMethod::from_manifest("nope", &[]).is_err());
+        assert!(PeftMethod::from_manifest("lora", &["bogus".to_string()]).is_err());
+    }
+
+    #[test]
+    fn method_predicates() {
+        assert!(PeftMethod::Sdt.is_sdt());
+        assert!(PeftMethod::SdtLora.is_sdt());
+        assert!(!PeftMethod::Lora(Target::Both).is_sdt());
+        assert!(PeftMethod::SdtLora.uses_lora());
+        assert!(PeftMethod::Dora(Target::LinProj).uses_lora());
+        assert!(!PeftMethod::BitFit.uses_lora());
+        assert_eq!(PeftMethod::Lora(Target::LinProj).target(), Some(Target::LinProj));
+        assert_eq!(PeftMethod::Full.target(), None);
+    }
+
+    #[test]
+    fn metric_roundtrip() {
+        for m in [Metric::Acc, Metric::Matthews, Metric::Rouge, Metric::BleuMeteor, Metric::Exec] {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Metric::parse("bogus"), None);
+        assert!(Metric::Rouge.generative());
+        assert!(!Metric::Acc.generative());
+    }
+}

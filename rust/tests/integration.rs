@@ -4,18 +4,21 @@
 //! `cargo test` stays green on a fresh checkout.
 
 use ssm_peft::config::ExperimentConfig;
-use ssm_peft::coordinator::{arch_of, Pipeline};
+use ssm_peft::coordinator::Pipeline;
 use ssm_peft::data::{make_lm_batch, tasks, BatchIter};
 use ssm_peft::eval::Generator;
 use ssm_peft::manifest::Manifest;
 use ssm_peft::peft::{select_dimensions, Budget, SdtConfig};
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::{JsonlSink, PeftMethod, Suite, VariantId};
 use ssm_peft::tensor::Rng;
 use ssm_peft::train::{checkpoint, TrainConfig, Trainer};
 
-/// Per-test setup: PJRT clients hold raw pointers (not Sync), so each test
-/// builds its own engine; the XLA compile cache inside `Engine` still
-/// amortizes within a test.
+/// Per-test setup: each test builds its own engine (tests run on separate
+/// threads and an `Engine` is cheap); the XLA compile cache inside
+/// `Engine` still amortizes within a test, and the suite tests share one
+/// engine across their worker threads (`Engine` is `Sync` — see
+/// runtime/mod.rs safety notes).
 fn setup() -> Option<(Engine, Manifest)> {
     let dir = ssm_peft::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -140,7 +143,7 @@ fn beam_matches_or_beats_greedy_logprob_shape() {
     let p = Pipeline::new(e, m);
     let base = p.pretrained("mamba1_xs", 150, 0).unwrap();
     let gen = Generator::new(e, m, "mamba1_xs_full", &base).unwrap();
-    let beam = gen.beam(b"name=ann", 4, 16, b'\n').unwrap();
+    let beam = gen.beam(b"name=ann", 4, 16, b'\n', None).unwrap();
     assert!(beam.len() <= 16);
 }
 
@@ -195,12 +198,91 @@ fn checkpoint_pipeline_roundtrip() {
 }
 
 #[test]
-fn arch_resolution_prefers_longest_match() {
+fn variant_ids_roundtrip_against_real_manifest() {
+    // the typed parser must agree with the manifest for EVERY exported
+    // variant: name round-trips and the parsed method matches the peft
+    // block python aot.py wrote.
     let Some((_, ref m)) = setup() else { return };
-    assert_eq!(arch_of(m, "mamba1_xs_sdtlora").unwrap(), "mamba1_xs");
-    assert_eq!(arch_of(m, "mamba1_s_lora_lin").unwrap(), "mamba1_s");
-    assert_eq!(arch_of(m, "s4reg_t_full").unwrap(), "s4reg_t");
-    assert!(arch_of(m, "nonexistent_arch_x").is_err());
+    for (name, v) in &m.variants {
+        let vid = VariantId::parse(name)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(vid.name(), *name, "{name}: round-trip");
+        assert_eq!(vid.method, v.peft.method, "{name}: method mismatch");
+        assert!(
+            m.variants.contains_key(&vid.decode_variant()),
+            "{name}: decode variant {} missing", vid.decode_variant()
+        );
+    }
+    let vid = VariantId::parse("mamba1_xs_sdtlora").unwrap();
+    assert_eq!(vid.arch, "mamba1_xs");
+    assert_eq!(vid.method, PeftMethod::SdtLora);
+    assert_eq!(VariantId::parse("s4reg_t_full").unwrap().arch, "s4reg_t");
+    assert!(VariantId::parse("nonexistent_arch_x").is_err());
+}
+
+#[test]
+fn suite_runs_cells_on_two_workers() {
+    // the acceptance smoke test: a 2-cell grid on 2 workers produces one
+    // record per cell, deterministic per-cell seeds, and a JSONL stream.
+    let Some((ref e, ref m)) = setup() else { return };
+    let mk = || {
+        let mut t = ExperimentConfig::default();
+        t.n_train = 64;
+        t.epochs = 1;
+        t.max_batches_per_epoch = 3;
+        t.pretrain_steps = 60;
+        t.lr_grid = vec![3e-3];
+        Suite::new(e, m)
+            .named("it_suite_smoke")
+            .template(t)
+            .grid(&["mamba1_xs_lora_lin"], &["glue/rte", "glue/sst2"])
+    };
+    let suite = mk();
+    let seeds: Vec<u64> = suite.plan.cells.iter().map(|c| c.seed).collect();
+    assert_eq!(seeds, mk().plan.cells.iter().map(|c| c.seed).collect::<Vec<u64>>(),
+               "cell seeds must be deterministic");
+    assert_ne!(seeds[0], seeds[1], "cells get distinct seeds");
+
+    let records = suite.run(2).unwrap();
+    assert_eq!(records.len(), 2, "one record per cell");
+    for (r, s) in records.iter().zip(&seeds) {
+        assert!(r.ok(), "cell {}/{} failed: {:?}", r.variant, r.dataset, r.error);
+        assert_eq!(r.seed, *s, "record carries the planned seed");
+        assert!(r.metric > 0.0);
+        assert!(!r.git.is_empty());
+    }
+    let jsonl = ssm_peft::results_dir().join("it_suite_smoke.jsonl");
+    let loaded = JsonlSink::load("it_suite_smoke");
+    assert_eq!(loaded.len(), 2, "JSONL stream holds both records");
+    std::fs::remove_file(jsonl).ok();
+}
+
+#[test]
+fn suite_resume_reuses_finished_cells() {
+    let Some((ref e, ref m)) = setup() else { return };
+    let mk = |resume| {
+        let mut t = ExperimentConfig::default();
+        t.n_train = 64;
+        t.epochs = 1;
+        t.max_batches_per_epoch = 3;
+        t.pretrain_steps = 60;
+        t.lr_grid = vec![3e-3];
+        Suite::new(e, m)
+            .named("it_suite_resume")
+            .template(t)
+            .resume(resume)
+            .cell("mamba1_xs_bitfit", "glue/rte")
+    };
+    let first = mk(false).run(1).unwrap();
+    assert!(first[0].ok());
+    let again = mk(true).run(2).unwrap();
+    assert_eq!(again.len(), 1);
+    // resumed record is byte-identical in the fields that matter
+    assert_eq!(again[0].metric, first[0].metric);
+    assert_eq!(again[0].seed, first[0].seed);
+    // and the file was not duplicated
+    assert_eq!(JsonlSink::load("it_suite_resume").len(), 1);
+    std::fs::remove_file(ssm_peft::results_dir().join("it_suite_resume.jsonl")).ok();
 }
 
 #[test]
@@ -224,7 +306,7 @@ fn lora_merge_preserves_fwd_logits() {
     let logits_adapter = tr.logits(&batch).unwrap();
 
     let mut merged = tr.params_map();
-    ssm_peft::peft::merge_lora(&mut merged, tr.variant.peft.rank, tr.variant.peft.rank);
+    ssm_peft::peft::merge_lora(&mut merged, &tr.variant.peft);
     let mut tr_full = Trainer::new(e, m, "mamba1_xs_full", &cfg).unwrap();
     tr_full.load_base(&merged);
     let logits_merged = tr_full.logits(&batch).unwrap();
