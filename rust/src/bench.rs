@@ -9,16 +9,23 @@ use std::time::Instant;
 
 use crate::tensor::{mean, std_dev};
 
+/// Timing summary of one benchmarked closure.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Bench name (table row label).
     pub name: String,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Sample standard deviation (seconds).
     pub std_s: f64,
+    /// Fastest iteration (seconds).
     pub min_s: f64,
+    /// Recorded iterations.
     pub iters: usize,
 }
 
 impl Stats {
+    /// One aligned, human-readable summary line.
     pub fn row(&self) -> String {
         format!(
             "{:<40} {:>10.4}s ± {:>8.4}s (min {:>8.4}s, n={})",
@@ -85,17 +92,22 @@ pub fn training_memory_model(total_params: usize, trainable: usize,
 
 /// Simple aligned table printer for bench outputs that mirror paper tables.
 pub struct TablePrinter {
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Table rows (cells as strings).
     pub rows: Vec<Vec<String>>,
 }
 
 impl TablePrinter {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         TablePrinter { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
+    /// Append one row.
     pub fn row(&mut self, cells: Vec<String>) {
         self.rows.push(cells);
     }
+    /// Print the table, columns aligned to the widest cell.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
         for r in &self.rows {

@@ -15,11 +15,15 @@ pub struct ExperimentConfig {
     pub variant: String,
     /// dataset name, e.g. "glue/rte", "dart", "spider"
     pub dataset: String,
+    /// Training-set size the dataset generator produces.
     pub n_train: usize,
+    /// Fine-tuning epochs (early stopping keeps the best one).
     pub epochs: usize,
     /// candidate learning rates; >1 entries trigger a short grid search
     pub lr_grid: Vec<f32>,
+    /// Experiment seed (data generation, shuffles, warmups).
     pub seed: u64,
+    /// SDT selection settings (used when the method is SDT/SDT-LoRA).
     pub sdt: SdtConfig,
     /// LoRA merge alpha override; 0 = use the manifest's per-variant alpha
     /// (scale = alpha / rank, python/compile/peft.py::make_eff)
@@ -30,6 +34,7 @@ pub struct ExperimentConfig {
     pub beam: usize,
     /// pretraining steps for the frozen base model
     pub pretrain_steps: usize,
+    /// AdamW decoupled weight decay.
     pub weight_decay: f32,
     /// cap on train batches per epoch (CPU budget guard; 0 = no cap)
     pub max_batches_per_epoch: usize,
@@ -56,6 +61,7 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// Parse a config from a JSON object; unknown keys are rejected.
     pub fn from_json(v: &Value) -> Result<Self> {
         let mut c = ExperimentConfig::default();
         let obj = match v {
@@ -68,6 +74,7 @@ impl ExperimentConfig {
         Ok(c)
     }
 
+    /// Load a JSON config file.
     pub fn from_file(path: &str) -> Result<Self> {
         let src = std::fs::read_to_string(path)?;
         let v = json::parse(&src).map_err(|e| anyhow!("{path}: {e}"))?;

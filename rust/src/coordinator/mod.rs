@@ -30,15 +30,21 @@ use crate::train::{checkpoint, TrainConfig, Trainer};
 /// All scores from one experiment.
 #[derive(Debug, Clone)]
 pub struct Outcome {
+    /// Artifact variant that was fine-tuned.
     pub variant: String,
+    /// Dataset name.
     pub dataset: String,
     /// main metric value (acc / matthews / R-L / BLEU / exec acc)
     pub metric: f64,
     /// all computed scores by name
     pub scores: BTreeMap<String, f64>,
+    /// Trainable-parameter budget, percent.
     pub budget_pct: f64,
+    /// Learning rate picked by the grid search.
     pub chosen_lr: f32,
+    /// Optimizer steps taken.
     pub steps: usize,
+    /// (step, loss) training curve.
     pub history: Vec<(usize, f32)>,
     /// wall-clock seconds spent in dimension selection (SDT only)
     pub dim_select_s: f64,
@@ -46,8 +52,11 @@ pub struct Outcome {
     pub epoch_s: f64,
 }
 
+/// The per-experiment pipeline bound to an engine + manifest.
 pub struct Pipeline<'a> {
+    /// Shared PJRT engine (compiled-executable cache).
     pub engine: &'a Engine,
+    /// Artifact manifest.
     pub manifest: &'a Manifest,
 }
 
@@ -63,6 +72,7 @@ fn pretrain_cache() -> &'static Mutex<HashMap<String, Ckpt>> {
 }
 
 impl<'a> Pipeline<'a> {
+    /// Bind a pipeline to an engine + manifest.
     pub fn new(engine: &'a Engine, manifest: &'a Manifest) -> Self {
         Pipeline { engine, manifest }
     }

@@ -15,12 +15,16 @@ use std::collections::BTreeMap;
 /// A single table: named columns over string values.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table name.
     pub name: String,
+    /// Column names.
     pub columns: Vec<String>,
+    /// Row-major cell values.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Index of a column by name.
     pub fn col_index(&self, col: &str) -> Option<usize> {
         self.columns.iter().position(|c| c == col)
     }
@@ -34,9 +38,13 @@ impl Table {
 /// Parsed query.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Query {
+    /// Selected column (or "*").
     pub select: String,
+    /// Table name the query targets.
     pub table: String,
+    /// Optional WHERE (column, value) equality filter.
     pub filter: Option<(String, String)>,
+    /// COUNT aggregation instead of value list.
     pub count: bool,
 }
 

@@ -16,8 +16,11 @@ pub mod tasks;
 
 use crate::tensor::{IntTensor, Rng, Tensor};
 
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 256;
+/// Padding token id (also fed to idle decode rows).
 pub const PAD: i32 = 257;
+/// Model vocabulary: 256 bytes + BOS + PAD.
 pub const VOCAB: usize = 258;
 
 /// One supervised example.
@@ -36,9 +39,13 @@ pub struct Example {
 /// A generated dataset with fixed splits.
 #[derive(Debug)]
 pub struct Dataset {
+    /// Dataset name (tasks::by_name key).
     pub name: String,
+    /// Training split.
     pub train: Vec<Example>,
+    /// Validation split (early stopping).
     pub val: Vec<Example>,
+    /// Held-out test split.
     pub test: Vec<Example>,
     /// headline evaluation metric; generation-based vs classification
     /// follows from it (`Metric::generative`)
@@ -48,8 +55,11 @@ pub struct Dataset {
 /// An encoded batch ready for the `step`/`fwd` artifacts.
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Input token ids (B, L).
     pub tokens: IntTensor,
+    /// Next-token targets (B, L).
     pub targets: IntTensor,
+    /// Loss mask over target positions (B, L).
     pub mask: Tensor,
     /// position of the label logit per row (classification eval)
     pub label_pos: Vec<usize>,
@@ -143,11 +153,13 @@ pub struct BatchIter<'a> {
 }
 
 impl<'a> BatchIter<'a> {
+    /// Shuffled batched iteration over a split.
     pub fn new(split: &'a [Example], rng: &mut Rng, bsz: usize, seqlen: usize) -> Self {
         let mut examples: Vec<&Example> = split.iter().collect();
         rng.shuffle(&mut examples);
         BatchIter { examples, bsz, seqlen, pos: 0 }
     }
+    /// Full batches this iterator will yield.
     pub fn n_batches(&self) -> usize {
         self.examples.len() / self.bsz
     }

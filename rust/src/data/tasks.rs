@@ -196,8 +196,11 @@ fn gen_mnli(rng: &mut Rng) -> Example {
     cls(p, label, b"012")
 }
 
+/// GLUE subtasks the generator supports (`glue/<sub>` dataset names).
 pub const GLUE_SUBTASKS: &[&str] = &["rte", "mrpc", "cola", "sst2", "qnli", "qqp", "mnli"];
 
+/// GLUE analogue: sentence-pair/classification tasks with latent-rule
+/// labels; CoLA scores Matthews, the rest accuracy.
 pub fn glue(sub: &str, seed: u64, n_train: usize) -> Dataset {
     let gen: fn(&mut Rng) -> Example = match sub {
         "rte" => gen_rte,
@@ -239,6 +242,7 @@ fn gen_dart(rng: &mut Rng) -> Example {
     genr(rec.into_bytes(), text.into_bytes())
 }
 
+/// DART analogue: record-to-text generation (BLEU + METEOR).
 pub fn dart(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_dart, seed ^ fnv("dart"), n_train, 64, 64);
     Dataset { name: "dart".into(), train, val, test, metric: Metric::BleuMeteor }
@@ -263,6 +267,7 @@ fn gen_samsum(rng: &mut Rng) -> Example {
     genr(dialog.into_bytes(), summary.into_bytes())
 }
 
+/// SAMSum analogue: dialogue summarization (ROUGE).
 pub fn samsum(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_samsum, seed ^ fnv("samsum"), n_train, 64, 64);
     Dataset { name: "samsum".into(), train, val, test, metric: Metric::Rouge }
@@ -308,6 +313,8 @@ fn gen_spider(rng: &mut Rng, table: &Table) -> Example {
     genr(question.into_bytes(), query.into_bytes())
 }
 
+/// Spider analogue: text-to-query with genuine execution-match scoring
+/// against the mini database ([`crate::data::minidb`]).
 pub fn spider(seed: u64, n_train: usize) -> Dataset {
     let table = spider_table(seed);
     let mut rng = Rng::new(seed ^ fnv("spider"));
@@ -370,11 +377,13 @@ fn gen_celeba(rng: &mut Rng) -> Example {
     cls(bytes, left as usize, b"01")
 }
 
+/// CIFAR-10 analogue: byte-grid "images" classified by a latent rule.
 pub fn cifar(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_cifar, seed ^ fnv("cifar"), n_train, 96, 96);
     Dataset { name: "cifar10".into(), train, val, test, metric: Metric::Acc }
 }
 
+/// CelebA analogue: attribute classification over byte grids.
 pub fn celeba(seed: u64, n_train: usize) -> Dataset {
     let (train, val, test) = splits(gen_celeba, seed ^ fnv("celeba"), n_train, 96, 96);
     Dataset { name: "celeba".into(), train, val, test, metric: Metric::Acc }

@@ -1,15 +1,28 @@
-//! Evaluation: classification scoring via the `fwd` artifact and
-//! autoregressive generation (greedy + beam) via the stepwise `decode`
+//! Evaluation + generation core: classification scoring via the `fwd`
+//! artifact and autoregressive generation via the stepwise `decode`
 //! artifact, with the Mamba recurrent state held in Rust buffers.
+//!
+//! The generation core is split in two layers so the offline suite and the
+//! online server ([`crate::serve`]) share one implementation:
+//!
+//! - [`StepDecode`] — the minimal stepwise-decode interface: batch width,
+//!   state geometry ([`StateDims`]), and one `(tokens, conv, ssm) →
+//!   (logits, conv', ssm')` step. Implemented by [`DecodeCore`] over the
+//!   real XLA executable, and by mock models in scheduler unit tests.
+//! - [`greedy_decode`] / [`beam_search`] — decoding strategies written
+//!   against `dyn StepDecode`. [`Generator`] is the thin offline wrapper
+//!   (build a core from merged params, then greedy/beam over a split);
+//!   [`crate::serve::Scheduler`] drives the same trait online, packing
+//!   many independent requests into the batch dimension.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::data::{make_batch, Dataset, Example, BOS, PAD};
 use crate::data::minidb::exec_match;
 use crate::data::tasks::spider_table;
 use crate::data::words_to_ids;
+use crate::data::{make_batch, Dataset, Example, BOS, PAD};
 use crate::manifest::{Manifest, Variant};
 use crate::metrics;
 use crate::runtime::{Engine, Executable, Input};
@@ -62,23 +75,145 @@ pub fn eval_regression(trainer: &Trainer, xs: &[Tensor], ys: &[Tensor]) -> Resul
     Ok(total / n.max(1) as f64)
 }
 
-/// Batched greedy generator over the stepwise decode artifact.
-pub struct Generator {
+/// Recurrent-state geometry of a stepwise decode model: everything needed
+/// to allocate, seed (initial-state tuning h0), and per-row reset the conv
+/// and SSM state tensors.
+///
+/// State layout matches the decode artifact contract (python aot.py):
+/// conv state `(n_layer, B, d_conv-1, d_inner)`, SSM state
+/// `(n_layer, B, d_inner, d_state)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateDims {
+    /// Number of SSM layers.
+    pub n_layer: usize,
+    /// Conv kernel width (state holds `d_conv - 1` positions).
+    pub d_conv: usize,
+    /// Inner (expanded) channel count.
+    pub d_inner: usize,
+    /// SSM state dimension per channel.
+    pub d_state: usize,
+}
+
+impl StateDims {
+    /// Read the geometry off a manifest variant.
+    pub fn of(v: &Variant) -> StateDims {
+        StateDims {
+            n_layer: v.arch.n_layer,
+            d_conv: v.arch.d_conv,
+            d_inner: v.arch.d_inner,
+            d_state: v.arch.d_state,
+        }
+    }
+
+    /// Floats per (layer, row) in the conv state tensor.
+    pub fn conv_per_row(&self) -> usize {
+        (self.d_conv - 1) * self.d_inner
+    }
+
+    /// Floats per (layer, row) in the SSM state tensor.
+    pub fn ssm_per_row(&self) -> usize {
+        self.d_inner * self.d_state
+    }
+
+    /// Fresh `(conv, ssm)` state for a batch of `b` rows. When `h0`
+    /// contains trained `layers.{i}.h0` tensors (initial-state tuning),
+    /// every row's SSM state is seeded with them.
+    pub fn init_states(&self, b: usize, h0: Option<&BTreeMap<String, Tensor>>)
+        -> (Tensor, Tensor) {
+        let conv = Tensor::zeros(&[self.n_layer, b, self.d_conv - 1, self.d_inner]);
+        let mut ssm = Tensor::zeros(&[self.n_layer, b, self.d_inner, self.d_state]);
+        if h0.is_some() {
+            for r in 0..b {
+                self.reset_row(None, Some(&mut ssm), b, r, h0);
+            }
+        }
+        (conv, ssm)
+    }
+
+    /// Reset one batch row's state in place: conv to zeros, SSM to the
+    /// adapter's h0 (or zeros). Used by the serving scheduler when a slot
+    /// is recycled for a newly admitted request mid-stream.
+    pub fn reset_row(&self, conv: Option<&mut Tensor>, ssm: Option<&mut Tensor>,
+                     b: usize, row: usize, h0: Option<&BTreeMap<String, Tensor>>) {
+        if let Some(conv) = conv {
+            let per = self.conv_per_row();
+            for layer in 0..self.n_layer {
+                let at = (layer * b + row) * per;
+                conv.data[at..at + per].fill(0.0);
+            }
+        }
+        if let Some(ssm) = ssm {
+            let per = self.ssm_per_row();
+            for layer in 0..self.n_layer {
+                let at = (layer * b + row) * per;
+                let seed = h0.and_then(|m| m.get(&format!("layers.{layer}.h0")));
+                match seed {
+                    Some(h) => ssm.data[at..at + per].copy_from_slice(&h.data),
+                    None => ssm.data[at..at + per].fill(0.0),
+                }
+            }
+        }
+    }
+
+    /// Copy row `from` of a source `(conv, ssm)` pair into row `to` of a
+    /// destination pair (all layers) — beam search re-parents surviving
+    /// beams this way each step, reading the step output and writing the
+    /// next state.
+    pub fn copy_row(&self, src_conv: &Tensor, src_ssm: &Tensor,
+                    dst_conv: &mut Tensor, dst_ssm: &mut Tensor, b: usize,
+                    from: usize, to: usize) {
+        let cper = self.conv_per_row();
+        let sper = self.ssm_per_row();
+        for layer in 0..self.n_layer {
+            let cfrom = (layer * b + from) * cper;
+            let cto = (layer * b + to) * cper;
+            dst_conv.data[cto..cto + cper]
+                .copy_from_slice(&src_conv.data[cfrom..cfrom + cper]);
+            let sfrom = (layer * b + from) * sper;
+            let sto = (layer * b + to) * sper;
+            dst_ssm.data[sto..sto + sper]
+                .copy_from_slice(&src_ssm.data[sfrom..sfrom + sper]);
+        }
+    }
+}
+
+/// The stepwise decode interface shared by offline eval ([`Generator`]) and
+/// the online serving scheduler ([`crate::serve::Scheduler`]).
+///
+/// One call advances every batch row by one token: rows are fully
+/// independent (each carries its own O(1) recurrent state), which is what
+/// makes continuous batching possible — the scheduler can retire a finished
+/// row and admit a fresh request into it between any two steps.
+pub trait StepDecode {
+    /// Fixed batch width of the compiled decode executable.
+    fn arch_b(&self) -> usize;
+
+    /// Recurrent-state geometry (for allocating/seeding/resetting rows).
+    fn dims(&self) -> StateDims;
+
+    /// Advance one token: `(tokens (B,), conv, ssm) → (logits (B, V),
+    /// conv', ssm')`. `V ≥ 256`; generation samples from the byte
+    /// sub-vocabulary `[..256]`.
+    fn step(&self, tokens: &IntTensor, conv: &Tensor, ssm: &Tensor)
+        -> Result<(Tensor, Tensor, Tensor)>;
+}
+
+/// A decode-ready model: the compiled stepwise `decode` executable bound to
+/// one merged parameter set. This is the unit the adapter registry caches —
+/// same executable, different parameters per fine-tuned variant.
+pub struct DecodeCore {
     decode: Executable,
     /// parameter tensors in the decode variant's argument order
     params: Vec<Tensor>,
-    pub arch_b: usize,
-    n_layer: usize,
-    d_conv: usize,
-    d_inner: usize,
-    d_state: usize,
+    arch_b: usize,
+    dims: StateDims,
 }
 
-impl Generator {
-    /// `params_map` must contain every base parameter of the decode variant
-    /// (merge LoRA first: `peft::merge_lora`). Initial-state tuning passes
-    /// its trained h0 via the ssm-state input automatically when the map
-    /// contains "layers.{i}.h0".
+impl DecodeCore {
+    /// Bind the decode executable of `decode_variant` to a merged parameter
+    /// map. `params_map` must contain every base parameter of the decode
+    /// variant (merge LoRA first: [`crate::peft::merge_lora`]); extra keys
+    /// (adapter leaves, `h0`) are ignored.
     pub fn new(engine: &Engine, manifest: &Manifest, decode_variant: &str,
                params_map: &BTreeMap<String, Tensor>) -> Result<Self> {
         let v: &Variant = manifest.variant(decode_variant)?;
@@ -92,32 +227,17 @@ impl Generator {
             })?;
             params.push(t.clone());
         }
-        Ok(Generator {
-            decode,
-            params,
-            arch_b: v.batch_b,
-            n_layer: v.arch.n_layer,
-            d_conv: v.arch.d_conv,
-            d_inner: v.arch.d_inner,
-            d_state: v.arch.d_state,
-        })
+        Ok(DecodeCore { decode, params, arch_b: v.batch_b, dims: StateDims::of(v) })
+    }
+}
+
+impl StepDecode for DecodeCore {
+    fn arch_b(&self) -> usize {
+        self.arch_b
     }
 
-    fn init_states(&self, h0: Option<&BTreeMap<String, Tensor>>) -> (Tensor, Tensor) {
-        let conv = Tensor::zeros(&[self.n_layer, self.arch_b, self.d_conv - 1, self.d_inner]);
-        let mut ssm = Tensor::zeros(&[self.n_layer, self.arch_b, self.d_inner, self.d_state]);
-        if let Some(map) = h0 {
-            for layer in 0..self.n_layer {
-                if let Some(h) = map.get(&format!("layers.{layer}.h0")) {
-                    let per = self.d_inner * self.d_state;
-                    for b in 0..self.arch_b {
-                        let dst = (layer * self.arch_b + b) * per;
-                        ssm.data[dst..dst + per].copy_from_slice(&h.data);
-                    }
-                }
-            }
-        }
-        (conv, ssm)
+    fn dims(&self) -> StateDims {
+        self.dims
     }
 
     fn step(&self, tokens: &IntTensor, conv: &Tensor, ssm: &Tensor)
@@ -132,156 +252,225 @@ impl Generator {
         let logits = outs.pop().unwrap();
         Ok((logits, conv_out, ssm_out))
     }
+}
 
-    /// Greedy generation for up to `arch_b` prompts at once. Rows still in
-    /// prefill keep consuming their prompt; finished rows emit until
-    /// `stop_byte` or `max_new`.
-    pub fn greedy(&self, prompts: &[Vec<u8>], max_new: usize, stop_byte: u8,
-                  h0: Option<&BTreeMap<String, Tensor>>) -> Result<Vec<Vec<u8>>> {
-        assert!(prompts.len() <= self.arch_b);
-        let b = self.arch_b;
-        let (mut conv, mut ssm) = self.init_states(h0);
-        let max_prompt = prompts.iter().map(Vec::len).max().unwrap_or(0);
-        let mut outs: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
-        let mut done = vec![false; prompts.len()];
-        let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
-        for t in 0..max_prompt + max_new {
-            let (logits, c2, s2) = self.step(&cur, &conv, &ssm)?;
-            conv = c2;
-            ssm = s2;
-            let v = logits.shape[1];
-            for r in 0..prompts.len() {
-                let next: i32 = if t < prompts[r].len() {
-                    prompts[r][t] as i32 // still prefilling
-                } else if done[r] || outs[r].len() >= max_new {
+/// Batched greedy decoding for up to `arch_b` prompts at once. Rows still
+/// in prefill keep consuming their prompt; finished rows emit until
+/// `stop_byte` or `max_new`. `h0` seeds the SSM state (initial-state
+/// tuning).
+pub fn greedy_decode(model: &dyn StepDecode, prompts: &[Vec<u8>], max_new: usize,
+                     stop_byte: u8, h0: Option<&BTreeMap<String, Tensor>>)
+    -> Result<Vec<Vec<u8>>> {
+    assert!(prompts.len() <= model.arch_b());
+    let b = model.arch_b();
+    let (mut conv, mut ssm) = model.dims().init_states(b, h0);
+    let max_prompt = prompts.iter().map(Vec::len).max().unwrap_or(0);
+    let mut outs: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
+    let mut done = vec![false; prompts.len()];
+    let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
+    for t in 0..max_prompt + max_new {
+        let (logits, c2, s2) = model.step(&cur, &conv, &ssm)?;
+        conv = c2;
+        ssm = s2;
+        let v = logits.shape[1];
+        for r in 0..prompts.len() {
+            let next: i32 = if t < prompts[r].len() {
+                prompts[r][t] as i32 // still prefilling
+            } else if done[r] || outs[r].len() >= max_new {
+                PAD
+            } else {
+                let row = &logits.data[r * v..(r + 1) * v];
+                // generate over byte vocabulary only (no BOS/PAD)
+                let tok = argmax(&row[..256]) as u8;
+                if tok == stop_byte {
+                    done[r] = true;
                     PAD
                 } else {
-                    let row = &logits.data[r * v..(r + 1) * v];
-                    // generate over byte vocabulary only (no BOS/PAD)
-                    let tok = argmax(&row[..256]) as u8;
-                    if tok == stop_byte {
-                        done[r] = true;
-                        PAD
-                    } else {
-                        outs[r].push(tok);
-                        tok as i32
-                    }
-                };
-                cur.data[r] = next;
-            }
-            for r in prompts.len()..b {
-                cur.data[r] = PAD;
-            }
-            if (0..prompts.len()).all(|r| t >= prompts[r].len()
-                && (done[r] || outs[r].len() >= max_new)) {
-                break;
+                    outs[r].push(tok);
+                    tok as i32
+                }
+            };
+            cur.data[r] = next;
+        }
+        for r in prompts.len()..b {
+            cur.data[r] = PAD;
+        }
+        if (0..prompts.len()).all(|r| t >= prompts[r].len()
+            && (done[r] || outs[r].len() >= max_new)) {
+            break;
+        }
+    }
+    Ok(outs)
+}
+
+#[derive(Clone)]
+struct Beam {
+    toks: Vec<u8>,
+    score: f64,
+    done: bool,
+}
+
+impl Beam {
+    /// Generated-token count for length normalization. The stop byte is
+    /// not in `toks` but its log-prob is in `score`, so it counts here —
+    /// keeping a beam's normalized score identical at finish time and on
+    /// every later carry.
+    fn gen_len(&self) -> usize {
+        self.toks.len() + self.done as usize
+    }
+}
+
+/// Length-normalized beam score: mean log-prob per generated token
+/// (including the stop byte for finished beams — see [`Beam::gen_len`]).
+fn beam_norm(score: f64, len: usize) -> f64 {
+    score / len.max(1) as f64
+}
+
+/// Beam search for ONE prompt, packing beams into the batch dimension
+/// (beam width ≤ `arch_b`). Length-normalized log-prob scoring. `h0` seeds
+/// the SSM state as in [`greedy_decode`] (initial-state tuning).
+///
+/// Finished beams are carried over verbatim each round — they are skipped
+/// when forming expansion candidates, so their length-normalized score is
+/// frozen at finish time instead of being renormalized (and drifting) on
+/// every subsequent step.
+pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
+                   max_new: usize, stop_byte: u8,
+                   h0: Option<&BTreeMap<String, Tensor>>) -> Result<Vec<u8>> {
+    if max_new == 0 {
+        return Ok(Vec::new());
+    }
+    let width = width.min(model.arch_b()).max(1);
+    let b = model.arch_b();
+    let dims = model.dims();
+    let (mut conv, mut ssm) = dims.init_states(b, h0);
+    // prefill all rows with the same prompt
+    let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
+    let mut logits = Tensor::zeros(&[b, 256]);
+    for t in 0..=prompt.len() {
+        let (lg, c2, s2) = model.step(&cur, &conv, &ssm)?;
+        conv = c2;
+        ssm = s2;
+        logits = lg;
+        if t < prompt.len() {
+            for r in 0..b {
+                cur.data[r] = prompt[t] as i32;
             }
         }
-        Ok(outs)
+    }
+    let v = logits.shape[1];
+    let lp0 = log_softmax(&logits.data[..v]);
+    let mut order: Vec<usize> = (0..256).collect();
+    order.sort_by(|&a, &bb| lp0[bb].partial_cmp(&lp0[a]).unwrap());
+    let mut beams: Vec<Beam> = order[..width]
+        .iter()
+        .map(|&t| Beam {
+            toks: if t as u8 == stop_byte { Vec::new() } else { vec![t as u8] },
+            score: lp0[t],
+            done: t as u8 == stop_byte,
+        })
+        .collect();
+    for r in 0..b {
+        let bm = &beams[r.min(width - 1)];
+        cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
+    }
+    // replicate states across beams (identical after same prefill)
+    for _ in 1..max_new {
+        if beams.iter().all(|bm| bm.done) {
+            break;
+        }
+        let (lg, c2, s2) = model.step(&cur, &conv, &ssm)?;
+        // candidate = (parent beam, Some(expansion token) | None for a
+        // carried finished beam, raw score, normalized score)
+        let mut cand: Vec<(usize, Option<u8>, f64, f64)> = Vec::new();
+        for (bi, bm) in beams.iter().enumerate() {
+            if bm.done {
+                // finished beams compete for slots at their frozen score
+                // but are never expanded or renormalized
+                cand.push((bi, None, bm.score, beam_norm(bm.score, bm.gen_len())));
+                continue;
+            }
+            let lp = log_softmax(&lg.data[bi * v..bi * v + 256]);
+            let mut idx: Vec<usize> = (0..256).collect();
+            idx.sort_by(|&a, &bb| lp[bb].partial_cmp(&lp[a]).unwrap());
+            for &t in &idx[..width] {
+                // the expansion token counts toward the normalized length
+                // whether it extends the beam or finishes it (stop byte),
+                // so this norm IS the frozen norm if the beam finishes
+                let s = bm.score + lp[t];
+                cand.push((bi, Some(t as u8), s, beam_norm(s, bm.toks.len() + 1)));
+            }
+        }
+        cand.sort_by(|a, bc| bc.3.partial_cmp(&a.3).unwrap());
+        let mut new_beams = Vec::with_capacity(width);
+        let mut new_conv = c2.clone();
+        let mut new_ssm = s2.clone();
+        for (slot, &(bi, tok, score, _)) in cand.iter().take(width).enumerate() {
+            let src = beams[bi].clone();
+            let (toks, done) = match tok {
+                None => (src.toks, true),
+                Some(t) if t == stop_byte => (src.toks, true),
+                Some(t) => {
+                    let mut ts = src.toks;
+                    ts.push(t);
+                    (ts, false)
+                }
+            };
+            new_beams.push(Beam { toks, score, done });
+            // copy parent state into this slot
+            dims.copy_row(&c2, &s2, &mut new_conv, &mut new_ssm, b, bi, slot);
+        }
+        beams = new_beams;
+        conv = new_conv;
+        ssm = new_ssm;
+        for r in 0..b {
+            let bm = &beams[r.min(width - 1)];
+            cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
+        }
+    }
+    Ok(beams
+        .into_iter()
+        .max_by(|a, bm| {
+            beam_norm(a.score, a.gen_len())
+                .partial_cmp(&beam_norm(bm.score, bm.gen_len()))
+                .unwrap()
+        })
+        .map(|bm| bm.toks)
+        .unwrap_or_default())
+}
+
+/// Offline generator: a [`DecodeCore`] plus the greedy/beam entry points
+/// the coordinator and examples use.
+pub struct Generator {
+    core: DecodeCore,
+}
+
+impl Generator {
+    /// `params_map` must contain every base parameter of the decode variant
+    /// (merge LoRA first: [`crate::peft::merge_lora`]). Initial-state
+    /// tuning passes its trained h0 via the ssm-state input automatically
+    /// when the map contains "layers.{i}.h0".
+    pub fn new(engine: &Engine, manifest: &Manifest, decode_variant: &str,
+               params_map: &BTreeMap<String, Tensor>) -> Result<Self> {
+        Ok(Generator { core: DecodeCore::new(engine, manifest, decode_variant, params_map)? })
     }
 
-    /// Beam search for ONE prompt, packing beams into the batch dimension
-    /// (beam width ≤ arch_b). Length-normalized log-prob scoring. `h0`
-    /// seeds the SSM state as in [`Generator::greedy`] (initial-state
-    /// tuning).
+    /// Fixed batch width of the underlying decode executable.
+    pub fn arch_b(&self) -> usize {
+        self.core.arch_b()
+    }
+
+    /// Greedy generation for up to `arch_b` prompts at once — see
+    /// [`greedy_decode`].
+    pub fn greedy(&self, prompts: &[Vec<u8>], max_new: usize, stop_byte: u8,
+                  h0: Option<&BTreeMap<String, Tensor>>) -> Result<Vec<Vec<u8>>> {
+        greedy_decode(&self.core, prompts, max_new, stop_byte, h0)
+    }
+
+    /// Beam search for one prompt — see [`beam_search`].
     pub fn beam(&self, prompt: &[u8], width: usize, max_new: usize, stop_byte: u8,
                 h0: Option<&BTreeMap<String, Tensor>>) -> Result<Vec<u8>> {
-        let width = width.min(self.arch_b);
-        let b = self.arch_b;
-        let (mut conv, mut ssm) = self.init_states(h0);
-        // prefill all rows with the same prompt
-        let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
-        let mut logits = Tensor::zeros(&[b, 256]);
-        for t in 0..=prompt.len() {
-            let (lg, c2, s2) = self.step(&cur, &conv, &ssm)?;
-            conv = c2;
-            ssm = s2;
-            logits = lg;
-            if t < prompt.len() {
-                for r in 0..b {
-                    cur.data[r] = prompt[t] as i32;
-                }
-            }
-        }
-        #[derive(Clone)]
-        struct Beam {
-            toks: Vec<u8>,
-            score: f64,
-            done: bool,
-        }
-        let v = logits.shape[1];
-        let lp0 = log_softmax(&logits.data[..v]);
-        let mut order: Vec<usize> = (0..256).collect();
-        order.sort_by(|&a, &bb| lp0[bb].partial_cmp(&lp0[a]).unwrap());
-        let mut beams: Vec<Beam> = order[..width]
-            .iter()
-            .map(|&t| Beam {
-                toks: vec![t as u8],
-                score: lp0[t],
-                done: t as u8 == stop_byte,
-            })
-            .collect();
-        for r in 0..b {
-            cur.data[r] = beams[r.min(width - 1)].toks.last().map(|&t| t as i32).unwrap_or(PAD);
-        }
-        // replicate states across beams (identical after same prefill)
-        for _ in 1..max_new {
-            if beams.iter().all(|bm| bm.done) {
-                break;
-            }
-            let (lg, c2, s2) = self.step(&cur, &conv, &ssm)?;
-            let mut cand: Vec<(usize, u8, f64)> = Vec::new(); // (beam, tok, score)
-            for (bi, bm) in beams.iter().enumerate() {
-                if bm.done {
-                    cand.push((bi, stop_byte, bm.score));
-                    continue;
-                }
-                let lp = log_softmax(&lg.data[bi * v..bi * v + 256]);
-                let mut idx: Vec<usize> = (0..256).collect();
-                idx.sort_by(|&a, &bb| lp[bb].partial_cmp(&lp[a]).unwrap());
-                for &t in &idx[..width] {
-                    cand.push((bi, t as u8, bm.score + lp[t]));
-                }
-            }
-            cand.sort_by(|a, bc| {
-                let la = (beams[a.0].toks.len() + 1) as f64;
-                let lb = (beams[bc.0].toks.len() + 1) as f64;
-                (bc.2 / lb).partial_cmp(&(a.2 / la)).unwrap()
-            });
-            let mut new_beams = Vec::with_capacity(width);
-            let mut new_conv = c2.clone();
-            let mut new_ssm = s2.clone();
-            let conv_per = (self.d_conv - 1) * self.d_inner;
-            let ssm_per = self.d_inner * self.d_state;
-            for (slot, &(bi, tok, score)) in cand.iter().take(width).enumerate() {
-                let src = beams[bi].clone();
-                let done = src.done || tok == stop_byte;
-                let mut toks = src.toks;
-                if !src.done && tok != stop_byte {
-                    toks.push(tok);
-                }
-                new_beams.push(Beam { toks, score, done });
-                // copy parent state into this slot
-                for layer in 0..self.n_layer {
-                    let cfrom = (layer * b + bi) * conv_per;
-                    let cto = (layer * b + slot) * conv_per;
-                    let tmp: Vec<f32> = c2.data[cfrom..cfrom + conv_per].to_vec();
-                    new_conv.data[cto..cto + conv_per].copy_from_slice(&tmp);
-                    let sfrom = (layer * b + bi) * ssm_per;
-                    let sto = (layer * b + slot) * ssm_per;
-                    let tmp: Vec<f32> = s2.data[sfrom..sfrom + ssm_per].to_vec();
-                    new_ssm.data[sto..sto + ssm_per].copy_from_slice(&tmp);
-                }
-            }
-            beams = new_beams;
-            conv = new_conv;
-            ssm = new_ssm;
-            for r in 0..b {
-                let bm = &beams[r.min(width - 1)];
-                cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
-            }
-        }
-        Ok(beams.into_iter().next().map(|bm| bm.toks).unwrap_or_default())
+        beam_search(&self.core, prompt, width, max_new, stop_byte, h0)
     }
 }
 
@@ -293,21 +482,28 @@ fn log_softmax(row: &[f32]) -> Vec<f64> {
 
 /// Generation metrics over a test split: ROUGE / BLEU+METEOR / exec-match.
 pub struct GenScores {
+    /// ROUGE-1 F1 (unigram overlap).
     pub rouge1: f64,
+    /// ROUGE-2 F1 (bigram overlap).
     pub rouge2: f64,
+    /// ROUGE-L F1 (longest common subsequence).
     pub rougel: f64,
+    /// Corpus BLEU.
     pub bleu: f64,
+    /// METEOR-lite (unigram F-mean with fragmentation penalty).
     pub meteor: f64,
+    /// Execution-match accuracy against the mini database (Spider).
     pub exec_acc: f64,
 }
 
+/// Greedy-decode a test split in arch-batch chunks and score it.
 pub fn eval_generation(gen: &Generator, ds: &Dataset, split: &[Example],
                        max_new: usize, seed: u64,
                        h0: Option<&BTreeMap<String, Tensor>>) -> Result<GenScores> {
     let mut outs: Vec<Vec<u8>> = Vec::with_capacity(split.len());
     let mut i = 0;
     while i < split.len() {
-        let end = (i + gen.arch_b).min(split.len());
+        let end = (i + gen.arch_b()).min(split.len());
         let prompts: Vec<Vec<u8>> = split[i..end].iter().map(|e| e.prompt.clone()).collect();
         outs.extend(gen.greedy(&prompts, max_new, b'\n', h0)?);
         i = end;
@@ -382,8 +578,55 @@ pub fn eval_split_loss(trainer: &Trainer, split: &[Example], rng_seed: u64) -> R
     Ok(crate::tensor::mean(&losses))
 }
 
+/// Shared unit-test mock: a deterministic [`StepDecode`] model needing no
+/// artifacts. Used by this module's tests and the serving scheduler's
+/// ([`crate::serve::scheduler`]).
+#[cfg(test)]
+pub(crate) mod testing {
+    use super::*;
+
+    /// Counter model: next byte = input byte + 1 (BOS → 1). Counts steps
+    /// so scheduler tests can assert execution behavior.
+    pub(crate) struct Counter {
+        pub(crate) b: usize,
+        pub(crate) steps: std::sync::atomic::AtomicU64,
+    }
+
+    impl Counter {
+        pub(crate) fn new(b: usize) -> Counter {
+            Counter { b, steps: std::sync::atomic::AtomicU64::new(0) }
+        }
+    }
+
+    impl StepDecode for Counter {
+        fn arch_b(&self) -> usize {
+            self.b
+        }
+        fn dims(&self) -> StateDims {
+            StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 }
+        }
+        fn step(&self, tokens: &IntTensor, _conv: &Tensor, _ssm: &Tensor)
+            -> Result<(Tensor, Tensor, Tensor)> {
+            self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let mut logits = Tensor::zeros(&[self.b, 256]);
+            for r in 0..self.b {
+                let t = tokens.data[r];
+                let next = if (0..256).contains(&t) { ((t + 1) % 256) as usize } else { 1 };
+                logits.data[r * 256 + next] = 10.0;
+            }
+            let dims = self.dims();
+            Ok((
+                logits,
+                Tensor::zeros(&[dims.n_layer, self.b, dims.d_conv - 1, dims.d_inner]),
+                Tensor::zeros(&[dims.n_layer, self.b, dims.d_inner, dims.d_state]),
+            ))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testing::Counter;
     use super::*;
 
     #[test]
@@ -392,5 +635,68 @@ mod tests {
         let total: f64 = lp.iter().map(|x| x.exp()).sum();
         assert!((total - 1.0).abs() < 1e-9);
         assert!(lp[2] > lp[0]);
+    }
+
+    #[test]
+    fn greedy_counts_up_and_stops() {
+        let m = Counter::new(2);
+        let outs =
+            greedy_decode(&m, &[vec![10u8], vec![40u8, 41u8]], 8, 44, None).unwrap();
+        // row 0: 11,12,... capped by max_new; row 1: 42,43 then 44 = stop
+        assert_eq!(outs[0], vec![11, 12, 13, 14, 15, 16, 17, 18]);
+        assert_eq!(outs[1], vec![42, 43]);
+    }
+
+    #[test]
+    fn beam_agrees_with_greedy_on_deterministic_model() {
+        let m = Counter::new(3);
+        let beam = beam_search(&m, &[10u8], 3, 6, 15, None).unwrap();
+        let greedy = greedy_decode(&m, &[vec![10u8]], 6, 15, None).unwrap();
+        assert_eq!(beam, greedy[0]);
+        assert_eq!(beam, vec![11, 12, 13, 14]); // 15 is the stop byte
+    }
+
+    #[test]
+    fn beam_finished_score_is_frozen() {
+        // stop byte is the immediate argmax: the best beam finishes on the
+        // first expansion and must survive later rounds unchanged
+        let m = Counter::new(2);
+        let beam = beam_search(&m, &[20u8], 2, 8, 21, None).unwrap();
+        assert_eq!(beam, Vec::<u8>::new(), "argmax hits stop immediately");
+    }
+
+    #[test]
+    fn beam_zero_budget_generates_nothing() {
+        let m = Counter::new(2);
+        let beam = beam_search(&m, &[10u8], 2, 0, 0, None).unwrap();
+        assert_eq!(beam, Vec::<u8>::new());
+        // and no decode work happened at all
+        assert_eq!(m.steps.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn state_dims_reset_and_copy_row() {
+        let d = StateDims { n_layer: 2, d_conv: 3, d_inner: 2, d_state: 2 };
+        let b = 2;
+        let mut h0 = BTreeMap::new();
+        h0.insert("layers.1.h0".to_string(),
+                  Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        let (mut conv, mut ssm) = d.init_states(b, Some(&h0));
+        // layer 0 zero, layer 1 seeded in every row
+        let per = d.ssm_per_row();
+        assert!(ssm.data[..per * b].iter().all(|&x| x == 0.0));
+        assert_eq!(&ssm.data[per * b..per * b + per], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&ssm.data[per * b + per..per * b + 2 * per], &[1.0, 2.0, 3.0, 4.0]);
+        // dirty row 0, then reset it without h0: back to zeros
+        ssm.data[0] = 9.0;
+        conv.data[0] = 9.0;
+        d.reset_row(Some(&mut conv), Some(&mut ssm), b, 0, None);
+        assert_eq!(ssm.data[0], 0.0);
+        assert_eq!(conv.data[0], 0.0);
+        // copying row 1 → row 0 from a pristine source pair restores the
+        // layer-1 seed in the destination's row 0
+        let (src_conv, src_ssm) = d.init_states(b, Some(&h0));
+        d.copy_row(&src_conv, &src_ssm, &mut conv, &mut ssm, b, 1, 0);
+        assert_eq!(&ssm.data[per * b..per * b + per], &[1.0, 2.0, 3.0, 4.0]);
     }
 }

@@ -13,42 +13,54 @@ use std::fmt::Write as _;
 /// (result files diff cleanly run-to-run).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64 — see the RunRecord seed caveat).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (sorted keys → deterministic emission).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object field lookup (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -65,6 +77,7 @@ impl Value {
     }
 }
 
+/// Parse a complete JSON document (trailing data is an error).
 pub fn parse(src: &str) -> Result<Value, String> {
     let mut p = Parser { b: src.as_bytes(), i: 0 };
     p.ws();
@@ -291,9 +304,11 @@ fn write_val(v: &Value, out: &mut String) {
 pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
+/// Shorthand: a JSON number.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
+/// Shorthand: a JSON string.
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }

@@ -9,7 +9,7 @@
 //! PEFT benchmarking, SDT dimension selection, fine-tuning, generation-based
 //! evaluation — with Python never on the training path.
 //!
-//! Module map (see DESIGN.md for the paper↔module index):
+//! Module map (see rust/docs/architecture.md for the paper↔module index):
 //! - [`runtime`] — PJRT CPU client, artifact loading/compile cache
 //! - [`manifest`] — the Python↔Rust artifact contract
 //! - [`tensor`], [`json`] — dependency-free substrates
@@ -18,11 +18,16 @@
 //! - [`data`] — synthetic analogues of GLUE/DART/SAMSum/Spider/CIFAR/CelebA
 //! - [`metrics`] — accuracy, Matthews, ROUGE-1/2/L, BLEU, METEOR-lite, MSE
 //! - [`train`] — the training engine (epochs, early stopping, checkpoints)
-//! - [`eval`] — greedy/beam generation over the stepwise decode artifact
+//! - [`eval`] — the shared generation core: the [`eval::StepDecode`]
+//!   stepwise interface plus greedy/beam strategies over it
 //! - [`coordinator`] — the per-experiment pipeline (pretrain → SDT → tune)
 //! - [`suite`] — typed experiment API (`PeftMethod`/`Metric`/`VariantId`)
 //!   + the parallel suite runner + JSONL `RunRecord` streams
+//! - [`serve`] — online multi-adapter generation: LRU adapter registry,
+//!   continuous-batching scheduler, `serve` CLI loop (stdin/TCP)
 //! - [`bench`] — timing harness used by `cargo bench` targets
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod config;
@@ -35,10 +40,12 @@ pub mod metrics;
 pub mod optim;
 pub mod peft;
 pub mod runtime;
+pub mod serve;
 pub mod suite;
 pub mod tensor;
 pub mod train;
 
+/// Crate version (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 
 /// Default artifacts directory (overridable via `SSM_PEFT_ARTIFACTS`).

@@ -13,6 +13,12 @@
 //!                                channels/states per layer
 //!   generate variant=<v> prompt=<text>
 //!                                greedy generation demo from a checkpoint
+//!   serve [arch=<a>] [addr=<host:port>] [stdin=1] [cache=<n>] [lanes=<n>]
+//!                                online multi-adapter generation server:
+//!                                line-delimited JSON requests over
+//!                                stdin/stdout and/or TCP, continuous
+//!                                batching across adapters served from one
+//!                                staged base (schema: rust/docs/serving.md)
 
 use std::collections::BTreeMap;
 
@@ -41,6 +47,7 @@ fn main() -> Result<()> {
         "suite" => suite(&kvs),
         "sdt-report" => sdt_report(&kvs),
         "generate" => generate(&kvs),
+        "serve" => serve(&kvs),
         other => {
             eprintln!("unknown command {other}; see src/main.rs header");
             std::process::exit(2);
@@ -163,6 +170,13 @@ fn suite(kvs: &BTreeMap<String, String>) -> Result<()> {
         ssm_peft::results_dir().join(format!("{name}.jsonl")).display()
     );
     Ok(())
+}
+
+/// Run the online generation server (see rust/docs/serving.md).
+fn serve(kvs: &BTreeMap<String, String>) -> Result<()> {
+    let opts = ssm_peft::serve::ServeOptions::from_kvs(kvs)?;
+    let (engine, manifest) = load_all()?;
+    ssm_peft::serve::run(&engine, &manifest, &opts)
 }
 
 fn sdt_report(kvs: &BTreeMap<String, String>) -> Result<()> {

@@ -18,25 +18,38 @@ use crate::tensor::Tensor;
 /// One named parameter slot in an artifact's flat argument list.
 #[derive(Debug, Clone)]
 pub struct ParamMeta {
+    /// Parameter name (python pytree path).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
     /// byte offset into params.bin
     pub offset: usize,
+    /// Element count (`shape` product; cross-checked at load).
     pub numel: usize,
 }
 
 /// Architecture hyperparameters (mirrors python ArchSpec).
 #[derive(Debug, Clone)]
 pub struct Arch {
+    /// Architecture family ("mamba1", "mamba2", "s4", "hybrid").
     pub kind: String,
+    /// Vocabulary size (256 bytes + BOS + PAD).
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Layer count.
     pub n_layer: usize,
+    /// Expanded inner width (Mamba expansion).
     pub d_inner: usize,
+    /// SSM state dimension per channel.
     pub d_state: usize,
+    /// Depthwise conv kernel width.
     pub d_conv: usize,
+    /// Δ-projection rank (S6).
     pub dt_rank: usize,
+    /// Head count (Mamba-2 / hybrid attention).
     pub n_head: usize,
+    /// Additional-scan extra state dims (paper Sec. 4.3).
     pub h_add: usize,
 }
 
@@ -45,38 +58,56 @@ pub struct Arch {
 /// the [`PeftMethod`] enum.
 #[derive(Debug, Clone)]
 pub struct PeftMeta {
+    /// The typed PEFT method (parsed once at manifest load).
     pub method: PeftMethod,
+    /// LoRA rank (0 for non-LoRA methods).
     pub rank: usize,
     /// LoRA merge numerator: scale = alpha / rank (mirrors the scale baked
     /// into the compiled forward by python/compile/peft.py::make_eff).
     /// Defaults to `rank` (scale 1.0) when the manifest omits it, matching
     /// python's `peft.get("alpha", rank)`.
     pub alpha: usize,
+    /// Raw target-module list as python wrote it.
     pub targets: Vec<String>,
+    /// Prompt/prefix virtual-token count.
     pub n_tokens: usize,
 }
 
 /// One exported (architecture × PEFT) variant.
 #[derive(Debug, Clone)]
 pub struct Variant {
+    /// Variant name (`<arch>_<peft_suffix>`).
     pub name: String,
+    /// Architecture hyperparameters.
     pub arch: Arch,
+    /// PEFT description.
     pub peft: PeftMeta,
+    /// Compiled batch size B.
     pub batch_b: usize,
+    /// Compiled sequence length L.
     pub batch_l: usize,
+    /// Regression variant (Fig. 2 synthetic S4) instead of LM.
     pub reg: bool,
+    /// Train-step HLO artifact, when exported.
     pub step_file: Option<String>,
+    /// Forward-pass HLO artifact, when exported.
     pub fwd_file: Option<String>,
+    /// Stepwise-decode HLO artifact, when exported.
     pub decode_file: Option<String>,
+    /// Initial parameter values file (f32 LE, train-then-frozen).
     pub params_bin: String,
+    /// Trainable parameters, in artifact argument order.
     pub train_params: Vec<ParamMeta>,
+    /// Frozen parameters, in artifact argument order.
     pub frozen_params: Vec<ParamMeta>,
 }
 
 impl Variant {
+    /// Trainable parameter count.
     pub fn n_train(&self) -> usize {
         self.train_params.iter().map(|p| p.numel).sum()
     }
+    /// Total parameter count (trainable + frozen).
     pub fn n_total(&self) -> usize {
         self.n_train() + self.frozen_params.iter().map(|p| p.numel).sum::<usize>()
     }
@@ -84,6 +115,7 @@ impl Variant {
     pub fn train_fraction(&self) -> f64 {
         self.n_train() as f64 / self.n_total() as f64
     }
+    /// Metadata for a parameter by name (trainable or frozen).
     pub fn param(&self, name: &str) -> Option<&ParamMeta> {
         self.train_params
             .iter()
@@ -99,7 +131,9 @@ impl Variant {
 /// The whole manifest plus its directory (for resolving file names).
 #[derive(Debug)]
 pub struct Manifest {
+    /// Artifacts directory (resolves relative file names).
     pub dir: PathBuf,
+    /// Exported variants by name.
     pub variants: BTreeMap<String, Variant>,
 }
 
@@ -126,6 +160,7 @@ fn get_usize(v: &Value, key: &str) -> usize {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json` (written by `python -m compile.aot`).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -199,6 +234,7 @@ impl Manifest {
         Ok(Manifest { dir, variants })
     }
 
+    /// A variant by name; the error lists available names.
     pub fn variant(&self, name: &str) -> Result<&Variant> {
         self.variants
             .get(name)
@@ -225,6 +261,7 @@ impl Manifest {
         Ok(out)
     }
 
+    /// Absolute path of an artifact file.
     pub fn hlo_path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }

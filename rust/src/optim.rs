@@ -11,27 +11,38 @@ use crate::tensor::Tensor;
 /// fine-tuning setup (AdamW + linear decay, Sec. C.1).
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// Peak learning rate.
     pub base_lr: f32,
+    /// Linear warmup steps before decay starts.
     pub warmup_steps: usize,
+    /// Steps the decay is stretched over.
     pub total_steps: usize,
+    /// Decay shape after warmup.
     pub kind: ScheduleKind,
 }
 
+/// Decay shape of a [`Schedule`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ScheduleKind {
+    /// No decay.
     Constant,
+    /// Linear to zero over `total_steps`.
     Linear,
+    /// Half-cosine to zero over `total_steps`.
     Cosine,
 }
 
 impl Schedule {
+    /// Constant schedule at `lr`.
     pub fn constant(lr: f32) -> Self {
         Schedule { base_lr: lr, warmup_steps: 0, total_steps: 1, kind: ScheduleKind::Constant }
     }
+    /// Linear decay with optional warmup (the paper's setup).
     pub fn linear(lr: f32, warmup: usize, total: usize) -> Self {
         Schedule { base_lr: lr, warmup_steps: warmup, total_steps: total.max(1),
                    kind: ScheduleKind::Linear }
     }
+    /// Learning rate at a given step.
     pub fn lr_at(&self, step: usize) -> f32 {
         if self.warmup_steps > 0 && step < self.warmup_steps {
             return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
@@ -69,9 +80,13 @@ pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
 
 /// AdamW with decoupled weight decay (Loshchilov & Hutter).
 pub struct AdamW {
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator fuzz.
     pub eps: f32,
+    /// Decoupled weight-decay coefficient.
     pub weight_decay: f32,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
@@ -81,6 +96,7 @@ pub struct AdamW {
 }
 
 impl AdamW {
+    /// Fresh optimizer state shaped like `params`.
     pub fn new(params: &[Tensor]) -> Self {
         AdamW {
             beta1: 0.9,
@@ -94,6 +110,7 @@ impl AdamW {
         }
     }
 
+    /// Zero all moments (SDT revert re-starts optimization cleanly).
     pub fn reset(&mut self) {
         for m in &mut self.m {
             m.iter_mut().for_each(|x| *x = 0.0);
@@ -137,14 +154,17 @@ impl AdamW {
 
 /// Plain SGD (used by the synthetic Fig. 2 regression runs).
 pub struct Sgd {
+    /// Momentum coefficient.
     pub momentum: f32,
     vel: Vec<Vec<f32>>,
 }
 
 impl Sgd {
+    /// Fresh velocity buffers shaped like `params`.
     pub fn new(params: &[Tensor], momentum: f32) -> Self {
         Sgd { momentum, vel: params.iter().map(|p| vec![0.0; p.numel()]).collect() }
     }
+    /// One momentum-SGD update.
     pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         for i in 0..params.len() {
             let vel = &mut self.vel[i];

@@ -28,10 +28,12 @@ pub use sdt::{select_dimensions, Criterion, SdtConfig};
 /// `variant.train_params` order. `None` = fully trainable.
 #[derive(Debug, Clone)]
 pub struct Masks {
+    /// One optional 0/1 mask per trainable tensor.
     pub masks: Vec<Option<Vec<f32>>>,
 }
 
 impl Masks {
+    /// No masking: all `n` tensors fully trainable.
     pub fn none(n: usize) -> Self {
         Masks { masks: vec![None; n] }
     }
@@ -79,11 +81,14 @@ impl Masks {
 /// Parameter-budget report (the paper's "# Params (%)" column).
 #[derive(Debug, Clone)]
 pub struct Budget {
+    /// Effective trainable parameter count.
     pub trainable: usize,
+    /// Total model parameters.
     pub total: usize,
 }
 
 impl Budget {
+    /// Budget of a variant, with masks applied when given.
     pub fn of(variant: &Variant, masks: Option<&Masks>) -> Self {
         let trainable = match masks {
             Some(m) => m.effective_params(variant),
@@ -91,9 +96,11 @@ impl Budget {
         };
         Budget { trainable, total: variant.n_total() }
     }
+    /// Trainable fraction in [0, 1].
     pub fn fraction(&self) -> f64 {
         self.trainable as f64 / self.total.max(1) as f64
     }
+    /// Trainable fraction as a percentage.
     pub fn percent(&self) -> f64 {
         100.0 * self.fraction()
     }

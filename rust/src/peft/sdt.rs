@@ -33,6 +33,7 @@ pub enum Criterion {
     Random,
 }
 
+/// SDT selection hyperparameters (paper Sec. 5.4 defaults).
 #[derive(Debug, Clone)]
 pub struct SdtConfig {
     /// Fraction of channels frozen (paper uses 0.99 in Sec. 6.2).
@@ -41,11 +42,14 @@ pub struct SdtConfig {
     pub state_freeze: f32,
     /// Number of warmup batches for the selection phase.
     pub warmup_batches: usize,
+    /// Learning rate during the warmup phase.
     pub warmup_lr: f32,
+    /// Ranking criterion (paper vs ablation baselines).
     pub criterion: Criterion,
     /// SDT-P: additionally prune (set to zero) the bottom `prune_frac` of
     /// channels by |Ābar| magnitude. 0.0 = plain SDT.
     pub prune_frac: f32,
+    /// Seed for the Random criterion.
     pub seed: u64,
 }
 
@@ -88,6 +92,7 @@ fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
 /// The selection result for one layer, exposed for tests/reporting.
 #[derive(Debug, Clone)]
 pub struct LayerSelection {
+    /// Channels kept trainable in this layer.
     pub trainable_channels: Vec<usize>,
     /// per trainable channel: trainable state dims
     pub trainable_states: Vec<Vec<usize>>,

@@ -40,16 +40,20 @@ unsafe impl Sync for Engine {}
 
 /// A host-side input for an executable: either float or int tensor.
 pub enum Input<'a> {
+    /// f32 tensor input.
     F(&'a Tensor),
+    /// s32 tensor input (token ids).
     I(&'a IntTensor),
 }
 
 impl Engine {
+    /// Create the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// PJRT platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -1,0 +1,35 @@
+//! Online multi-adapter generation: serve many fine-tuned variants
+//! concurrently from ONE staged pretrained base.
+//!
+//! The paper's headline recipe (SDT on SSM modules + LoRA on projections)
+//! produces many *small* per-task adapters over a shared backbone, and an
+//! SSM's recurrent state is O(1) per sequence — no KV cache growth. This
+//! module turns those two properties into a serving path:
+//!
+//! - [`registry`] — [`AdapterRegistry`]: lazily materialized, LRU-capped
+//!   cache of decode-ready parameter sets (base + trained deltas, LoRA
+//!   folded via [`crate::peft::merge_lora`], trained `h0` split out).
+//! - [`scheduler`] — [`Scheduler`]: continuous batching over the stepwise
+//!   decode executable; requests are admitted into and retired from batch
+//!   rows **between any two decode steps**, with per-request stop bytes,
+//!   `max_new` limits, and greedy or beam decoding.
+//! - [`server`] — the `serve` CLI subcommand: line-delimited JSON over
+//!   stdin/stdout and TCP, per-request latency/throughput stats streamed
+//!   as RunRecord-style JSONL into `results/`.
+//!
+//! The decode strategies themselves live in [`crate::eval`]
+//! ([`crate::eval::greedy_decode`], [`crate::eval::beam_search`], both
+//! over the [`crate::eval::StepDecode`] trait) so the offline suite and
+//! this server share one generation core.
+//!
+//! Schema + worked examples: `rust/docs/serving.md`.
+
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+
+pub use registry::{Adapter, AdapterRegistry, AdapterSource, ManifestSource, RegistryStats};
+pub use scheduler::{
+    FinishReason, LaneFactory, LaneModel, Request, Response, Scheduler,
+};
+pub use server::{run, ServeOptions, ServeRecord};

@@ -1,0 +1,330 @@
+//! Adapter registry: lazily materialized, LRU-capped cache of decode-ready
+//! parameter sets — one per fine-tuned variant served from the shared base.
+//!
+//! Materializing an adapter is the expensive step (read the variant's
+//! parameter layout, overlay the staged pretrained base and any trained
+//! checkpoint, fold LoRA/DoRA factors with [`crate::peft::merge_lora`],
+//! split out trained initial states). The registry does it once per
+//! adapter, hands out `Arc<Adapter>` clones, and evicts the least recently
+//! used entry when the cap is exceeded. Evicted adapters that are still
+//! bound to an active scheduler lane stay alive through their `Arc` until
+//! the lane retires.
+//!
+//! The loading policy lives behind the [`AdapterSource`] trait so the LRU
+//! machinery is unit-testable without artifacts; [`ManifestSource`] is the
+//! real policy used by the `serve` subcommand.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::peft::{self, Budget};
+use crate::suite::VariantId;
+use crate::tensor::Tensor;
+use crate::train::checkpoint;
+
+/// A decode-ready adapter: merged parameters for one fine-tuned variant.
+pub struct Adapter {
+    /// Adapter id as requested (variant name, optionally `@ckpt-path`).
+    pub name: String,
+    /// The decode-capable variant the merged parameters target
+    /// (`<arch>_full` — see [`VariantId::decode_variant`]).
+    pub decode_variant: String,
+    /// Merged parameter map: base weights with LoRA/DoRA deltas folded in.
+    pub params: BTreeMap<String, Tensor>,
+    /// Trained initial states (`layers.{i}.h0`), present for
+    /// initial-state-tuning adapters; seeds each admitted request's SSM
+    /// state ([`crate::eval::StateDims::init_states`]).
+    pub h0: Option<Arc<BTreeMap<String, Tensor>>>,
+    /// Trainable-parameter budget of the source variant, percent (the
+    /// paper's "# Params (%)" column — reported in serve stats).
+    pub budget_pct: f64,
+}
+
+/// Where adapters come from: maps an adapter id to a materialized
+/// [`Adapter`]. Closures implement it, so tests can count loads.
+pub trait AdapterSource {
+    /// Materialize the adapter for `name` (expensive; called on cache miss).
+    fn load(&self, name: &str) -> Result<Adapter>;
+}
+
+impl<F: Fn(&str) -> Result<Adapter>> AdapterSource for F {
+    fn load(&self, name: &str) -> Result<Adapter> {
+        self(name)
+    }
+}
+
+/// Cache counters (all monotone; read via [`AdapterRegistry::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Requests served from cache.
+    pub hits: usize,
+    /// Requests that materialized a new adapter.
+    pub misses: usize,
+    /// Adapters dropped by the LRU policy.
+    pub evictions: usize,
+    /// Adapters currently resident.
+    pub resident: usize,
+}
+
+struct Inner {
+    map: BTreeMap<String, Arc<Adapter>>,
+    /// Recency order, least recently used first.
+    order: VecDeque<String>,
+}
+
+/// LRU-capped adapter cache. `get` is the only entry point: hit moves the
+/// adapter to most-recently-used; miss materializes through the
+/// [`AdapterSource`] and evicts the least recently used entry past `cap`.
+pub struct AdapterRegistry<S> {
+    source: S,
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl<S: AdapterSource> AdapterRegistry<S> {
+    /// New registry holding at most `cap` materialized adapters (min 1).
+    pub fn new(source: S, cap: usize) -> AdapterRegistry<S> {
+        AdapterRegistry {
+            source,
+            cap: cap.max(1),
+            inner: Mutex::new(Inner { map: BTreeMap::new(), order: VecDeque::new() }),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    /// Fetch (materializing on first use) the adapter for `name`.
+    pub fn get(&self, name: &str) -> Result<Arc<Adapter>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(a) = inner.map.get(name).cloned() {
+                // refresh recency
+                inner.order.retain(|k| k != name);
+                inner.order.push_back(name.to_string());
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(a);
+            }
+        }
+        // materialize outside the lock: a slow load must not block stats
+        // readers; the serve loop admits sequentially so duplicate loads
+        // don't arise in practice (and would only waste work, not break)
+        let adapter = Arc::new(self.source.load(name)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.map.contains_key(name) {
+            inner.map.insert(name.to_string(), adapter.clone());
+            inner.order.push_back(name.to_string());
+            while inner.map.len() > self.cap {
+                if let Some(victim) = inner.order.pop_front() {
+                    inner.map.remove(&victim);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(adapter)
+    }
+
+    /// Whether `name` is currently resident (does not touch recency).
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().map.contains_key(name)
+    }
+
+    /// Cache counters snapshot.
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident: self.inner.lock().unwrap().map.len(),
+        }
+    }
+}
+
+/// The real adapter source: manifest layout + staged pretrained base +
+/// optional trained checkpoints.
+///
+/// Adapter ids are variant names (`mamba1_xs_lora_lin`), optionally with an
+/// explicit trained checkpoint: `mamba1_xs_lora_lin@results/rte.ckpt`.
+/// Without `@`, `adapter_dir/<variant>.ckpt` is used when present;
+/// otherwise the variant's fresh initialization serves (LoRA deltas start
+/// at zero, so an untrained adapter behaves as the base model).
+pub struct ManifestSource<'a> {
+    /// Artifact manifest (parameter layouts, PEFT metadata).
+    pub manifest: &'a Manifest,
+    /// Architecture the staged base was pretrained for (e.g. "mamba1_xs");
+    /// adapters of other architectures are rejected.
+    pub base_arch: String,
+    /// The staged pretrained base checkpoint shared by every adapter.
+    pub base: Arc<BTreeMap<String, Tensor>>,
+    /// Directory searched for `<variant>.ckpt` trained-adapter files.
+    pub adapter_dir: Option<PathBuf>,
+}
+
+impl ManifestSource<'_> {
+    fn resolve_ckpt(&self, variant: &str, explicit: Option<&str>) -> Option<PathBuf> {
+        if let Some(p) = explicit {
+            return Some(PathBuf::from(p));
+        }
+        let p = self.adapter_dir.as_ref()?.join(format!("{variant}.ckpt"));
+        p.exists().then_some(p)
+    }
+}
+
+impl AdapterSource for ManifestSource<'_> {
+    fn load(&self, name: &str) -> Result<Adapter> {
+        let (vname, ckpt) = match name.split_once('@') {
+            Some((v, p)) => (v, Some(p)),
+            None => (name, None),
+        };
+        let vid = VariantId::parse(vname)?;
+        if vid.arch != self.base_arch {
+            bail!(
+                "adapter {vname:?} targets arch {:?} but the staged base is {:?}",
+                vid.arch, self.base_arch
+            );
+        }
+        let variant = self.manifest.variant(vname)?;
+        // fresh init for every leaf (incl. adapter-only ones) ...
+        let mut params = self.manifest.load_params(variant)?;
+        // ... then the staged pretrained backbone wherever names align ...
+        for (k, t) in self.base.iter() {
+            if let Some(slot) = params.get_mut(k) {
+                if slot.shape == t.shape {
+                    *slot = t.clone();
+                }
+            }
+        }
+        // ... then trained adapter weights, if a checkpoint exists
+        if let Some(path) = self.resolve_ckpt(vname, ckpt) {
+            let trained = checkpoint::load(&path)
+                .with_context(|| format!("loading adapter checkpoint {path:?}"))?;
+            let total = trained.len();
+            let mut applied = 0usize;
+            for (k, t) in trained {
+                if let Some(slot) = params.get_mut(&k) {
+                    if slot.shape == t.shape {
+                        *slot = t;
+                        applied += 1;
+                    }
+                }
+            }
+            // a checkpoint that contributes nothing means a wrong file or
+            // a drifted layout — serving silently-untrained weights as the
+            // requested adapter would be worse than refusing
+            if applied == 0 {
+                bail!(
+                    "adapter checkpoint {path:?} matched none of {vname}'s \
+                     parameters ({total} tensors, all skipped by name/shape)"
+                );
+            }
+            if applied < total {
+                eprintln!(
+                    "[serve] warning: adapter {name}: {}/{total} checkpoint \
+                     tensors skipped (name/shape mismatch vs {vname})",
+                    total - applied,
+                );
+            }
+        }
+        let budget_pct = Budget::of(variant, None).percent();
+        peft::merge_lora(&mut params, &variant.peft);
+        let h0_map: BTreeMap<String, Tensor> = params
+            .iter()
+            .filter(|(k, _)| k.ends_with(".h0"))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let h0 = (!h0_map.is_empty()).then(|| Arc::new(h0_map));
+        Ok(Adapter {
+            name: name.to_string(),
+            decode_variant: vid.decode_variant(),
+            params,
+            h0,
+            budget_pct,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(name: &str) -> Adapter {
+        Adapter {
+            name: name.to_string(),
+            decode_variant: "a_full".into(),
+            params: BTreeMap::new(),
+            h0: None,
+            budget_pct: 1.0,
+        }
+    }
+
+    fn counting_source(loads: Arc<AtomicUsize>)
+        -> impl Fn(&str) -> Result<Adapter> {
+        move |name: &str| {
+            loads.fetch_add(1, Ordering::Relaxed);
+            if name == "bad" {
+                bail!("no such adapter");
+            }
+            Ok(dummy(name))
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads.clone()), 2);
+        reg.get("a").unwrap();
+        reg.get("b").unwrap();
+        reg.get("a").unwrap(); // refresh a → b is now LRU
+        reg.get("c").unwrap(); // evicts b
+        assert!(reg.contains("a"));
+        assert!(reg.contains("c"));
+        assert!(!reg.contains("b"), "b was least recently used");
+        assert_eq!(loads.load(Ordering::Relaxed), 3);
+        // b comes back only via a re-load
+        reg.get("b").unwrap();
+        assert_eq!(loads.load(Ordering::Relaxed), 4);
+        let st = reg.stats();
+        assert_eq!(st.misses, 4);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.evictions, 2, "c evicted b, then b evicted a");
+        assert_eq!(st.resident, 2);
+    }
+
+    #[test]
+    fn hits_do_not_reload() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads.clone()), 4);
+        let a1 = reg.get("a").unwrap();
+        let a2 = reg.get("a").unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "hit returns the shared Arc");
+        assert_eq!(loads.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn load_errors_propagate_and_cache_nothing() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads.clone()), 2);
+        assert!(reg.get("bad").is_err());
+        assert!(!reg.contains("bad"));
+        assert_eq!(reg.stats().resident, 0);
+    }
+
+    #[test]
+    fn cap_floor_is_one() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads), 0);
+        reg.get("a").unwrap();
+        reg.get("b").unwrap();
+        assert_eq!(reg.stats().resident, 1);
+    }
+}

@@ -1,0 +1,480 @@
+//! The `serve` front end: a line-delimited JSON request loop over
+//! stdin/stdout and/or TCP, driving the continuous-batching
+//! [`Scheduler`] against an [`AdapterRegistry`], with per-request
+//! latency/throughput stats streamed as RunRecord-style JSONL.
+//!
+//! Request/response schema and a worked example live in
+//! `rust/docs/serving.md`. One request per line in; one response per line
+//! out (to the connection that sent the request); one stats record per
+//! line appended to `results/<name>.jsonl`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::Pipeline;
+use crate::eval::DecodeCore;
+use crate::json::{self, Value};
+use crate::manifest::Manifest;
+use crate::runtime::Engine;
+use crate::suite::{git_describe, JsonlSink};
+
+use super::registry::{AdapterRegistry, ManifestSource};
+use super::scheduler::{LaneFactory, LaneModel, Request, Response, Scheduler};
+
+/// `serve` subcommand configuration (CLI `key=value` overrides — see
+/// [`ServeOptions::from_kvs`]).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Architecture of the staged base (every adapter must target it).
+    pub arch: String,
+    /// Pretraining steps used to stage (or load) the shared base.
+    pub pretrain_steps: usize,
+    /// Adapter LRU cache capacity ([`AdapterRegistry`]).
+    pub cache_cap: usize,
+    /// Max simultaneously materialized scheduler lanes.
+    pub max_lanes: usize,
+    /// TCP listen address (e.g. "127.0.0.1:7878"); `None` = no TCP.
+    pub addr: Option<String>,
+    /// Serve the stdin/stdout request loop.
+    pub stdin: bool,
+    /// Default `max_new` when a request omits it.
+    pub default_max_new: usize,
+    /// Stats stream name: records append to `results/<name>.jsonl`.
+    pub stats_name: String,
+    /// Directory searched for `<variant>.ckpt` trained adapters.
+    pub adapter_dir: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            arch: "mamba1_xs".into(),
+            pretrain_steps: 300,
+            cache_cap: 4,
+            max_lanes: 4,
+            addr: None,
+            stdin: true,
+            default_max_new: 48,
+            stats_name: "serve".into(),
+            adapter_dir: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Parse CLI `key=value` overrides: `arch`, `pretrain_steps`, `addr`,
+    /// `stdin` (0/1), `cache`, `lanes`, `max_new`, `name`, `adapter_dir`.
+    pub fn from_kvs(kvs: &std::collections::BTreeMap<String, String>) -> Result<ServeOptions> {
+        let mut o = ServeOptions::default();
+        for (k, v) in kvs {
+            match k.as_str() {
+                "arch" => o.arch = v.clone(),
+                "pretrain_steps" => o.pretrain_steps = v.parse().context("pretrain_steps")?,
+                "addr" => o.addr = Some(v.clone()),
+                "stdin" => o.stdin = v != "0" && v != "false",
+                "cache" => o.cache_cap = v.parse().context("cache")?,
+                "lanes" => o.max_lanes = v.parse().context("lanes")?,
+                "max_new" => o.default_max_new = v.parse().context("max_new")?,
+                "name" => o.stats_name = v.clone(),
+                "adapter_dir" => o.adapter_dir = Some(PathBuf::from(v)),
+                other => bail!("unknown serve option {other:?}"),
+            }
+        }
+        if !o.stdin && o.addr.is_none() {
+            bail!("serve needs stdin=1 or addr=<host:port> (or both)");
+        }
+        Ok(o)
+    }
+}
+
+/// Where a response line goes back to.
+#[derive(Clone)]
+enum Sink {
+    Stdout,
+    Tcp(Arc<Mutex<TcpStream>>),
+}
+
+impl Sink {
+    fn send(&self, line: &str) {
+        match self {
+            Sink::Stdout => {
+                let mut out = std::io::stdout().lock();
+                let _ = writeln!(out, "{line}");
+                let _ = out.flush();
+            }
+            Sink::Tcp(conn) => {
+                if let Ok(mut c) = conn.lock() {
+                    let _ = writeln!(c, "{line}");
+                    let _ = c.flush();
+                }
+            }
+        }
+    }
+}
+
+/// A parsed request line (client id not yet bound to a scheduler id).
+struct WireRequest {
+    client_id: Value,
+    adapter: String,
+    prompt: Vec<u8>,
+    max_new: usize,
+    stop_byte: u8,
+    beam: usize,
+}
+
+const REQUEST_KEYS: &[&str] = &["id", "adapter", "prompt", "max_new", "stop", "beam"];
+
+fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
+    let v = json::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+    let obj = match &v {
+        Value::Obj(m) => m,
+        _ => bail!("request must be a JSON object"),
+    };
+    for k in obj.keys() {
+        if !REQUEST_KEYS.contains(&k.as_str()) {
+            bail!("unknown request key {k:?} (expected one of {REQUEST_KEYS:?})");
+        }
+    }
+    let adapter = obj
+        .get("adapter")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("request missing \"adapter\" (string)"))?
+        .to_string();
+    let prompt = obj
+        .get("prompt")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("request missing \"prompt\" (string)"))?
+        .as_bytes()
+        .to_vec();
+    let max_new = match obj.get("max_new") {
+        Some(n) => n.as_usize().ok_or_else(|| anyhow!("max_new: expected number"))?,
+        None => default_max_new,
+    };
+    let stop_byte = match obj.get("stop") {
+        None => b'\n',
+        Some(s) => {
+            let s = s.as_str().ok_or_else(|| anyhow!("stop: expected 1-byte string"))?;
+            match s.as_bytes() {
+                [b] => *b,
+                _ => bail!("stop: expected exactly one byte, got {s:?}"),
+            }
+        }
+    };
+    let beam = match obj.get("beam") {
+        Some(n) => n.as_usize().ok_or_else(|| anyhow!("beam: expected number"))?.max(1),
+        None => 1,
+    };
+    Ok(WireRequest {
+        client_id: obj.get("id").cloned().unwrap_or(Value::Null),
+        adapter,
+        prompt,
+        max_new,
+        stop_byte,
+        beam,
+    })
+}
+
+/// The response line sent back to the client.
+fn response_json(resp: &Response, client_id: &Value) -> Value {
+    json::obj(vec![
+        ("id", client_id.clone()),
+        ("adapter", json::s(&resp.adapter)),
+        ("output", json::s(&String::from_utf8_lossy(&resp.output))),
+        ("prompt_len", json::num(resp.prompt_len as f64)),
+        ("new_tokens", json::num(resp.output.len() as f64)),
+        ("queued_s", json::num(resp.queued_s)),
+        ("total_s", json::num(resp.total_s)),
+        ("tok_per_s", json::num(resp.tok_per_s())),
+        ("steps", json::num(resp.steps as f64)),
+        ("finish", json::s(resp.finish.label())),
+        (
+            "error",
+            match &resp.error {
+                Some(e) => json::s(e),
+                None => Value::Null,
+            },
+        ),
+    ])
+}
+
+/// One per-request stats record in the `results/<name>.jsonl` stream —
+/// RunRecord-style: self-describing, one JSON object per line, git-stamped
+/// (schema: rust/docs/serving.md).
+pub struct ServeRecord<'a> {
+    /// Stats stream name ([`ServeOptions::stats_name`]).
+    pub serve: &'a str,
+    /// The finished request.
+    pub resp: &'a Response,
+    /// `git describe` stamp.
+    pub git: &'a str,
+}
+
+impl ServeRecord<'_> {
+    /// Serialize for the JSONL stream.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("serve", json::s(self.serve)),
+            ("id", json::num(self.resp.id as f64)),
+            ("adapter", json::s(&self.resp.adapter)),
+            ("prompt_len", json::num(self.resp.prompt_len as f64)),
+            ("new_tokens", json::num(self.resp.output.len() as f64)),
+            ("queued_s", json::num(self.resp.queued_s)),
+            ("total_s", json::num(self.resp.total_s)),
+            ("tok_per_s", json::num(self.resp.tok_per_s())),
+            ("steps", json::num(self.resp.steps as f64)),
+            ("finish", json::s(self.resp.finish.label())),
+            (
+                "error",
+                match &self.resp.error {
+                    Some(e) => json::s(e),
+                    None => Value::Null,
+                },
+            ),
+            ("git", json::s(self.git)),
+        ])
+    }
+}
+
+/// Run the serving loop until every request source closes (stdin EOF with
+/// no TCP listener) — with a TCP listener the loop runs until killed.
+///
+/// Stages the shared pretrained base once, then serves adapters through
+/// the LRU registry and the continuous-batching scheduler. Every response
+/// goes back to its originating connection; every finished request appends
+/// a [`ServeRecord`] to `results/<stats_name>.jsonl`.
+pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<()> {
+    let pipeline = Pipeline::new(engine, manifest);
+    eprintln!("[serve] staging base {} ({} steps)", opts.arch, opts.pretrain_steps);
+    let base = pipeline.pretrained(&opts.arch, opts.pretrain_steps, 0)?;
+    let source = ManifestSource {
+        manifest,
+        base_arch: opts.arch.clone(),
+        base,
+        adapter_dir: opts.adapter_dir.clone(),
+    };
+    let registry = AdapterRegistry::new(source, opts.cache_cap);
+    let factory: LaneFactory = Box::new(|adapter: &str| {
+        let a = registry.get(adapter)?;
+        let core = DecodeCore::new(engine, manifest, &a.decode_variant, &a.params)?;
+        Ok(LaneModel { model: Arc::new(core), h0: a.h0.clone() })
+    });
+    let mut sched = Scheduler::new(factory, opts.max_lanes);
+
+    let (tx, rx) = mpsc::channel::<(String, Sink)>();
+    if opts.stdin {
+        let txs = tx.clone();
+        std::thread::spawn(move || {
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                let Ok(line) = line else { break };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if txs.send((line, Sink::Stdout)).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+    if let Some(addr) = &opts.addr {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        eprintln!("[serve] listening on {addr}");
+        let txa = tx.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(conn) = conn else { continue };
+                let tx = txa.clone();
+                std::thread::spawn(move || {
+                    let Ok(read_half) = conn.try_clone() else { return };
+                    let sink = Sink::Tcp(Arc::new(Mutex::new(conn)));
+                    for line in std::io::BufReader::new(read_half).lines() {
+                        let Ok(line) = line else { break };
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        if tx.send((line, sink.clone())).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+    }
+    drop(tx); // the loop below exits once every reader thread is gone
+
+    let git = git_describe();
+    let mut stats = JsonlSink::create(&opts.stats_name, true)?;
+    let mut inflight: HashMap<u64, (Value, Sink)> = HashMap::new();
+    let mut next_id = 1u64;
+    let mut served = 0usize;
+    let mut ingest = |line: String, sink: Sink,
+                      sched: &mut Scheduler, inflight: &mut HashMap<u64, (Value, Sink)>| {
+        match parse_request(&line, opts.default_max_new) {
+            Ok(w) => {
+                let id = next_id;
+                next_id += 1;
+                inflight.insert(id, (w.client_id, sink));
+                sched.submit(Request {
+                    id,
+                    adapter: w.adapter,
+                    prompt: w.prompt,
+                    max_new: w.max_new,
+                    stop_byte: w.stop_byte,
+                    beam: w.beam,
+                });
+            }
+            Err(e) => {
+                let v = json::obj(vec![
+                    ("error", json::s(&format!("{e:#}"))),
+                    ("finish", json::s("error")),
+                ]);
+                sink.send(&json::emit(&v));
+            }
+        }
+    };
+
+    loop {
+        if sched.is_idle() {
+            // nothing to decode: block for the next request (or exit when
+            // every source has hung up)
+            match rx.recv() {
+                Ok((line, sink)) => ingest(line, sink, &mut sched, &mut inflight),
+                Err(_) => break,
+            }
+        }
+        while let Ok((line, sink)) = rx.try_recv() {
+            ingest(line, sink, &mut sched, &mut inflight);
+        }
+        for resp in sched.tick() {
+            let (client_id, sink) = inflight
+                .remove(&resp.id)
+                .unwrap_or((Value::Null, Sink::Stdout));
+            sink.send(&json::emit(&response_json(&resp, &client_id)));
+            stats
+                .write_line(&ServeRecord { serve: &opts.stats_name, resp: &resp, git: &git }
+                    .to_json())
+                .ok();
+            served += 1;
+            eprintln!(
+                "[serve] #{} {} {} {}B->{}B {:.3}s ({:.1} tok/s, {} queued, {} active)",
+                resp.id,
+                resp.adapter,
+                resp.finish.label(),
+                resp.prompt_len,
+                resp.output.len(),
+                resp.total_s,
+                resp.tok_per_s(),
+                sched.queued(),
+                sched.active(),
+            );
+        }
+    }
+    let st = registry.stats();
+    eprintln!(
+        "[serve] done: {served} requests, {} decode steps / {} ticks; adapter cache \
+         {} hits / {} misses / {} evictions",
+        sched.decode_steps, sched.ticks, st.hits, st.misses, st.evictions,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::FinishReason;
+
+    #[test]
+    fn parse_request_full_and_defaults() {
+        let w = parse_request(
+            r#"{"id": 7, "adapter": "a_lora_lin", "prompt": "hi", "max_new": 5,
+                "stop": "\n", "beam": 2}"#,
+            48,
+        )
+        .unwrap();
+        assert_eq!(w.adapter, "a_lora_lin");
+        assert_eq!(w.prompt, b"hi");
+        assert_eq!(w.max_new, 5);
+        assert_eq!(w.stop_byte, b'\n');
+        assert_eq!(w.beam, 2);
+        assert_eq!(w.client_id, Value::Num(7.0));
+
+        let w = parse_request(r#"{"adapter": "a", "prompt": "x"}"#, 48).unwrap();
+        assert_eq!(w.max_new, 48);
+        assert_eq!(w.stop_byte, b'\n');
+        assert_eq!(w.beam, 1);
+        assert_eq!(w.client_id, Value::Null);
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_input() {
+        assert!(parse_request("not json", 8).is_err());
+        assert!(parse_request(r#"{"prompt": "x"}"#, 8).is_err(), "missing adapter");
+        assert!(parse_request(r#"{"adapter": "a"}"#, 8).is_err(), "missing prompt");
+        assert!(
+            parse_request(r#"{"adapter": "a", "prompt": "x", "nope": 1}"#, 8).is_err(),
+            "unknown keys fail loudly"
+        );
+        assert!(
+            parse_request(r#"{"adapter": "a", "prompt": "x", "stop": "ab"}"#, 8).is_err(),
+            "multi-byte stop rejected"
+        );
+    }
+
+    #[test]
+    fn response_and_record_json_shape() {
+        let resp = Response {
+            id: 3,
+            adapter: "a_lora_lin".into(),
+            output: b"out".to_vec(),
+            prompt_len: 2,
+            queued_s: 0.5,
+            total_s: 1.0,
+            steps: 6,
+            finish: FinishReason::Stop,
+            error: None,
+        };
+        let v = response_json(&resp, &Value::Str("req-1".into()));
+        assert_eq!(v.path("id").unwrap().as_str(), Some("req-1"));
+        assert_eq!(v.path("output").unwrap().as_str(), Some("out"));
+        assert_eq!(v.path("new_tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(v.path("finish").unwrap().as_str(), Some("stop"));
+        assert_eq!(v.path("error"), Some(&Value::Null));
+        assert_eq!(v.path("tok_per_s").unwrap().as_f64(), Some(3.0));
+
+        let rec = ServeRecord { serve: "s", resp: &resp, git: "g1" }.to_json();
+        assert_eq!(rec.path("serve").unwrap().as_str(), Some("s"));
+        assert_eq!(rec.path("git").unwrap().as_str(), Some("g1"));
+        assert_eq!(rec.path("id").unwrap().as_usize(), Some(3));
+        // round-trips through the emitter
+        let back = json::parse(&json::emit(&rec)).unwrap();
+        assert_eq!(back.path("adapter").unwrap().as_str(), Some("a_lora_lin"));
+    }
+
+    #[test]
+    fn serve_options_parse_and_validate() {
+        let mut kv = std::collections::BTreeMap::new();
+        kv.insert("arch".to_string(), "mamba2_xs".to_string());
+        kv.insert("cache".to_string(), "2".to_string());
+        kv.insert("addr".to_string(), "127.0.0.1:0".to_string());
+        kv.insert("stdin".to_string(), "0".to_string());
+        let o = ServeOptions::from_kvs(&kv).unwrap();
+        assert_eq!(o.arch, "mamba2_xs");
+        assert_eq!(o.cache_cap, 2);
+        assert!(!o.stdin);
+        assert_eq!(o.addr.as_deref(), Some("127.0.0.1:0"));
+
+        let mut bad = std::collections::BTreeMap::new();
+        bad.insert("stdin".to_string(), "0".to_string());
+        assert!(ServeOptions::from_kvs(&bad).is_err(), "no request source");
+        let mut unk = std::collections::BTreeMap::new();
+        unk.insert("bogus".to_string(), "1".to_string());
+        assert!(ServeOptions::from_kvs(&unk).is_err());
+    }
+}

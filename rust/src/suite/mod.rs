@@ -74,15 +74,18 @@ pub fn worker_count(default: usize) -> usize {
 /// (Unit-testable without PJRT; `Suite` binds it to an engine/manifest.)
 #[derive(Debug, Clone)]
 pub struct SuitePlan {
+    /// Suite name (JSONL file stem).
     pub name: String,
     /// Defaults each cell starts from (`cell`/`grid` clone this).
     pub template: ExperimentConfig,
+    /// Fully-resolved cell configs, in composition order.
     pub cells: Vec<ExperimentConfig>,
     /// Reuse finished cells from an existing `results/<name>.jsonl`.
     pub resume: bool,
 }
 
 impl SuitePlan {
+    /// Empty plan with default template.
     pub fn new(name: &str) -> SuitePlan {
         SuitePlan {
             name: name.to_string(),
@@ -123,14 +126,17 @@ type Ckpt = Arc<BTreeMap<String, Tensor>>;
 pub struct Suite<'a> {
     engine: &'a Engine,
     manifest: &'a Manifest,
+    /// The engine-independent cell list being built.
     pub plan: SuitePlan,
 }
 
 impl<'a> Suite<'a> {
+    /// Empty suite bound to an engine + manifest.
     pub fn new(engine: &'a Engine, manifest: &'a Manifest) -> Suite<'a> {
         Suite { engine, manifest, plan: SuitePlan::new("suite") }
     }
 
+    /// Bind an already-built plan (spec files) to an engine + manifest.
     pub fn from_plan(engine: &'a Engine, manifest: &'a Manifest, plan: SuitePlan) -> Suite<'a> {
         Suite { engine, manifest, plan }
     }
@@ -147,16 +153,19 @@ impl<'a> Suite<'a> {
         self
     }
 
+    /// Reuse finished cells from an existing `results/<name>.jsonl`.
     pub fn resume(mut self, yes: bool) -> Self {
         self.plan.resume = yes;
         self
     }
 
+    /// Add one (variant, dataset) cell — see [`SuitePlan::add_cell`].
     pub fn cell(mut self, variant: &str, dataset: &str) -> Self {
         self.plan.add_cell(variant, dataset);
         self
     }
 
+    /// Add the full variants × datasets grid.
     pub fn grid(mut self, variants: &[&str], datasets: &[&str]) -> Self {
         self.plan.add_grid(variants, datasets);
         self

@@ -22,17 +22,25 @@ use crate::json::{self, Value};
 pub struct RunRecord {
     /// Suite name (JSONL file stem).
     pub suite: String,
+    /// Artifact variant, e.g. `"mamba1_xs_sdtlora"`.
     pub variant: String,
+    /// Dataset name, e.g. `"glue/rte"`.
     pub dataset: String,
+    /// The cell's deterministic seed ([`super::cell_seed`]).
     pub seed: u64,
     /// Headline metric value (0.0 when the cell failed).
     pub metric: f64,
     /// All computed scores by name.
     pub scores: BTreeMap<String, f64>,
+    /// Trainable-parameter budget, percent.
     pub budget_pct: f64,
+    /// Learning rate picked by the grid search.
     pub chosen_lr: f32,
+    /// Optimizer steps taken.
     pub steps: usize,
+    /// SDT dimension-selection seconds (0 for non-SDT methods).
     pub dim_select_s: f64,
+    /// Mean seconds per training epoch.
     pub epoch_s: f64,
     /// Wall-clock seconds for the whole cell (grid search + train + eval).
     pub total_s: f64,
@@ -43,6 +51,7 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
+    /// Build a success record from a finished cell's [`Outcome`].
     pub fn from_outcome(
         suite: &str,
         cfg: &ExperimentConfig,
@@ -68,6 +77,7 @@ impl RunRecord {
         }
     }
 
+    /// Build an error record for a failed cell.
     pub fn failed(
         suite: &str,
         cfg: &ExperimentConfig,
@@ -93,6 +103,7 @@ impl RunRecord {
         }
     }
 
+    /// True when the cell succeeded.
     pub fn ok(&self) -> bool {
         self.error.is_none()
     }
@@ -111,6 +122,7 @@ impl RunRecord {
         }
     }
 
+    /// Serialize for the JSONL stream (schema: rust/docs/suite.md).
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("suite", json::s(&self.suite)),
@@ -143,6 +155,7 @@ impl RunRecord {
         ])
     }
 
+    /// Parse one JSONL line back into a record (resume / pivot rebuild).
     pub fn from_json(v: &Value) -> Result<RunRecord> {
         let str_of = |k: &str| {
             v.path(k).and_then(Value::as_str).map(String::from).unwrap_or_default()
@@ -217,6 +230,7 @@ impl JsonlSink {
         Self::create_at(crate::results_dir().join(format!("{name}.jsonl")), append)
     }
 
+    /// Open a sink at an explicit path (tests, non-default layouts).
     pub fn create_at(path: PathBuf, append: bool) -> Result<JsonlSink> {
         let file = std::fs::OpenOptions::new()
             .create(true)
@@ -230,11 +244,18 @@ impl JsonlSink {
 
     /// Write one record and flush (the stream stays valid on crash).
     pub fn write(&mut self, rec: &RunRecord) -> Result<()> {
-        writeln!(self.file, "{}", json::emit(&rec.to_json()))?;
+        self.write_line(&rec.to_json())
+    }
+
+    /// Append one raw JSON value as a flushed line. The serve stats stream
+    /// ([`crate::serve::ServeRecord`]) shares the sink this way.
+    pub fn write_line(&mut self, v: &Value) -> Result<()> {
+        writeln!(self.file, "{}", json::emit(v))?;
         self.file.flush()?;
         Ok(())
     }
 
+    /// The sink's file path.
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -245,6 +266,7 @@ impl JsonlSink {
         Self::load_at(&crate::results_dir().join(format!("{name}.jsonl")))
     }
 
+    /// Parse all records from an explicit path — see [`JsonlSink::load`].
     pub fn load_at(path: &Path) -> Vec<RunRecord> {
         let Ok(src) = std::fs::read_to_string(path) else {
             return Vec::new();
@@ -259,7 +281,9 @@ impl JsonlSink {
 /// One pivot-table column: a (dataset, score) pair.
 #[derive(Debug, Clone)]
 pub struct PivotCol {
+    /// Column header in the printed table.
     pub header: String,
+    /// Dataset whose records fill this column.
     pub dataset: String,
     /// Key into `RunRecord::scores`; empty = headline metric.
     pub score: String,

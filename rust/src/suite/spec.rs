@@ -31,6 +31,7 @@ use super::{cell_seed, SuitePlan};
 /// A parsed suite file: the plan plus runner settings.
 #[derive(Debug)]
 pub struct SuiteSpec {
+    /// The parsed cell list + template.
     pub plan: SuitePlan,
     /// Worker count for `Suite::run` (CLI `par=` overrides).
     pub par: usize,
@@ -52,12 +53,14 @@ fn str_list(v: &Value, key: &str) -> Result<Vec<String>> {
 }
 
 impl SuiteSpec {
+    /// Load and parse a suite file.
     pub fn from_file(path: &str) -> Result<SuiteSpec> {
         let src = std::fs::read_to_string(path)?;
         let v = json::parse(&src).map_err(|e| anyhow!("{path}: {e}"))?;
         Self::from_json(&v)
     }
 
+    /// Parse a suite spec; unknown keys anywhere are rejected.
     pub fn from_json(v: &Value) -> Result<SuiteSpec> {
         let obj = match v {
             Value::Obj(m) => m,

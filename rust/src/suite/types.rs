@@ -62,15 +62,25 @@ impl Target {
 /// variants of Fig. 2 / Table 19).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PeftMethod {
+    /// Full fine-tuning (every trainable leaf).
     Full,
+    /// LoRA adapters on the target modules.
     Lora(Target),
+    /// DoRA (LoRA + magnitude column rescaling).
     Dora(Target),
+    /// Bias-only tuning.
     BitFit,
+    /// Soft prompt tokens at the input.
     Prompt,
+    /// Prefix tokens inside each block.
     Prefix,
+    /// Trained initial SSM state h0 (Table 14).
     InitState,
+    /// Additional-scan state dims (paper Sec. 4.3).
     AddScan,
+    /// Selective-dimension tuning (paper Alg. 1).
     Sdt,
+    /// SDT on SSM modules + LoRA on projections (headline recipe).
     SdtLora,
     /// S4-specific LoRA on the projection weights (`s4_lora_proj`).
     S4LoraProj,
@@ -101,6 +111,7 @@ const ALL_METHODS: &[PeftMethod] = &[
 ];
 
 impl PeftMethod {
+    /// Every method, in suffix-lookup order.
     pub fn all() -> &'static [PeftMethod] {
         ALL_METHODS
     }
@@ -129,6 +140,7 @@ impl PeftMethod {
         }
     }
 
+    /// Inverse of [`PeftMethod::suffix`].
     pub fn from_suffix(s: &str) -> Option<PeftMethod> {
         ALL_METHODS.iter().find(|m| m.suffix() == s).copied()
     }
@@ -250,10 +262,12 @@ impl std::str::FromStr for PeftMethod {
 pub struct VariantId {
     /// Architecture preset name, e.g. "mamba1_xs".
     pub arch: String,
+    /// The PEFT method encoded in the name suffix.
     pub method: PeftMethod,
 }
 
 impl VariantId {
+    /// Assemble an id from parts.
     pub fn new(arch: impl Into<String>, method: PeftMethod) -> Self {
         VariantId { arch: arch.into(), method }
     }
@@ -318,6 +332,7 @@ pub enum Metric {
 }
 
 impl Metric {
+    /// Stable metric id (record `scores` keys, CLI).
     pub fn name(self) -> &'static str {
         match self {
             Metric::Acc => "acc",
@@ -328,6 +343,7 @@ impl Metric {
         }
     }
 
+    /// Inverse of [`Metric::name`].
     pub fn parse(s: &str) -> Option<Metric> {
         match s {
             "acc" => Some(Metric::Acc),

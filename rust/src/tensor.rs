@@ -8,22 +8,28 @@
 /// Row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes (row-major).
     pub shape: Vec<usize>,
+    /// Flat element storage.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
+    /// Tensor over existing storage (asserts shape/len agreement).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
     }
+    /// Rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         Tensor { shape: vec![], data: vec![v] }
     }
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -41,15 +47,19 @@ impl Tensor {
 /// Integer tensor (token ids). PJRT side is s32.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IntTensor {
+    /// Dimension sizes (row-major).
     pub shape: Vec<usize>,
+    /// Flat element storage.
     pub data: Vec<i32>,
 }
 
 impl IntTensor {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         IntTensor { shape: shape.to_vec(), data: vec![0; n] }
     }
+    /// Tensor over existing storage (asserts shape/len agreement).
     pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         IntTensor { shape: shape.to_vec(), data }
@@ -64,6 +74,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded stream (splitmix64-expanded so nearby seeds decorrelate).
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion so nearby seeds give unrelated streams
         fn mix(mut z: u64) -> u64 {
@@ -79,6 +90,7 @@ impl Rng {
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
     }
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.s0;
         let y = self.s1;
@@ -107,6 +119,7 @@ impl Rng {
             v.swap(i, self.below(i + 1));
         }
     }
+    /// Uniformly random element of a non-empty slice.
     pub fn choice<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.below(v.len())]
     }

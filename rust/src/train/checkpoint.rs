@@ -12,6 +12,7 @@ use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"SSMPEFT1";
 
+/// Write a named-tensor checkpoint (self-describing binary format).
 pub fn save(params: &BTreeMap<String, Tensor>, path: impl AsRef<Path>) -> Result<()> {
     let mut header = Vec::new();
     let mut blob: Vec<u8> = Vec::new();
@@ -35,6 +36,7 @@ pub fn save(params: &BTreeMap<String, Tensor>, path: impl AsRef<Path>) -> Result
     Ok(())
 }
 
+/// Read a checkpoint written by [`save`].
 pub fn load(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
     let mut f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;

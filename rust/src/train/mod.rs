@@ -20,10 +20,15 @@ use crate::tensor::Tensor;
 /// Training-loop configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Peak learning rate.
     pub lr: f32,
+    /// AdamW decoupled weight decay.
     pub weight_decay: f32,
+    /// Global gradient-norm clip.
     pub clip_norm: f32,
+    /// Total steps the LR schedule decays over.
     pub schedule_total: usize,
+    /// LR warmup steps.
     pub warmup_steps: usize,
 }
 
@@ -41,17 +46,23 @@ impl Default for TrainConfig {
 
 /// A live training session for one artifact variant.
 pub struct Trainer {
+    /// The artifact variant being trained.
     pub variant: Variant,
     step_exe: Executable,
     fwd_exe: Executable,
+    /// Live trainable tensors (variant.train_params order).
     pub train_params: Vec<Tensor>,
+    /// Frozen tensors (variant.frozen_params order).
     pub frozen_params: Vec<Tensor>,
     /// frozen-parameter literals, built once and reused every step
     /// (§Perf L3: avoids re-serializing the (large) frozen set per step)
     frozen_lits: Vec<xla::Literal>,
+    /// Gradient masks (SDT); identity by default.
     pub masks: Masks,
     opt: AdamW,
+    /// Learning-rate schedule.
     pub sched: Schedule,
+    /// Optimizer steps taken so far.
     pub step_count: usize,
     /// (step, loss) history for loss-curve output.
     pub history: Vec<(usize, f32)>,
@@ -60,6 +71,8 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Load artifacts + initial parameters for a variant and build the
+    /// optimizer state.
     pub fn new(engine: &Engine, manifest: &Manifest, variant_name: &str,
                cfg: &TrainConfig) -> Result<Self> {
         let variant = manifest.variant(variant_name)?.clone();
@@ -141,6 +154,8 @@ impl Trainer {
     pub fn snapshot_train(&self) -> Vec<Tensor> {
         self.train_params.clone()
     }
+    /// Restore a snapshot taken by [`Trainer::snapshot_train`] and reset
+    /// the optimizer (SDT revert step).
     pub fn restore_train(&mut self, snap: Vec<Tensor>) {
         assert_eq!(snap.len(), self.train_params.len());
         self.train_params = snap;
