@@ -3,20 +3,23 @@
 //! We chose to compute gradients inside the AOT artifact and run
 //! masking/AdamW on the host so the PEFT engine lives in Rust. This bench
 //! measures what that costs: XLA step (device) time vs host optimizer time
-//! per training step, with and without SDT masks, at two model sizes.
+//! per training step, with and without SDT masks, at two model sizes —
+//! for BOTH host-optimizer implementations: the legacy three-pass
+//! reference (mask → clip → AdamW over `Vec<Tensor>`) and the fused
+//! arena pass (`FusedAdamW` over a `ParamArena`, §Perf L3).
 //!
 //! Expected shape: host optimizer time is a small fraction of the XLA step
-//! (grads dominate), so the design is essentially free — and the masked
+//! (grads dominate), the fused pass shrinks it further, and the masked
 //! update is not slower than the unmasked one.
 
 use ssm_peft::bench::{time, TablePrinter};
 use ssm_peft::coordinator::Pipeline;
-use ssm_peft::suite::VariantId;
 use ssm_peft::data::{tasks, BatchIter};
 use ssm_peft::manifest::Manifest;
-use ssm_peft::optim::AdamW;
+use ssm_peft::optim::{AdamW, FusedAdamW, MaskPlan, ParamArena};
 use ssm_peft::peft::Masks;
 use ssm_peft::runtime::Engine;
+use ssm_peft::suite::VariantId;
 use ssm_peft::tensor::{Rng, Tensor};
 use ssm_peft::train::{TrainConfig, Trainer};
 
@@ -25,7 +28,8 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
     let p = Pipeline::new(&engine, &manifest);
     let mut table = TablePrinter::new(&[
-        "variant", "masked", "full step (s)", "host-opt only (s)", "host share",
+        "variant", "masked", "full step (s)", "legacy host (s)", "fused host (s)",
+        "host share",
     ]);
 
     for variant in ["mamba1_xs_full", "mamba1_s_full"] {
@@ -38,9 +42,9 @@ fn main() -> anyhow::Result<()> {
             if masked {
                 // half-random masks exercise the masking path
                 let mut rng = Rng::new(0);
-                tr.masks = ssm_peft::peft::random_masks(&tr.variant, 0.5, &mut rng);
+                tr.set_masks(ssm_peft::peft::random_masks(&tr.variant, 0.5, &mut rng));
             } else {
-                tr.masks = Masks::none(tr.variant.train_params.len());
+                tr.set_masks(Masks::none(tr.variant.train_params.len()));
             }
             let ds = tasks::by_name("dart", 0, 64);
             let mut rng = Rng::new(2);
@@ -50,25 +54,41 @@ fn main() -> anyhow::Result<()> {
             let full = time("step", 1, 6, || {
                 tr.step(&batch).unwrap();
             });
-            // host-only: AdamW update on fake grads of the same shapes
-            let mut params: Vec<Tensor> = tr.train_params.clone();
+
+            // legacy host-only reference: three passes on fake grads of
+            // the same shapes (with the per-step grad clone the old
+            // readback path paid)
+            let mut params: Vec<Tensor> = tr.snapshot_train();
             let grads: Vec<Tensor> =
                 params.iter().map(|t| Tensor::from_vec(&t.shape,
                     vec![0.01; t.numel()])).collect();
             let mut opt = AdamW::new(&params);
-            let masks = tr.masks.clone();
-            let host = time("host", 1, 6, || {
+            let masks = tr.masks().clone();
+            let legacy = time("legacy host", 1, 6, || {
                 let mut g = grads.clone();
                 masks.apply(&mut g);
                 ssm_peft::optim::clip_global_norm(&mut g, 1.0);
                 opt.step(&mut params, &g, 1e-3);
             });
+
+            // fused host-only: one pass over the arena, no grad clone
+            let mut arena = ParamArena::pack(&tr.snapshot_train());
+            let garena: Vec<f32> = vec![0.01; arena.len()];
+            let mut fopt = FusedAdamW::new(&arena);
+            let (m, v) = (fopt.moments().0.to_vec(), fopt.moments().1.to_vec());
+            let plan = MaskPlan::compile(&masks.masks, &arena, &m, &v);
+            let workers = ssm_peft::optim::fused_workers();
+            let fused = time("fused host", 1, 6, || {
+                fopt.step(&mut arena, &garena, &plan, 1e-3, 1.0, workers);
+            });
+
             table.row(vec![
                 variant.into(),
                 masked.to_string(),
                 format!("{:.4}", full.mean_s),
-                format!("{:.4}", host.mean_s),
-                format!("{:.1}%", 100.0 * host.mean_s / full.mean_s.max(1e-12)),
+                format!("{:.4}", legacy.mean_s),
+                format!("{:.4}", fused.mean_s),
+                format!("{:.1}%", 100.0 * fused.mean_s / full.mean_s.max(1e-12)),
             ]);
             table.print();
         }

@@ -41,13 +41,13 @@ fn run(engine: &Engine, manifest: &Manifest, variant: &str,
         let after = tr.train_map();
         let (masks, _) = select_dimensions(&tr.variant, &before, &after, cfg);
         tr.restore_train(snap);
-        tr.masks = masks;
+        tr.set_masks(masks);
     }
     for it in 0..TRAIN_ITERS {
         let i = it % xs.len();
         tr.step_reg(&xs[i], &ys[i], &mask)?;
     }
-    let budget = Budget::of(&tr.variant, Some(&tr.masks));
+    let budget = Budget::of(&tr.variant, Some(tr.masks()));
     let mse = eval_regression(&tr, xs_test, ys_test)?;
     Ok((budget.trainable, mse))
 }

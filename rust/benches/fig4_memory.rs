@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
             let after = tr.train_map();
             let (masks, _) =
                 ssm_peft::peft::select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
-            tr.masks = masks;
+            tr.set_masks(masks);
         }
         let ds = tasks::by_name("dart", 0, 64);
         let mut rng = Rng::new(2);
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         let rss0 = rss_bytes();
         tr.step(&batch)?;
         let rss1 = rss_bytes();
-        let budget = Budget::of(&tr.variant, Some(&tr.masks));
+        let budget = Budget::of(&tr.variant, Some(tr.masks()));
         let l = tr.variant.batch_l;
         // activations ≈ B*L*(2*Di + vocab) per layer for the scan path
         let act = tr.variant.batch_b * l

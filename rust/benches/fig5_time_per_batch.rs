@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             let after = tr.train_map();
             let (masks, _) =
                 ssm_peft::peft::select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
-            tr.masks = masks;
+            tr.set_masks(masks);
         }
         let ds = tasks::by_name("dart", 0, 64);
         let mut rng = Rng::new(3);

@@ -51,7 +51,7 @@ fn main() -> Result<()> {
             let after = tr.train_map();
             let (masks, _) = select_dimensions(&tr.variant, &before, &after, &cfg);
             tr.restore_train(snap);
-            tr.masks = masks;
+            tr.set_masks(masks);
         }
         let t0 = std::time::Instant::now();
         println!("{label}: wall-clock vs test MSE");

@@ -1,0 +1,379 @@
+//! `bench hotpath`: per-step latency breakdown + decode tokens/sec for the
+//! fused parameter-arena hot path, emitted as `results/BENCH_hotpath.json`.
+//!
+//! Two modes, chosen automatically:
+//!
+//! - **mock** (always available, used by the CI `bench-smoke` job): a
+//!   synthetic Mamba-shaped parameter set compares the legacy three-pass
+//!   host optimizer (per-step grad clone → mask → clip → AdamW) against
+//!   the fused arena pass, across mask scenarios and worker counts.
+//! - **artifacts** (when `make artifacts` has run): real [`Trainer`] steps
+//!   on the smallest step-capable variant with the per-phase
+//!   [`StepTimings`] breakdown, a measured legacy-host reconstruction on
+//!   the same shapes, and greedy-decode throughput with resident vs
+//!   reference (re-serializing) parameter/state handling.
+//!
+//! `SSM_PEFT_BENCH_SCALE` scales iteration counts and the synthetic model
+//! size (0.1 = tiny CI mode). The JSON schema is documented in
+//! rust/docs/performance.md; every number is a mean over timed iterations.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bench::{time, TablePrinter};
+use crate::data::tasks;
+use crate::eval::{greedy_decode, DecodeCore, DecodeState, StepDecode};
+use crate::json::{self, Value};
+use crate::manifest::Manifest;
+use crate::optim::{
+    clip_global_norm, fused_workers, AdamW, FusedAdamW, MaskPlan, ParamArena,
+};
+use crate::peft::Masks;
+use crate::runtime::Engine;
+use crate::tensor::{IntTensor, Rng, Tensor};
+use crate::train::{StepTimings, TrainConfig, Trainer};
+
+fn bench_scale() -> f32 {
+    std::env::var("SSM_PEFT_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Synthetic Mamba-shaped trainable leaves (per layer: A_log, xproj, out).
+fn synth_leaves(scale: f32, rng: &mut Rng) -> Vec<Tensor> {
+    let di = ((256.0 * scale.sqrt()).round() as usize).max(16);
+    let (h, r, layers) = (16usize, 8usize, 4usize);
+    let mut leaves = Vec::new();
+    for _ in 0..layers {
+        for shape in [vec![di, h], vec![di, r + 2 * h], vec![di, di]] {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+            leaves.push(Tensor::from_vec(&shape, data));
+        }
+    }
+    leaves
+}
+
+fn synth_grads(leaves: &[Tensor], rng: &mut Rng) -> Vec<Tensor> {
+    leaves
+        .iter()
+        .map(|t| {
+            let data: Vec<f32> = (0..t.numel()).map(|_| rng.normal() * 0.01).collect();
+            Tensor::from_vec(&t.shape, data)
+        })
+        .collect()
+}
+
+/// Mask scenario: `None` = unmasked, `Some(keep_every)` = binary mask with
+/// one active entry per `keep_every` (SDT-like sparsity).
+fn scenario_masks(leaves: &[Tensor], keep_every: Option<usize>) -> Masks {
+    match keep_every {
+        None => Masks::none(leaves.len()),
+        Some(k) => Masks {
+            masks: leaves
+                .iter()
+                .map(|t| {
+                    Some(
+                        (0..t.numel())
+                            .map(|j| if j % k == 0 { 1.0 } else { 0.0 })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        },
+    }
+}
+
+/// One mock scenario: legacy three-pass vs fused pass (1 and N workers).
+fn mock_scenario(
+    name: &str,
+    leaves: &[Tensor],
+    grads: &[Tensor],
+    masks: &Masks,
+    iters: usize,
+    workers: usize,
+    table: &mut TablePrinter,
+) -> (String, Value) {
+    let mut params = leaves.to_vec();
+    let mut opt = AdamW::new(&params);
+    opt.weight_decay = 0.01;
+    let legacy = time("legacy", 1, iters, || {
+        // the legacy readback path materialized fresh grad tensors every
+        // step; the clone reproduces that cost
+        let mut g = grads.to_vec();
+        masks.apply(&mut g);
+        clip_global_norm(&mut g, 1.0);
+        opt.step(&mut params, &g, 1e-3);
+    });
+
+    let mut fused_means = Vec::new();
+    let wlist: Vec<usize> = if workers > 1 { vec![1, workers] } else { vec![1] };
+    for w in wlist {
+        let mut arena = ParamArena::pack(leaves);
+        let garena = ParamArena::pack(grads);
+        let mut fopt = FusedAdamW::new(&arena);
+        fopt.weight_decay = 0.01;
+        let (m, v) = (fopt.moments().0.to_vec(), fopt.moments().1.to_vec());
+        let plan = MaskPlan::compile(&masks.masks, &arena, &m, &v);
+        let st = time(&format!("fused w{w}"), 1, iters, || {
+            fopt.step(&mut arena, garena.data(), &plan, 1e-3, 1.0, w);
+        });
+        fused_means.push((w, st.mean_s));
+    }
+    let fused_best = fused_means.iter().map(|&(_, s)| s).fold(f64::INFINITY, f64::min);
+    let speedup = legacy.mean_s / fused_best.max(1e-12);
+    table.row(vec![
+        name.into(),
+        leaves.iter().map(Tensor::numel).sum::<usize>().to_string(),
+        format!("{:.6}", legacy.mean_s),
+        format!("{:.6}", fused_means[0].1),
+        format!("{:.6}", fused_means.last().unwrap().1),
+        format!("{speedup:.1}x"),
+    ]);
+    let mut fields = vec![
+        ("n_params", json::num(leaves.iter().map(Tensor::numel).sum::<usize>() as f64)),
+        ("legacy_host_s", json::num(legacy.mean_s)),
+        ("speedup", json::num(speedup)),
+    ];
+    for (w, s) in &fused_means {
+        fields.push(match w {
+            1 => ("fused_host_s_w1", json::num(*s)),
+            _ => ("fused_host_s_wn", json::num(*s)),
+        });
+    }
+    (name.to_string(), json::obj(fields))
+}
+
+/// Real-artifact training telemetry: fused per-phase means plus a measured
+/// legacy-host reconstruction (serialize ALL leaves + materialize grad
+/// tensors + three passes) on the same shapes.
+fn bench_train(engine: &Engine, manifest: &Manifest, scale: f32)
+    -> Result<(String, Value)> {
+    // smallest step-capable variant; prefer the canonical full model
+    let variant = if manifest.variants.contains_key("mamba1_xs_full") {
+        "mamba1_xs_full".to_string()
+    } else {
+        manifest
+            .variants
+            .iter()
+            .find(|(_, v)| v.step_file.is_some() && v.fwd_file.is_some() && !v.reg)
+            .map(|(k, _)| k.clone())
+            .ok_or_else(|| anyhow::anyhow!("no step-capable variant in manifest"))?
+    };
+    let steps = ((12.0 * scale).round() as usize).max(4);
+    let mut tr = Trainer::new(engine, manifest, &variant, &TrainConfig::default())?;
+    let ds = tasks::by_name("dart", 0, 64);
+    let mut rng = Rng::new(0);
+    let mut it = crate::data::BatchIter::new(
+        &ds.train, &mut rng, tr.variant.batch_b, tr.variant.batch_l,
+    );
+    let (batch, _) = it.next().unwrap();
+    for _ in 0..2 {
+        tr.step(&batch)?; // warmup (compile caches, allocator)
+    }
+    let before = tr.timings_total();
+    let c0 = tr.step_count;
+    for _ in 0..steps {
+        tr.step(&batch)?;
+    }
+    let mut totals = tr.timings_total();
+    totals.accumulate(&before.scaled(-1.0));
+    let mean: StepTimings = totals.scaled(1.0 / (tr.step_count - c0) as f64);
+
+    // legacy host reconstruction on the live shapes
+    let params = tr.snapshot_train();
+    let grads = tr.last_grads();
+    let masks = tr.masks().clone();
+    let mut lparams = params.clone();
+    let mut lopt = AdamW::new(&lparams);
+    let legacy = time("legacy host", 1, steps.max(3), || {
+        // upload: serialize every trainable leaf
+        let _lits: Vec<_> = lparams
+            .iter()
+            .map(|t| crate::runtime::literal_f32(t).unwrap())
+            .collect();
+        // readback: materialize fresh grad tensors
+        let mut g: Vec<Tensor> = grads
+            .iter()
+            .map(|t| Tensor::from_vec(&t.shape, t.data.clone()))
+            .collect();
+        // three host passes
+        masks.apply(&mut g);
+        clip_global_norm(&mut g, 1.0);
+        lopt.step(&mut lparams, &g, 1e-3);
+    });
+    let fused_host = mean.host_s();
+    let fields = vec![
+        ("variant", json::s(&variant)),
+        ("steps", json::num(steps as f64)),
+        ("upload_s", json::num(mean.upload_s)),
+        ("execute_s", json::num(mean.execute_s)),
+        ("readback_s", json::num(mean.readback_s)),
+        ("optim_s", json::num(mean.optim_s)),
+        ("host_s", json::num(fused_host)),
+        ("total_s", json::num(mean.total_s())),
+        ("legacy_host_s", json::num(legacy.mean_s)),
+        ("host_overhead_reduction", json::num(legacy.mean_s / fused_host.max(1e-12))),
+    ];
+    Ok((variant, json::obj(fields)))
+}
+
+/// Reference decode model: re-serializes parameters and round-trips the
+/// state through the host every token (the pre-arena behavior).
+struct ReferenceDecode<'a>(&'a DecodeCore);
+
+impl StepDecode for ReferenceDecode<'_> {
+    fn arch_b(&self) -> usize {
+        self.0.arch_b()
+    }
+    fn dims(&self) -> crate::eval::StateDims {
+        self.0.dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        self.0.step_reference(tokens, state)
+    }
+}
+
+/// Greedy-decode throughput: resident vs reference parameter/state paths.
+fn bench_decode(engine: &Engine, manifest: &Manifest, scale: f32)
+    -> Result<Option<Value>> {
+    let Some((name, v)) = manifest
+        .variants
+        .iter()
+        .find(|(_, v)| v.decode_file.is_some() && !v.reg)
+        .map(|(k, v)| (k.clone(), v.clone()))
+    else {
+        return Ok(None);
+    };
+    let params = manifest.load_params(&v)?;
+    // for-reference build keeps host params so the baseline can replay the
+    // pre-arena per-token serialization; the resident path is unaffected
+    let core = DecodeCore::new_for_reference(engine, manifest, &name, &params)?;
+    let max_new = ((48.0 * scale).round() as usize).max(8);
+    let prompts: Vec<Vec<u8>> = (0..core.arch_b())
+        .map(|i| format!("name=row{i}|team=red").into_bytes())
+        .collect();
+    let run = |model: &dyn StepDecode| -> Result<(f64, usize)> {
+        let t0 = Instant::now();
+        let outs = greedy_decode(model, &prompts, max_new, b'\n', None)?;
+        Ok((t0.elapsed().as_secs_f64(), outs.iter().map(Vec::len).sum()))
+    };
+    // warmup (XLA compile happens on first execute)
+    run(&core)?;
+    let (res_s, res_toks) = run(&core)?;
+    let reference = ReferenceDecode(&core);
+    let (ref_s, ref_toks) = run(&reference)?;
+    let res_tps = res_toks as f64 / res_s.max(1e-12);
+    let ref_tps = ref_toks as f64 / ref_s.max(1e-12);
+    Ok(Some(json::obj(vec![
+        ("variant", json::s(&name)),
+        ("batch", json::num(core.arch_b() as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("tok_per_s_resident", json::num(res_tps)),
+        ("tok_per_s_reference", json::num(ref_tps)),
+        ("speedup", json::num(res_tps / ref_tps.max(1e-12))),
+    ])))
+}
+
+/// Run the hot-path bench and write `results/BENCH_hotpath.json`.
+pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
+    let scale = bench_scale();
+    let iters = ((20.0 * scale).round() as usize).max(5);
+    let workers = fused_workers();
+    let mut rng = Rng::new(0x407);
+    let leaves = synth_leaves(scale, &mut rng);
+    let grads = synth_grads(&leaves, &mut rng);
+
+    let mut table = TablePrinter::new(&[
+        "scenario", "params", "legacy (s)", "fused w1 (s)", "fused wN (s)", "speedup",
+    ]);
+    let mut mock_fields = Vec::new();
+    let mut headline = 0.0;
+    for (name, keep) in [("none", None), ("sdt", Some(100)), ("half", Some(2))] {
+        let masks = scenario_masks(&leaves, keep);
+        let (key, val) =
+            mock_scenario(name, &leaves, &grads, &masks, iters, workers, &mut table);
+        if name == "sdt" {
+            headline = val.get("speedup").and_then(Value::as_f64).unwrap_or(0.0);
+        }
+        mock_fields.push((key, val));
+    }
+
+    // artifact mode when the AOT artifacts exist
+    let mut mode = "mock";
+    let mut train_val = None;
+    let mut decode_val = None;
+    if crate::artifacts_dir().join("manifest.json").exists() {
+        let engine = Engine::cpu()?;
+        let manifest = Manifest::load(crate::artifacts_dir())?;
+        mode = "artifacts";
+        let (_variant, tv) = bench_train(&engine, &manifest, scale)?;
+        // the measured end-to-end reduction supersedes the mock headline
+        headline = tv
+            .get("host_overhead_reduction")
+            .and_then(Value::as_f64)
+            .unwrap_or(headline);
+        train_val = Some(tv);
+        decode_val = bench_decode(&engine, &manifest, scale)?;
+    } else {
+        eprintln!("[bench hotpath] no artifacts; mock mode only (run `make artifacts`)");
+    }
+
+    println!("\n=== bench hotpath (scale {scale}, {workers} workers, mode {mode}) ===");
+    table.print();
+
+    let mock_obj = Value::Obj(
+        mock_fields.into_iter().collect::<BTreeMap<String, Value>>(),
+    );
+    let mut root = vec![
+        ("schema", json::num(1.0)),
+        ("scale", json::num(scale as f64)),
+        ("mode", json::s(mode)),
+        ("workers", json::num(workers as f64)),
+        ("optimizer_mock", mock_obj),
+        ("host_overhead_reduction", json::num(headline)),
+    ];
+    if let Some(tv) = train_val {
+        root.push(("train", tv));
+    }
+    if let Some(dv) = decode_val {
+        root.push(("decode", dv));
+    }
+    let path = crate::results_dir().join("BENCH_hotpath.json");
+    std::fs::write(&path, json::emit(&json::obj(root)))?;
+    println!("host-overhead reduction vs pre-arena baseline: {headline:.1}x");
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_leaves_scale_down() {
+        let mut rng = Rng::new(1);
+        let small = synth_leaves(0.1, &mut rng);
+        let big = synth_leaves(1.0, &mut rng);
+        let n = |ls: &[Tensor]| ls.iter().map(Tensor::numel).sum::<usize>();
+        assert!(n(&small) < n(&big));
+        assert_eq!(small.len(), 12, "3 leaves x 4 layers");
+    }
+
+    #[test]
+    fn scenario_masks_shapes() {
+        let mut rng = Rng::new(2);
+        let leaves = synth_leaves(0.1, &mut rng);
+        let m = scenario_masks(&leaves, Some(100));
+        for (t, mk) in leaves.iter().zip(&m.masks) {
+            let mk = mk.as_ref().unwrap();
+            assert_eq!(mk.len(), t.numel());
+            let active = mk.iter().filter(|&&x| x != 0.0).count();
+            assert!(active >= 1 && active <= t.numel() / 50);
+        }
+        assert!(scenario_masks(&leaves, None).masks.iter().all(Option::is_none));
+    }
+}

@@ -1,9 +1,12 @@
-//! Timing/memory harness for the `cargo bench` targets.
+//! Timing/memory harness for the `cargo bench` targets, plus the
+//! [`hotpath`] telemetry bench behind the `bench hotpath` CLI subcommand.
 //!
 //! `criterion` is not available in the offline vendor set, so benches are
 //! `harness = false` binaries built on this module: warmup + timed
 //! iterations with mean/std, plus RSS sampling from /proc for the memory
 //! figures (Fig. 4 / Table 16).
+
+pub mod hotpath;
 
 use std::time::Instant;
 

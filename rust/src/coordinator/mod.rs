@@ -164,8 +164,10 @@ impl<'a> Pipeline<'a> {
             tr.train_map()
         };
         let (masks, _sel) = select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
+        // restore first: the optimizer reset makes the mask plan compile to
+        // sparse index sets (moments are zero under the frozen entries)
         tr.restore_train(snap);
-        tr.masks = masks;
+        tr.set_masks(masks);
         Ok(t0.elapsed().as_secs_f64())
     }
 
@@ -188,6 +190,9 @@ impl<'a> Pipeline<'a> {
                 tr.step(&batch)?;
             }
             epoch_times.push(t0.elapsed().as_secs_f64());
+            // refresh the literal cache once so the eval batches below
+            // reuse it instead of re-serializing dirty leaves per call
+            tr.sync_device()?;
             let val = eval::eval_split_loss(tr, &ds.val, cfg.seed ^ 0x7a1)?;
             if val < best_val {
                 best_val = val;
@@ -195,7 +200,7 @@ impl<'a> Pipeline<'a> {
             }
         }
         if let Some(p) = best_params {
-            tr.train_params = p; // early stopping: keep best epoch
+            tr.set_train_params(p); // early stopping: keep best epoch
         }
         Ok((best_val, crate::tensor::mean(&epoch_times)))
     }
@@ -271,9 +276,10 @@ impl<'a> Pipeline<'a> {
         };
 
         let (_best_val, epoch_s) = self.run_epochs(&mut tr, &ds, cfg, cfg.epochs, 0x7a11)?;
+        tr.sync_device()?; // early-stopping restore dirtied the leaf cache
 
         // ---- evaluation ------------------------------------------------------
-        let budget = Budget::of(&tr.variant, Some(&tr.masks));
+        let budget = Budget::of(&tr.variant, Some(tr.masks()));
         let mut scores = BTreeMap::new();
         let metric;
         if ds.metric.generative() {

@@ -6,14 +6,23 @@
 //! online server ([`crate::serve`]) share one implementation:
 //!
 //! - [`StepDecode`] — the minimal stepwise-decode interface: batch width,
-//!   state geometry ([`StateDims`]), and one `(tokens, conv, ssm) →
-//!   (logits, conv', ssm')` step. Implemented by [`DecodeCore`] over the
-//!   real XLA executable, and by mock models in scheduler unit tests.
+//!   state geometry ([`StateDims`]), and one `(tokens, state) → logits`
+//!   step that advances a [`DecodeState`] in place. Implemented by
+//!   [`DecodeCore`] over the real XLA executable, and by mock models in
+//!   scheduler unit tests.
 //! - [`greedy_decode`] / [`beam_search`] — decoding strategies written
 //!   against `dyn StepDecode`. [`Generator`] is the thin offline wrapper
 //!   (build a core from merged params, then greedy/beam over a split);
 //!   [`crate::serve::Scheduler`] drives the same trait online, packing
 //!   many independent requests into the batch dimension.
+//!
+//! Hot-path residency (§Perf L4, rust/docs/performance.md): a
+//! [`DecodeState`] keeps the recurrent `(conv, ssm)` state as the
+//! *literals* the previous step produced, feeding them back as the next
+//! step's inputs with no Tensor round-trip; [`DecodeCore`] serializes its
+//! parameter literals once at construction instead of once per token. The
+//! host mirror is materialized lazily, only when a caller actually touches
+//! rows (scheduler admission, beam re-parenting).
 
 use std::collections::BTreeMap;
 
@@ -25,7 +34,7 @@ use crate::data::words_to_ids;
 use crate::data::{make_batch, Dataset, Example, BOS, PAD};
 use crate::manifest::{Manifest, Variant};
 use crate::metrics;
-use crate::runtime::{Engine, Executable, Input};
+use crate::runtime::{Engine, Executable};
 use crate::suite::Metric;
 use crate::tensor::{argmax, IntTensor, Tensor};
 use crate::train::Trainer;
@@ -177,6 +186,93 @@ impl StateDims {
     }
 }
 
+/// The recurrent decode state of one batched stream: a host `(conv, ssm)`
+/// mirror plus, when the model runs on XLA, the *literals* the previous
+/// step produced ([`crate::runtime::StatePair`]).
+///
+/// On the steady-state decode path the state stays literal-resident: step
+/// outputs feed straight back as the next step's inputs and the host
+/// mirror is never materialized. Callers that need to touch rows
+/// (scheduler admission, beam re-parenting, h0 seeding) go through
+/// [`DecodeState::host_mut`], which lazily syncs the mirror and marks the
+/// literals stale so the next step re-serializes — the cost is paid only
+/// when rows actually change (§Perf L4).
+pub struct DecodeState {
+    conv: Tensor,
+    ssm: Tensor,
+    resident: Option<crate::runtime::StatePair>,
+    host_fresh: bool,
+}
+
+impl DecodeState {
+    /// Fresh state for `b` rows; `h0` seeds every row's SSM state
+    /// (initial-state tuning).
+    pub fn new(dims: StateDims, b: usize, h0: Option<&BTreeMap<String, Tensor>>)
+        -> DecodeState {
+        let (conv, ssm) = dims.init_states(b, h0);
+        DecodeState { conv, ssm, resident: None, host_fresh: true }
+    }
+
+    fn sync_host(&mut self) -> Result<()> {
+        if self.host_fresh {
+            return Ok(());
+        }
+        let pair = self.resident.as_ref().expect("stale host without resident state");
+        crate::runtime::read_f32_into(&pair.conv, &mut self.conv.data)?;
+        crate::runtime::read_f32_into(&pair.ssm, &mut self.ssm.data)?;
+        self.host_fresh = true;
+        Ok(())
+    }
+
+    /// Read access to the host `(conv, ssm)` mirror (synced on demand; the
+    /// resident literals stay valid).
+    pub fn host(&mut self) -> Result<(&Tensor, &Tensor)> {
+        self.sync_host()?;
+        Ok((&self.conv, &self.ssm))
+    }
+
+    /// Mutable access to the host mirror. Syncs on demand and invalidates
+    /// the resident literals — the next step serializes from host. Pay
+    /// this only when a row genuinely changes.
+    pub fn host_mut(&mut self) -> Result<(&mut Tensor, &mut Tensor)> {
+        self.sync_host()?;
+        self.resident = None;
+        Ok((&mut self.conv, &mut self.ssm))
+    }
+
+    /// Reset one row (conv to zeros, SSM to `h0` or zeros) — scheduler
+    /// slot recycling. See [`StateDims::reset_row`].
+    pub fn reset_row(&mut self, dims: &StateDims, b: usize, row: usize,
+                     h0: Option<&BTreeMap<String, Tensor>>) -> Result<()> {
+        let (conv, ssm) = self.host_mut()?;
+        dims.reset_row(Some(conv), Some(ssm), b, row, h0);
+        Ok(())
+    }
+
+    /// Literals for the next execute: the previous step's outputs when
+    /// resident, else a fresh serialization of the host mirror (cached, so
+    /// repeated calls don't re-serialize).
+    pub(crate) fn exec_literals(&mut self)
+        -> Result<(&xla::Literal, &xla::Literal)> {
+        if self.resident.is_none() {
+            debug_assert!(self.host_fresh, "no resident state and stale host");
+            self.resident = Some(crate::runtime::StatePair {
+                conv: crate::runtime::literal_f32(&self.conv)?,
+                ssm: crate::runtime::literal_f32(&self.ssm)?,
+            });
+        }
+        let pair = self.resident.as_ref().unwrap();
+        Ok((&pair.conv, &pair.ssm))
+    }
+
+    /// Adopt a step's output literals as the new state (host mirror goes
+    /// stale until someone asks for it).
+    pub(crate) fn install(&mut self, pair: crate::runtime::StatePair) {
+        self.resident = Some(pair);
+        self.host_fresh = false;
+    }
+}
+
 /// The stepwise decode interface shared by offline eval ([`Generator`]) and
 /// the online serving scheduler ([`crate::serve::Scheduler`]).
 ///
@@ -191,20 +287,31 @@ pub trait StepDecode {
     /// Recurrent-state geometry (for allocating/seeding/resetting rows).
     fn dims(&self) -> StateDims;
 
-    /// Advance one token: `(tokens (B,), conv, ssm) → (logits (B, V),
-    /// conv', ssm')`. `V ≥ 256`; generation samples from the byte
+    /// Fresh state for this model's geometry (`h0` = initial-state tuning
+    /// seed applied to every row).
+    fn new_state(&self, h0: Option<&BTreeMap<String, Tensor>>) -> DecodeState {
+        DecodeState::new(self.dims(), self.arch_b(), h0)
+    }
+
+    /// Advance one token: `tokens (B,)` → `logits (B, V)`, advancing
+    /// `state` in place. `V ≥ 256`; generation samples from the byte
     /// sub-vocabulary `[..256]`.
-    fn step(&self, tokens: &IntTensor, conv: &Tensor, ssm: &Tensor)
-        -> Result<(Tensor, Tensor, Tensor)>;
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor>;
 }
 
 /// A decode-ready model: the compiled stepwise `decode` executable bound to
 /// one merged parameter set. This is the unit the adapter registry caches —
-/// same executable, different parameters per fine-tuned variant.
+/// same executable, different parameters per fine-tuned variant. Parameter
+/// literals are serialized ONCE here, not once per token (§Perf L4).
 pub struct DecodeCore {
     decode: Executable,
-    /// parameter tensors in the decode variant's argument order
-    params: Vec<Tensor>,
+    /// Parameters pre-serialized in the decode variant's argument order
+    /// (reused every step).
+    param_lits: Vec<xla::Literal>,
+    /// Host parameter copies — retained ONLY by
+    /// [`DecodeCore::new_for_reference`] for the bench baseline; the
+    /// serving path keeps a single (literal) copy per cached adapter.
+    params: Option<Vec<Tensor>>,
     arch_b: usize,
     dims: StateDims,
 }
@@ -216,18 +323,82 @@ impl DecodeCore {
     /// (adapter leaves, `h0`) are ignored.
     pub fn new(engine: &Engine, manifest: &Manifest, decode_variant: &str,
                params_map: &BTreeMap<String, Tensor>) -> Result<Self> {
+        Self::build(engine, manifest, decode_variant, params_map, false)
+    }
+
+    /// Like [`DecodeCore::new`] but also retains host parameter copies so
+    /// [`DecodeCore::step_reference`] can replay the pre-arena per-token
+    /// serialization cost. Bench use only.
+    pub fn new_for_reference(engine: &Engine, manifest: &Manifest, decode_variant: &str,
+                             params_map: &BTreeMap<String, Tensor>) -> Result<Self> {
+        Self::build(engine, manifest, decode_variant, params_map, true)
+    }
+
+    fn build(engine: &Engine, manifest: &Manifest, decode_variant: &str,
+             params_map: &BTreeMap<String, Tensor>, keep_host: bool) -> Result<Self> {
         let v: &Variant = manifest.variant(decode_variant)?;
         let file = v.decode_file.clone()
             .with_context(|| format!("{decode_variant} has no decode artifact"))?;
         let decode = engine.load(manifest.hlo_path(&file))?;
+        let mut param_lits = Vec::new();
         let mut params = Vec::new();
         for meta in v.train_params.iter().chain(v.frozen_params.iter()) {
             let t = params_map.get(&meta.name).with_context(|| {
                 format!("merged params missing {} for decode", meta.name)
             })?;
-            params.push(t.clone());
+            param_lits.push(crate::runtime::literal_f32(t)?);
+            if keep_host {
+                params.push(t.clone());
+            }
         }
-        Ok(DecodeCore { decode, params, arch_b: v.batch_b, dims: StateDims::of(v) })
+        let params = keep_host.then_some(params);
+        Ok(DecodeCore { decode, param_lits, params, arch_b: v.batch_b, dims: StateDims::of(v) })
+    }
+
+    /// Reference step that re-serializes every parameter literal and
+    /// forces the state through the host (the pre-arena behavior). Kept
+    /// ONLY as the `bench hotpath` baseline — never use it to serve.
+    /// Errors unless the core was built with
+    /// [`DecodeCore::new_for_reference`].
+    pub fn step_reference(&self, tokens: &IntTensor, state: &mut DecodeState)
+        -> Result<Tensor> {
+        state.host_mut()?; // drop residency: state re-serializes from host
+        self.step_inner(tokens, state, false)
+    }
+
+    fn step_inner(&self, tokens: &IntTensor, state: &mut DecodeState,
+                  resident_params: bool) -> Result<Tensor> {
+        let tok_lit = crate::runtime::literal_i32(tokens)?;
+        let fresh: Vec<xla::Literal> = if resident_params {
+            Vec::new()
+        } else {
+            self.params
+                .as_ref()
+                .context("step_reference needs DecodeCore::new_for_reference")?
+                .iter()
+                .map(crate::runtime::literal_f32)
+                .collect::<Result<Vec<_>>>()?
+        };
+        let mut outs = {
+            let (conv_lit, ssm_lit) = state.exec_literals()?;
+            let mut refs: Vec<&xla::Literal> =
+                Vec::with_capacity(self.param_lits.len() + 3);
+            if resident_params {
+                refs.extend(self.param_lits.iter());
+            } else {
+                refs.extend(fresh.iter());
+            }
+            refs.push(&tok_lit);
+            refs.push(conv_lit);
+            refs.push(ssm_lit);
+            self.decode.run_refs_literals(&refs)?
+        };
+        let ssm_out = outs.pop().context("decode returned no ssm state")?;
+        let conv_out = outs.pop().context("decode returned no conv state")?;
+        let logits = outs.pop().context("decode returned no logits")?;
+        let logits = crate::runtime::tensor_from_literal(&logits)?;
+        state.install(crate::runtime::StatePair { conv: conv_out, ssm: ssm_out });
+        Ok(logits)
     }
 }
 
@@ -240,17 +411,8 @@ impl StepDecode for DecodeCore {
         self.dims
     }
 
-    fn step(&self, tokens: &IntTensor, conv: &Tensor, ssm: &Tensor)
-        -> Result<(Tensor, Tensor, Tensor)> {
-        let mut inputs: Vec<Input> = self.params.iter().map(Input::F).collect();
-        inputs.push(Input::I(tokens));
-        inputs.push(Input::F(conv));
-        inputs.push(Input::F(ssm));
-        let mut outs = self.decode.run(&inputs)?;
-        let ssm_out = outs.pop().unwrap();
-        let conv_out = outs.pop().unwrap();
-        let logits = outs.pop().unwrap();
-        Ok((logits, conv_out, ssm_out))
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        self.step_inner(tokens, state, true)
     }
 }
 
@@ -263,15 +425,15 @@ pub fn greedy_decode(model: &dyn StepDecode, prompts: &[Vec<u8>], max_new: usize
     -> Result<Vec<Vec<u8>>> {
     assert!(prompts.len() <= model.arch_b());
     let b = model.arch_b();
-    let (mut conv, mut ssm) = model.dims().init_states(b, h0);
+    // greedy never touches rows mid-stream, so the state stays
+    // literal-resident for the whole generation (§Perf L4)
+    let mut state = model.new_state(h0);
     let max_prompt = prompts.iter().map(Vec::len).max().unwrap_or(0);
     let mut outs: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
     let mut done = vec![false; prompts.len()];
     let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
     for t in 0..max_prompt + max_new {
-        let (logits, c2, s2) = model.step(&cur, &conv, &ssm)?;
-        conv = c2;
-        ssm = s2;
+        let logits = model.step(&cur, &mut state)?;
         let v = logits.shape[1];
         for r in 0..prompts.len() {
             let next: i32 = if t < prompts[r].len() {
@@ -343,15 +505,12 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
     let width = width.min(model.arch_b()).max(1);
     let b = model.arch_b();
     let dims = model.dims();
-    let (mut conv, mut ssm) = dims.init_states(b, h0);
+    let mut state = model.new_state(h0);
     // prefill all rows with the same prompt
     let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
     let mut logits = Tensor::zeros(&[b, 256]);
     for t in 0..=prompt.len() {
-        let (lg, c2, s2) = model.step(&cur, &conv, &ssm)?;
-        conv = c2;
-        ssm = s2;
-        logits = lg;
+        logits = model.step(&cur, &mut state)?;
         if t < prompt.len() {
             for r in 0..b {
                 cur.data[r] = prompt[t] as i32;
@@ -379,7 +538,7 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
         if beams.iter().all(|bm| bm.done) {
             break;
         }
-        let (lg, c2, s2) = model.step(&cur, &conv, &ssm)?;
+        let lg = model.step(&cur, &mut state)?;
         // candidate = (parent beam, Some(expansion token) | None for a
         // carried finished beam, raw score, normalized score)
         let mut cand: Vec<(usize, Option<u8>, f64, f64)> = Vec::new();
@@ -403,8 +562,14 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
         }
         cand.sort_by(|a, bc| bc.3.partial_cmp(&a.3).unwrap());
         let mut new_beams = Vec::with_capacity(width);
-        let mut new_conv = c2.clone();
-        let mut new_ssm = s2.clone();
+        // re-parent surviving beams: snapshot the post-step state, then
+        // permute rows in the host mirror (slots beyond `width` keep their
+        // post-step values, matching the old clone-then-copy behavior)
+        let (src_conv, src_ssm) = {
+            let (c, s) = state.host()?;
+            (c.clone(), s.clone())
+        };
+        let (conv, ssm) = state.host_mut()?;
         for (slot, &(bi, tok, score, _)) in cand.iter().take(width).enumerate() {
             let src = beams[bi].clone();
             let (toks, done) = match tok {
@@ -418,11 +583,9 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
             };
             new_beams.push(Beam { toks, score, done });
             // copy parent state into this slot
-            dims.copy_row(&c2, &s2, &mut new_conv, &mut new_ssm, b, bi, slot);
+            dims.copy_row(&src_conv, &src_ssm, conv, ssm, b, bi, slot);
         }
         beams = new_beams;
-        conv = new_conv;
-        ssm = new_ssm;
         for r in 0..b {
             let bm = &beams[r.min(width - 1)];
             cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
@@ -605,8 +768,7 @@ pub(crate) mod testing {
         fn dims(&self) -> StateDims {
             StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 }
         }
-        fn step(&self, tokens: &IntTensor, _conv: &Tensor, _ssm: &Tensor)
-            -> Result<(Tensor, Tensor, Tensor)> {
+        fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
             self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let mut logits = Tensor::zeros(&[self.b, 256]);
             for r in 0..self.b {
@@ -614,12 +776,12 @@ pub(crate) mod testing {
                 let next = if (0..256).contains(&t) { ((t + 1) % 256) as usize } else { 1 };
                 logits.data[r * 256 + next] = 10.0;
             }
-            let dims = self.dims();
-            Ok((
-                logits,
-                Tensor::zeros(&[dims.n_layer, self.b, dims.d_conv - 1, dims.d_inner]),
-                Tensor::zeros(&[dims.n_layer, self.b, dims.d_inner, dims.d_state]),
-            ))
+            // the counter is stateless: zero the mirror like the old mock
+            // returned fresh zero tensors
+            let (conv, ssm) = state.host_mut()?;
+            conv.data.fill(0.0);
+            ssm.data.fill(0.0);
+            Ok(logits)
         }
     }
 }
@@ -672,6 +834,35 @@ mod tests {
         assert_eq!(beam, Vec::<u8>::new());
         // and no decode work happened at all
         assert_eq!(m.steps.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn decode_state_residency_roundtrip() {
+        // install literals as a step output would, then check the host
+        // mirror lazily syncs and host_mut invalidates residency
+        let d = StateDims { n_layer: 1, d_conv: 2, d_inner: 2, d_state: 1 };
+        let mut st = DecodeState::new(d, 1, None);
+        {
+            let (c, s) = st.exec_literals().unwrap();
+            // freshly-serialized host state: all zeros
+            assert_eq!(crate::runtime::tensor_from_literal(c).unwrap().data, vec![0.0, 0.0]);
+            assert_eq!(crate::runtime::tensor_from_literal(s).unwrap().data, vec![0.0, 0.0]);
+        }
+        let pair = crate::runtime::StatePair {
+            conv: crate::runtime::literal_f32(
+                &Tensor::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0])).unwrap(),
+            ssm: crate::runtime::literal_f32(
+                &Tensor::from_vec(&[1, 1, 2, 1], vec![3.0, 4.0])).unwrap(),
+        };
+        st.install(pair);
+        // host mirror syncs on demand from the installed literals
+        let (c, s) = st.host().unwrap();
+        assert_eq!(c.data, vec![1.0, 2.0]);
+        assert_eq!(s.data, vec![3.0, 4.0]);
+        // mutate a row: residency drops, next exec re-serializes the edit
+        st.reset_row(&d, 1, 0, None).unwrap();
+        let (c, _s) = st.exec_literals().unwrap();
+        assert_eq!(crate::runtime::tensor_from_literal(c).unwrap().data, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -13,19 +13,22 @@
 //! - [`runtime`] — PJRT CPU client, artifact loading/compile cache
 //! - [`manifest`] — the Python↔Rust artifact contract
 //! - [`tensor`], [`json`] — dependency-free substrates
-//! - [`optim`] — AdamW/SGD, LR schedules, gradient clipping
+//! - [`optim`] — AdamW/SGD, LR schedules, gradient clipping, and the
+//!   fused [`optim::ParamArena`] hot path (rust/docs/performance.md)
 //! - [`peft`] — PEFT engine: budgets, masks, **SDT dimension selection**
 //! - [`data`] — synthetic analogues of GLUE/DART/SAMSum/Spider/CIFAR/CelebA
 //! - [`metrics`] — accuracy, Matthews, ROUGE-1/2/L, BLEU, METEOR-lite, MSE
 //! - [`train`] — the training engine (epochs, early stopping, checkpoints)
 //! - [`eval`] — the shared generation core: the [`eval::StepDecode`]
-//!   stepwise interface plus greedy/beam strategies over it
+//!   stepwise interface, the literal-resident [`eval::DecodeState`], plus
+//!   greedy/beam strategies over them
 //! - [`coordinator`] — the per-experiment pipeline (pretrain → SDT → tune)
 //! - [`suite`] — typed experiment API (`PeftMethod`/`Metric`/`VariantId`)
 //!   + the parallel suite runner + JSONL `RunRecord` streams
 //! - [`serve`] — online multi-adapter generation: LRU adapter registry,
 //!   continuous-batching scheduler, `serve` CLI loop (stdin/TCP)
-//! - [`bench`] — timing harness used by `cargo bench` targets
+//! - [`bench`] — timing harness used by `cargo bench` targets + the
+//!   `bench hotpath` telemetry ([`bench::hotpath`])
 
 #![warn(missing_docs)]
 

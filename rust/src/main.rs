@@ -19,6 +19,12 @@
 //!                                stdin/stdout and/or TCP, continuous
 //!                                batching across adapters served from one
 //!                                staged base (schema: rust/docs/serving.md)
+//!   bench hotpath                fused hot-path telemetry: step-latency
+//!                                breakdown + decode tokens/sec, written to
+//!                                results/BENCH_hotpath.json (tiny CI mode:
+//!                                SSM_PEFT_BENCH_SCALE=0.1; falls back to a
+//!                                mock host-optimizer comparison when no
+//!                                artifacts exist — rust/docs/performance.md)
 
 use std::collections::BTreeMap;
 
@@ -48,6 +54,7 @@ fn main() -> Result<()> {
         "sdt-report" => sdt_report(&kvs),
         "generate" => generate(&kvs),
         "serve" => serve(&kvs),
+        "bench" => bench(&kvs, &pos),
         other => {
             eprintln!("unknown command {other}; see src/main.rs header");
             std::process::exit(2);
@@ -170,6 +177,17 @@ fn suite(kvs: &BTreeMap<String, String>) -> Result<()> {
         ssm_peft::results_dir().join(format!("{name}.jsonl")).display()
     );
     Ok(())
+}
+
+/// In-binary benchmarks (currently: `bench hotpath`); the paper-table
+/// benches stay as `cargo bench` targets.
+fn bench(kvs: &BTreeMap<String, String>, pos: &[String]) -> Result<()> {
+    match pos.get(1).map(String::as_str) {
+        Some("hotpath") => ssm_peft::bench::hotpath::run(kvs),
+        other => Err(anyhow!(
+            "unknown bench target {other:?}; available: hotpath"
+        )),
+    }
 }
 
 /// Run the online generation server (see rust/docs/serving.md).

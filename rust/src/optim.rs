@@ -1,9 +1,28 @@
-//! Optimizers, learning-rate schedules, and gradient clipping.
+//! Optimizers, learning-rate schedules, gradient clipping, and the fused
+//! parameter-arena hot path.
 //!
 //! The AOT `step` artifacts return raw gradients over the trainable leaves;
 //! the optimizer lives here so the PEFT engine (SDT masks, LoRA+ per-group
 //! learning rates) can intervene between gradient and update — exactly the
 //! boundary the paper's methods need.
+//!
+//! Two implementations coexist:
+//!
+//! - **Legacy reference** ([`AdamW`], [`Sgd`], [`clip_global_norm`],
+//!   `Masks::apply`): three separate scalar passes over `Vec<Tensor>`
+//!   leaves. Kept as the equivalence oracle for the fused path (see
+//!   `tests/fused_optimizer.rs`) and for ablation benches.
+//! - **Fused arena path** ([`ParamArena`] + [`MaskPlan`] + [`FusedAdamW`] /
+//!   [`FusedSgd`]): trainable leaves live in ONE contiguous f32 arena;
+//!   mask, global-norm clip and the optimizer update run as a single fused
+//!   pass over arena chunks, optionally fanned across a
+//!   `std::thread::scope` worker pool. SDT masks compile to sparse index
+//!   sets so a 99%-frozen leaf costs O(active) instead of O(numel).
+//!   §Perf ledger L3 (rust/docs/performance.md).
+//!
+//! Determinism: chunk boundaries and the chunk-ordered f64 norm reduction
+//! are fixed by the plan, not by the worker count, so 1-worker and
+//! N-worker runs produce bitwise-identical parameters.
 
 use crate::tensor::Tensor;
 
@@ -178,6 +197,652 @@ impl Sgd {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused parameter-arena hot path (§Perf L3)
+// ---------------------------------------------------------------------------
+
+/// One trainable leaf's slot inside a [`ParamArena`].
+#[derive(Debug, Clone)]
+pub struct ArenaLeaf {
+    /// Tensor shape of the leaf.
+    pub shape: Vec<usize>,
+    /// Element offset of the leaf inside the arena.
+    pub offset: usize,
+    /// Element count (`shape` product).
+    pub len: usize,
+}
+
+/// All trainable leaves flattened into one contiguous f32 buffer with
+/// per-leaf offsets. The fused optimizer walks the buffer in cache order;
+/// the trainer re-serializes only dirty leaf ranges after each step.
+#[derive(Debug, Clone)]
+pub struct ParamArena {
+    data: Vec<f32>,
+    leaves: Vec<ArenaLeaf>,
+}
+
+impl ParamArena {
+    /// Flatten tensors into an arena (leaf order preserved).
+    pub fn pack(tensors: &[Tensor]) -> ParamArena {
+        let total: usize = tensors.iter().map(Tensor::numel).sum();
+        let mut data = Vec::with_capacity(total);
+        let mut leaves = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            leaves.push(ArenaLeaf { shape: t.shape.clone(), offset: data.len(), len: t.numel() });
+            data.extend_from_slice(&t.data);
+        }
+        ParamArena { data, leaves }
+    }
+
+    /// Total element count across all leaves.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the arena holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of leaves.
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Leaf metadata, in pack order.
+    pub fn leaves(&self) -> &[ArenaLeaf] {
+        &self.leaves
+    }
+
+    /// One leaf's elements.
+    pub fn leaf(&self, i: usize) -> &[f32] {
+        let l = &self.leaves[i];
+        &self.data[l.offset..l.offset + l.len]
+    }
+
+    /// One leaf's elements, mutably.
+    pub fn leaf_mut(&mut self, i: usize) -> &mut [f32] {
+        let l = &self.leaves[i];
+        &mut self.data[l.offset..l.offset + l.len]
+    }
+
+    /// Copy new values into a leaf (shape/len must match).
+    pub fn write_leaf(&mut self, i: usize, src: &[f32]) {
+        let dst = self.leaf_mut(i);
+        assert_eq!(dst.len(), src.len(), "leaf {i} length mismatch");
+        dst.copy_from_slice(src);
+    }
+
+    /// Materialize one leaf as a shaped [`Tensor`] (cold paths only).
+    pub fn leaf_tensor(&self, i: usize) -> Tensor {
+        Tensor::from_vec(&self.leaves[i].shape, self.leaf(i).to_vec())
+    }
+
+    /// Materialize every leaf (round-trip of [`ParamArena::pack`]).
+    pub fn unpack(&self) -> Vec<Tensor> {
+        (0..self.leaves.len()).map(|i| self.leaf_tensor(i)).collect()
+    }
+
+    /// The flat element buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The flat element buffer, mutably.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+/// Elements per fused-pass chunk. Chunks never cross leaf boundaries, so
+/// per-chunk norm partials (and therefore the clipped result) are a pure
+/// function of the plan — independent of worker count and scheduling.
+pub const FUSED_CHUNK: usize = 16 * 1024;
+
+/// Below this arena size the fused pass runs inline on the calling thread:
+/// spawning scoped workers would cost more than the walk itself.
+pub const FUSED_PAR_MIN: usize = 1 << 16;
+
+/// One contiguous piece of the arena, entirely inside one leaf.
+#[derive(Debug, Clone, Copy)]
+pub struct Chunk {
+    /// Leaf index the chunk belongs to.
+    pub leaf: usize,
+    /// Arena element offset of the chunk start.
+    pub start: usize,
+    /// Chunk length in elements.
+    pub len: usize,
+}
+
+/// How the fused pass treats one leaf's gradient mask.
+#[derive(Debug, Clone)]
+pub enum LeafMask {
+    /// No mask: every entry participates.
+    Full,
+    /// 0/1 mask with few active entries, compiled to sorted leaf-relative
+    /// indices: the pass touches O(active) entries. Only chosen when every
+    /// masked-out entry has zero optimizer moments (checked at compile
+    /// time), which makes skipping them *exactly* equivalent to the dense
+    /// walk.
+    Sparse(Vec<u32>),
+    /// Dense multiply fallback: non-binary mask values, a mostly-active
+    /// mask, or non-zero moments under masked entries.
+    Dense(Vec<f32>),
+}
+
+/// A compiled execution plan for the fused pass: per-leaf mask treatment
+/// plus the fixed chunk decomposition of the arena.
+#[derive(Debug, Clone)]
+pub struct MaskPlan {
+    kinds: Vec<LeafMask>,
+    chunks: Vec<Chunk>,
+    /// Per-chunk work estimate for load balancing: the active-index count
+    /// for sparse chunks, the element count otherwise. (Partitioning only
+    /// affects scheduling, never results — see the determinism contract.)
+    chunk_costs: Vec<usize>,
+    total: usize,
+}
+
+impl MaskPlan {
+    /// Masks denser than this fraction stay on the dense path (walking the
+    /// whole chunk is cheaper than indirect indexing past ~50% active).
+    pub const SPARSE_MAX_FRACTION: f32 = 0.5;
+
+    /// Plan with no masking (every leaf [`LeafMask::Full`]).
+    pub fn full(arena: &ParamArena) -> MaskPlan {
+        let kinds = arena.leaves().iter().map(|_| LeafMask::Full).collect();
+        Self::with_kinds(kinds, arena)
+    }
+
+    /// Compile gradient masks (aligned with the arena's leaves; `None` =
+    /// fully trainable) into a plan. `m`/`v` are the optimizer's current
+    /// first/second moments over the arena — a leaf is eligible for the
+    /// sparse path only if its masked-out entries all have zero moments,
+    /// so install masks right after an optimizer reset (the SDT revert
+    /// already does) to get the O(active) path.
+    pub fn compile(
+        masks: &[Option<Vec<f32>>],
+        arena: &ParamArena,
+        m: &[f32],
+        v: &[f32],
+    ) -> MaskPlan {
+        assert_eq!(masks.len(), arena.n_leaves(), "mask/leaf count mismatch");
+        let kinds = arena
+            .leaves()
+            .iter()
+            .zip(masks.iter())
+            .map(|(leaf, mask)| match mask {
+                None => LeafMask::Full,
+                Some(k) => {
+                    assert_eq!(k.len(), leaf.len, "mask length mismatch");
+                    let active: Vec<u32> = k
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &x)| x != 0.0)
+                        .map(|(j, _)| j as u32)
+                        .collect();
+                    let binary = k.iter().all(|&x| x == 0.0 || x == 1.0);
+                    let frac = active.len() as f32 / leaf.len.max(1) as f32;
+                    let cold = k.iter().enumerate().all(|(j, &x)| {
+                        x != 0.0
+                            || (m[leaf.offset + j] == 0.0 && v[leaf.offset + j] == 0.0)
+                    });
+                    if binary && cold && frac <= Self::SPARSE_MAX_FRACTION {
+                        LeafMask::Sparse(active)
+                    } else {
+                        LeafMask::Dense(k.clone())
+                    }
+                }
+            })
+            .collect();
+        Self::with_kinds(kinds, arena)
+    }
+
+    fn with_kinds(kinds: Vec<LeafMask>, arena: &ParamArena) -> MaskPlan {
+        let mut chunks = Vec::new();
+        let mut chunk_costs = Vec::new();
+        for (i, leaf) in arena.leaves().iter().enumerate() {
+            if leaf.len == 0 {
+                continue;
+            }
+            match &kinds[i] {
+                // sparse leaves stay whole: the pass touches O(active)
+                // entries regardless of leaf size — weight them that way
+                LeafMask::Sparse(idx) => {
+                    chunks.push(Chunk { leaf: i, start: leaf.offset, len: leaf.len });
+                    chunk_costs.push(idx.len());
+                }
+                _ => {
+                    let mut at = 0;
+                    while at < leaf.len {
+                        let len = FUSED_CHUNK.min(leaf.len - at);
+                        chunks.push(Chunk { leaf: i, start: leaf.offset + at, len });
+                        chunk_costs.push(len);
+                        at += len;
+                    }
+                }
+            }
+        }
+        MaskPlan { kinds, chunks, chunk_costs, total: arena.len() }
+    }
+
+    /// Per-leaf mask treatments.
+    pub fn kinds(&self) -> &[LeafMask] {
+        &self.kinds
+    }
+
+    /// The chunk decomposition.
+    pub fn chunks(&self) -> &[Chunk] {
+        &self.chunks
+    }
+
+    /// True when any leaf uses the sparse index-set path.
+    pub fn any_sparse(&self) -> bool {
+        self.kinds.iter().any(|k| matches!(k, LeafMask::Sparse(_)))
+    }
+}
+
+/// What one fused step did (clip diagnostics + literal invalidation).
+#[derive(Debug, Clone)]
+pub struct FusedReport {
+    /// Global gradient norm before clipping (masked gradients).
+    pub pre_clip_norm: f32,
+    /// Scale applied by clipping (1.0 when under the threshold).
+    pub clip_scale: f32,
+    /// Per-leaf: true when any parameter in the leaf changed this step —
+    /// exactly the leaves whose device literals must be re-serialized.
+    pub dirty: Vec<bool>,
+}
+
+/// Scalar hyperparameters threaded through the fused chunk kernel.
+#[derive(Clone, Copy)]
+struct AdamScalars {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    wd: f32,
+    b1t: f32,
+    b2t: f32,
+    lr_i: f32,
+    scale: f32,
+}
+
+/// Worker count for the fused pass: `SSM_PEFT_FUSED_WORKERS`, else a
+/// modest default (min(cores, 4)) — suite cells already parallelize at the
+/// cell level, so the per-step pool stays small by default.
+pub fn fused_workers() -> usize {
+    std::env::var("SSM_PEFT_FUSED_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// Contiguous chunk-index ranges with roughly equal work totals (`costs`
+/// weights each chunk; sparse chunks cost their active count, not their
+/// element count, so a near-free 99%-frozen leaf doesn't hog a worker).
+fn partition_chunks(chunks: &[Chunk], costs: &[usize], workers: usize)
+    -> Vec<std::ops::Range<usize>> {
+    if chunks.is_empty() {
+        return Vec::new();
+    }
+    debug_assert_eq!(chunks.len(), costs.len());
+    let workers = workers.clamp(1, chunks.len());
+    let total: usize = costs.iter().sum();
+    let target = total.div_ceil(workers).max(1);
+    let mut parts = Vec::with_capacity(workers);
+    let mut begin = 0;
+    let mut acc = 0;
+    for i in 0..chunks.len() {
+        acc += costs[i];
+        let remaining_parts = workers - parts.len();
+        let remaining_chunks = chunks.len() - (i + 1);
+        if (acc >= target || remaining_chunks < remaining_parts) && parts.len() < workers - 1 {
+            parts.push(begin..i + 1);
+            begin = i + 1;
+            acc = 0;
+        }
+    }
+    if begin < chunks.len() {
+        parts.push(begin..chunks.len());
+    }
+    parts
+}
+
+/// Masked squared-norm contribution of one chunk (sequential f64
+/// accumulation in element order — part of the deterministic reduction).
+fn chunk_sq_norm(chunk: &Chunk, kind: &LeafMask, leaf_off: usize, grads: &[f32]) -> f64 {
+    let g = &grads[chunk.start..chunk.start + chunk.len];
+    let mut acc = 0.0f64;
+    match kind {
+        LeafMask::Full => {
+            for &x in g {
+                acc += (x as f64) * (x as f64);
+            }
+        }
+        LeafMask::Sparse(idx) => {
+            // chunk == whole leaf for sparse kinds
+            for &j in idx {
+                let x = g[j as usize];
+                acc += (x as f64) * (x as f64);
+            }
+        }
+        LeafMask::Dense(mask) => {
+            let mo = chunk.start - leaf_off;
+            for (j, &x) in g.iter().enumerate() {
+                let xm = x * mask[mo + j];
+                acc += (xm as f64) * (xm as f64);
+            }
+        }
+    }
+    acc
+}
+
+/// The fused AdamW kernel for one chunk. Entry-for-entry identical to the
+/// legacy `Masks::apply` → `clip_global_norm` → [`AdamW::step`] sequence
+/// (same f32 rounding order, same frozen-entry skip rule). Returns true
+/// when any parameter changed.
+#[allow(clippy::too_many_arguments)]
+fn adamw_chunk(
+    kind: &LeafMask,
+    leaf_off: usize,
+    start: usize,
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    hp: AdamScalars,
+) -> bool {
+    let mut dirty = false;
+    let mut update = |j: usize, gj: f32, p: &mut [f32], m: &mut [f32], v: &mut [f32]| {
+        // entries that have never received gradient (SDT-masked or truly
+        // untouched) are FROZEN: no decoupled decay either (legacy rule)
+        if gj == 0.0 && m[j] == 0.0 && v[j] == 0.0 {
+            return;
+        }
+        m[j] = hp.b1 * m[j] + (1.0 - hp.b1) * gj;
+        v[j] = hp.b2 * v[j] + (1.0 - hp.b2) * gj * gj;
+        let mhat = m[j] / hp.b1t;
+        let vhat = v[j] / hp.b2t;
+        p[j] -= hp.lr_i * (mhat / (vhat.sqrt() + hp.eps) + hp.wd * p[j]);
+        dirty = true;
+    };
+    match kind {
+        LeafMask::Full => {
+            for j in 0..p.len() {
+                update(j, g[j] * hp.scale, p, m, v);
+            }
+        }
+        LeafMask::Sparse(idx) => {
+            for &j in idx {
+                let j = j as usize;
+                update(j, g[j] * hp.scale, p, m, v);
+            }
+        }
+        LeafMask::Dense(mask) => {
+            let mo = start - leaf_off;
+            for j in 0..p.len() {
+                update(j, g[j] * mask[mo + j] * hp.scale, p, m, v);
+            }
+        }
+    }
+    dirty
+}
+
+/// AdamW over a [`ParamArena`]: mask + global-norm clip + update as one
+/// fused pass. State (`m`, `v`) is flat over the arena; `lr_mult` is per
+/// leaf (LoRA+ style group learning rates).
+pub struct FusedAdamW {
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// Denominator fuzz.
+    pub eps: f32,
+    /// Decoupled weight-decay coefficient.
+    pub weight_decay: f32,
+    /// Per-leaf LR multiplier (LoRA+ uses e.g. 16× on the B factors).
+    pub lr_mult: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl FusedAdamW {
+    /// Fresh optimizer state shaped like the arena.
+    pub fn new(arena: &ParamArena) -> FusedAdamW {
+        FusedAdamW {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            lr_mult: vec![1.0; arena.n_leaves()],
+            m: vec![0.0; arena.len()],
+            v: vec![0.0; arena.len()],
+            t: 0,
+        }
+    }
+
+    /// Zero all moments (SDT revert re-starts optimization cleanly).
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+
+    /// Steps taken so far.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Current (first, second) moments over the arena — used by
+    /// [`MaskPlan::compile`] to decide sparse eligibility.
+    pub fn moments(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+
+    /// One fused step: masked global norm (phase A, chunk-ordered f64
+    /// reduction) then clip + AdamW update (phase B), both fanned over at
+    /// most `workers` scoped threads. `grads` is the raw gradient arena
+    /// (masking happens on the fly; the buffer is not mutated).
+    pub fn step(
+        &mut self,
+        arena: &mut ParamArena,
+        grads: &[f32],
+        plan: &MaskPlan,
+        lr: f32,
+        max_norm: f32,
+        workers: usize,
+    ) -> FusedReport {
+        let n = arena.len();
+        assert_eq!(grads.len(), n, "grad arena size mismatch");
+        assert_eq!(self.m.len(), n, "optimizer state size mismatch");
+        assert_eq!(plan.total, n, "plan compiled for a different arena");
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let chunks = plan.chunks();
+        let n_leaves = arena.n_leaves();
+        let leaf_offs: Vec<usize> = arena.leaves().iter().map(|l| l.offset).collect();
+        let workers = if n < FUSED_PAR_MIN { 1 } else { workers.max(1) };
+        let parts = partition_chunks(chunks, &plan.chunk_costs, workers);
+
+        // ---- phase A: masked global norm ---------------------------------
+        let mut partials = vec![0.0f64; chunks.len()];
+        if parts.len() <= 1 {
+            for (ci, out) in partials.iter_mut().enumerate() {
+                let c = &chunks[ci];
+                *out = chunk_sq_norm(c, &plan.kinds[c.leaf], leaf_offs[c.leaf], grads);
+            }
+        } else {
+            std::thread::scope(|sc| {
+                let mut rest: &mut [f64] = &mut partials;
+                for part in &parts {
+                    let (mine, r) = rest.split_at_mut(part.len());
+                    rest = r;
+                    let part = part.clone();
+                    let (kinds, leaf_offs) = (&plan.kinds, &leaf_offs);
+                    sc.spawn(move || {
+                        for (k, ci) in part.enumerate() {
+                            let c = &chunks[ci];
+                            mine[k] =
+                                chunk_sq_norm(c, &kinds[c.leaf], leaf_offs[c.leaf], grads);
+                        }
+                    });
+                }
+            });
+        }
+        // chunk-ordered reduction: independent of worker count
+        let total: f64 = partials.iter().sum();
+        let pre_clip_norm = total.sqrt() as f32;
+        let scale = if pre_clip_norm > max_norm && pre_clip_norm > 0.0 {
+            max_norm / pre_clip_norm
+        } else {
+            1.0
+        };
+
+        // ---- phase B: clip + update, disjoint chunk ranges ---------------
+        let base = AdamScalars {
+            b1: self.beta1,
+            b2: self.beta2,
+            eps: self.eps,
+            wd: self.weight_decay,
+            b1t,
+            b2t,
+            lr_i: lr,
+            scale,
+        };
+        let lr_mult = &self.lr_mult;
+        let mut dirty_chunks = vec![false; chunks.len()];
+        if parts.len() <= 1 {
+            for (ci, d) in dirty_chunks.iter_mut().enumerate() {
+                let c = &chunks[ci];
+                let (s, e) = (c.start, c.start + c.len);
+                let hp = AdamScalars { lr_i: lr * lr_mult[c.leaf], ..base };
+                *d = adamw_chunk(
+                    &plan.kinds[c.leaf],
+                    leaf_offs[c.leaf],
+                    c.start,
+                    &mut arena.data[s..e],
+                    &grads[s..e],
+                    &mut self.m[s..e],
+                    &mut self.v[s..e],
+                    hp,
+                );
+            }
+        } else {
+            std::thread::scope(|sc| {
+                let mut pd: &mut [f32] = &mut arena.data;
+                let mut md: &mut [f32] = &mut self.m;
+                let mut vd: &mut [f32] = &mut self.v;
+                let mut dd: &mut [bool] = &mut dirty_chunks;
+                let mut consumed = 0usize;
+                for part in &parts {
+                    let elems: usize = chunks[part.clone()].iter().map(|c| c.len).sum();
+                    let (p_s, p_r) = pd.split_at_mut(elems);
+                    pd = p_r;
+                    let (m_s, m_r) = md.split_at_mut(elems);
+                    md = m_r;
+                    let (v_s, v_r) = vd.split_at_mut(elems);
+                    vd = v_r;
+                    let (d_s, d_r) = dd.split_at_mut(part.len());
+                    dd = d_r;
+                    let part_base = consumed;
+                    consumed += elems;
+                    let part = part.clone();
+                    let (kinds, leaf_offs) = (&plan.kinds, &leaf_offs);
+                    sc.spawn(move || {
+                        let (mut p_s, mut m_s, mut v_s) = (p_s, m_s, v_s);
+                        let mut at = part_base;
+                        for (k, ci) in part.enumerate() {
+                            let c = &chunks[ci];
+                            debug_assert_eq!(c.start, at);
+                            let (p_c, p_r) = p_s.split_at_mut(c.len);
+                            p_s = p_r;
+                            let (m_c, m_r) = m_s.split_at_mut(c.len);
+                            m_s = m_r;
+                            let (v_c, v_r) = v_s.split_at_mut(c.len);
+                            v_s = v_r;
+                            at += c.len;
+                            let hp = AdamScalars { lr_i: lr * lr_mult[c.leaf], ..base };
+                            d_s[k] = adamw_chunk(
+                                &kinds[c.leaf],
+                                leaf_offs[c.leaf],
+                                c.start,
+                                p_c,
+                                &grads[c.start..c.start + c.len],
+                                m_c,
+                                v_c,
+                                hp,
+                            );
+                        }
+                    });
+                }
+            });
+        }
+
+        let mut dirty = vec![false; n_leaves];
+        for (ci, &d) in dirty_chunks.iter().enumerate() {
+            if d {
+                dirty[chunks[ci].leaf] = true;
+            }
+        }
+        FusedReport { pre_clip_norm, clip_scale: scale, dirty }
+    }
+}
+
+/// Momentum SGD over a [`ParamArena`] (fused analogue of [`Sgd`]; no masks
+/// or clipping, matching the legacy semantics — the synthetic Fig. 2 runs).
+pub struct FusedSgd {
+    /// Momentum coefficient.
+    pub momentum: f32,
+    vel: Vec<f32>,
+}
+
+impl FusedSgd {
+    /// Fresh velocity buffer shaped like the arena.
+    pub fn new(arena: &ParamArena, momentum: f32) -> FusedSgd {
+        FusedSgd { momentum, vel: vec![0.0; arena.len()] }
+    }
+
+    /// One fused momentum-SGD update over the arena.
+    pub fn step(&mut self, arena: &mut ParamArena, grads: &[f32], lr: f32, workers: usize) {
+        let n = arena.len();
+        assert_eq!(grads.len(), n);
+        assert_eq!(self.vel.len(), n);
+        let workers = if n < FUSED_PAR_MIN { 1 } else { workers.max(1) };
+        fn kernel(p: &mut [f32], v: &mut [f32], g: &[f32], mom: f32, lr: f32) {
+            for j in 0..p.len() {
+                v[j] = mom * v[j] + g[j];
+                p[j] -= lr * v[j];
+            }
+        }
+        if workers <= 1 || n == 0 {
+            kernel(&mut arena.data, &mut self.vel, grads, self.momentum, lr);
+            return;
+        }
+        let per = n.div_ceil(workers);
+        let mom = self.momentum;
+        std::thread::scope(|sc| {
+            let mut pd: &mut [f32] = &mut arena.data;
+            let mut vd: &mut [f32] = &mut self.vel;
+            let mut at = 0usize;
+            while at < n {
+                let take = per.min(n - at);
+                let (p_s, p_r) = pd.split_at_mut(take);
+                pd = p_r;
+                let (v_s, v_r) = vd.split_at_mut(take);
+                vd = v_r;
+                let g = &grads[at..at + take];
+                sc.spawn(move || kernel(p_s, v_s, g, mom, lr));
+                at += take;
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +932,128 @@ mod tests {
         let mut g = vec![Tensor::from_vec(&[2], vec![0.3, 0.4])];
         clip_global_norm(&mut g, 1.0);
         assert_eq!(g[0].data, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn arena_pack_unpack_roundtrip() {
+        let ts = vec![
+            Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            Tensor::from_vec(&[4], vec![7.0, 8.0, 9.0, 10.0]),
+            Tensor::scalar(11.0),
+        ];
+        let arena = ParamArena::pack(&ts);
+        assert_eq!(arena.len(), 11);
+        assert_eq!(arena.n_leaves(), 3);
+        assert_eq!(arena.leaf(1), &[7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(arena.leaves()[1].offset, 6);
+        assert_eq!(arena.unpack(), ts);
+    }
+
+    #[test]
+    fn arena_write_leaf() {
+        let ts = vec![Tensor::zeros(&[2]), Tensor::zeros(&[3])];
+        let mut arena = ParamArena::pack(&ts);
+        arena.write_leaf(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(arena.leaf(0), &[0.0, 0.0]);
+        assert_eq!(arena.leaf_tensor(1).data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn plan_compiles_sparse_dense_full() {
+        let ts = vec![Tensor::zeros(&[100]), Tensor::zeros(&[10]), Tensor::zeros(&[10])];
+        let arena = ParamArena::pack(&ts);
+        let opt = FusedAdamW::new(&arena);
+        let (m, v) = opt.moments();
+        let mut sparse = vec![0.0f32; 100];
+        sparse[3] = 1.0;
+        sparse[77] = 1.0;
+        let dense = vec![0.5f32; 10]; // non-binary → dense fallback
+        let masks = vec![Some(sparse), Some(dense), None];
+        let plan = MaskPlan::compile(&masks, &arena, m, v);
+        assert!(matches!(&plan.kinds()[0], LeafMask::Sparse(idx) if idx == &vec![3, 77]));
+        assert!(matches!(plan.kinds()[1], LeafMask::Dense(_)));
+        assert!(matches!(plan.kinds()[2], LeafMask::Full));
+        assert!(plan.any_sparse());
+        // chunks cover the arena contiguously
+        let mut at = 0;
+        for c in plan.chunks() {
+            assert_eq!(c.start, at);
+            at += c.len;
+        }
+        assert_eq!(at, arena.len());
+    }
+
+    #[test]
+    fn plan_falls_back_to_dense_when_moments_warm() {
+        // a masked-out entry with non-zero moments must keep the dense
+        // walk (legacy semantics keep decaying such entries)
+        let ts = vec![Tensor::zeros(&[8])];
+        let mut arena = ParamArena::pack(&ts);
+        let mut opt = FusedAdamW::new(&arena);
+        let plan = MaskPlan::full(&arena);
+        let grads = vec![1.0f32; 8];
+        opt.step(&mut arena, &grads, &plan, 0.01, 1.0, 1);
+        let mut mask = vec![0.0f32; 8];
+        mask[0] = 1.0;
+        let (m, v) = opt.moments();
+        let plan2 = MaskPlan::compile(&[Some(mask)], &arena, m, v);
+        assert!(matches!(plan2.kinds()[0], LeafMask::Dense(_)));
+    }
+
+    #[test]
+    fn partition_covers_all_chunks_in_order() {
+        let ts = vec![Tensor::zeros(&[40_000]), Tensor::zeros(&[5]), Tensor::zeros(&[20_000])];
+        let arena = ParamArena::pack(&ts);
+        let plan = MaskPlan::full(&arena);
+        for workers in [1, 2, 3, 7, 100] {
+            let parts = partition_chunks(plan.chunks(), &plan.chunk_costs, workers);
+            assert!(parts.len() <= workers.min(plan.chunks().len()));
+            let mut next = 0;
+            for p in &parts {
+                assert_eq!(p.start, next, "parts must be contiguous");
+                assert!(!p.is_empty());
+                next = p.end;
+            }
+            assert_eq!(next, plan.chunks().len(), "parts must cover every chunk");
+        }
+    }
+
+    #[test]
+    fn partition_weights_sparse_chunks_by_active_count() {
+        // a huge 2-entry-active sparse leaf must not claim a worker by
+        // itself while the dense work crowds onto the rest
+        let ts = vec![Tensor::zeros(&[200_000]), Tensor::zeros(&[40_000])];
+        let arena = ParamArena::pack(&ts);
+        let opt = FusedAdamW::new(&arena);
+        let (m, v) = opt.moments();
+        let mut sparse = vec![0.0f32; 200_000];
+        sparse[0] = 1.0;
+        sparse[12345] = 1.0;
+        let plan = MaskPlan::compile(&[Some(sparse), None], &arena, m, v);
+        // sparse leaf = 1 chunk of cost 2; dense leaf = 3 chunks
+        assert_eq!(plan.chunk_costs[0], 2);
+        let parts = partition_chunks(plan.chunks(), &plan.chunk_costs, 2);
+        assert_eq!(parts.len(), 2);
+        // the near-free sparse chunk shares a part with dense work
+        assert!(parts[0].len() > 1, "sparse chunk must not get its own worker: {parts:?}");
+    }
+
+    #[test]
+    fn fused_report_marks_only_touched_leaves_dirty() {
+        let ts = vec![Tensor::zeros(&[4]), Tensor::zeros(&[4])];
+        let mut arena = ParamArena::pack(&ts);
+        let mut opt = FusedAdamW::new(&arena);
+        let (m, v) = (opt.moments().0.to_vec(), opt.moments().1.to_vec());
+        // leaf 0 fully masked out, leaf 1 trainable
+        let plan =
+            MaskPlan::compile(&[Some(vec![0.0; 4]), None], &arena, &m, &v);
+        let grads = vec![1.0f32; 8];
+        let rep = opt.step(&mut arena, &grads, &plan, 0.01, 1e9, 1);
+        assert_eq!(rep.dirty, vec![false, true]);
+        assert!(arena.leaf(0).iter().all(|&x| x == 0.0), "masked leaf untouched");
+        assert!(arena.leaf(1).iter().all(|&x| x != 0.0), "trainable leaf moved");
+        assert!(rep.pre_clip_norm > 0.0);
+        assert_eq!(rep.clip_scale, 1.0);
     }
 
     #[test]

@@ -38,7 +38,11 @@ impl Masks {
         Masks { masks: vec![None; n] }
     }
 
-    /// Zero out masked gradient entries (in place, hot path).
+    /// Zero out masked gradient entries (in place). This dense multiply is
+    /// the **legacy reference** pass: the training hot path now compiles
+    /// masks into a [`crate::optim::MaskPlan`] (sparse index sets) and
+    /// fuses masking with clip + update — see `rust/docs/performance.md`.
+    /// Kept for the fused-vs-reference equivalence tests and cold paths.
     pub fn apply(&self, grads: &mut [Tensor]) {
         for (g, m) in grads.iter_mut().zip(self.masks.iter()) {
             if let Some(m) = m {
@@ -48,6 +52,23 @@ impl Masks {
                 }
             }
         }
+    }
+
+    /// (active, total) entry counts across all masked tensors — `None`
+    /// masks count as fully active. The active fraction decides whether
+    /// the fused pass compiles a leaf to a sparse index set.
+    pub fn sparsity(&self, variant: &Variant) -> (usize, usize) {
+        let total = variant.train_params.iter().map(|p| p.numel).sum();
+        let active = variant
+            .train_params
+            .iter()
+            .zip(self.masks.iter())
+            .map(|(p, m)| match m {
+                None => p.numel,
+                Some(m) => m.iter().filter(|&&x| x != 0.0).count(),
+            })
+            .sum();
+        (active, total)
     }
 
     /// Effective trainable parameter count under the masks.
@@ -237,6 +258,8 @@ mod tests {
         assert_eq!(b.total, 40);
         let b2 = Budget::of(&v, None);
         assert_eq!(b2.trainable, 8);
+        assert_eq!(m.sparsity(&v), (2, 8));
+        assert_eq!(Masks::none(1).sparsity(&v), (8, 8));
     }
 
     #[test]

@@ -81,11 +81,27 @@ fn channel_scores(before: &Tensor, after: &Tensor) -> Vec<f64> {
     scores
 }
 
-/// Indices of the top-k entries by score (stable order).
+/// Indices of the top-k entries by score, ties broken by index (the same
+/// order the original stable full sort produced). Uses an O(d + k log k)
+/// partial selection instead of sorting all d scores — selection runs once
+/// per layer over `d_inner` channels, so this keeps the SDT stage cheap on
+/// wide models.
 fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
-    idx.truncate(k);
+    let k = k.min(idx.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // strict total order (score desc, index asc): makes the unstable
+    // partial selection reproduce the stable sort's output exactly
+    let by = |a: &usize, b: &usize| {
+        scores[*b].partial_cmp(&scores[*a]).unwrap().then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, by);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(by);
     idx
 }
 
@@ -245,6 +261,18 @@ mod tests {
         b.insert("layers.0.A_log".into(), before);
         a.insert("layers.0.A_log".into(), after);
         (b, a)
+    }
+
+    #[test]
+    fn top_k_matches_stable_sort_reference() {
+        // the partial selection must reproduce the old stable full sort
+        // exactly, including tie order (ties keep ascending index)
+        let scores = vec![0.5, 0.5, 1.0, 0.0, 0.5, 1.0, 0.25];
+        let mut reference: Vec<usize> = (0..scores.len()).collect();
+        reference.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        for k in 0..=scores.len() {
+            assert_eq!(top_k(&scores, k), reference[..k].to_vec(), "k={k}");
+        }
     }
 
     #[test]

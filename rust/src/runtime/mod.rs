@@ -5,6 +5,13 @@
 //! behind an `Engine` with an executable cache, plus Tensor↔Literal
 //! conversion. Everything above (trainer, PEFT engine, benches) works with
 //! plain host tensors.
+//!
+//! Buffer-resident execution (§Perf L3/L4, rust/docs/performance.md): the
+//! hot paths never rebuild unchanged arguments. [`ResidentArgs`] is a
+//! persistent literal table with per-slot dirty tracking — the trainer
+//! re-serializes only the leaves the fused optimizer actually touched;
+//! [`StatePair`] carries the decode recurrent state from one step's output
+//! straight into the next step's input without a Tensor round-trip.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -109,12 +116,124 @@ pub fn literal_i32(t: &IntTensor) -> Result<xla::Literal> {
         .map_err(|e| anyhow!("literal_i32: {e:?}"))
 }
 
+/// Convert a shaped f32 slice to an XLA literal (one memcpy) — the arena
+/// hot path serializes leaf ranges without materializing a `Tensor`.
+pub fn literal_f32_slice(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("literal_f32_slice: {e:?}"))
+}
+
 /// Read a literal back into a host tensor (shape from the literal).
 pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
     Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Copy an f32 literal's payload into a caller-owned buffer (the gradient
+/// arena / a state mirror) without allocating a `Tensor` or shape vector.
+/// (One transient `Vec` still comes from the `xla` wrapper's `to_vec`; the
+/// destination storage itself is stable across steps.)
+pub fn read_f32_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+    anyhow::ensure!(
+        v.len() == dst.len(),
+        "literal has {} elements, destination {}",
+        v.len(),
+        dst.len()
+    );
+    dst.copy_from_slice(&v);
+    Ok(())
+}
+
+/// Read a rank-0/1-element f32 literal (the step artifact's loss output).
+pub fn read_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal where scalar expected"))
+}
+
+/// A persistent executable-argument table: literals are uploaded once and
+/// re-serialized only for slots the caller marks dirty. The trainer keeps
+/// its trainable leaves here; between optimizer steps only the leaves the
+/// fused pass actually changed get rebuilt (§Perf L3).
+pub struct ResidentArgs {
+    lits: Vec<xla::Literal>,
+    dirty: Vec<bool>,
+}
+
+impl ResidentArgs {
+    /// Build the table from initial literals (all slots clean).
+    pub fn new(lits: Vec<xla::Literal>) -> ResidentArgs {
+        let dirty = vec![false; lits.len()];
+        ResidentArgs { lits, dirty }
+    }
+
+    /// Build the table by serializing host tensors.
+    pub fn from_tensors(ts: &[Tensor]) -> Result<ResidentArgs> {
+        Ok(Self::new(ts.iter().map(literal_f32).collect::<Result<Vec<_>>>()?))
+    }
+
+    /// Slot count.
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    /// True when the table has no slots.
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    /// Mark one slot stale (its literal no longer matches the host data).
+    pub fn mark_dirty(&mut self, i: usize) {
+        self.dirty[i] = true;
+    }
+
+    /// Mark every slot stale.
+    pub fn mark_all_dirty(&mut self) {
+        self.dirty.iter_mut().for_each(|d| *d = true);
+    }
+
+    /// Whether a slot is stale.
+    pub fn is_dirty(&self, i: usize) -> bool {
+        self.dirty[i]
+    }
+
+    /// True when any slot is stale.
+    pub fn any_dirty(&self) -> bool {
+        self.dirty.iter().any(|&d| d)
+    }
+
+    /// Replace a slot's literal and mark it clean.
+    pub fn install(&mut self, i: usize, lit: xla::Literal) {
+        self.lits[i] = lit;
+        self.dirty[i] = false;
+    }
+
+    /// A slot's literal (callers must refresh dirty slots first — or route
+    /// around them with a scratch literal on `&self` paths).
+    pub fn literal(&self, i: usize) -> &xla::Literal {
+        &self.lits[i]
+    }
+
+    /// All literals in slot order.
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.lits
+    }
+}
+
+/// The decode recurrent state as a pair of ready-to-execute literals: the
+/// previous step's `(conv', ssm')` outputs fed back as the next step's
+/// inputs with zero host round-trips (§Perf L4).
+pub struct StatePair {
+    /// Conv-state literal `(n_layer, B, d_conv-1, d_inner)`.
+    pub conv: xla::Literal,
+    /// SSM-state literal `(n_layer, B, d_inner, d_state)`.
+    pub ssm: xla::Literal,
 }
 
 impl Executable {
@@ -126,8 +245,16 @@ impl Executable {
     }
 
     /// Execute with pre-built literals (hot path: the trainer caches the
-    /// frozen-parameter literals across steps — §Perf L3 optimization).
+    /// frozen + trainable parameter literals across steps — §Perf L2/L3).
     pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let lits = self.run_refs_literals(args)?;
+        lits.iter().map(tensor_from_literal).collect()
+    }
+
+    /// Execute with pre-built literals and return raw output literals —
+    /// the zero-churn paths read gradients straight into the arena and
+    /// feed decode state outputs back as the next step's inputs.
+    pub fn run_refs_literals(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let bufs = self
             .exe
             .execute::<&xla::Literal>(args)
@@ -135,8 +262,8 @@ impl Executable {
         let out = bufs[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
-        let lits = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        lits.iter().map(tensor_from_literal).collect()
+        // aot.py lowers with return_tuple=True: single tuple output.
+        out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
     }
 
     /// Execute and return raw literals (used when outputs are reused as-is).
@@ -177,5 +304,32 @@ mod tests {
         let t = IntTensor::from_vec(&[4], vec![1, 2, 3, 4]);
         let lit = literal_i32(&t).unwrap();
         assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn literal_slice_and_read_into_roundtrip() {
+        let data = [1.5f32, -2.0, 3.25, 0.0, 7.0, 8.0];
+        let lit = literal_f32_slice(&[2, 3], &data).unwrap();
+        let mut back = [0.0f32; 6];
+        read_f32_into(&lit, &mut back).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(read_scalar_f32(&lit).unwrap(), 1.5);
+        let mut wrong = [0.0f32; 4];
+        assert!(read_f32_into(&lit, &mut wrong).is_err());
+    }
+
+    #[test]
+    fn resident_args_dirty_tracking() {
+        let t = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let mut args = ResidentArgs::from_tensors(std::slice::from_ref(&t)).unwrap();
+        assert_eq!(args.len(), 1);
+        assert!(!args.any_dirty());
+        args.mark_dirty(0);
+        assert!(args.is_dirty(0));
+        let lit = literal_f32_slice(&[2], &[3.0, 4.0]).unwrap();
+        args.install(0, lit);
+        assert!(!args.any_dirty());
+        let back = tensor_from_literal(args.literal(0)).unwrap();
+        assert_eq!(back.data, vec![3.0, 4.0]);
     }
 }

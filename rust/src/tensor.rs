@@ -103,9 +103,29 @@ impl Rng {
     pub fn uniform(&mut self) -> f32 {
         (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
     }
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n), without modulo bias.
+    ///
+    /// Lemire's widening-multiply rejection method: map a 64-bit draw to
+    /// [0, n) via the high half of a 128-bit product, rejecting the few
+    /// draws that land in the partial bucket (at most one expected retry,
+    /// and none at all when n divides 2^64).
     pub fn below(&mut self, n: usize) -> usize {
-        (self.next_u64() % n as u64) as usize
+        debug_assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            // threshold = 2^64 mod n; draws with lo below it are the
+            // over-represented remainder and must be rejected
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
     }
     /// Standard normal (Box–Muller).
     pub fn normal(&mut self) -> f32 {
@@ -210,6 +230,39 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_is_unbiased_for_non_power_of_two() {
+        // n = 6 does not divide 2^64, so the old `% n` mapping was biased;
+        // with Lemire rejection every bucket should sit within 5% of the
+        // expected count (60k draws, expected 10k per bucket, ~3σ ≈ 280)
+        let mut r = Rng::new(7);
+        let n = 6usize;
+        let draws = 60_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            let x = r.below(n);
+            assert!(x < n);
+            counts[x] += 1;
+        }
+        let expect = draws / n;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect as f64).abs() / expect as f64;
+            assert!(dev < 0.05, "bucket {i}: {c} vs {expect} (dev {dev:.3})");
+        }
+    }
+
+    #[test]
+    fn below_covers_full_range_and_is_deterministic() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let va: Vec<usize> = (0..500).map(|_| a.below(10)).collect();
+        let vb: Vec<usize> = (0..500).map(|_| b.below(10)).collect();
+        assert_eq!(va, vb);
+        for want in 0..10 {
+            assert!(va.iter().any(|&x| x == want), "value {want} never drawn");
+        }
     }
 
     #[test]

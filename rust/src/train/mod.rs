@@ -3,18 +3,31 @@
 //!
 //! Python is never invoked here; the full fine-tuning loop is Rust + the
 //! compiled XLA executable.
+//!
+//! The step hot path is **zero-churn** (§Perf L3, rust/docs/performance.md):
+//! trainable leaves live in a [`ParamArena`], their literals persist in a
+//! [`ResidentArgs`] table and only the leaves the fused optimizer touched
+//! are re-serialized; gradients read back into a reused flat arena (no
+//! per-step `Vec<Tensor>`); mask + clip + AdamW run as ONE fused pass over
+//! arena chunks ([`FusedAdamW`]). Per-step phase timings (upload / execute
+//! / readback / host-optimizer) are recorded in [`StepTimings`] and feed
+//! the `bench hotpath` telemetry.
 
 pub mod checkpoint;
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::Batch;
 use crate::manifest::{Manifest, Variant};
-use crate::optim::{clip_global_norm, AdamW, Schedule};
+use crate::optim::{fused_workers, FusedAdamW, MaskPlan, ParamArena, Schedule};
 use crate::peft::Masks;
-use crate::runtime::{Engine, Executable, Input};
+use crate::runtime::{
+    literal_f32_slice, read_f32_into, read_scalar_f32, Engine, Executable, Input,
+    ResidentArgs,
+};
 use crate::tensor::Tensor;
 
 /// Training-loop configuration.
@@ -44,30 +57,90 @@ impl Default for TrainConfig {
     }
 }
 
+/// Wall-clock breakdown of one training step's phases.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepTimings {
+    /// Host→literal serialization: dirty trainable leaves + the batch.
+    pub upload_s: f64,
+    /// XLA execute (includes the device→host output transfer).
+    pub execute_s: f64,
+    /// Gradient copy into the reused grad arena + loss read.
+    pub readback_s: f64,
+    /// The fused mask+clip+AdamW pass.
+    pub optim_s: f64,
+}
+
+impl StepTimings {
+    /// Host-side per-step overhead: everything except the XLA execute.
+    pub fn host_s(&self) -> f64 {
+        self.upload_s + self.readback_s + self.optim_s
+    }
+
+    /// Whole-step wall clock.
+    pub fn total_s(&self) -> f64 {
+        self.host_s() + self.execute_s
+    }
+
+    /// Add another step's phases into this accumulator.
+    pub fn accumulate(&mut self, o: &StepTimings) {
+        self.upload_s += o.upload_s;
+        self.execute_s += o.execute_s;
+        self.readback_s += o.readback_s;
+        self.optim_s += o.optim_s;
+    }
+
+    /// Phase-wise scaling (e.g. `totals.scaled(1.0 / steps)` for means).
+    pub fn scaled(&self, k: f64) -> StepTimings {
+        StepTimings {
+            upload_s: self.upload_s * k,
+            execute_s: self.execute_s * k,
+            readback_s: self.readback_s * k,
+            optim_s: self.optim_s * k,
+        }
+    }
+}
+
 /// A live training session for one artifact variant.
 pub struct Trainer {
     /// The artifact variant being trained.
     pub variant: Variant,
     step_exe: Executable,
     fwd_exe: Executable,
-    /// Live trainable tensors (variant.train_params order).
-    pub train_params: Vec<Tensor>,
+    /// Trainable leaves, flattened (variant.train_params order).
+    arena: ParamArena,
     /// Frozen tensors (variant.frozen_params order).
     pub frozen_params: Vec<Tensor>,
     /// frozen-parameter literals, built once and reused every step
-    /// (§Perf L3: avoids re-serializing the (large) frozen set per step)
+    /// (§Perf L2: avoids re-serializing the (large) frozen set per step)
     frozen_lits: Vec<xla::Literal>,
-    /// Gradient masks (SDT); identity by default.
-    pub masks: Masks,
-    opt: AdamW,
+    /// Trainable-leaf literals with dirty tracking: only leaves the fused
+    /// optimizer touched are re-serialized (§Perf L3).
+    resident: ResidentArgs,
+    /// Gradient masks (SDT); identity by default. Installed via
+    /// [`Trainer::set_masks`] so the fused plan stays in sync.
+    masks: Masks,
+    /// Compiled fused-pass plan (sparse index sets for SDT masks).
+    plan: MaskPlan,
+    opt: FusedAdamW,
     /// Learning-rate schedule.
     pub sched: Schedule,
+    /// Global gradient-norm clip threshold (from [`TrainConfig`]).
+    pub clip_norm: f32,
     /// Optimizer steps taken so far.
     pub step_count: usize,
     /// (step, loss) history for loss-curve output.
     pub history: Vec<(usize, f32)>,
-    /// scratch for gradient tensors (allocation reuse on the hot path)
-    grad_buf: Vec<Tensor>,
+    /// (step, pre-clip global grad norm) diagnostics, parallel to
+    /// `history` — exposes the clip behavior the old hardcoded threshold
+    /// silently hid.
+    pub norm_history: Vec<(usize, f32)>,
+    /// Reused flat gradient buffer (arena layout) — no per-step allocs.
+    grads: Vec<f32>,
+    /// Clip scale of the last step (for [`Trainer::last_grads`]).
+    last_clip_scale: f32,
+    workers: usize,
+    last_timings: StepTimings,
+    total_timings: StepTimings,
 }
 
 impl Trainer {
@@ -87,26 +160,38 @@ impl Trainer {
             .map(|p| params[&p.name].clone()).collect();
         let frozen_params: Vec<Tensor> = variant.frozen_params.iter()
             .map(|p| params[&p.name].clone()).collect();
-        let mut opt = AdamW::new(&train_params);
+        let arena = ParamArena::pack(&train_params);
+        let mut opt = FusedAdamW::new(&arena);
         opt.weight_decay = cfg.weight_decay;
         let n = variant.train_params.len();
         let frozen_lits = frozen_params
             .iter()
             .map(crate::runtime::literal_f32)
             .collect::<Result<Vec<_>>>()?;
+        let resident = ResidentArgs::from_tensors(&train_params)?;
+        let plan = MaskPlan::full(&arena);
+        let grads = vec![0.0; arena.len()];
         Ok(Trainer {
             variant,
             step_exe,
             fwd_exe,
-            train_params,
+            arena,
             frozen_params,
             frozen_lits,
+            resident,
             masks: Masks::none(n),
+            plan,
             opt,
             sched: Schedule::linear(cfg.lr, cfg.warmup_steps, cfg.schedule_total),
+            clip_norm: cfg.clip_norm,
             step_count: 0,
             history: Vec::new(),
-            grad_buf: Vec::new(),
+            norm_history: Vec::new(),
+            grads,
+            last_clip_scale: 1.0,
+            workers: fused_workers(),
+            last_timings: StepTimings::default(),
+            total_timings: StepTimings::default(),
         })
     }
 
@@ -116,7 +201,8 @@ impl Trainer {
         for (i, meta) in self.variant.train_params.iter().enumerate() {
             if let Some(t) = ckpt.get(&meta.name) {
                 assert_eq!(t.shape, meta.shape, "{} shape drift", meta.name);
-                self.train_params[i] = t.clone();
+                self.arena.write_leaf(i, &t.data);
+                self.resident.mark_dirty(i);
             }
         }
         for (i, meta) in self.variant.frozen_params.iter().enumerate() {
@@ -138,11 +224,30 @@ impl Trainer {
             .collect();
     }
 
+    /// Install gradient masks (SDT) and recompile the fused-pass plan.
+    /// Install masks right after an optimizer reset (the SDT revert path
+    /// does) so frozen leaves take the sparse O(active) path.
+    pub fn set_masks(&mut self, masks: Masks) {
+        assert_eq!(masks.masks.len(), self.arena.n_leaves(), "mask count mismatch");
+        self.masks = masks;
+        self.recompile_plan();
+    }
+
+    /// The installed gradient masks.
+    pub fn masks(&self) -> &Masks {
+        &self.masks
+    }
+
+    fn recompile_plan(&mut self) {
+        let (m, v) = self.opt.moments();
+        self.plan = MaskPlan::compile(&self.masks.masks, &self.arena, m, v);
+    }
+
     /// Current parameters as a name-keyed map (checkpointing / merging).
     pub fn params_map(&self) -> BTreeMap<String, Tensor> {
         let mut m = BTreeMap::new();
-        for (meta, t) in self.variant.train_params.iter().zip(&self.train_params) {
-            m.insert(meta.name.clone(), t.clone());
+        for (i, meta) in self.variant.train_params.iter().enumerate() {
+            m.insert(meta.name.clone(), self.arena.leaf_tensor(i));
         }
         for (meta, t) in self.variant.frozen_params.iter().zip(&self.frozen_params) {
             m.insert(meta.name.clone(), t.clone());
@@ -150,64 +255,163 @@ impl Trainer {
         m
     }
 
-    /// Snapshot just the trainable tensors (SDT warmup bookkeeping).
+    /// Snapshot just the trainable tensors (SDT warmup bookkeeping,
+    /// early-stopping best-epoch capture).
     pub fn snapshot_train(&self) -> Vec<Tensor> {
-        self.train_params.clone()
+        self.arena.unpack()
     }
+
+    /// Overwrite the trainable tensors (early stopping restores the best
+    /// epoch this way). Optimizer state is kept; use
+    /// [`Trainer::restore_train`] for the SDT revert, which also resets it.
+    pub fn set_train_params(&mut self, snap: Vec<Tensor>) {
+        assert_eq!(snap.len(), self.arena.n_leaves());
+        for (i, t) in snap.iter().enumerate() {
+            self.arena.write_leaf(i, &t.data);
+            self.resident.mark_dirty(i);
+        }
+    }
+
     /// Restore a snapshot taken by [`Trainer::snapshot_train`] and reset
     /// the optimizer (SDT revert step).
     pub fn restore_train(&mut self, snap: Vec<Tensor>) {
-        assert_eq!(snap.len(), self.train_params.len());
-        self.train_params = snap;
+        self.set_train_params(snap);
         self.opt.reset();
+        self.recompile_plan();
     }
 
     /// Map of trainable tensors keyed by name (for SDT selection input).
     pub fn train_map(&self) -> BTreeMap<String, Tensor> {
-        self.variant.train_params.iter().zip(&self.train_params)
-            .map(|(m, t)| (m.name.clone(), t.clone())).collect()
+        self.variant.train_params.iter().enumerate()
+            .map(|(i, m)| (m.name.clone(), self.arena.leaf_tensor(i))).collect()
     }
 
-    /// Build the full literal argument list: fresh literals for the
-    /// (mutating) trainable params and the batch, cached literals for the
-    /// frozen set.
-    fn exec(&self, exe: &crate::runtime::Executable, batch_inputs: &[Input])
-        -> Result<Vec<Tensor>> {
-        let train_lits = self
-            .train_params
-            .iter()
-            .map(crate::runtime::literal_f32)
-            .collect::<Result<Vec<_>>>()?;
-        let batch_lits = batch_inputs
+    /// Refresh the resident literal cache for any dirty leaves. The step
+    /// path does this automatically; call it before a *batch* of `&self`
+    /// evaluation calls ([`Trainer::logits`] / [`Trainer::eval_loss`]) so
+    /// they hit the cache instead of re-serializing dirty leaves into
+    /// scratch literals on every call.
+    pub fn sync_device(&mut self) -> Result<()> {
+        self.refresh_dirty_lits()
+    }
+
+    /// Re-serialize the literals of leaves the optimizer dirtied since the
+    /// last upload.
+    fn refresh_dirty_lits(&mut self) -> Result<()> {
+        if !self.resident.any_dirty() {
+            return Ok(());
+        }
+        for i in 0..self.resident.len() {
+            if self.resident.is_dirty(i) {
+                let leaf = &self.arena.leaves()[i];
+                let lit = literal_f32_slice(&leaf.shape, self.arena.leaf(i))?;
+                self.resident.install(i, lit);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute on `&self` paths (fwd / eval): resident literals for clean
+    /// leaves, one-off scratch literals for any still-dirty ones (the
+    /// cache itself can't be updated without `&mut`).
+    fn exec(&self, exe: &Executable, batch_inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let batch_lits = Self::batch_literals(batch_inputs)?;
+        let mut scratch = Vec::new();
+        for i in 0..self.resident.len() {
+            if self.resident.is_dirty(i) {
+                let leaf = &self.arena.leaves()[i];
+                scratch.push(literal_f32_slice(&leaf.shape, self.arena.leaf(i))?);
+            }
+        }
+        let mut si = 0;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(
+            self.resident.len() + self.frozen_lits.len() + batch_lits.len(),
+        );
+        for i in 0..self.resident.len() {
+            if self.resident.is_dirty(i) {
+                refs.push(&scratch[si]);
+                si += 1;
+            } else {
+                refs.push(self.resident.literal(i));
+            }
+        }
+        refs.extend(self.frozen_lits.iter());
+        refs.extend(batch_lits.iter());
+        exe.run_refs(&refs)
+    }
+
+    fn batch_literals(batch_inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        batch_inputs
             .iter()
             .map(|b| match b {
                 Input::F(t) => crate::runtime::literal_f32(t),
                 Input::I(t) => crate::runtime::literal_i32(t),
             })
-            .collect::<Result<Vec<_>>>()?;
-        let refs: Vec<&xla::Literal> = train_lits
-            .iter()
-            .chain(self.frozen_lits.iter())
-            .chain(batch_lits.iter())
-            .collect();
-        exe.run_refs(&refs)
+            .collect()
     }
 
     fn step_impl(&mut self, batch_inputs: &[Input]) -> Result<f32> {
-        let mut outs = self.exec(&self.step_exe.clone(), batch_inputs)?;
-        if outs.len() != 1 + self.train_params.len() {
-            bail!("step returned {} outputs, expected {}", outs.len(),
-                  1 + self.train_params.len());
+        // ---- upload: dirty leaves + batch --------------------------------
+        let t0 = Instant::now();
+        self.refresh_dirty_lits()?;
+        let batch_lits = Self::batch_literals(batch_inputs)?;
+        let upload_s = t0.elapsed().as_secs_f64();
+
+        // ---- execute -----------------------------------------------------
+        let t1 = Instant::now();
+        let outs = {
+            let mut refs: Vec<&xla::Literal> = Vec::with_capacity(
+                self.resident.len() + self.frozen_lits.len() + batch_lits.len(),
+            );
+            refs.extend(self.resident.literals().iter());
+            refs.extend(self.frozen_lits.iter());
+            refs.extend(batch_lits.iter());
+            self.step_exe.run_refs_literals(&refs)?
+        };
+        let execute_s = t1.elapsed().as_secs_f64();
+
+        let n = self.arena.n_leaves();
+        if outs.len() != 1 + n {
+            bail!("step returned {} outputs, expected {}", outs.len(), 1 + n);
         }
-        let loss = outs[0].data[0];
-        let mut grads: Vec<Tensor> = outs.drain(1..).collect();
-        self.masks.apply(&mut grads);
-        clip_global_norm(&mut grads, 1.0);
+
+        // ---- readback: loss + grads into the reused arena ----------------
+        let t2 = Instant::now();
+        let loss = read_scalar_f32(&outs[0])?;
+        for i in 0..n {
+            let (off, len) = {
+                let l = &self.arena.leaves()[i];
+                (l.offset, l.len)
+            };
+            read_f32_into(&outs[1 + i], &mut self.grads[off..off + len])?;
+        }
+        let readback_s = t2.elapsed().as_secs_f64();
+
+        // ---- fused mask + clip + AdamW -----------------------------------
+        let t3 = Instant::now();
         let lr = self.sched.lr_at(self.step_count);
-        self.opt.step(&mut self.train_params, &grads, lr);
-        self.grad_buf = grads; // keep allocation for reuse-by-inspection
+        let rep = self.opt.step(
+            &mut self.arena,
+            &self.grads,
+            &self.plan,
+            lr,
+            self.clip_norm,
+            self.workers,
+        );
+        for (i, &d) in rep.dirty.iter().enumerate() {
+            if d {
+                self.resident.mark_dirty(i);
+            }
+        }
+        self.last_clip_scale = rep.clip_scale;
+        let optim_s = t3.elapsed().as_secs_f64();
+
         self.step_count += 1;
         self.history.push((self.step_count, loss));
+        self.norm_history.push((self.step_count, rep.pre_clip_norm));
+        let t = StepTimings { upload_s, execute_s, readback_s, optim_s };
+        self.last_timings = t;
+        self.total_timings.accumulate(&t);
         Ok(loss)
     }
 
@@ -242,8 +446,38 @@ impl Trainer {
         Ok(outs[0].data[0])
     }
 
-    /// Last gradient set (profiling/diagnostics).
-    pub fn last_grads(&self) -> &[Tensor] {
-        &self.grad_buf
+    /// Last gradient set as shaped tensors, masked and clipped exactly as
+    /// the optimizer saw them (profiling / the SDT grad-magnitude
+    /// criterion). Materialized on demand — the hot path keeps gradients
+    /// flat in the arena.
+    pub fn last_grads(&self) -> Vec<Tensor> {
+        (0..self.arena.n_leaves())
+            .map(|i| {
+                let leaf = &self.arena.leaves()[i];
+                let g = &self.grads[leaf.offset..leaf.offset + leaf.len];
+                let s = self.last_clip_scale;
+                let data: Vec<f32> = match &self.masks.masks[i] {
+                    None => g.iter().map(|&x| x * s).collect(),
+                    Some(m) => g.iter().zip(m).map(|(&x, &k)| x * k * s).collect(),
+                };
+                Tensor::from_vec(&leaf.shape, data)
+            })
+            .collect()
+    }
+
+    /// Phase breakdown of the most recent step.
+    pub fn last_timings(&self) -> StepTimings {
+        self.last_timings
+    }
+
+    /// Accumulated phase totals across all steps taken (divide by
+    /// [`Trainer::step_count`] for means).
+    pub fn timings_total(&self) -> StepTimings {
+        self.total_timings
+    }
+
+    /// The compiled fused-pass plan (diagnostics: sparse vs dense leaves).
+    pub fn plan(&self) -> &MaskPlan {
+        &self.plan
     }
 }

@@ -1,0 +1,251 @@
+//! Fused-arena optimizer equivalence suite (no artifacts needed).
+//!
+//! The legacy three-pass pipeline (`Masks::apply` → `clip_global_norm` →
+//! `AdamW::step` over `Vec<Tensor>` leaves) is the reference oracle; the
+//! fused `ParamArena` pass must match it to ≤1e-6 across randomized
+//! shapes, masks, clipping regimes and worker counts — and must be
+//! bitwise-deterministic in the worker count.
+
+use ssm_peft::optim::{
+    clip_global_norm, AdamW, FusedAdamW, FusedSgd, MaskPlan, ParamArena, Sgd,
+};
+use ssm_peft::peft::Masks;
+use ssm_peft::tensor::{Rng, Tensor};
+
+/// Random leaf set: `n_leaves` tensors with random small shapes.
+fn random_leaves(rng: &mut Rng, n_leaves: usize, max_side: usize) -> Vec<Tensor> {
+    (0..n_leaves)
+        .map(|_| {
+            let shape = match rng.below(3) {
+                0 => vec![1 + rng.below(max_side)],
+                1 => vec![1 + rng.below(max_side), 1 + rng.below(max_side)],
+                _ => vec![1 + rng.below(8), 1 + rng.below(8), 1 + rng.below(8)],
+            };
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            Tensor::from_vec(&shape, data)
+        })
+        .collect()
+}
+
+fn random_grads(rng: &mut Rng, leaves: &[Tensor], scale: f32) -> Vec<Tensor> {
+    leaves
+        .iter()
+        .map(|t| {
+            let data: Vec<f32> = (0..t.numel()).map(|_| rng.normal() * scale).collect();
+            Tensor::from_vec(&t.shape, data)
+        })
+        .collect()
+}
+
+/// Random masks: per leaf, None / sparse-binary / dense-float.
+fn random_masks(rng: &mut Rng, leaves: &[Tensor]) -> Masks {
+    let masks = leaves
+        .iter()
+        .map(|t| match rng.below(3) {
+            0 => None,
+            1 => Some(
+                (0..t.numel())
+                    .map(|_| if rng.uniform() < 0.05 { 1.0 } else { 0.0 })
+                    .collect(),
+            ),
+            // non-binary mask exercises the dense fallback
+            _ => Some(
+                (0..t.numel())
+                    .map(|_| if rng.uniform() < 0.5 { rng.uniform() } else { 0.0 })
+                    .collect(),
+            ),
+        })
+        .collect();
+    Masks { masks }
+}
+
+/// Drive legacy and fused for `steps` steps with identical inputs; return
+/// (legacy params, fused params).
+fn run_both(
+    leaves: &[Tensor],
+    masks: &Masks,
+    steps: usize,
+    max_norm: f32,
+    workers: usize,
+    grad_seed: u64,
+    grad_scale: f32,
+) -> (Vec<Tensor>, Vec<Tensor>) {
+    // legacy reference
+    let mut lp = leaves.to_vec();
+    let mut lopt = AdamW::new(&lp);
+    let mut lrng = Rng::new(grad_seed);
+    for s in 0..steps {
+        let mut g = random_grads(&mut lrng, leaves, grad_scale);
+        masks.apply(&mut g);
+        clip_global_norm(&mut g, max_norm);
+        lopt.step(&mut lp, &g, 1e-3 * (s + 1) as f32);
+    }
+    // fused
+    let mut arena = ParamArena::pack(leaves);
+    let mut fopt = FusedAdamW::new(&arena);
+    let (m, v) = (fopt.moments().0.to_vec(), fopt.moments().1.to_vec());
+    let plan = MaskPlan::compile(&masks.masks, &arena, &m, &v);
+    let mut frng = Rng::new(grad_seed);
+    for s in 0..steps {
+        let g = ParamArena::pack(&random_grads(&mut frng, leaves, grad_scale));
+        fopt.step(&mut arena, g.data(), &plan, 1e-3 * (s + 1) as f32, max_norm, workers);
+    }
+    (lp, arena.unpack())
+}
+
+fn assert_close(a: &[Tensor], b: &[Tensor], tol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape, y.shape, "{ctx}: leaf {i} shape");
+        for (j, (&xa, &xb)) in x.data.iter().zip(&y.data).enumerate() {
+            assert!(
+                (xa - xb).abs() <= tol,
+                "{ctx}: leaf {i} entry {j}: legacy {xa} fused {xb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_matches_legacy_on_randomized_shapes_and_masks() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed * 1000 + 1);
+        let leaves = random_leaves(&mut rng, 2 + seed as usize % 4, 40);
+        let masks = random_masks(&mut rng, &leaves);
+        // small max_norm so clipping actually engages on some steps
+        let (lp, fp) = run_both(&leaves, &masks, 5, 0.5, 1, seed ^ 0x9e37, 1.0);
+        assert_close(&lp, &fp, 1e-6, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn fused_matches_legacy_without_clipping_engaged() {
+    let mut rng = Rng::new(77);
+    let leaves = random_leaves(&mut rng, 3, 30);
+    let masks = Masks::none(leaves.len());
+    // tiny grads: norm stays below the threshold, scale == 1.0
+    let (lp, fp) = run_both(&leaves, &masks, 4, 1e6, 1, 123, 1e-3);
+    assert_close(&lp, &fp, 1e-6, "no-clip");
+}
+
+#[test]
+fn sparse_index_path_matches_dense_reference() {
+    // 1%-active binary masks: the plan must compile to Sparse and still
+    // match the dense legacy walk exactly
+    let mut rng = Rng::new(5);
+    let leaves = vec![
+        Tensor::from_vec(&[64, 32], (0..2048).map(|i| (i as f32).sin()).collect()),
+        Tensor::from_vec(&[512], (0..512).map(|i| (i as f32).cos()).collect()),
+    ];
+    let masks = Masks {
+        masks: leaves
+            .iter()
+            .map(|t| {
+                Some(
+                    (0..t.numel())
+                        .map(|j| if j % 97 == 0 { 1.0 } else { 0.0 })
+                        .collect(),
+                )
+            })
+            .collect(),
+    };
+    let arena = ParamArena::pack(&leaves);
+    let opt = FusedAdamW::new(&arena);
+    let (m, v) = opt.moments();
+    let plan = MaskPlan::compile(&masks.masks, &arena, m, v);
+    assert!(plan.any_sparse(), "1%-active binary masks must compile sparse");
+    let (lp, fp) = run_both(&leaves, &masks, 6, 0.25, 1, rng.next_u64(), 1.0);
+    assert_close(&lp, &fp, 1e-6, "sparse");
+    // masked entries must be EXACTLY untouched in both implementations
+    for leaf in 0..leaves.len() {
+        for j in 0..leaves[leaf].numel() {
+            if j % 97 != 0 {
+                assert_eq!(
+                    leaves[leaf].data[j], fp[leaf].data[j],
+                    "masked entry moved in fused (leaf {leaf} entry {j})"
+                );
+                assert_eq!(leaves[leaf].data[j], lp[leaf].data[j]);
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_pack_unpack_roundtrip_randomized() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed + 400);
+        let leaves = random_leaves(&mut rng, 1 + seed as usize, 25);
+        let arena = ParamArena::pack(&leaves);
+        assert_eq!(arena.unpack(), leaves, "seed {seed}");
+        assert_eq!(arena.len(), leaves.iter().map(Tensor::numel).sum::<usize>());
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_the_result_bitwise() {
+    // big enough to clear the inline-execution threshold and span many
+    // chunks, so 4 workers genuinely run the scoped pool
+    let mut rng = Rng::new(9);
+    let leaves = vec![
+        Tensor::from_vec(&[100_000], (0..100_000).map(|_| rng.normal()).collect()),
+        Tensor::from_vec(&[300, 70], (0..21_000).map(|_| rng.normal()).collect()),
+    ];
+    let masks = Masks::none(leaves.len());
+    let (_, p1) = run_both(&leaves, &masks, 3, 0.5, 1, 31337, 1.0);
+    let (_, p4) = run_both(&leaves, &masks, 3, 0.5, 4, 31337, 1.0);
+    for (i, (a, b)) in p1.iter().zip(&p4).enumerate() {
+        for (j, (&xa, &xb)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(
+                xa.to_bits(),
+                xb.to_bits(),
+                "leaf {i} entry {j}: 1-worker {xa} vs 4-worker {xb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn per_leaf_lr_mult_matches_legacy() {
+    let leaves = vec![
+        Tensor::from_vec(&[16], vec![0.5; 16]),
+        Tensor::from_vec(&[16], vec![0.5; 16]),
+    ];
+    let grads = vec![
+        Tensor::from_vec(&[16], vec![0.1; 16]),
+        Tensor::from_vec(&[16], vec![0.1; 16]),
+    ];
+    let mut lp = leaves.clone();
+    let mut lopt = AdamW::new(&lp);
+    lopt.lr_mult = vec![1.0, 4.0];
+    let mut g = grads.clone();
+    clip_global_norm(&mut g, 1e9);
+    lopt.step(&mut lp, &g, 0.01);
+
+    let mut arena = ParamArena::pack(&leaves);
+    let mut fopt = FusedAdamW::new(&arena);
+    fopt.lr_mult = vec![1.0, 4.0];
+    let plan = MaskPlan::full(&arena);
+    let garena = ParamArena::pack(&grads);
+    fopt.step(&mut arena, garena.data(), &plan, 0.01, 1e9, 1);
+    assert_close(&lp, &arena.unpack(), 1e-7, "lr_mult");
+}
+
+#[test]
+fn fused_sgd_matches_legacy_sgd() {
+    let mut rng = Rng::new(21);
+    let leaves = random_leaves(&mut rng, 3, 30);
+    let mut lp = leaves.clone();
+    let mut lopt = Sgd::new(&lp, 0.9);
+    let mut arena = ParamArena::pack(&leaves);
+    let mut fopt = FusedSgd::new(&arena, 0.9);
+    let mut grng = Rng::new(808);
+    for _ in 0..5 {
+        let g = random_grads(&mut grng, &leaves, 0.1);
+        lopt.step(&mut lp, &g, 0.05);
+        let ga = ParamArena::pack(&g);
+        fopt.step(&mut arena, ga.data(), 0.05, 2);
+        // SGD has no cross-leaf reduction: results are exactly equal
+    }
+    assert_close(&lp, &arena.unpack(), 0.0, "sgd");
+}

@@ -82,7 +82,7 @@ fn masked_entries_never_change() {
         }
         masks.push(Some(mvec));
     }
-    tr.masks = ssm_peft::peft::Masks { masks };
+    tr.set_masks(ssm_peft::peft::Masks { masks });
     let before = tr.snapshot_train();
     let ds = tasks::by_name("glue/rte", 0, 64);
     let mut rng = Rng::new(1);
@@ -90,7 +90,8 @@ fn masked_entries_never_change() {
     for (b, _) in it.take(3) {
         tr.step(&b).unwrap();
     }
-    for (i, (b, a)) in before.iter().zip(&tr.train_params).enumerate() {
+    let after = tr.snapshot_train();
+    for (i, (b, a)) in before.iter().zip(&after).enumerate() {
         for (j, (&x, &y)) in b.data.iter().zip(&a.data).enumerate() {
             if i == 0 && j == 0 {
                 assert_ne!(x, y, "the one unmasked entry should move");
