@@ -6,10 +6,13 @@ HLO *text* (not serialized HloModuleProto) is the interchange format: jax
 round-trips cleanly (see /opt/xla-example/README.md).
 
 Per variant we emit:
-  <name>.step.hlo.txt    (train..., frozen..., x, target, mask) -> (loss, grads...)
-  <name>.fwd.hlo.txt     (train..., frozen..., x) -> logits
-  <name>.decode.hlo.txt  (params..., token, conv_st, ssm_st) -> (logits, st')
-  <name>.params.bin      f32-LE initial values, train-then-frozen order
+  <name>.step.hlo.txt       (train..., frozen..., x, target, mask) -> (loss, grads...)
+  <name>.fwd.hlo.txt        (train..., frozen..., x) -> logits
+  <name>.decode.hlo.txt     (params..., token, conv_st, ssm_st) -> (logits, st')
+  <name>.prefill<C>.hlo.txt (params..., tokens (B,C), conv_st, ssm_st)
+                            -> (logits_last, st')   [decode variants only,
+                            one artifact per chunk width C in PREFILL_WIDTHS]
+  <name>.params.bin         f32-LE initial values, train-then-frozen order
 plus a single artifacts/manifest.json describing all of it for the Rust
 runtime (which is fully layout-agnostic).
 
@@ -28,6 +31,11 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import configs, model as model_mod
+
+# Chunk widths exported for sequence-level prefill. The Rust planner covers
+# a prompt with the largest-fitting chunks and finishes the remainder
+# through the single-token decode artifact, so a couple of widths suffice.
+PREFILL_WIDTHS = (16, 64)
 
 
 def to_hlo_text(lowered) -> str:
@@ -105,6 +113,23 @@ def export_variant(v, outdir):
         files["decode"] = f"{v['name']}.decode.hlo.txt"
         open(os.path.join(outdir, files["decode"]), "w").write(dec_hlo)
 
+        pf = model_mod.prefill_fn(spec, peft)
+
+        def pf_flat(*args):
+            p = dict(zip(anames, args[:len(anames)]))
+            toks, conv_st, ssm_st = args[len(anames):]
+            return pf(p, toks, conv_st, ssm_st)
+
+        prefill_files = {}
+        for c in PREFILL_WIDTHS:
+            toks_s = jax.ShapeDtypeStruct((B, c), jnp.int32)
+            pf_hlo = to_hlo_text(jax.jit(pf_flat).lower(*arg_specs, toks_s,
+                                                        conv_s, ssm_s))
+            fname = f"{v['name']}.prefill{c}.hlo.txt"
+            open(os.path.join(outdir, fname), "w").write(pf_hlo)
+            prefill_files[str(c)] = fname
+        files["prefill"] = prefill_files
+
     # ---- params.bin + manifest entry ---------------------------------------
     blob = bytearray()
     def entry(n, src):
@@ -164,7 +189,8 @@ def main():
     for i, v in enumerate(vs):
         print(f"[{i + 1}/{len(vs)}] {v['name']}", flush=True)
         entries.append(export_variant(v, args.out))
-    manifest = {"version": 1, "variants": entries}
+    # version 2: decode variants carry files.prefill.{width} chunk artifacts
+    manifest = {"version": 2, "variants": entries}
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"wrote {len(entries)} variants to {args.out}/manifest.json")

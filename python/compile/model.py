@@ -4,6 +4,8 @@ Produces, per variant:
   fwd(params_flat..., tokens)                     -> logits
   step(train..., frozen..., tokens, tgt, mask)    -> (loss, grads over train)
   decode(params..., token, conv_st, ssm_st)       -> (logits, conv_st', ssm_st')
+  prefill(params..., tokens (B,C), conv_st, ssm_st)
+                                                  -> (logits_last, conv', ssm')
 Parameters travel as flat lists in sorted-name order; the AOT manifest records
 the exact order/shapes so the Rust runtime is layout-agnostic.
 """
@@ -91,3 +93,17 @@ def decode_fn(spec, peft):
         return s6.decode_step(params, eff, spec, token, conv_states, ssm_states)
 
     return decode
+
+
+def prefill_fn(spec, peft):
+    """Chunked prefill: (params..., tokens (B, C), conv_st, ssm_st)
+    -> (logits_last, conv_st', ssm_st'). One dispatch scans C tokens and
+    leaves the recurrent state ready for the next chunk or decode step."""
+    assert spec.kind in ("mamba1", "mamba2")
+
+    def prefill(params, tokens, conv_states, ssm_states):
+        eff = peft_mod.make_eff(params, peft)
+        return s6.prefill_chunk(params, eff, spec, tokens, conv_states,
+                                ssm_states)
+
+    return prefill

@@ -55,6 +55,24 @@ def causal_conv1d(x, w, b):
     return y + b[None, None, :]
 
 
+def causal_conv1d_carry(x, conv_state, w, b):
+    """Depthwise causal conv over a chunk, carrying input state.
+
+    Chunked-prefill variant of `causal_conv1d`: instead of zero-padding the
+    left edge, the window starts from the last K-1 inputs of the previous
+    chunk (oldest first), exactly like `conv1d_step` does one token at a
+    time. x (B, C, D); conv_state (B, K-1, D).
+    Returns (y (B, C, D), new_conv_state (B, K-1, D)).
+    """
+    K = w.shape[0]
+    C = x.shape[1]
+    window = jnp.concatenate([conv_state, x], axis=1)  # (B, K-1+C, D)
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        y = y + window[:, k:k + C, :] * w[k][None, None, :]
+    return y + b[None, None, :], window[:, C:, :]
+
+
 def conv1d_step(x_t, conv_state, w, b):
     """Single-token causal conv given the last K-1 inputs.
 

@@ -121,6 +121,41 @@ def forward(params, eff, spec, tokens):
     return logits
 
 
+def prefill_chunk(params, eff, spec, tokens, conv_states, ssm_states):
+    """Sequence-level prefill: scan a whole (B, C) token chunk in one call.
+
+    Semantically identical to C iterations of `decode_step` (same per-step
+    recurrence inside `selective_scan`, same conv window as `conv1d_step`),
+    but lowered as ONE program so a prompt costs ceil(P/C) dispatches
+    instead of P. Only the last position's logits are returned — prefill
+    consumes the prompt, it does not generate.
+
+    tokens (B, C) int32; conv_states (n_layer, B, K-1, Di);
+    ssm_states (n_layer, B, Di, H).
+    Returns (logits_last (B, V), conv_states', ssm_states').
+    """
+    x = params["embed"][tokens]                       # (B, C, Dm)
+    new_conv, new_ssm = [], []
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        un = cm.rmsnorm(x, params[pre + "norm.w"])
+        xi = un @ eff(pre + "Win_x")
+        z = un @ eff(pre + "Win_z")
+        xi, cs = cm.causal_conv1d_carry(xi, conv_states[i], params[pre + "conv.w"],
+                                        params[pre + "conv.b"])
+        xi = cm.silu(xi)
+        delta, A, Bm, C_ = _ssm_params(params, eff, pre, spec, xi)
+        y, hl = selective_scan(xi, delta, A, Bm, C_, ssm_states[i])
+        y = y + params[pre + "Dskip"][None, None, :] * xi
+        y = y * cm.silu(z)
+        x = x + y @ eff(pre + "Wout")
+        new_conv.append(cs)
+        new_ssm.append(hl)
+    xl = cm.rmsnorm(x[:, -1, :], params["norm_f.w"])
+    logits = xl @ eff("head")
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+
 def decode_step(params, eff, spec, token, conv_states, ssm_states):
     """Single-token stepwise decode using recurrent state.
 

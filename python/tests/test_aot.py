@@ -27,6 +27,14 @@ def test_export_variant_writes_everything():
             with open(path) as f:
                 head = f.read(64)
             assert head.startswith("HloModule"), key
+        # decode variants also carry one prefill artifact per chunk width
+        assert set(entry["files"]["prefill"]) == \
+            {str(c) for c in aot.PREFILL_WIDTHS}
+        for fname in entry["files"]["prefill"].values():
+            path = os.path.join(d, fname)
+            assert os.path.exists(path)
+            with open(path) as f:
+                assert f.read(64).startswith("HloModule"), fname
         # params.bin has the right size
         total = sum(p["numel"] for p in
                     entry["train_params"] + entry["frozen_params"])

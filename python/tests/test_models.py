@@ -181,6 +181,59 @@ def test_mamba_decode_matches_forward():
             err_msg=f"position {t}")
 
 
+def test_prefill_chunk_matches_stepwise_decode():
+    """Chunked prefill must be exactly one-scan-equals-many-steps: the final
+    (conv, ssm) state and last-position logits of a (B, C) chunk equal C
+    iterations of decode_step over the same tokens, including across a
+    chunk boundary with a carried non-zero state."""
+    spec = TINY["mamba1"]
+    peft = {"method": "full"}
+    params, _ = M.init_model(0, spec, peft)
+    B, L, C = 2, 11, 4
+    tokens = jnp.asarray(np.random.default_rng(1).integers(0, 31, (B, L)),
+                         jnp.int32)
+    dec = M.decode_fn(spec, peft)
+    pf = M.prefill_fn(spec, peft)
+    conv_s = jnp.zeros((spec.n_layer, B, spec.d_conv - 1, spec.d_inner))
+    ssm_s = jnp.zeros((spec.n_layer, B, spec.d_inner, spec.d_state))
+    conv_c, ssm_c = conv_s, ssm_s
+    pos = 0
+    # two full chunks via prefill, then the remainder; compare against the
+    # stepwise path after every segment
+    for seg in (C, C, L - 2 * C):
+        logits_c, conv_c, ssm_c = pf(params, tokens[:, pos:pos + seg],
+                                     conv_c, ssm_c)
+        for t in range(pos, pos + seg):
+            logits_s, conv_s, ssm_s = dec(params, tokens[:, t], conv_s, ssm_s)
+        pos += seg
+        np.testing.assert_allclose(logits_c, logits_s, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(conv_c, conv_s, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(ssm_c, ssm_s, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_chunk_shorter_than_conv_window():
+    """A chunk narrower than the conv kernel (C < K-1) must still carry the
+    window correctly — the serve planner can emit such tails."""
+    spec = TINY["mamba1"]
+    peft = {"method": "full"}
+    params, _ = M.init_model(0, spec, peft)
+    B, L = 2, 6
+    tokens = jnp.asarray(np.random.default_rng(2).integers(0, 31, (B, L)),
+                         jnp.int32)
+    dec = M.decode_fn(spec, peft)
+    pf = M.prefill_fn(spec, peft)
+    conv = jnp.zeros((spec.n_layer, B, spec.d_conv - 1, spec.d_inner))
+    ssm = jnp.zeros((spec.n_layer, B, spec.d_inner, spec.d_state))
+    for t in range(L - 2):
+        _, conv, ssm = dec(params, tokens[:, t], conv, ssm)
+    logits_c, conv_c, ssm_c = pf(params, tokens[:, L - 2:], conv, ssm)  # C=2
+    for t in (L - 2, L - 1):
+        logits_s, conv, ssm = dec(params, tokens[:, t], conv, ssm)
+    np.testing.assert_allclose(logits_c, logits_s, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(conv_c, conv, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ssm_c, ssm, rtol=1e-5, atol=1e-5)
+
+
 def test_variant_registry_complete():
     vs = configs.variants()
     names = [v["name"] for v in vs]

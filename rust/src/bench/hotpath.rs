@@ -13,6 +13,11 @@
 //!   the same shapes, and greedy-decode throughput with resident vs
 //!   reference (re-serializing) parameter/state handling.
 //!
+//! Schema 2 adds a `prefill` section (§Perf L5): chunked-vs-stepwise
+//! prompt ingestion — dispatches/request and tok/s — measured on a host
+//! mock in every run (dispatch counts are the durable signal there) and
+//! on the real prefill executables in artifacts mode.
+//!
 //! `SSM_PEFT_BENCH_SCALE` scales iteration counts and the synthetic model
 //! size (0.1 = tiny CI mode). The JSON schema is documented in
 //! rust/docs/performance.md; every number is a mean over timed iterations.
@@ -237,6 +242,141 @@ impl StepDecode for ReferenceDecode<'_> {
     }
 }
 
+/// Resident decode model with chunked prefill masked off: the stepwise
+/// prompt-ingestion baseline for the `prefill` section (inherits the
+/// default `chunk_prefill() -> None`).
+struct StepwiseOnly<'a>(&'a DecodeCore);
+
+impl StepDecode for StepwiseOnly<'_> {
+    fn arch_b(&self) -> usize {
+        self.0.arch_b()
+    }
+    fn dims(&self) -> crate::eval::StateDims {
+        self.0.dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        self.0.step(tokens, state)
+    }
+}
+
+/// Bench prompts: `b` rows of deterministic bytes, `plen` long.
+fn bench_prompts(b: usize, plen: usize) -> Vec<Vec<u8>> {
+    (0..b)
+        .map(|r| (0..plen).map(|i| ((i * 7 + r * 13 + 3) % 251) as u8).collect())
+        .collect()
+}
+
+/// One timed greedy pass; returns (mean seconds, tokens per pass).
+fn time_greedy(model: &dyn StepDecode, prompts: &[Vec<u8>], max_new: usize,
+               iters: usize) -> Result<(f64, usize)> {
+    let outs = crate::eval::greedy_decode(model, prompts, max_new, b'\n', None)?;
+    let tokens: usize =
+        prompts.iter().map(Vec::len).sum::<usize>() + outs.iter().map(Vec::len).sum::<usize>();
+    let mut err = None;
+    let st = time("greedy", 0, iters, || {
+        if let Err(e) = crate::eval::greedy_decode(model, prompts, max_new, b'\n', None) {
+            err = Some(e);
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok((st.mean_s, tokens)),
+    }
+}
+
+/// The `prefill` section's mock half: chunked-vs-stepwise prompt
+/// ingestion on the host mock. Times only say "the harness works" here;
+/// the dispatch counts are the durable telemetry (they cannot drift
+/// without a planner change).
+fn bench_prefill_mock(scale: f32) -> Result<Value> {
+    use std::sync::atomic::Ordering;
+    let b = 4usize;
+    let plen = ((96.0 * scale).round() as usize).max(24);
+    let max_new = 4usize;
+    let iters = ((10.0 * scale).round() as usize).max(3);
+    let prompts = bench_prompts(b, plen);
+    let widths = [16usize, 64];
+
+    let chunked = crate::eval::testing::Accum::new(b, &widths);
+    let (chunked_s, tokens) = time_greedy(&chunked, &prompts, max_new, iters)?;
+    let runs = (iters + 1) as u64; // count-establishing run + timed runs
+    let chunk_d = chunked.chunks.load(Ordering::Relaxed) / runs;
+    let chunk_steps = chunked.steps.load(Ordering::Relaxed) / runs;
+
+    let stepwise = crate::eval::testing::Accum::new(b, &[]);
+    let (stepwise_s, _) = time_greedy(&stepwise, &prompts, max_new, iters)?;
+    let step_d = stepwise.steps.load(Ordering::Relaxed) / runs;
+
+    let chunked_total = chunk_d + chunk_steps;
+    Ok(json::obj(vec![
+        ("widths", Value::Arr(widths.iter().map(|&w| json::num(w as f64)).collect())),
+        ("prompt_len", json::num(plen as f64)),
+        ("requests", json::num(b as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("dispatches_chunked", json::num(chunked_total as f64)),
+        ("dispatches_stepwise", json::num(step_d as f64)),
+        ("dispatches_per_request_chunked", json::num(chunked_total as f64 / b as f64)),
+        ("dispatches_per_request_stepwise", json::num(step_d as f64 / b as f64)),
+        ("tok_per_s_chunked", json::num(tokens as f64 / chunked_s.max(1e-12))),
+        ("tok_per_s_stepwise", json::num(tokens as f64 / stepwise_s.max(1e-12))),
+        ("speedup", json::num(stepwise_s / chunked_s.max(1e-12))),
+    ]))
+}
+
+/// The `prefill` section's artifact half: the same comparison through the
+/// real prefill executables (None when the manifest has no prefill
+/// entries — pre-v2 artifacts).
+fn bench_prefill_artifacts(engine: &Engine, manifest: &Manifest, scale: f32)
+    -> Result<Option<Value>> {
+    let Some((name, v)) = manifest
+        .variants
+        .iter()
+        .find(|(_, v)| v.decode_file.is_some() && !v.prefill_files.is_empty() && !v.reg)
+        .map(|(k, v)| (k.clone(), v.clone()))
+    else {
+        return Ok(None);
+    };
+    let params = manifest.load_params(&v)?;
+    let core = DecodeCore::new(engine, manifest, &name, &params)?;
+    let b = core.arch_b();
+    let plen = ((96.0 * scale).round() as usize).max(24);
+    let max_new = 4usize;
+    let iters = ((6.0 * scale).round() as usize).max(2);
+    let prompts = bench_prompts(b, plen);
+
+    // warmup compiles every chunk executable once
+    crate::eval::greedy_decode(&core, &prompts, max_new, b'\n', None)?;
+    let d0 = core.dispatch_count();
+    let (chunked_s, tokens) = time_greedy(&core, &prompts, max_new, iters)?;
+    let runs = (iters + 1) as u64;
+    let chunked_d = (core.dispatch_count() - d0) / runs;
+
+    let stepwise = StepwiseOnly(&core);
+    let d1 = core.dispatch_count();
+    let (stepwise_s, _) = time_greedy(&stepwise, &prompts, max_new, iters)?;
+    let stepwise_d = (core.dispatch_count() - d1) / runs;
+
+    Ok(Some(json::obj(vec![
+        ("variant", json::s(&name)),
+        (
+            "widths",
+            Value::Arr(
+                core.prefill_widths().iter().map(|&w| json::num(w as f64)).collect(),
+            ),
+        ),
+        ("prompt_len", json::num(plen as f64)),
+        ("requests", json::num(b as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("dispatches_chunked", json::num(chunked_d as f64)),
+        ("dispatches_stepwise", json::num(stepwise_d as f64)),
+        ("dispatches_per_request_chunked", json::num(chunked_d as f64 / b as f64)),
+        ("dispatches_per_request_stepwise", json::num(stepwise_d as f64 / b as f64)),
+        ("tok_per_s_chunked", json::num(tokens as f64 / chunked_s.max(1e-12))),
+        ("tok_per_s_stepwise", json::num(tokens as f64 / stepwise_s.max(1e-12))),
+        ("speedup", json::num(stepwise_s / chunked_s.max(1e-12))),
+    ])))
+}
+
 /// Greedy-decode throughput: resident vs reference parameter/state paths.
 fn bench_decode(engine: &Engine, manifest: &Manifest, scale: f32)
     -> Result<Option<Value>> {
@@ -306,6 +446,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
     let mut mode = "mock";
     let mut train_val = None;
     let mut decode_val = None;
+    let mut prefill_fields = vec![("mock", bench_prefill_mock(scale)?)];
     if crate::artifacts_dir().join("manifest.json").exists() {
         let engine = Engine::cpu()?;
         let manifest = Manifest::load(crate::artifacts_dir())?;
@@ -318,22 +459,43 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
             .unwrap_or(headline);
         train_val = Some(tv);
         decode_val = bench_decode(&engine, &manifest, scale)?;
+        if let Some(pv) = bench_prefill_artifacts(&engine, &manifest, scale)? {
+            prefill_fields.push(("artifacts", pv));
+        } else {
+            eprintln!(
+                "[bench hotpath] artifacts lack prefill entries; \
+                 re-run `python -m compile.aot` for the artifact prefill bench"
+            );
+        }
     } else {
         eprintln!("[bench hotpath] no artifacts; mock mode only (run `make artifacts`)");
     }
 
     println!("\n=== bench hotpath (scale {scale}, {workers} workers, mode {mode}) ===");
     table.print();
+    for (kind, pv) in &prefill_fields {
+        let get = |k: &str| pv.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        println!(
+            "prefill ({kind}): {:.1} dispatches/request chunked vs {:.1} stepwise \
+             ({:.0} vs {:.0} tok/s)",
+            get("dispatches_per_request_chunked"),
+            get("dispatches_per_request_stepwise"),
+            get("tok_per_s_chunked"),
+            get("tok_per_s_stepwise"),
+        );
+    }
 
     let mock_obj = Value::Obj(
         mock_fields.into_iter().collect::<BTreeMap<String, Value>>(),
     );
     let mut root = vec![
-        ("schema", json::num(1.0)),
+        // schema 2: adds the `prefill` section (§Perf L5)
+        ("schema", json::num(2.0)),
         ("scale", json::num(scale as f64)),
         ("mode", json::s(mode)),
         ("workers", json::num(workers as f64)),
         ("optimizer_mock", mock_obj),
+        ("prefill", json::obj(prefill_fields)),
         ("host_overhead_reduction", json::num(headline)),
     ];
     if let Some(tv) = train_val {
@@ -361,6 +523,23 @@ mod tests {
         let n = |ls: &[Tensor]| ls.iter().map(Tensor::numel).sum::<usize>();
         assert!(n(&small) < n(&big));
         assert_eq!(small.len(), 12, "3 leaves x 4 layers");
+    }
+
+    #[test]
+    fn prefill_mock_section_dispatch_accounting() {
+        let v = bench_prefill_mock(0.1).unwrap();
+        let get = |k: &str| v.get(k).and_then(Value::as_f64).unwrap();
+        assert!(get("dispatches_chunked") < get("dispatches_stepwise"));
+        // each covered token replaces one step dispatch; each chunk adds one
+        let plen = get("prompt_len") as usize;
+        let (plan, _rem) = crate::eval::plan_chunks(&[16, 64], plen);
+        let covered: usize = plan.iter().sum();
+        assert_eq!(
+            get("dispatches_chunked") as usize,
+            plan.len() + get("dispatches_stepwise") as usize - covered,
+        );
+        assert!(get("tok_per_s_chunked") > 0.0);
+        assert!(get("tok_per_s_stepwise") > 0.0);
     }
 
     #[test]

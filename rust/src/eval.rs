@@ -23,6 +23,17 @@
 //! parameter literals once at construction instead of once per token. The
 //! host mirror is materialized lazily, only when a caller actually touches
 //! rows (scheduler admission, beam re-parenting).
+//!
+//! Chunked prefill (§Perf L5): prompt ingestion is sequence-level, not
+//! token-level. The [`ChunkPrefill`] trait exposes the `prefill` artifacts
+//! (one `(B, C)`-token scan per dispatch); [`plan_chunks`] covers a prompt
+//! with the largest-fitting chunks, and [`chunk_prefill_cover`] executes
+//! the plan while the state stays literal-resident across chunk→chunk and
+//! chunk→decode transitions. [`greedy_decode`] and [`beam_search`] route
+//! prompts through it automatically when the model advertises support;
+//! beam search prefills ONE row and broadcasts its state
+//! ([`DecodeState::broadcast_row`]) instead of scanning the same prompt
+//! across every row.
 
 use std::collections::BTreeMap;
 
@@ -249,6 +260,36 @@ impl DecodeState {
         Ok(())
     }
 
+    /// Copy row `from` of another state into row `to` of this one (all
+    /// layers) — the serve scheduler splices a finished out-of-band
+    /// prefill row into the lane's live state this way. Syncs `src`'s host
+    /// mirror (its residency stays valid) and invalidates this state's.
+    pub fn splice_row_from(&mut self, dims: &StateDims, b: usize,
+                           src: &mut DecodeState, from: usize, to: usize)
+        -> Result<()> {
+        src.sync_host()?;
+        let (conv, ssm) = self.host_mut()?;
+        dims.copy_row(&src.conv, &src.ssm, conv, ssm, b, from, to);
+        Ok(())
+    }
+
+    /// Copy row `from` into every other row — beam search prefills one row
+    /// and broadcasts its state before the beams diverge.
+    pub fn broadcast_row(&mut self, dims: &StateDims, b: usize, from: usize)
+        -> Result<()> {
+        let (src_conv, src_ssm) = {
+            let (c, s) = self.host()?;
+            (c.clone(), s.clone())
+        };
+        let (conv, ssm) = self.host_mut()?;
+        for to in 0..b {
+            if to != from {
+                dims.copy_row(&src_conv, &src_ssm, conv, ssm, b, from, to);
+            }
+        }
+        Ok(())
+    }
+
     /// Literals for the next execute: the previous step's outputs when
     /// resident, else a fresh serialization of the host mirror (cached, so
     /// repeated calls don't re-serialize).
@@ -297,6 +338,69 @@ pub trait StepDecode {
     /// `state` in place. `V ≥ 256`; generation samples from the byte
     /// sub-vocabulary `[..256]`.
     fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor>;
+
+    /// Sequence-level prefill support, when the model has it (§Perf L5).
+    /// `None` (the default) means prompts are ingested token-by-token.
+    fn chunk_prefill(&self) -> Option<&dyn ChunkPrefill> {
+        None
+    }
+}
+
+/// Sequence-level prompt ingestion: one dispatch scans a whole `(B, C)`
+/// token chunk through the recurrence, advancing the [`DecodeState`]
+/// exactly as `C` calls of [`StepDecode::step`] would (§Perf L5).
+///
+/// Implemented by [`DecodeCore`] over the compiled `prefill` artifacts and
+/// by mock models in tests. Only the last position's logits come back —
+/// prefill consumes prompts, it does not generate.
+pub trait ChunkPrefill {
+    /// Supported chunk widths, ascending and non-empty.
+    fn chunk_widths(&self) -> &[usize];
+
+    /// Scan `tokens (B, C)` (`C` must be a supported width), advancing
+    /// `state` in place; returns the last position's `logits (B, V)`.
+    fn prefill_chunk(&self, tokens: &IntTensor, state: &mut DecodeState)
+        -> Result<Tensor>;
+}
+
+/// Cover `n` prefill iterations with the largest-fitting chunks: the
+/// dispatch plan (widths, in order) plus the step-wise remainder. Greedy
+/// largest-first is optimal for the exported width ladder (each width
+/// divides the next).
+pub fn plan_chunks(widths: &[usize], n: usize) -> (Vec<usize>, usize) {
+    let mut plan = Vec::new();
+    let mut rem = n;
+    while let Some(&w) = widths.iter().rev().find(|&&w| w <= rem) {
+        plan.push(w);
+        rem -= w;
+    }
+    (plan, rem)
+}
+
+/// Execute the chunked part of a prefill plan: dispatch largest-fitting
+/// chunks until fewer than the smallest width remains of `n`, feeding row
+/// `r` the token `tok(r, t)` at stream position `t`. Returns the covered
+/// position count and the final chunk's logits (`None` when nothing
+/// fit). The state stays literal-resident from chunk to chunk; callers
+/// finish the remainder step-wise (or hand it to a decode loop).
+pub fn chunk_prefill_cover(pf: &dyn ChunkPrefill, b: usize,
+                           state: &mut DecodeState, n: usize,
+                           tok: &dyn Fn(usize, usize) -> i32)
+    -> Result<(usize, Option<Tensor>)> {
+    let (plan, _rem) = plan_chunks(pf.chunk_widths(), n);
+    let mut pos = 0usize;
+    let mut last = None;
+    for w in plan {
+        let mut toks = IntTensor::from_vec(&[b, w], vec![PAD; b * w]);
+        for r in 0..b {
+            for i in 0..w {
+                toks.data[r * w + i] = tok(r, pos + i);
+            }
+        }
+        last = Some(pf.prefill_chunk(&toks, state)?);
+        pos += w;
+    }
+    Ok((pos, last))
 }
 
 /// A decode-ready model: the compiled stepwise `decode` executable bound to
@@ -305,6 +409,11 @@ pub trait StepDecode {
 /// literals are serialized ONCE here, not once per token (§Perf L4).
 pub struct DecodeCore {
     decode: Executable,
+    /// Chunked-prefill executables as `(width, exe)`, ascending width —
+    /// empty when the manifest has no `files.prefill` entries (§Perf L5).
+    prefill: Vec<(usize, Executable)>,
+    /// The widths of `prefill`, cached for [`ChunkPrefill::chunk_widths`].
+    widths: Vec<usize>,
     /// Parameters pre-serialized in the decode variant's argument order
     /// (reused every step).
     param_lits: Vec<xla::Literal>,
@@ -312,6 +421,9 @@ pub struct DecodeCore {
     /// [`DecodeCore::new_for_reference`] for the bench baseline; the
     /// serving path keeps a single (literal) copy per cached adapter.
     params: Option<Vec<Tensor>>,
+    /// Executable dispatches issued (decode steps + prefill chunks) —
+    /// telemetry for `bench hotpath` and the dispatch-count tests.
+    dispatches: std::sync::atomic::AtomicU64,
     arch_b: usize,
     dims: StateDims,
 }
@@ -340,6 +452,11 @@ impl DecodeCore {
         let file = v.decode_file.clone()
             .with_context(|| format!("{decode_variant} has no decode artifact"))?;
         let decode = engine.load(manifest.hlo_path(&file))?;
+        let mut prefill = Vec::new();
+        for (w, f) in &v.prefill_files {
+            prefill.push((*w, engine.load(manifest.hlo_path(f))?));
+        }
+        let widths: Vec<usize> = prefill.iter().map(|&(w, _)| w).collect();
         let mut param_lits = Vec::new();
         let mut params = Vec::new();
         for meta in v.train_params.iter().chain(v.frozen_params.iter()) {
@@ -352,7 +469,26 @@ impl DecodeCore {
             }
         }
         let params = keep_host.then_some(params);
-        Ok(DecodeCore { decode, param_lits, params, arch_b: v.batch_b, dims: StateDims::of(v) })
+        Ok(DecodeCore {
+            decode,
+            prefill,
+            widths,
+            param_lits,
+            params,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+            arch_b: v.batch_b,
+            dims: StateDims::of(v),
+        })
+    }
+
+    /// Chunk widths of the loaded prefill artifacts (empty = none).
+    pub fn prefill_widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// Executable dispatches issued so far (decode steps + prefill chunks).
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Reference step that re-serializes every parameter literal and
@@ -368,6 +504,17 @@ impl DecodeCore {
 
     fn step_inner(&self, tokens: &IntTensor, state: &mut DecodeState,
                   resident_params: bool) -> Result<Tensor> {
+        self.run_exec(&self.decode, tokens, state, resident_params)
+    }
+
+    /// Shared execute path for the decode and prefill artifacts: both take
+    /// `(params..., tokens, conv, ssm)` and return `(logits, conv', ssm')`,
+    /// and both feed the output state literals straight back as the next
+    /// dispatch's inputs (§Perf L4/L5).
+    fn run_exec(&self, exe: &Executable, tokens: &IntTensor,
+                state: &mut DecodeState, resident_params: bool)
+        -> Result<Tensor> {
+        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let tok_lit = crate::runtime::literal_i32(tokens)?;
         let fresh: Vec<xla::Literal> = if resident_params {
             Vec::new()
@@ -391,7 +538,7 @@ impl DecodeCore {
             refs.push(&tok_lit);
             refs.push(conv_lit);
             refs.push(ssm_lit);
-            self.decode.run_refs_literals(&refs)?
+            exe.run_refs_literals(&refs)?
         };
         let ssm_out = outs.pop().context("decode returned no ssm state")?;
         let conv_out = outs.pop().context("decode returned no conv state")?;
@@ -399,6 +546,24 @@ impl DecodeCore {
         let logits = crate::runtime::tensor_from_literal(&logits)?;
         state.install(crate::runtime::StatePair { conv: conv_out, ssm: ssm_out });
         Ok(logits)
+    }
+}
+
+impl ChunkPrefill for DecodeCore {
+    fn chunk_widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    fn prefill_chunk(&self, tokens: &IntTensor, state: &mut DecodeState)
+        -> Result<Tensor> {
+        let w = *tokens.shape.get(1).context("prefill tokens must be (B, C)")?;
+        let exe = self
+            .prefill
+            .iter()
+            .find(|&&(pw, _)| pw == w)
+            .map(|(_, e)| e)
+            .with_context(|| format!("no prefill artifact for chunk width {w}"))?;
+        self.run_exec(exe, tokens, state, true)
     }
 }
 
@@ -414,12 +579,21 @@ impl StepDecode for DecodeCore {
     fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
         self.step_inner(tokens, state, true)
     }
+
+    fn chunk_prefill(&self) -> Option<&dyn ChunkPrefill> {
+        (!self.widths.is_empty()).then_some(self as &dyn ChunkPrefill)
+    }
 }
 
 /// Batched greedy decoding for up to `arch_b` prompts at once. Rows still
 /// in prefill keep consuming their prompt; finished rows emit until
 /// `stop_byte` or `max_new`. `h0` seeds the SSM state (initial-state
 /// tuning).
+///
+/// When the model supports [`ChunkPrefill`], the iterations whose logits
+/// every row discards (the shortest prompt's prefix) are scanned as
+/// chunks instead of one dispatch per token; the remainder and all
+/// generation run step-wise, byte-identical to the pure step-wise path.
 pub fn greedy_decode(model: &dyn StepDecode, prompts: &[Vec<u8>], max_new: usize,
                      stop_byte: u8, h0: Option<&BTreeMap<String, Tensor>>)
     -> Result<Vec<Vec<u8>>> {
@@ -432,7 +606,31 @@ pub fn greedy_decode(model: &dyn StepDecode, prompts: &[Vec<u8>], max_new: usize
     let mut outs: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
     let mut done = vec![false; prompts.len()];
     let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
-    for t in 0..max_prompt + max_new {
+    let mut start_t = 0usize;
+    if let Some(pf) = model.chunk_prefill() {
+        // iteration t consumes stream[t] = [BOS, p[0], p[1], ...][t]; its
+        // logits are used only once t reaches a row's prompt length, so
+        // the first min-prompt-len iterations are pure ingestion and can
+        // be covered by chunks (§Perf L5)
+        let m = prompts.iter().map(Vec::len).min().unwrap_or(0);
+        let stream = |r: usize, t: usize| -> i32 {
+            if r >= prompts.len() {
+                PAD
+            } else if t == 0 {
+                BOS
+            } else {
+                prompts[r][t - 1] as i32
+            }
+        };
+        let (covered, _) = chunk_prefill_cover(pf, b, &mut state, m, &stream)?;
+        if covered > 0 {
+            start_t = covered;
+            for r in 0..b {
+                cur.data[r] = stream(r, covered);
+            }
+        }
+    }
+    for t in start_t..max_prompt + max_new {
         let logits = model.step(&cur, &mut state)?;
         let v = logits.shape[1];
         for r in 0..prompts.len() {
@@ -506,17 +704,39 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
     let b = model.arch_b();
     let dims = model.dims();
     let mut state = model.new_state(h0);
-    // prefill all rows with the same prompt
-    let mut cur = IntTensor::from_vec(&[b], vec![BOS; b]);
-    let mut logits = Tensor::zeros(&[b, 256]);
-    for t in 0..=prompt.len() {
-        logits = model.step(&cur, &mut state)?;
-        if t < prompt.len() {
-            for r in 0..b {
-                cur.data[r] = prompt[t] as i32;
-            }
+    // prefill ONE row (chunked when the model supports it) instead of
+    // scanning the same prompt redundantly across all `b` rows; row 0's
+    // state is broadcast below before the beams diverge (§Perf L5). The
+    // broadcast costs one host round-trip per request — beam re-parenting
+    // pays that every step anyway, so it never dominates.
+    let n = prompt.len() + 1; // BOS + prompt
+    let stream = |r: usize, t: usize| -> i32 {
+        if r != 0 {
+            PAD
+        } else if t == 0 {
+            BOS
+        } else {
+            prompt[t - 1] as i32
+        }
+    };
+    let mut covered = 0usize;
+    let mut last = None;
+    if let Some(pf) = model.chunk_prefill() {
+        let (c, lg) = chunk_prefill_cover(pf, b, &mut state, n, &stream)?;
+        covered = c;
+        if c == n {
+            last = lg; // the final chunk's logits ARE the first-expansion logits
         }
     }
+    let mut cur = IntTensor::from_vec(&[b], vec![PAD; b]);
+    for t in covered..n {
+        for r in 0..b {
+            cur.data[r] = stream(r, t);
+        }
+        last = Some(model.step(&cur, &mut state)?);
+    }
+    let logits = last.expect("prefill stream is at least [BOS]");
+    state.broadcast_row(&dims, b, 0)?;
     let v = logits.shape[1];
     let lp0 = log_softmax(&logits.data[..v]);
     let mut order: Vec<usize> = (0..256).collect();
@@ -741,10 +961,12 @@ pub fn eval_split_loss(trainer: &Trainer, split: &[Example], rng_seed: u64) -> R
     Ok(crate::tensor::mean(&losses))
 }
 
-/// Shared unit-test mock: a deterministic [`StepDecode`] model needing no
-/// artifacts. Used by this module's tests and the serving scheduler's
-/// ([`crate::serve::scheduler`]).
-#[cfg(test)]
+/// Deterministic mock [`StepDecode`] models needing no artifacts. Shared
+/// by this module's tests, the serving scheduler's
+/// ([`crate::serve::scheduler`]), and the mock mode of `bench hotpath`
+/// ([`crate::bench::hotpath`] uses [`testing::Accum`] for the prefill
+/// dispatch accounting) — hence compiled outside `cfg(test)` too.
+#[allow(dead_code)] // Counter is test-only; the bench uses Accum
 pub(crate) mod testing {
     use super::*;
 
@@ -784,12 +1006,225 @@ pub(crate) mod testing {
             Ok(logits)
         }
     }
+
+    /// Stateful mock with optional chunked prefill: each row's SSM state
+    /// is a rolling hash of every token it consumed (the conv state holds
+    /// the previous token's value), and the next byte is a function of
+    /// that hash — so ANY state discontinuity across chunk→chunk or
+    /// chunk→decode transitions changes the generated bytes. Counts step
+    /// and chunk dispatches for the dispatch-count assertions.
+    pub(crate) struct Accum {
+        pub(crate) b: usize,
+        /// Advertised chunk widths (ascending); empty = stepwise-only.
+        pub(crate) widths: Vec<usize>,
+        pub(crate) steps: std::sync::atomic::AtomicU64,
+        pub(crate) chunks: std::sync::atomic::AtomicU64,
+    }
+
+    impl Accum {
+        pub(crate) fn new(b: usize, widths: &[usize]) -> Accum {
+            Accum {
+                b,
+                widths: widths.to_vec(),
+                steps: std::sync::atomic::AtomicU64::new(0),
+                chunks: std::sync::atomic::AtomicU64::new(0),
+            }
+        }
+
+        fn val(tok: i32) -> f32 {
+            match tok {
+                t if (0..256).contains(&t) => t as f32,
+                BOS => 1.0,
+                _ => 0.0, // PAD
+            }
+        }
+
+        /// One token of the rolling hash (all values stay < 2^13, so every
+        /// f32 op here is exact — chunked and stepwise agree bitwise).
+        fn advance(a: f32, prev: f32, tok: i32) -> (f32, f32) {
+            let v = Self::val(tok);
+            ((a * 31.0 + v + prev) % 257.0, v)
+        }
+
+        fn logits_from(&self, hashes: &[f32]) -> Tensor {
+            let mut logits = Tensor::zeros(&[self.b, 256]);
+            for r in 0..self.b {
+                logits.data[r * 256 + (hashes[r] as usize) % 256] = 10.0;
+            }
+            logits
+        }
+    }
+
+    impl StepDecode for Accum {
+        fn arch_b(&self) -> usize {
+            self.b
+        }
+        fn dims(&self) -> StateDims {
+            StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 }
+        }
+        fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+            self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let (conv, ssm) = state.host_mut()?;
+            let mut hashes = vec![0.0f32; self.b];
+            for r in 0..self.b {
+                let (a, v) = Self::advance(ssm.data[r], conv.data[r], tokens.data[r]);
+                ssm.data[r] = a;
+                conv.data[r] = v;
+                hashes[r] = a;
+            }
+            Ok(self.logits_from(&hashes))
+        }
+        fn chunk_prefill(&self) -> Option<&dyn ChunkPrefill> {
+            (!self.widths.is_empty()).then_some(self as &dyn ChunkPrefill)
+        }
+    }
+
+    impl ChunkPrefill for Accum {
+        fn chunk_widths(&self) -> &[usize] {
+            &self.widths
+        }
+        fn prefill_chunk(&self, tokens: &IntTensor, state: &mut DecodeState)
+            -> Result<Tensor> {
+            self.chunks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let w = tokens.shape[1];
+            anyhow::ensure!(self.widths.contains(&w), "unsupported chunk width {w}");
+            let (conv, ssm) = state.host_mut()?;
+            let mut hashes = vec![0.0f32; self.b];
+            for r in 0..self.b {
+                let (mut a, mut prev) = (ssm.data[r], conv.data[r]);
+                for i in 0..w {
+                    (a, prev) = Self::advance(a, prev, tokens.data[r * w + i]);
+                }
+                ssm.data[r] = a;
+                conv.data[r] = prev;
+                hashes[r] = a;
+            }
+            Ok(self.logits_from(&hashes))
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::testing::Counter;
+    use super::testing::{Accum, Counter};
     use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn plan_chunks_largest_fit() {
+        assert_eq!(plan_chunks(&[16, 64], 150), (vec![64, 64, 16], 6));
+        assert_eq!(plan_chunks(&[16, 64], 37), (vec![16, 16], 5));
+        assert_eq!(plan_chunks(&[16, 64], 15), (vec![], 15));
+        assert_eq!(plan_chunks(&[16, 64], 0), (vec![], 0));
+        assert_eq!(plan_chunks(&[4], 9), (vec![4, 4], 1));
+    }
+
+    #[test]
+    fn chunked_greedy_matches_stepwise_and_counts_dispatches() {
+        // acceptance: chunked output byte-identical to stepwise, chunk
+        // dispatches == the plan over the shortest prompt, stepwise
+        // dispatches reduced by exactly the covered iterations
+        let p0: Vec<u8> = (0..23).map(|i| (i * 7 + 3) as u8).collect();
+        let p1: Vec<u8> = (0..9).map(|i| (i * 11 + 5) as u8).collect();
+        let prompts = vec![p0, p1];
+        let max_new = 6;
+
+        let plain = Accum::new(2, &[]);
+        let want = greedy_decode(&plain, &prompts, max_new, 255, None).unwrap();
+        let plain_steps = plain.steps.load(Ordering::Relaxed);
+
+        let chunked = Accum::new(2, &[4, 16]);
+        let got = greedy_decode(&chunked, &prompts, max_new, 255, None).unwrap();
+        assert_eq!(got, want, "chunked greedy must be byte-identical");
+
+        // shortest prompt is 9 bytes → 9 coverable iterations → [4, 4] + 1
+        let (plan, _rem) = plan_chunks(&[4, 16], 9);
+        assert_eq!(chunked.chunks.load(Ordering::Relaxed), plan.len() as u64);
+        let covered: usize = plan.iter().sum();
+        assert_eq!(
+            chunked.steps.load(Ordering::Relaxed),
+            plain_steps - covered as u64,
+            "every covered iteration replaces one step dispatch"
+        );
+        assert!(!want[0].is_empty() && !want[1].is_empty(), "mock generated");
+    }
+
+    #[test]
+    fn chunked_beam_matches_stepwise() {
+        let prompt: Vec<u8> = (0..21).map(|i| (i * 5 + 2) as u8).collect();
+        let plain = Accum::new(3, &[]);
+        let want = beam_search(&plain, &prompt, 3, 7, 255, None).unwrap();
+        let chunked = Accum::new(3, &[4, 16]);
+        let got = beam_search(&chunked, &prompt, 3, 7, 255, None).unwrap();
+        assert_eq!(got, want, "chunked beam must be byte-identical");
+        // stream = BOS + prompt = 22 → [16, 4] chunks + 2 stepwise prefill
+        let (plan, rem) = plan_chunks(&[4, 16], prompt.len() + 1);
+        assert_eq!(chunked.chunks.load(Ordering::Relaxed), plan.len() as u64);
+        let covered: usize = plan.iter().sum();
+        assert_eq!(
+            plain.steps.load(Ordering::Relaxed)
+                - chunked.steps.load(Ordering::Relaxed),
+            covered as u64
+        );
+        assert_eq!(rem, 2);
+    }
+
+    #[test]
+    fn chunk_exact_cover_uses_chunk_logits_for_beam() {
+        // stream length exactly chunk-coverable: the first-expansion
+        // logits come from the final chunk, zero stepwise prefill steps
+        let prompt: Vec<u8> = (0..7).map(|i| (i * 3 + 1) as u8).collect();
+        let plain = Accum::new(2, &[]);
+        let want = beam_search(&plain, &prompt, 2, 5, 255, None).unwrap();
+        let chunked = Accum::new(2, &[4]);
+        let got = beam_search(&chunked, &prompt, 2, 5, 255, None).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(chunked.chunks.load(Ordering::Relaxed), 2, "8 = 4 + 4");
+        // prefill did zero step dispatches: all remaining steps generate
+        assert_eq!(
+            plain.steps.load(Ordering::Relaxed)
+                - chunked.steps.load(Ordering::Relaxed),
+            8
+        );
+    }
+
+    #[test]
+    fn short_prompt_skips_chunking() {
+        let chunked = Accum::new(2, &[16]);
+        let plain = Accum::new(2, &[]);
+        let prompts = vec![vec![5u8, 6, 7]];
+        let want = greedy_decode(&plain, &prompts, 4, 255, None).unwrap();
+        let got = greedy_decode(&chunked, &prompts, 4, 255, None).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(chunked.chunks.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            chunked.steps.load(Ordering::Relaxed),
+            plain.steps.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn splice_and_broadcast_rows() {
+        let d = StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 };
+        let b = 3;
+        let mut src = DecodeState::new(d, b, None);
+        {
+            let (conv, ssm) = src.host_mut().unwrap();
+            conv.data.copy_from_slice(&[1.0, 2.0, 3.0]);
+            ssm.data.copy_from_slice(&[4.0, 5.0, 6.0]);
+        }
+        let mut dst = DecodeState::new(d, b, None);
+        dst.splice_row_from(&d, b, &mut src, 1, 2).unwrap();
+        {
+            let (conv, ssm) = dst.host().unwrap();
+            assert_eq!(conv.data, vec![0.0, 0.0, 2.0]);
+            assert_eq!(ssm.data, vec![0.0, 0.0, 5.0]);
+        }
+        src.broadcast_row(&d, b, 0).unwrap();
+        let (conv, ssm) = src.host().unwrap();
+        assert_eq!(conv.data, vec![1.0, 1.0, 1.0]);
+        assert_eq!(ssm.data, vec![4.0, 4.0, 4.0]);
+    }
 
     #[test]
     fn log_softmax_normalizes() {

@@ -20,7 +20,8 @@
 //! - [`metrics`] — accuracy, Matthews, ROUGE-1/2/L, BLEU, METEOR-lite, MSE
 //! - [`train`] — the training engine (epochs, early stopping, checkpoints)
 //! - [`eval`] — the shared generation core: the [`eval::StepDecode`]
-//!   stepwise interface, the literal-resident [`eval::DecodeState`], plus
+//!   stepwise interface, the [`eval::ChunkPrefill`] sequence-level prompt
+//!   ingestion, the literal-resident [`eval::DecodeState`], plus
 //!   greedy/beam strategies over them
 //! - [`coordinator`] — the per-experiment pipeline (pretrain → SDT → tune)
 //! - [`suite`] — typed experiment API (`PeftMethod`/`Metric`/`VariantId`)

@@ -20,7 +20,8 @@
 //!                                batching across adapters served from one
 //!                                staged base (schema: rust/docs/serving.md)
 //!   bench hotpath                fused hot-path telemetry: step-latency
-//!                                breakdown + decode tokens/sec, written to
+//!                                breakdown + decode tokens/sec + chunked-
+//!                                prefill dispatches/request, written to
 //!                                results/BENCH_hotpath.json (tiny CI mode:
 //!                                SSM_PEFT_BENCH_SCALE=0.1; falls back to a
 //!                                mock host-optimizer comparison when no

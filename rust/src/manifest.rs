@@ -94,6 +94,10 @@ pub struct Variant {
     pub fwd_file: Option<String>,
     /// Stepwise-decode HLO artifact, when exported.
     pub decode_file: Option<String>,
+    /// Chunked-prefill HLO artifacts as `(chunk_width, file)`, ascending by
+    /// width; empty when the variant has no prefill export (pre-v2
+    /// manifests, non-decode variants).
+    pub prefill_files: Vec<(usize, String)>,
     /// Initial parameter values file (f32 LE, train-then-frozen).
     pub params_bin: String,
     /// Trainable parameters, in artifact argument order.
@@ -217,6 +221,22 @@ impl Manifest {
                 step_file: v.path("files.step").and_then(Value::as_str).map(String::from),
                 fwd_file: v.path("files.fwd").and_then(Value::as_str).map(String::from),
                 decode_file: v.path("files.decode").and_then(Value::as_str).map(String::from),
+                prefill_files: {
+                    let mut pf: Vec<(usize, String)> = Vec::new();
+                    if let Some(Value::Obj(m)) = v.path("files.prefill") {
+                        for (w, f) in m {
+                            let width: usize = w.parse().map_err(|_| {
+                                anyhow!("variant {name}: bad prefill width key {w:?}")
+                            })?;
+                            let file = f.as_str().ok_or_else(|| {
+                                anyhow!("variant {name}: prefill.{w} not a string")
+                            })?;
+                            pf.push((width, file.to_string()));
+                        }
+                    }
+                    pf.sort_unstable();
+                    pf
+                },
                 params_bin: v
                     .path("params_bin")
                     .and_then(Value::as_str)
@@ -282,7 +302,9 @@ mod tests {
             "d_inner":4,"d_state":2,"d_conv":4,"dt_rank":1,"n_head":1,"h_add":1},
             "peft":{"method":"lora","rank":2,"targets":["linproj"],"n_tokens":0},
             "batch":{"B":2,"L":4},"reg":false,
-            "files":{"step":"v.step.hlo.txt","fwd":"v.fwd.hlo.txt"},
+            "files":{"step":"v.step.hlo.txt","fwd":"v.fwd.hlo.txt",
+                     "decode":"v.decode.hlo.txt",
+                     "prefill":{"4":"v.prefill4.hlo.txt","16":"v.prefill16.hlo.txt"}},
             "params_bin":"v.params.bin",
             "train_params":[{"name":"a","shape":[2,2],"offset":0,"numel":4}],
             "frozen_params":[{"name":"b","shape":[2],"offset":16,"numel":2}]
@@ -306,6 +328,13 @@ mod tests {
         assert_eq!(v.n_total(), 6);
         assert!((v.train_fraction() - 4.0 / 6.0).abs() < 1e-12);
         assert_eq!(v.train_index("a"), Some(0));
+        // prefill entries are sorted by numeric width ("16" sorts before
+        // "4" lexicographically — the manifest object order must not leak)
+        assert_eq!(
+            v.prefill_files,
+            vec![(4, "v.prefill4.hlo.txt".to_string()),
+                 (16, "v.prefill16.hlo.txt".to_string())]
+        );
         let params = m.load_params(v).unwrap();
         assert_eq!(params["a"].data, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(params["b"].data, vec![5.0, 6.0]);

@@ -214,14 +214,23 @@ impl ResidentArgs {
         self.dirty[i] = false;
     }
 
-    /// A slot's literal (callers must refresh dirty slots first — or route
-    /// around them with a scratch literal on `&self` paths).
+    /// A slot's literal. Callers must refresh dirty slots first — or route
+    /// around them with a scratch literal on `&self` paths; asking for a
+    /// dirty slot's literal would silently execute with stale parameters,
+    /// so debug builds refuse.
     pub fn literal(&self, i: usize) -> &xla::Literal {
+        debug_assert!(
+            !self.dirty[i],
+            "ResidentArgs::literal({i}): slot is dirty — refresh it (install) \
+             or serialize a scratch literal instead of reading a stale one"
+        );
         &self.lits[i]
     }
 
-    /// All literals in slot order.
+    /// All literals in slot order (same freshness contract as
+    /// [`ResidentArgs::literal`]: refresh dirty slots first).
     pub fn literals(&self) -> &[xla::Literal] {
+        debug_assert!(!self.any_dirty(), "ResidentArgs::literals() with dirty slots");
         &self.lits
     }
 }

@@ -378,9 +378,11 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     }
     let st = registry.stats();
     eprintln!(
-        "[serve] done: {served} requests, {} decode steps / {} ticks; adapter cache \
+        "[serve] done: {served} requests, {} decode steps / {} ticks, \
+         {} prefill chunks ({} prompt tokens); adapter cache \
          {} hits / {} misses / {} evictions",
-        sched.decode_steps, sched.ticks, st.hits, st.misses, st.evictions,
+        sched.decode_steps, sched.ticks, sched.prefill_dispatches,
+        sched.prefill_tokens, st.hits, st.misses, st.evictions,
     );
     Ok(())
 }
@@ -446,7 +448,8 @@ mod tests {
         assert_eq!(v.path("new_tokens").unwrap().as_usize(), Some(3));
         assert_eq!(v.path("finish").unwrap().as_str(), Some("stop"));
         assert_eq!(v.path("error"), Some(&Value::Null));
-        assert_eq!(v.path("tok_per_s").unwrap().as_f64(), Some(3.0));
+        // 3 bytes over 0.5s of slot occupancy (total 1.0 minus 0.5 queued)
+        assert_eq!(v.path("tok_per_s").unwrap().as_f64(), Some(6.0));
 
         let rec = ServeRecord { serve: "s", resp: &resp, git: "g1" }.to_json();
         assert_eq!(rec.path("serve").unwrap().as_str(), Some("s"));

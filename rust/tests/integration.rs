@@ -6,7 +6,11 @@
 use ssm_peft::config::ExperimentConfig;
 use ssm_peft::coordinator::Pipeline;
 use ssm_peft::data::{make_lm_batch, tasks, BatchIter};
-use ssm_peft::eval::{DecodeCore, Generator};
+use ssm_peft::eval::{
+    beam_search, greedy_decode, plan_chunks, DecodeCore, DecodeState, Generator,
+    StateDims, StepDecode,
+};
+use ssm_peft::tensor::{IntTensor, Tensor};
 use ssm_peft::manifest::Manifest;
 use ssm_peft::peft::{select_dimensions, Budget, SdtConfig};
 use ssm_peft::runtime::Engine;
@@ -356,6 +360,104 @@ fn serve_two_adapters_from_one_staged_base() {
     // the lane was kept, so the registry wasn't even consulted again;
     // misses certainly must not grow
     assert_eq!(registry.stats().misses, 2);
+}
+
+/// A [`DecodeCore`] with its chunked prefill masked off: the stepwise
+/// prompt-ingestion baseline (inherits `chunk_prefill() -> None`).
+struct StepwiseOnly(DecodeCore);
+
+impl StepDecode for StepwiseOnly {
+    fn arch_b(&self) -> usize {
+        self.0.arch_b()
+    }
+    fn dims(&self) -> StateDims {
+        self.0.dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState)
+        -> anyhow::Result<Tensor> {
+        self.0.step(tokens, state)
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_stepwise_on_real_executables() {
+    // acceptance: greedy and beam through the REAL prefill executables
+    // produce the same bytes as pure token-by-token stepping, and the
+    // dispatch count drops by (covered - plan) per pass
+    let Some((ref e, ref m)) = setup() else { return };
+    let p = Pipeline::new(e, m);
+    let base = p.pretrained("mamba1_xs", 150, 0).unwrap();
+    let core = DecodeCore::new(e, m, "mamba1_xs_full", &base).unwrap();
+    if core.prefill_widths().is_empty() {
+        eprintln!("SKIP: artifacts predate prefill; re-run `python -m compile.aot`");
+        return;
+    }
+    let stepwise = StepwiseOnly(DecodeCore::new(e, m, "mamba1_xs_full", &base).unwrap());
+    let prompts = vec![
+        b"name=ann|team=red|city=oslo|role=lead".to_vec(),
+        b"name=bob|team=blue|city=rome|role=dev".to_vec(),
+    ];
+    let want = greedy_decode(&stepwise, &prompts, 16, b'\n', None).unwrap();
+    let d0 = core.dispatch_count();
+    let got = greedy_decode(&core, &prompts, 16, b'\n', None).unwrap();
+    assert_eq!(got, want, "chunked greedy differs from stepwise");
+    let chunked_d = core.dispatch_count() - d0;
+    let stepwise_d = stepwise.0.dispatch_count();
+    let min_prompt = prompts.iter().map(Vec::len).min().unwrap();
+    let (plan, _) = plan_chunks(core.prefill_widths(), min_prompt);
+    let covered: u64 = plan.iter().sum::<usize>() as u64;
+    assert_eq!(
+        chunked_d,
+        stepwise_d - covered + plan.len() as u64,
+        "each covered token replaces one dispatch; each chunk adds one"
+    );
+
+    let beam_want = beam_search(&stepwise, &prompts[0], 4, 12, b'\n', None).unwrap();
+    let beam_got = beam_search(&core, &prompts[0], 4, 12, b'\n', None).unwrap();
+    assert_eq!(beam_got, beam_want, "chunked beam differs from stepwise");
+}
+
+#[test]
+fn serve_prefill_then_admit_on_real_executables() {
+    // the serving acceptance path: a request admitted through out-of-band
+    // chunked prefill generates the same bytes as through stepwise
+    // ingestion, and the scheduler reports the chunk dispatches
+    let Some((ref e, ref m)) = setup() else { return };
+    let p = Pipeline::new(e, m);
+    let base = p.pretrained("mamba1_xs", 60, 0).unwrap();
+    let core = DecodeCore::new(e, m, "mamba1_xs_full", &base).unwrap();
+    if core.prefill_widths().is_empty() {
+        eprintln!("SKIP: artifacts predate prefill; re-run `python -m compile.aot`");
+        return;
+    }
+    let widths = core.prefill_widths().to_vec();
+    let prompt = b"name=ann|team=red|city=oslo|role=lead".to_vec();
+    let run = |model: std::sync::Arc<dyn StepDecode>| {
+        let factory: LaneFactory = Box::new(move |_adapter: &str| {
+            Ok(LaneModel { model: model.clone(), h0: None })
+        });
+        let mut sched = Scheduler::new(factory, 2);
+        sched.submit(Request {
+            id: 1,
+            adapter: "mamba1_xs_full".into(),
+            prompt: prompt.clone(),
+            max_new: 12,
+            stop_byte: b'\n',
+            beam: 1,
+        });
+        let resp = sched.run_to_completion().pop().unwrap();
+        (resp, sched.prefill_dispatches, sched.prefill_tokens)
+    };
+    let stepwise = StepwiseOnly(DecodeCore::new(e, m, "mamba1_xs_full", &base).unwrap());
+    let (want, d_plain, _) = run(std::sync::Arc::new(stepwise));
+    assert_eq!(d_plain, 0, "no chunk support, no prefill");
+    let (got, d_chunked, covered) = run(std::sync::Arc::new(core));
+    assert!(got.error.is_none(), "{:?}", got.error);
+    assert_eq!(got.output, want.output, "prefilled admission changed bytes");
+    assert_eq!(got.steps, want.steps, "consumed-token accounting unchanged");
+    let (plan, _) = plan_chunks(&widths, prompt.len());
+    assert_eq!(d_chunked, plan.len() as u64);
+    assert_eq!(covered, plan.iter().sum::<usize>() as u64);
 }
 
 #[test]
