@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use ssm_peft::error::Result;
 use ssm_peft::config::{parse_args, ExperimentConfig};
 use ssm_peft::coordinator::{save_history, Pipeline};
 use ssm_peft::manifest::Manifest;

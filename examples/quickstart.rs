@@ -9,7 +9,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use anyhow::Result;
+use ssm_peft::error::Result;
 use ssm_peft::config::ExperimentConfig;
 use ssm_peft::coordinator::Pipeline;
 use ssm_peft::manifest::Manifest;

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example text2sql`
 
-use anyhow::Result;
+use ssm_peft::error::Result;
 use ssm_peft::config::ExperimentConfig;
 use ssm_peft::coordinator::Pipeline;
 use ssm_peft::suite::VariantId;
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     let tcfg = TrainConfig { lr: out.chosen_lr, schedule_total: 80, ..Default::default() };
     let mut tr = Trainer::new(&engine, &manifest, &cfg.variant, &tcfg)?;
     tr.load_base(&base);
-    let ds = tasks::by_name("spider", cfg.seed, cfg.n_train);
+    let ds = tasks::by_name("spider", cfg.seed, cfg.n_train)?;
     let mut rng = ssm_peft::tensor::Rng::new(7);
     for _ in 0..2 {
         let it = ssm_peft::data::BatchIter::new(

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example vision_classifier`
 
-use anyhow::Result;
+use ssm_peft::error::Result;
 use ssm_peft::bench::TablePrinter;
 use ssm_peft::config::ExperimentConfig;
 use ssm_peft::coordinator::Pipeline;

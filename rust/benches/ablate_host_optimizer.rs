@@ -23,7 +23,7 @@ use ssm_peft::suite::VariantId;
 use ssm_peft::tensor::{Rng, Tensor};
 use ssm_peft::train::{TrainConfig, Trainer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssm_peft::error::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
     let p = Pipeline::new(&engine, &manifest);
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 tr.set_masks(Masks::none(tr.variant.train_params.len()));
             }
-            let ds = tasks::by_name("dart", 0, 64);
+            let ds = tasks::by_name("dart", 0, 64)?;
             let mut rng = Rng::new(2);
             let mut it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b,
                                         tr.variant.batch_l);

@@ -9,7 +9,7 @@
 //! Expected shape: the SDT points sit BELOW the LoRA-on-SSM points at equal
 //! or smaller parameter counts.
 
-use anyhow::Result;
+use ssm_peft::error::Result;
 use ssm_peft::bench::TablePrinter;
 use ssm_peft::coordinator::Pipeline;
 use ssm_peft::eval::eval_regression;

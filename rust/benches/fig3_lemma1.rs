@@ -12,7 +12,7 @@ use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
 use ssm_peft::tensor::{mean, std_dev};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssm_peft::error::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
     let p = Pipeline::new(&engine, &manifest);

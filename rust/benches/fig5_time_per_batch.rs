@@ -16,7 +16,7 @@ use ssm_peft::runtime::Engine;
 use ssm_peft::tensor::Rng;
 use ssm_peft::train::{TrainConfig, Trainer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssm_peft::error::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
     let p = Pipeline::new(&engine, &manifest);
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         tr.load_base(&base);
         if variant.contains("sdt") {
             let cfg = bench_cfg(variant, "dart");
-            let ds = tasks::by_name("dart", 0, 64);
+            let ds = tasks::by_name("dart", 0, 64)?;
             let before = tr.train_map();
             let mut rng = Rng::new(1);
             let it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b,
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
                 ssm_peft::peft::select_dimensions(&tr.variant, &before, &after, &cfg.sdt);
             tr.set_masks(masks);
         }
-        let ds = tasks::by_name("dart", 0, 64);
+        let ds = tasks::by_name("dart", 0, 64)?;
         let mut rng = Rng::new(3);
         let mut it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b,
                                     tr.variant.batch_l);

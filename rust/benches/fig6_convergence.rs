@@ -6,7 +6,7 @@
 //! Expected shape: the SDT curve reaches lower MSE earlier than LoRA under
 //! the same time budget.
 
-use anyhow::Result;
+use ssm_peft::error::Result;
 use ssm_peft::coordinator::Pipeline;
 use ssm_peft::eval::eval_regression;
 use ssm_peft::manifest::Manifest;

@@ -11,7 +11,7 @@ use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
 use ssm_peft::train::{TrainConfig, Trainer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssm_peft::error::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
     let p = Pipeline::new(&engine, &manifest);
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         let base = p.pretrained("s4lm", 150, 0)?;
         let mut tr = Trainer::new(&engine, &manifest, "s4lm_full", &TrainConfig::default())?;
         tr.load_base(&base);
-        let ds = ssm_peft::data::tasks::by_name("cifar10", 0, 8);
+        let ds = ssm_peft::data::tasks::by_name("cifar10", 0, 8)?;
         let acc = eval_classification(&tr, &ds.test, ds.metric)?;
         table.row(vec!["Frozen".into(), "0.00".into(), format!("{acc:.3}")]);
     }

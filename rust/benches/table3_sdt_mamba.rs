@@ -11,7 +11,7 @@ use ssm_peft::manifest::Manifest;
 use ssm_peft::runtime::Engine;
 use ssm_peft::suite::{pivot, worker_count, PivotCol, Suite};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ssm_peft::error::Result<()> {
     let engine = Engine::cpu()?;
     let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
 

@@ -25,7 +25,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::error::{Context, Result};
 
 use crate::bench::{time, TablePrinter};
 use crate::data::tasks;
@@ -40,11 +40,13 @@ use crate::runtime::Engine;
 use crate::tensor::{IntTensor, Rng, Tensor};
 use crate::train::{StepTimings, TrainConfig, Trainer};
 
+/// `BENCH_hotpath.json` schema version. The lint pins this against the
+/// example payload in rust/docs/performance.md, so bumping it without a
+/// docs update fails `cargo run -- lint`.
+pub const BENCH_HOTPATH_SCHEMA: u32 = 2;
+
 fn bench_scale() -> f32 {
-    std::env::var("SSM_PEFT_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1.0)
+    crate::knobs::bench_scale()
 }
 
 /// Synthetic Mamba-shaped trainable leaves (per layer: A_log, xproj, out).
@@ -135,7 +137,7 @@ fn mock_scenario(
         leaves.iter().map(Tensor::numel).sum::<usize>().to_string(),
         format!("{:.6}", legacy.mean_s),
         format!("{:.6}", fused_means[0].1),
-        format!("{:.6}", fused_means.last().unwrap().1),
+        format!("{:.6}", fused_means.last().map_or(f64::NAN, |&(_, s)| s)),
         format!("{speedup:.1}x"),
     ]);
     let mut fields = vec![
@@ -166,16 +168,16 @@ fn bench_train(engine: &Engine, manifest: &Manifest, scale: f32)
             .iter()
             .find(|(_, v)| v.step_file.is_some() && v.fwd_file.is_some() && !v.reg)
             .map(|(k, _)| k.clone())
-            .ok_or_else(|| anyhow::anyhow!("no step-capable variant in manifest"))?
+            .ok_or_else(|| crate::err!("no step-capable variant in manifest"))?
     };
     let steps = ((12.0 * scale).round() as usize).max(4);
     let mut tr = Trainer::new(engine, manifest, &variant, &TrainConfig::default())?;
-    let ds = tasks::by_name("dart", 0, 64);
+    let ds = tasks::by_name("dart", 0, 64)?;
     let mut rng = Rng::new(0);
     let mut it = crate::data::BatchIter::new(
         &ds.train, &mut rng, tr.variant.batch_b, tr.variant.batch_l,
     );
-    let (batch, _) = it.next().unwrap();
+    let (batch, _) = it.next().context("empty dart dataset for hotpath bench")?;
     for _ in 0..2 {
         tr.step(&batch)?; // warmup (compile caches, allocator)
     }
@@ -198,7 +200,7 @@ fn bench_train(engine: &Engine, manifest: &Manifest, scale: f32)
         // upload: serialize every trainable leaf
         let _lits: Vec<_> = lparams
             .iter()
-            .map(|t| crate::runtime::literal_f32(t).unwrap())
+            .filter_map(|t| crate::runtime::literal_f32(t).ok())
             .collect();
         // readback: materialize fresh grad tensors
         let mut g: Vec<Tensor> = grads
@@ -490,7 +492,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
     );
     let mut root = vec![
         // schema 2: adds the `prefill` section (§Perf L5)
-        ("schema", json::num(2.0)),
+        ("schema", json::num(BENCH_HOTPATH_SCHEMA as f64)),
         ("scale", json::num(scale as f64)),
         ("mode", json::s(mode)),
         ("workers", json::num(workers as f64)),

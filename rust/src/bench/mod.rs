@@ -151,10 +151,7 @@ impl TablePrinter {
 /// the 1-core CPU testbed; `SSM_PEFT_BENCH_SCALE` (float) scales
 /// epochs/batches up or down.
 pub fn bench_template() -> crate::config::ExperimentConfig {
-    let scale: f32 = std::env::var("SSM_PEFT_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1.0);
+    let scale: f32 = crate::knobs::bench_scale();
     let mut cfg = crate::config::ExperimentConfig::default();
     cfg.n_train = 256;
     cfg.epochs = ((2.0 * scale).round() as usize).max(1);

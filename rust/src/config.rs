@@ -3,7 +3,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use crate::err;
+use crate::error::Result;
 
 use crate::json::{self, Value};
 use crate::peft::{Criterion, SdtConfig};
@@ -66,7 +67,7 @@ impl ExperimentConfig {
         let mut c = ExperimentConfig::default();
         let obj = match v {
             Value::Obj(m) => m,
-            _ => return Err(anyhow!("config must be an object")),
+            _ => return Err(err!("config must be an object")),
         };
         for (k, val) in obj {
             c.set(k, val)?;
@@ -77,13 +78,13 @@ impl ExperimentConfig {
     /// Load a JSON config file.
     pub fn from_file(path: &str) -> Result<Self> {
         let src = std::fs::read_to_string(path)?;
-        let v = json::parse(&src).map_err(|e| anyhow!("{path}: {e}"))?;
+        let v = json::parse(&src).map_err(|e| err!("{path}: {e}"))?;
         Self::from_json(&v)
     }
 
     /// Apply one key (JSON value), shared by file/CLI paths.
     pub fn set(&mut self, key: &str, val: &Value) -> Result<()> {
-        let f = |v: &Value| v.as_f64().ok_or_else(|| anyhow!("{key}: expected number"));
+        let f = |v: &Value| v.as_f64().ok_or_else(|| err!("{key}: expected number"));
         match key {
             "variant" => self.variant = req_str(val, key)?,
             "dataset" => self.dataset = req_str(val, key)?,
@@ -100,7 +101,7 @@ impl ExperimentConfig {
             "lr_grid" => {
                 self.lr_grid = val
                     .as_arr()
-                    .ok_or_else(|| anyhow!("lr_grid: expected array"))?
+                    .ok_or_else(|| err!("lr_grid: expected array"))?
                     .iter()
                     .filter_map(Value::as_f64)
                     .map(|x| x as f32)
@@ -116,10 +117,10 @@ impl ExperimentConfig {
                     "abar" => Criterion::AbarChange,
                     "grad" => Criterion::GradMagnitude,
                     "random" => Criterion::Random,
-                    other => return Err(anyhow!("unknown criterion {other}")),
+                    other => return Err(err!("unknown criterion {other}")),
                 }
             }
-            _ => return Err(anyhow!("unknown config key {key:?}")),
+            _ => return Err(err!("unknown config key {key:?}")),
         }
         Ok(())
     }
@@ -138,7 +139,7 @@ impl ExperimentConfig {
 fn req_str(v: &Value, key: &str) -> Result<String> {
     v.as_str()
         .map(String::from)
-        .ok_or_else(|| anyhow!("{key}: expected string"))
+        .ok_or_else(|| err!("{key}: expected string"))
 }
 
 /// Split argv into (key=value overrides, positional args).

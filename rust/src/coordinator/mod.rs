@@ -15,7 +15,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::config::ExperimentConfig;
 use crate::data::{tasks, BatchIter, Dataset};
@@ -83,12 +83,16 @@ impl<'a> Pipeline<'a> {
     /// (arch, steps) base is built; afterwards the cached copy is shared.
     pub fn pretrained(&self, arch: &str, steps: usize, seed: u64) -> Result<Ckpt> {
         let key = format!("{arch}|{steps}");
-        if let Some(hit) = pretrain_cache().lock().unwrap().get(&key) {
+        let lock = |m: &'static Mutex<HashMap<String, Ckpt>>| {
+            // a panicked builder must not wedge the shared base cache
+            m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+        };
+        if let Some(hit) = lock(pretrain_cache()).get(&key) {
             return Ok(hit.clone());
         }
         let map = Arc::new(self.pretrain_uncached(arch, steps, seed)?);
         // racing builders both insert equivalent maps; first one wins
-        let mut cache = pretrain_cache().lock().unwrap();
+        let mut cache = lock(pretrain_cache());
         Ok(cache.entry(key).or_insert(map).clone())
     }
 
@@ -154,7 +158,7 @@ impl<'a> Pipeline<'a> {
             let mut m = before.clone();
             for (k, v) in &grad_acc {
                 // log-space: selection exponentiates, so take ln(1+acc)
-                let t = m.get_mut(k).unwrap();
+                let Some(t) = m.get_mut(k) else { continue };
                 for (x, &a) in t.data.iter_mut().zip(&v.data) {
                     *x += (1.0 + a).ln();
                 }
@@ -252,7 +256,7 @@ impl<'a> Pipeline<'a> {
     pub fn finetune_with_base(&self, cfg: &ExperimentConfig,
                               base: &BTreeMap<String, Tensor>) -> Result<Outcome> {
         let vid = VariantId::parse(&cfg.variant)?;
-        let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train);
+        let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train)?;
         let lr = self.pick_lr(&ds, cfg, base)?;
 
         let steps_per_epoch = if cfg.max_batches_per_epoch > 0 {
@@ -337,7 +341,7 @@ impl<'a> Pipeline<'a> {
         let tgt = Trainer::new(self.engine, self.manifest, "s4reg_t_full",
                                &TrainConfig::default())?;
         let (b, d) = (tgt.variant.batch_b, tgt.variant.arch.d_model);
-        anyhow::ensure!(
+        crate::ensure!(
             seqlen == tgt.variant.batch_l,
             "s4reg artifacts are shape-specialized to L={}, got {seqlen}",
             tgt.variant.batch_l

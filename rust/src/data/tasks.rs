@@ -8,6 +8,8 @@
 
 use super::minidb::{self, Table};
 use super::{Dataset, Example};
+use crate::bail;
+use crate::error::Result;
 use crate::suite::Metric;
 use crate::tensor::Rng;
 
@@ -89,7 +91,10 @@ fn gen_mrpc(rng: &mut Rng) -> Example {
     } else {
         let mut s = pick_words(rng, 5);
         // ensure different multiset
-        s[0] = WORDS[(WORDS.iter().position(|w| *w == s1[0]).unwrap() + 1) % WORDS.len()];
+        // s1 is drawn from WORDS, so the position lookup can only miss if
+        // the lexicon changes; fall back to index 0 rather than panic
+        let pos = WORDS.iter().position(|w| *w == s1[0]).unwrap_or(0);
+        s[0] = WORDS[(pos + 1) % WORDS.len()];
         s
     };
     let mut p = join(&s1);
@@ -200,8 +205,10 @@ fn gen_mnli(rng: &mut Rng) -> Example {
 pub const GLUE_SUBTASKS: &[&str] = &["rte", "mrpc", "cola", "sst2", "qnli", "qqp", "mnli"];
 
 /// GLUE analogue: sentence-pair/classification tasks with latent-rule
-/// labels; CoLA scores Matthews, the rest accuracy.
-pub fn glue(sub: &str, seed: u64, n_train: usize) -> Dataset {
+/// labels; CoLA scores Matthews, the rest accuracy. A typo'd subtask (from
+/// a suite config cell) is an error, not a panic — suite workers must
+/// degrade the cell, not the process.
+pub fn glue(sub: &str, seed: u64, n_train: usize) -> Result<Dataset> {
     let gen: fn(&mut Rng) -> Example = match sub {
         "rte" => gen_rte,
         "mrpc" => gen_mrpc,
@@ -210,14 +217,14 @@ pub fn glue(sub: &str, seed: u64, n_train: usize) -> Dataset {
         "qnli" => gen_qnli,
         "qqp" => gen_qqp,
         "mnli" => gen_mnli,
-        _ => panic!("unknown GLUE subtask {sub}"),
+        _ => bail!("unknown GLUE subtask {sub:?} (have: {GLUE_SUBTASKS:?})"),
     };
     let (train, val, test) = splits(gen, seed ^ fnv(sub), n_train, 96, 96);
-    Dataset {
+    Ok(Dataset {
         name: format!("glue/{sub}"),
         train, val, test,
         metric: if sub == "cola" { Metric::Matthews } else { Metric::Acc },
-    }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -299,7 +306,8 @@ fn gen_spider(rng: &mut Rng, table: &Table) -> Example {
     let (question, query) = if use_where {
         let fc = &table.columns[rng.below(table.columns.len())];
         let row = &table.rows[rng.below(table.rows.len())];
-        let fv = &row[table.col_index(fc).unwrap()];
+        // fc was drawn from table.columns, so col_index always finds it
+        let fv = &row[table.col_index(fc).unwrap_or(0)];
         (
             format!("which {sel} has {fc} {fv} ? schema {}", table.schema_str()),
             format!("GET {sel} FROM t WHERE {fc} IS {fv}"),
@@ -425,17 +433,18 @@ fn fnv(s: &str) -> u64 {
     h
 }
 
-/// Dataset registry by name (the config system's `dataset` field).
-pub fn by_name(name: &str, seed: u64, n_train: usize) -> Dataset {
-    match name {
+/// Dataset registry by name (the config system's `dataset` field). Unknown
+/// names error so a bad suite config degrades one cell, not the process.
+pub fn by_name(name: &str, seed: u64, n_train: usize) -> Result<Dataset> {
+    Ok(match name {
         "dart" => dart(seed, n_train),
         "samsum" => samsum(seed, n_train),
         "spider" => spider(seed, n_train),
         "cifar10" => cifar(seed, n_train),
         "celeba" => celeba(seed, n_train),
-        g if g.starts_with("glue/") => glue(&g[5..], seed, n_train),
-        _ => panic!("unknown dataset {name}"),
-    }
+        g if g.starts_with("glue/") => glue(&g[5..], seed, n_train)?,
+        _ => bail!("unknown dataset {name:?} (see rust/docs/suite.md)"),
+    })
 }
 
 #[cfg(test)]
@@ -445,18 +454,18 @@ mod tests {
 
     #[test]
     fn generators_deterministic() {
-        let d1 = glue("rte", 7, 32);
-        let d2 = glue("rte", 7, 32);
+        let d1 = glue("rte", 7, 32).unwrap();
+        let d2 = glue("rte", 7, 32).unwrap();
         assert_eq!(d1.train[0].prompt, d2.train[0].prompt);
         assert_eq!(d1.train[0].label, d2.train[0].label);
-        let d3 = glue("rte", 8, 32);
+        let d3 = glue("rte", 8, 32).unwrap();
         assert_ne!(d3.train[0].prompt, d1.train[0].prompt);
     }
 
     #[test]
     fn glue_labels_balanced_and_valid() {
         for sub in GLUE_SUBTASKS {
-            let d = glue(sub, 3, 200);
+            let d = glue(sub, 3, 200).unwrap();
             let n_classes = d.train[0].label_bytes.len();
             let mut counts = vec![0usize; n_classes];
             for ex in &d.train {
@@ -470,7 +479,7 @@ mod tests {
 
     #[test]
     fn rte_program_is_consistent() {
-        let d = glue("rte", 11, 100);
+        let d = glue("rte", 11, 100).unwrap();
         for ex in &d.train {
             let s = String::from_utf8(ex.prompt.clone()).unwrap();
             let (prem, hyp) = s.split_once(" ; ").unwrap();

@@ -1,0 +1,303 @@
+//! Crate-wide error taxonomy: a zero-dependency `Result`/`Error` pair that
+//! replaces the external `anyhow` crate everywhere in the workspace.
+//!
+//! The offline build vendors no third-party crates (see rust/Cargo.toml),
+//! and the serve layer needs *classified* errors — a malformed request must
+//! degrade that one request, not kill a scheduler lane — so the crate owns
+//! its error type:
+//!
+//! - [`Error`] carries an [`ErrorKind`], a message, and an optional cause
+//!   chain built up by [`Context::context`] / [`Context::with_context`].
+//! - `{e}` prints the outermost message; `{e:#}` prints the whole chain
+//!   (`outer: inner: root`), matching the convention the suite runner and
+//!   serve responses already rely on.
+//! - The [`err!`](crate::err!), [`bail!`](crate::bail!) and
+//!   [`ensure!`](crate::ensure!) macros cover the construction patterns the
+//!   code used from `anyhow`.
+
+use std::fmt;
+
+/// Coarse classification of an [`Error`], for programmatic handling at the
+/// layer boundaries (the serve loop maps `Request` errors to a per-request
+/// JSON error response and everything else to a lane failure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ErrorKind {
+    /// I/O failure (filesystem, sockets).
+    Io,
+    /// Malformed input: JSON, config, manifest, checkpoint, suite spec.
+    Parse,
+    /// A malformed or unsatisfiable client request (serve layer).
+    Request,
+    /// Artifact execution / accelerator-backend failure.
+    Runtime,
+    /// A violated internal invariant surfaced as an error instead of a
+    /// panic (the no-panic lint converts "impossible" states to these).
+    Invariant,
+    /// Anything else.
+    Other,
+}
+
+/// The crate-wide error type. See the [module docs](self) for the display
+/// and chaining conventions.
+pub struct Error {
+    kind: ErrorKind,
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// Crate-wide result alias (defaults the error type to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// An error with an explicit kind.
+    pub fn new(kind: ErrorKind, msg: impl Into<String>) -> Error {
+        Error { kind, msg: msg.into(), cause: None }
+    }
+
+    /// An [`ErrorKind::Other`] error from a message (what [`err!`](crate::err!)
+    /// expands to).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error::new(ErrorKind::Other, msg)
+    }
+
+    /// Reclassify this error (outermost kind wins; the chain keeps the
+    /// original as its cause kind).
+    pub fn with_kind(mut self, kind: ErrorKind) -> Error {
+        self.kind = kind;
+        self
+    }
+
+    /// The error's classification.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Wrap this error with an outer context message. The wrapper inherits
+    /// the inner kind so classification survives `.context(...)`.
+    pub fn context(self, msg: impl Into<String>) -> Error {
+        Error { kind: self.kind, msg: msg.into(), cause: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.cause.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: the whole chain, outermost first.
+            for (i, e) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `main() -> Result<()>` exits through this; show the full story.
+        write!(f, "{}", self.msg)?;
+        let mut rest = self.cause.as_deref();
+        if rest.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = rest {
+            write!(f, "\n    {}", e.msg)?;
+            rest = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.cause.as_deref().map(|e| e as _)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(ErrorKind::Io, e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::new(ErrorKind::Parse, e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::new(ErrorKind::Parse, e.to_string())
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Error {
+        Error::new(ErrorKind::Parse, e.to_string())
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Error {
+        Error::new(ErrorKind::Parse, e.to_string())
+    }
+}
+
+impl From<crate::xla::XlaError> for Error {
+    fn from(e: crate::xla::XlaError) -> Error {
+        Error::new(ErrorKind::Runtime, e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Fallible-chain extension: attach context to `Result`/`Option`, exactly
+/// the two methods the codebase used from `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.into().context(msg.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::error::Error) from a format string:
+/// `err!("variant {name:?} not found")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::error::Error) built from a format
+/// string: `bail!("unknown adapter {id}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds:
+/// `ensure!(a == b, "mismatch {a} vs {b}")`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_thing(s: &str) -> Result<u32> {
+        s.parse::<u32>().with_context(|| format!("parsing {s:?}"))
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e = parse_thing("zz").unwrap_err().context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        let chain = format!("{e:#}");
+        assert!(chain.starts_with("loading config: parsing \"zz\": "), "{chain}");
+    }
+
+    #[test]
+    fn kind_survives_context() {
+        let e = Error::new(ErrorKind::Request, "missing field")
+            .context("handling request");
+        assert_eq!(e.kind(), ErrorKind::Request);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+        assert_eq!(e.kind(), ErrorKind::Other);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e = err!("plain {}", 1);
+        assert_eq!(format!("{e}"), "plain 1");
+    }
+
+    #[test]
+    fn io_from_sets_kind() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert_eq!(e.kind(), ErrorKind::Io);
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("top"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+        assert_eq!(e.chain().count(), 3);
+    }
+}

@@ -37,9 +37,10 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::data::minidb::exec_match;
+use crate::xla;
 use crate::data::tasks::spider_table;
 use crate::data::words_to_ids;
 use crate::data::{make_batch, Dataset, Example, BOS, PAD};
@@ -72,8 +73,11 @@ pub fn eval_classification(trainer: &Trainer, split: &[Example], metric: Metric)
             let row = &logits.data[(r * l + pos) * v..(r * l + pos + 1) * v];
             let scores: Vec<f32> =
                 ex.label_bytes.iter().map(|&bb| row[bb as usize]).collect();
+            // generation-style examples carry no class label; skip them
+            // rather than panic if one leaks into a classification split
+            let Some(gold) = ex.label else { continue };
             preds.push(argmax(&scores));
-            golds.push(ex.label.unwrap());
+            golds.push(gold);
         }
         i = end;
     }
@@ -228,7 +232,10 @@ impl DecodeState {
         if self.host_fresh {
             return Ok(());
         }
-        let pair = self.resident.as_ref().expect("stale host without resident state");
+        let pair = self
+            .resident
+            .as_ref()
+            .context("decode-state invariant: stale host mirror without resident literals")?;
         crate::runtime::read_f32_into(&pair.conv, &mut self.conv.data)?;
         crate::runtime::read_f32_into(&pair.ssm, &mut self.ssm.data)?;
         self.host_fresh = true;
@@ -302,7 +309,10 @@ impl DecodeState {
                 ssm: crate::runtime::literal_f32(&self.ssm)?,
             });
         }
-        let pair = self.resident.as_ref().unwrap();
+        let pair = self
+            .resident
+            .as_ref()
+            .context("decode-state invariant: resident literals just installed")?;
         Ok((&pair.conv, &pair.ssm))
     }
 
@@ -735,12 +745,12 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
         }
         last = Some(model.step(&cur, &mut state)?);
     }
-    let logits = last.expect("prefill stream is at least [BOS]");
+    let logits = last.context("beam prefill produced no logits (empty prompt stream)")?;
     state.broadcast_row(&dims, b, 0)?;
     let v = logits.shape[1];
     let lp0 = log_softmax(&logits.data[..v]);
     let mut order: Vec<usize> = (0..256).collect();
-    order.sort_by(|&a, &bb| lp0[bb].partial_cmp(&lp0[a]).unwrap());
+    order.sort_by(|&a, &bb| lp0[bb].total_cmp(&lp0[a]));
     let mut beams: Vec<Beam> = order[..width]
         .iter()
         .map(|&t| Beam {
@@ -751,7 +761,8 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
         .collect();
     for r in 0..b {
         let bm = &beams[r.min(width - 1)];
-        cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
+        // a live beam always holds its expansion token; PAD is safe either way
+        cur.data[r] = if bm.done { PAD } else { bm.toks.last().map_or(PAD, |&t| t as i32) };
     }
     // replicate states across beams (identical after same prefill)
     for _ in 1..max_new {
@@ -771,7 +782,7 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
             }
             let lp = log_softmax(&lg.data[bi * v..bi * v + 256]);
             let mut idx: Vec<usize> = (0..256).collect();
-            idx.sort_by(|&a, &bb| lp[bb].partial_cmp(&lp[a]).unwrap());
+            idx.sort_by(|&a, &bb| lp[bb].total_cmp(&lp[a]));
             for &t in &idx[..width] {
                 // the expansion token counts toward the normalized length
                 // whether it extends the beam or finishes it (stop byte),
@@ -780,7 +791,7 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
                 cand.push((bi, Some(t as u8), s, beam_norm(s, bm.toks.len() + 1)));
             }
         }
-        cand.sort_by(|a, bc| bc.3.partial_cmp(&a.3).unwrap());
+        cand.sort_by(|a, bc| bc.3.total_cmp(&a.3));
         let mut new_beams = Vec::with_capacity(width);
         // re-parent surviving beams: snapshot the post-step state, then
         // permute rows in the host mirror (slots beyond `width` keep their
@@ -808,15 +819,14 @@ pub fn beam_search(model: &dyn StepDecode, prompt: &[u8], width: usize,
         beams = new_beams;
         for r in 0..b {
             let bm = &beams[r.min(width - 1)];
-            cur.data[r] = if bm.done { PAD } else { *bm.toks.last().unwrap() as i32 };
+            // a live beam always holds its expansion token; PAD is safe either way
+        cur.data[r] = if bm.done { PAD } else { bm.toks.last().map_or(PAD, |&t| t as i32) };
         }
     }
     Ok(beams
         .into_iter()
         .max_by(|a, bm| {
-            beam_norm(a.score, a.gen_len())
-                .partial_cmp(&beam_norm(bm.score, bm.gen_len()))
-                .unwrap()
+            beam_norm(a.score, a.gen_len()).total_cmp(&beam_norm(bm.score, bm.gen_len()))
         })
         .map(|bm| bm.toks)
         .unwrap_or_default())
@@ -1087,7 +1097,7 @@ pub(crate) mod testing {
             -> Result<Tensor> {
             self.chunks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let w = tokens.shape[1];
-            anyhow::ensure!(self.widths.contains(&w), "unsupported chunk width {w}");
+            crate::ensure!(self.widths.contains(&w), "unsupported chunk width {w}");
             let (conv, ssm) = state.host_mut()?;
             let mut hashes = vec![0.0f32; self.b];
             for r in 0..self.b {

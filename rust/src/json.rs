@@ -182,7 +182,9 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // copy one UTF-8 scalar
                     let s = std::str::from_utf8(&self.b[self.i..]).map_err(|_| "bad utf8")?;
-                    let ch = s.chars().next().unwrap();
+                    let Some(ch) = s.chars().next() else {
+                        return Err("bad utf8".into());
+                    };
                     out.push(ch);
                     self.i += ch.len_utf8();
                 }

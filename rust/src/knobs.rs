@@ -1,0 +1,155 @@
+//! The typed registry of every `SSM_PEFT_*` environment knob.
+//!
+//! This module is the **only** place in the crate allowed to call
+//! `std::env::var` (enforced twice: clippy's `disallowed-methods` and the
+//! repolint knob-registry rule). Every knob is declared once in [`KNOBS`]
+//! with its type, default and doc line; the lint cross-checks that
+//!
+//! - every `SSM_PEFT_*` string anywhere in the source is a registered name,
+//! - every registered knob is documented in `rust/docs/` by name.
+//!
+//! Adding a knob therefore means adding a [`Knob`] row, a typed accessor,
+//! and a docs mention — or the build fails.
+
+/// Value type of a knob (how the raw string is parsed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobKind {
+    /// Parsed with `usize::from_str`; invalid values fall back to default.
+    Usize,
+    /// Parsed with `f32::from_str`; invalid values fall back to default.
+    Float,
+    /// Used verbatim as a filesystem path.
+    Path,
+}
+
+/// One registered environment knob.
+#[derive(Debug, Clone, Copy)]
+pub struct Knob {
+    /// Full environment-variable name (`SSM_PEFT_*`).
+    pub name: &'static str,
+    /// Value type.
+    pub kind: KnobKind,
+    /// Human-readable default (what applies when the variable is unset).
+    pub default: &'static str,
+    /// One-line description (mirrored in the docs).
+    pub doc: &'static str,
+}
+
+/// Every environment knob the workspace reads, in one table.
+pub const KNOBS: &[Knob] = &[
+    Knob {
+        name: "SSM_PEFT_ARTIFACTS",
+        kind: KnobKind::Path,
+        default: "<crate>/artifacts (or ./artifacts when present)",
+        doc: "Override the AOT artifacts directory (manifest.json + HLO files).",
+    },
+    Knob {
+        name: "SSM_PEFT_RESULTS",
+        kind: KnobKind::Path,
+        default: "<crate>/results",
+        doc: "Override the results directory (JSONL records, BENCH_*.json).",
+    },
+    Knob {
+        name: "SSM_PEFT_WORKERS",
+        kind: KnobKind::Usize,
+        default: "per-call default (suite CLI uses 2)",
+        doc: "Suite worker threads for parallel fine-tune cells.",
+    },
+    Knob {
+        name: "SSM_PEFT_FUSED_WORKERS",
+        kind: KnobKind::Usize,
+        default: "min(available cores, 4)",
+        doc: "Worker threads inside one fused-optimizer step.",
+    },
+    Knob {
+        name: "SSM_PEFT_BENCH_SCALE",
+        kind: KnobKind::Float,
+        default: "1.0",
+        doc: "Scales bench iteration counts and synthetic model size (0.1 = CI tiny mode).",
+    },
+];
+
+/// Registry lookup by full name.
+pub fn lookup(name: &str) -> Option<&'static Knob> {
+    KNOBS.iter().find(|k| k.name == name)
+}
+
+/// The single raw environment read. Debug builds refuse unregistered
+/// names so a new knob cannot bypass the table even before the lint runs.
+#[allow(clippy::disallowed_methods)] // the one sanctioned env::var site
+fn raw(name: &str) -> Option<String> {
+    debug_assert!(lookup(name).is_some(), "unregistered knob {name}");
+    std::env::var(name).ok()
+}
+
+/// `SSM_PEFT_ARTIFACTS`: artifacts directory override.
+pub fn artifacts_override() -> Option<std::path::PathBuf> {
+    raw("SSM_PEFT_ARTIFACTS").map(std::path::PathBuf::from)
+}
+
+/// `SSM_PEFT_RESULTS`: results directory override.
+pub fn results_override() -> Option<std::path::PathBuf> {
+    raw("SSM_PEFT_RESULTS").map(std::path::PathBuf::from)
+}
+
+/// `SSM_PEFT_WORKERS`: suite worker threads, else the caller's default;
+/// floored at 1.
+pub fn workers(default: usize) -> usize {
+    raw("SSM_PEFT_WORKERS")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// `SSM_PEFT_FUSED_WORKERS`: per-step fused-optimizer worker threads,
+/// else min(available cores, 4); floored at 1.
+pub fn fused_workers() -> usize {
+    raw("SSM_PEFT_FUSED_WORKERS")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// `SSM_PEFT_BENCH_SCALE`: bench scale factor, default 1.0.
+pub fn bench_scale() -> f32 {
+    raw("SSM_PEFT_BENCH_SCALE").and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_knob_is_well_formed() {
+        assert!(!KNOBS.is_empty());
+        for k in KNOBS {
+            assert!(k.name.starts_with("SSM_PEFT_"), "{}", k.name);
+            assert!(!k.doc.is_empty(), "{} missing doc", k.name);
+            assert!(!k.default.is_empty(), "{} missing default", k.name);
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> = KNOBS.iter().map(|k| k.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), KNOBS.len());
+    }
+
+    #[test]
+    fn lookup_finds_registered_only() {
+        assert!(lookup("SSM_PEFT_WORKERS").is_some());
+        assert!(lookup("SSM_PEFT_NOPE").is_none());
+    }
+
+    #[test]
+    fn typed_accessors_apply_floors() {
+        // unset (or set) either way, floors hold
+        assert!(workers(0) >= 1);
+        assert!(fused_workers() >= 1);
+        assert!(bench_scale() > 0.0 || bench_scale() <= 0.0); // parses to a float
+    }
+}

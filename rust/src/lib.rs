@@ -30,6 +30,10 @@
 //!   continuous-batching scheduler, `serve` CLI loop (stdin/TCP)
 //! - [`bench`] — timing harness used by `cargo bench` targets + the
 //!   `bench hotpath` telemetry ([`bench::hotpath`])
+//! - [`error`] — the crate-wide [`error::Error`]/[`error::Result`] taxonomy
+//! - [`knobs`] — the typed `SSM_PEFT_*` environment-knob registry
+//! - [`lint`] — repolint, the first-party static-analysis pass (`lint` CLI)
+//! - [`xla`] — in-tree PJRT facade (host-side literals + device stub)
 
 #![warn(missing_docs)]
 
@@ -37,8 +41,11 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod json;
+pub mod knobs;
+pub mod lint;
 pub mod manifest;
 pub mod metrics;
 pub mod optim;
@@ -48,32 +55,32 @@ pub mod serve;
 pub mod suite;
 pub mod tensor;
 pub mod train;
+pub mod xla;
 
 /// Crate version (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 
-/// Default artifacts directory (overridable via `SSM_PEFT_ARTIFACTS`).
+/// Default artifacts directory (overridable via `SSM_PEFT_ARTIFACTS`,
+/// read through [`knobs::artifacts_override`]).
 pub fn artifacts_dir() -> std::path::PathBuf {
-    std::env::var("SSM_PEFT_ARTIFACTS")
-        .map(Into::into)
-        .unwrap_or_else(|_| {
-            // works from repo root and from target/ subprocesses
-            let here = std::path::Path::new("artifacts");
-            if here.exists() {
-                here.to_path_buf()
-            } else {
-                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-            }
-        })
+    crate::knobs::artifacts_override().unwrap_or_else(|| {
+        // works from repo root and from target/ subprocesses
+        let here = std::path::Path::new("artifacts");
+        if here.exists() {
+            here.to_path_buf()
+        } else {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        }
+    })
 }
 
 /// Results directory for bench/experiment CSV+JSONL output. Overridable
-/// via `SSM_PEFT_RESULTS` (mirroring `SSM_PEFT_ARTIFACTS`) so parallel
+/// via `SSM_PEFT_RESULTS` (through [`knobs::results_override`]) so parallel
 /// suite runs and CI can isolate their output.
 pub fn results_dir() -> std::path::PathBuf {
-    let d = std::env::var("SSM_PEFT_RESULTS")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results"));
+    let d = crate::knobs::results_override().unwrap_or_else(|| {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results")
+    });
     std::fs::create_dir_all(&d).ok();
     d
 }

@@ -1,0 +1,373 @@
+//! The repolint tokenizer: a lightweight Rust lexer that separates code
+//! from comments and string contents, so the rules never match inside a
+//! string literal or a doc comment.
+//!
+//! Output model (shared by every rule):
+//! - `code`: the source with comment text and string *interiors* replaced
+//!   by spaces (newlines kept), so line positions are stable and brace
+//!   matching sees only real braces;
+//! - `comments`: per-line comment text (SAFETY annotations, lint waivers);
+//! - `test_spans`: line ranges of `#[cfg(test)]` items (the no-panic rule
+//!   exempts test code).
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes, raw strings (`r"…"`, `r#"…"#`), byte strings (`b"…"`,
+//! `br#"…"#`), char literals vs. lifetimes, raw identifiers (`r#type`).
+
+use std::collections::BTreeMap;
+
+/// Lexed view of one source file. See the [module docs](self).
+#[derive(Debug)]
+pub struct Scan {
+    /// Source with comments and string interiors blanked (newlines kept).
+    pub code: String,
+    /// Comment text by 1-based line (multi-line block comments contribute
+    /// one entry per line they span).
+    pub comments: BTreeMap<usize, String>,
+    /// 1-based inclusive line spans of `#[cfg(test)]` items.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl Scan {
+    /// The blanked code of one 1-based line ("" past EOF).
+    pub fn code_line(&self, line: usize) -> &str {
+        self.code.split('\n').nth(line.saturating_sub(1)).unwrap_or("")
+    }
+
+    /// Whether a line falls inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Comment text attached to a line (empty when none).
+    pub fn comment(&self, line: usize) -> &str {
+        self.comments.get(&line).map(String::as_str).unwrap_or("")
+    }
+}
+
+/// A detected string literal start: escape behavior + interior start index.
+struct StrStart {
+    /// Raw strings ignore backslash escapes.
+    raw: bool,
+    /// `#` count for the closing delimiter.
+    hashes: usize,
+    /// Index of the first interior char (past the opening quote).
+    body: usize,
+}
+
+/// Lex one file. Never fails: unterminated constructs extend to EOF, which
+/// matches how rustc would report them anyway (the real compiler gates CI).
+pub fn scan(src: &str) -> Scan {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    let record = |map: &mut BTreeMap<usize, String>, line: usize, text: &str| {
+        map.entry(line).or_default().push_str(text);
+    };
+    let blank = |out: &mut String, k: usize| out.extend(std::iter::repeat(' ').take(k));
+
+    while i < n {
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        if c == '/' && next == Some('/') {
+            // line comment (incl. /// and //!)
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            record(&mut comments, line, &text);
+            blank(&mut out, i - start);
+        } else if c == '/' && next == Some('*') {
+            // nested block comment; record each spanned line's text
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut seg_start = i;
+            let mut seg_line = line;
+            while j < n && depth > 0 {
+                if cs[j] == '/' && cs.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && cs.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        let text: String = cs[seg_start..j].iter().collect();
+                        record(&mut comments, seg_line, &text);
+                        line += 1;
+                        seg_line = line;
+                        seg_start = j + 1;
+                    }
+                    j += 1;
+                }
+            }
+            let text: String = cs[seg_start..j].iter().collect();
+            record(&mut comments, seg_line, &text);
+            for &ch in &cs[i..j] {
+                out.push(if ch == '\n' { '\n' } else { ' ' });
+            }
+            i = j;
+        } else if let Some(s) = string_start(&cs, i) {
+            let close: String = std::iter::once('"')
+                .chain(std::iter::repeat('#').take(s.hashes))
+                .collect();
+            let (end, nl) = find_close(&cs, s.body, &close, !s.raw);
+            for &ch in &cs[i..s.body] {
+                out.push(ch); // prefix + opening quote stay
+            }
+            for &ch in &cs[s.body..end] {
+                out.push(if ch == '\n' { '\n' } else { ' ' });
+            }
+            let stop = (end + close.len()).min(n);
+            for &ch in &cs[end..stop] {
+                out.push(ch);
+            }
+            line += nl;
+            i = stop;
+        } else if c == 'b' && next == Some('\'') {
+            // byte char literal b'x' / b'\''
+            let end = char_lit_end(&cs, i + 1);
+            out.push('b');
+            out.push('\'');
+            blank(&mut out, end.saturating_sub(i + 2));
+            if end < n {
+                out.push('\'');
+            }
+            i = (end + 1).min(n);
+        } else if c == '\'' && is_char_literal(&cs, i) {
+            let end = char_lit_end(&cs, i);
+            out.push('\'');
+            blank(&mut out, end.saturating_sub(i + 1));
+            if end < n {
+                out.push('\'');
+            }
+            i = (end + 1).min(n);
+        } else {
+            if c == '\n' {
+                line += 1;
+            }
+            out.push(c);
+            i += 1;
+        }
+    }
+
+    let test_spans = find_test_spans(&out);
+    Scan { code: out, comments, test_spans }
+}
+
+/// Detect a string literal opening at `i`: `"`, `r"`, `r#"`, `b"`, `br#"`.
+/// Returns `None` when `i` starts something else (identifier, raw ident,
+/// byte char, …).
+fn string_start(cs: &[char], i: usize) -> Option<StrStart> {
+    match cs[i] {
+        '"' => Some(StrStart { raw: false, hashes: 0, body: i + 1 }),
+        'r' | 'b' if !prev_is_ident(cs, i) => {
+            let mut j = i;
+            let mut raw = false;
+            if cs[j] == 'b' {
+                j += 1;
+            }
+            if cs.get(j) == Some(&'r') {
+                raw = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while cs.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if cs.get(j) != Some(&'"') {
+                return None; // r#type, plain ident, b'x', …
+            }
+            if !raw && hashes > 0 {
+                return None; // b#" is not a string
+            }
+            Some(StrStart { raw, hashes, body: j + 1 })
+        }
+        _ => None,
+    }
+}
+
+/// Whether the char before `i` continues an identifier (so `r`/`b` here is
+/// the tail of a name like `attr`, not a string prefix).
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_')
+}
+
+/// Find the closing delimiter of a string whose interior starts at `from`.
+/// Returns (index of the close delimiter, newline count inside).
+fn find_close(cs: &[char], from: usize, close: &str, escapes: bool) -> (usize, usize) {
+    let close_cs: Vec<char> = close.chars().collect();
+    let mut lines = 0usize;
+    let mut i = from;
+    while i < cs.len() {
+        if escapes && cs[i] == '\\' {
+            i += 2;
+            continue;
+        }
+        if cs[i] == close_cs[0] && cs[i..].starts_with(&close_cs[..]) {
+            return (i, lines);
+        }
+        if cs[i] == '\n' {
+            lines += 1;
+        }
+        i += 1;
+    }
+    (cs.len(), lines)
+}
+
+/// Whether `'` at `i` opens a char literal (vs. a lifetime).
+fn is_char_literal(cs: &[char], i: usize) -> bool {
+    match cs.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => cs.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Index of the closing `'` of a char literal whose opening quote is at `i`.
+fn char_lit_end(cs: &[char], i: usize) -> usize {
+    let mut j = i + 1;
+    if cs.get(j) == Some(&'\\') {
+        j += 2;
+    } else {
+        j += 1;
+    }
+    while j < cs.len() && cs[j] != '\'' {
+        j += 1;
+    }
+    j
+}
+
+/// Line spans of `#[cfg(test)]` items, by brace matching on blanked code.
+/// The marker must be written literally (`#[cfg(test)]`), which rustfmt
+/// normalizes to anyway.
+fn find_test_spans(code: &str) -> Vec<(usize, usize)> {
+    let lines: Vec<&str> = code.split('\n').collect();
+    let mut spans = Vec::new();
+    for (idx, ln) in lines.iter().enumerate() {
+        if !ln.contains("#[cfg(test)]") {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut closed = false;
+        for (j, l) in lines.iter().enumerate().skip(idx) {
+            for ch in l.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if started && depth <= 0 {
+                spans.push((idx + 1, j + 1));
+                closed = true;
+                break;
+            }
+        }
+        if !closed {
+            // unbalanced braces: treat the rest of the file as test code
+            spans.push((idx + 1, lines.len()));
+        }
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_line_and_block_comments() {
+        let s = scan("let a = 1; // unwrap() here\n/* panic! */ let b = 2;\n");
+        assert!(!s.code.contains("unwrap"));
+        assert!(!s.code.contains("panic"));
+        assert!(s.comment(1).contains("unwrap() here"));
+        assert!(s.comment(2).contains("panic!"));
+        assert!(s.code.contains("let a = 1;"));
+        assert!(s.code.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let s = scan("/* outer /* inner */ still comment */ let x = 1;\n");
+        assert!(s.code.contains("let x = 1;"));
+        assert!(!s.code.contains("inner"));
+    }
+
+    #[test]
+    fn blanks_string_interiors_keeps_quotes() {
+        let s = scan("let s = \"call .unwrap() now\"; let t = 1;\n");
+        assert!(!s.code.contains("unwrap"));
+        assert!(s.code.contains('"'));
+        assert!(s.code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let s = scan("let a = r#\"panic! \"quoted\" todo!\"#; let b = b\"panic!\";\n");
+        assert!(!s.code.contains("panic"));
+        assert!(!s.code.contains("todo"));
+        assert!(s.code.contains("let b ="));
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let s = scan("let a = \"x\\\"y.unwrap()z\"; let done = 1;\n");
+        assert!(!s.code.contains("unwrap"));
+        assert!(s.code.contains("let done = 1;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) -> char { let q = '\"'; let n = '\\n'; q }\n");
+        assert!(s.code.contains("fn f<'a>(x: &'a str)"));
+        // the quote inside the char literal must not open a string
+        assert!(s.code.contains("let n ="));
+    }
+
+    #[test]
+    fn byte_char_quote_does_not_open_string() {
+        let s = scan("let q = b'\"'; let after = 1; // note\n");
+        assert!(s.code.contains("let after = 1;"));
+        assert!(s.comment(1).contains("note"));
+    }
+
+    #[test]
+    fn raw_identifier_not_a_string() {
+        let s = scan("let r#type = 1; let after = 2;\n");
+        assert!(s.code.contains("let after = 2;"));
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_count() {
+        let src = "let a = \"line1\nline2\nline3\";\nlet b = 1; // note\n";
+        let s = scan(src);
+        assert_eq!(s.code.matches('\n').count(), src.matches('\n').count());
+        assert!(s.comment(4).contains("note"), "comment lands on the right line");
+    }
+
+    #[test]
+    fn test_spans_cover_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let s = scan(src);
+        assert_eq!(s.test_spans, vec![(2, 5)]);
+        assert!(s.in_test(4));
+        assert!(!s.in_test(6));
+    }
+
+    #[test]
+    fn cfg_test_inside_string_ignored() {
+        let s = scan("let a = \"#[cfg(test)]\";\nfn real() {}\n");
+        assert!(s.test_spans.is_empty());
+    }
+}

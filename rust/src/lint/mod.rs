@@ -1,0 +1,414 @@
+//! repolint: the first-party static-analysis pass (`ssm-peft lint`).
+//!
+//! Zero-dependency by construction: a lightweight tokenizer
+//! ([`lexer`]) feeds four rules ([`rules`]) over every `.rs` file in the
+//! workspace, an exact-count allowlist ledger ([`allowlist`]) holds the few
+//! sanctioned exceptions, and this module drives the walk plus the
+//! cross-file contracts:
+//!
+//! - every `SSM_PEFT_*` name mentioned anywhere in non-test code must be
+//!   registered in [`crate::knobs::KNOBS`];
+//! - every registered knob must be documented by name in `rust/docs/`;
+//! - the `BENCH_hotpath.json` schema constant
+//!   ([`crate::bench::hotpath::BENCH_HOTPATH_SCHEMA`]) must match the
+//!   schema shown in `rust/docs/performance.md`.
+//!
+//! Run with `cargo run --release -- lint`; rule catalogue and waiver
+//! etiquette live in `rust/docs/linting.md`.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Context, Result};
+use rules::{Rule, UnsafeSite, Violation};
+
+/// Directories scanned, relative to the workspace root.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Path fragments excluded from the walk: fixtures violate rules on
+/// purpose, and `target/` is build output.
+const EXCLUDE_FRAGMENTS: &[&str] = &["lint_fixtures", "/target/"];
+
+/// Everything one lint run produced.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Rule violations (after allowlist subtraction).
+    pub violations: Vec<Violation>,
+    /// Hits absorbed by the allowlist ledger (count).
+    pub allowlisted: usize,
+    /// Ledger/contract drift: growth, stale entries, undocumented knobs,
+    /// schema-pin mismatches.
+    pub drift: Vec<String>,
+    /// Every `unsafe` site found (annotated ones included) — the inventory.
+    pub unsafe_sites: Vec<UnsafeSite>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Whether the tree is clean (no violations, no drift).
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty() && self.drift.is_empty()
+    }
+
+    /// Human-readable report (what the CLI prints).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("{v}\n"));
+        }
+        for d in &self.drift {
+            out.push_str(&format!("drift: {d}\n"));
+        }
+        out.push_str(&format!(
+            "repolint: {} file(s), {} violation(s), {} drift, {} allowlisted, {} unsafe site(s)\n",
+            self.files_scanned,
+            self.violations.len(),
+            self.drift.len(),
+            self.allowlisted,
+            self.unsafe_sites.len()
+        ));
+        out
+    }
+}
+
+/// The workspace root (parent of the `rust/` crate directory).
+pub fn workspace_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Run the full lint pass rooted at `root` (see [`workspace_root`]).
+pub fn run(root: &Path) -> Result<LintReport> {
+    let files = collect_files(root)?;
+    let mut raw_violations: Vec<Violation> = Vec::new();
+    let mut unsafe_sites: Vec<UnsafeSite> = Vec::new();
+    let mut mentions: BTreeMap<String, Vec<String>> = BTreeMap::new();
+
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let scan = lexer::scan(&src);
+        let (v, u) = rules::check_file(&rel, &scan);
+        raw_violations.extend(v);
+        unsafe_sites.extend(u);
+        // knob mentions, skipping #[cfg(test)] spans (tests may name
+        // deliberately-unregistered knobs to probe the registry)
+        for (idx, raw_line) in src.split('\n').enumerate() {
+            if scan.in_test(idx + 1) {
+                continue;
+            }
+            for name in rules::knob_mentions(raw_line) {
+                mentions.entry(name).or_default().push(format!("{rel}:{}", idx + 1));
+            }
+        }
+    }
+
+    let (mut violations, allowlisted, mut drift) = apply_allowlist(raw_violations);
+    knob_docs_check(root, &mut drift);
+    knob_registry_check(&mentions, &mut violations);
+    schema_pin_check(root, &mut drift);
+
+    Ok(LintReport { violations, allowlisted, drift, unsafe_sites, files_scanned: files.len() })
+}
+
+/// Subtract the allowlist from raw violations with exact-count semantics.
+/// Returns (remaining violations, absorbed count, drift messages).
+fn apply_allowlist(raw: Vec<Violation>) -> (Vec<Violation>, usize, Vec<String>) {
+    let mut counts: BTreeMap<(String, &'static str), usize> = BTreeMap::new();
+    for v in &raw {
+        *counts.entry((v.file.clone(), v.rule.name())).or_default() += 1;
+    }
+    let mut drift = Vec::new();
+    let mut allowlisted = 0usize;
+    let mut remaining = Vec::new();
+    for v in raw {
+        match allowlist::entry(&v.file, v.rule) {
+            Some(_) => allowlisted += 1,
+            None => remaining.push(v),
+        }
+    }
+    for e in allowlist::ALLOWLIST {
+        let actual =
+            counts.get(&(e.file.to_string(), e.rule.name())).copied().unwrap_or(0);
+        if actual > e.count {
+            drift.push(format!(
+                "{}: [{}] {} hit(s), ledger allows {} — new panic site? fix it or \
+                 (rarely) grow the ledger with a justification",
+                e.file, e.rule, actual, e.count
+            ));
+        } else if actual < e.count {
+            drift.push(format!(
+                "{}: [{}] {} hit(s), ledger expects {} — stale entry; ratchet the \
+                 ledger down in rust/src/lint/allowlist.rs and rust/docs/linting.md",
+                e.file, e.rule, actual, e.count
+            ));
+        }
+    }
+    (remaining, allowlisted, drift)
+}
+
+/// Every registered knob must be documented by name under `rust/docs/`,
+/// and the docs must not reference unregistered knobs.
+fn knob_docs_check(root: &Path, drift: &mut Vec<String>) {
+    let docs = read_docs(root);
+    for k in crate::knobs::KNOBS {
+        if !docs.iter().any(|(_, text)| text.contains(k.name)) {
+            drift.push(format!(
+                "knob {} is registered but not documented in rust/docs/",
+                k.name
+            ));
+        }
+    }
+    // and docs must not reference unregistered knobs (doc rot)
+    for (file, text) in &docs {
+        for name in rules::knob_mentions(text) {
+            if crate::knobs::lookup(&name).is_none() {
+                drift.push(format!("{file}: documents unregistered knob {name}"));
+            }
+        }
+    }
+}
+
+/// Every `SSM_PEFT_*` mention in non-test code must be a registered knob.
+fn knob_registry_check(
+    mentions: &BTreeMap<String, Vec<String>>,
+    violations: &mut Vec<Violation>,
+) {
+    for (name, sites) in mentions {
+        if crate::knobs::lookup(name).is_none() {
+            for site in sites {
+                let (file, line) = split_site(site);
+                violations.push(Violation {
+                    file,
+                    line,
+                    rule: Rule::KnobRegistry,
+                    msg: format!("unregistered knob {name} (add it to crate::knobs::KNOBS)"),
+                });
+            }
+        }
+    }
+}
+
+/// `BENCH_hotpath.json` schema constant must match the docs.
+fn schema_pin_check(root: &Path, drift: &mut Vec<String>) {
+    let pin = format!("\"schema\": {}", crate::bench::hotpath::BENCH_HOTPATH_SCHEMA);
+    let path = root.join("rust/docs/performance.md");
+    match std::fs::read_to_string(&path) {
+        Ok(text) if text.contains(&pin) => {}
+        Ok(_) => drift.push(format!(
+            "rust/docs/performance.md does not show `{pin}` — BENCH_hotpath.json \
+             schema constant and docs have diverged"
+        )),
+        Err(e) => drift.push(format!("cannot read {}: {e}", path.display())),
+    }
+}
+
+/// Walk the scan dirs, collecting `.rs` files in deterministic order.
+fn collect_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for dir in SCAN_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            walk(&d, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        let path = entry.path();
+        let lossy = path.to_string_lossy().replace('\\', "/");
+        if EXCLUDE_FRAGMENTS.iter().any(|f| lossy.contains(f)) {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Workspace-relative display path with forward slashes.
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// All `rust/docs/*.md` files as (relative name, contents).
+fn read_docs(root: &Path) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let dir = root.join("rust/docs");
+    let Ok(rd) = std::fs::read_dir(&dir) else {
+        return out;
+    };
+    let mut paths: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.extension().is_some_and(|e| e == "md") {
+            if let Ok(text) = std::fs::read_to_string(&p) {
+                out.push((format!("rust/docs/{}", rel_path(&dir, &p)), text));
+            }
+        }
+    }
+    out
+}
+
+/// Parse a `file:line` site string back into parts.
+fn split_site(site: &str) -> (String, usize) {
+    match site.rsplit_once(':') {
+        Some((f, l)) => (f.to_string(), l.parse().unwrap_or(0)),
+        None => (site.to_string(), 0),
+    }
+}
+
+/// Render the unsafe inventory as a markdown report (written to
+/// `results/LINT_unsafe.md` by the CLI).
+pub fn render_unsafe_inventory(sites: &[UnsafeSite]) -> String {
+    let mut out = String::from(
+        "# Unsafe inventory\n\nGenerated by `cargo run --release -- lint`. \
+         Every `unsafe` site in the workspace with its SAFETY justification.\n\n\
+         | site | code | justification |\n|---|---|---|\n",
+    );
+    for s in sites {
+        out.push_str(&format!(
+            "| `{}:{}` | `{}` | {} |\n",
+            s.file,
+            s.line,
+            s.excerpt.replace('|', "\\|"),
+            if s.justification.is_empty() {
+                "**MISSING**".to_string()
+            } else {
+                s.justification.replace('|', "\\|")
+            }
+        ));
+    }
+    out.push_str(&format!("\n{} site(s).\n", sites.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_exact_match_absorbs() {
+        let v = |file: &str, line: usize| Violation {
+            file: file.into(),
+            line,
+            rule: Rule::NoPanic,
+            msg: ".unwrap() in library code".into(),
+        };
+        // exactly the ledgered count for tensor.rs: absorbed, no drift
+        let (rem, allowed, drift) = apply_allowlist(vec![v("rust/src/tensor.rs", 42)]);
+        assert!(rem.is_empty());
+        assert_eq!(allowed, 1);
+        assert!(drift.is_empty(), "{drift:?}");
+    }
+
+    #[test]
+    fn allowlist_growth_and_stale_are_drift() {
+        let v = |line: usize| Violation {
+            file: "rust/src/tensor.rs".into(),
+            line,
+            rule: Rule::NoPanic,
+            msg: ".unwrap() in library code".into(),
+        };
+        let (_, _, drift) = apply_allowlist(vec![v(1), v(2)]);
+        assert_eq!(drift.len(), 1);
+        assert!(drift[0].contains("new panic site"), "{}", drift[0]);
+
+        let (_, _, drift) = apply_allowlist(vec![]);
+        assert_eq!(drift.len(), 1);
+        assert!(drift[0].contains("stale entry"), "{}", drift[0]);
+    }
+
+    #[test]
+    fn unledgered_violations_pass_through() {
+        let raw = vec![Violation {
+            file: "rust/src/json.rs".into(),
+            line: 3,
+            rule: Rule::NoPanic,
+            msg: ".unwrap() in library code".into(),
+        }];
+        let (rem, allowed, _) = apply_allowlist(raw);
+        assert_eq!(rem.len(), 1);
+        assert_eq!(allowed, 0);
+    }
+
+    #[test]
+    fn unregistered_knob_mention_is_violation() {
+        let mut mentions = BTreeMap::new();
+        mentions.insert(
+            "SSM_PEFT_BOGUS".to_string(),
+            vec!["rust/src/lib.rs:10".to_string()],
+        );
+        let mut violations = Vec::new();
+        knob_registry_check(&mentions, &mut violations);
+        assert_eq!(violations.len(), 1);
+        assert_eq!(violations[0].file, "rust/src/lib.rs");
+        assert_eq!(violations[0].line, 10);
+    }
+
+    #[test]
+    fn registered_knob_mentions_pass() {
+        let mut mentions = BTreeMap::new();
+        for k in crate::knobs::KNOBS {
+            mentions.insert(k.name.to_string(), vec!["rust/src/knobs.rs:1".to_string()]);
+        }
+        let mut violations = Vec::new();
+        knob_registry_check(&mentions, &mut violations);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn inventory_marks_missing_justifications() {
+        let sites = vec![
+            UnsafeSite {
+                file: "a.rs".into(),
+                line: 1,
+                excerpt: "unsafe { x }".into(),
+                justification: "SAFETY: fine.".into(),
+            },
+            UnsafeSite {
+                file: "b.rs".into(),
+                line: 2,
+                excerpt: "unsafe { y }".into(),
+                justification: String::new(),
+            },
+        ];
+        let md = render_unsafe_inventory(&sites);
+        assert!(md.contains("SAFETY: fine."));
+        assert!(md.contains("**MISSING**"));
+        assert!(md.contains("2 site(s)"));
+    }
+
+    #[test]
+    fn report_render_and_ok() {
+        let r = LintReport {
+            violations: vec![],
+            allowlisted: 1,
+            drift: vec![],
+            unsafe_sites: vec![],
+            files_scanned: 3,
+        };
+        assert!(r.ok());
+        assert!(r.render().contains("3 file(s), 0 violation(s)"));
+    }
+}

@@ -1,0 +1,415 @@
+//! The repolint rules, operating on a [`lexer::Scan`](super::lexer::Scan).
+//!
+//! Four rules (kebab names are what reports and waivers use):
+//!
+//! | rule             | scope                      | requirement                              |
+//! |------------------|----------------------------|------------------------------------------|
+//! | `unsafe-safety`  | every `.rs` file           | `unsafe` carries a `// SAFETY:` comment  |
+//! | `no-panic`       | `rust/src`, non-test code  | no `.unwrap()` / `.expect(` / `panic!` / `todo!` / `unimplemented!` |
+//! | `determinism`    | suite-record + optimizer + trainer files | no `Instant` / `SystemTime` / `HashMap`  |
+//! | `knob-registry`  | `rust/src` minus `knobs.rs`| no direct `env::var` reads               |
+//!
+//! A site can be waived with `// lint: allow(<rule>)` on the same line or
+//! the line above; waivers are for *annotated telemetry sites and similar
+//! deliberate exceptions*, and the self-check test pins their count.
+
+use super::lexer::Scan;
+
+/// Rule identifiers (kebab-case in display, reports and waiver comments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `unsafe` without a `// SAFETY:` justification.
+    UnsafeSafety,
+    /// Panicking call in non-test library code.
+    NoPanic,
+    /// Nondeterminism source in a determinism-scoped file.
+    Determinism,
+    /// Raw `env::var` read outside the knob registry.
+    KnobRegistry,
+}
+
+impl Rule {
+    /// The kebab-case name used in reports and `lint: allow(...)` waivers.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnsafeSafety => "unsafe-safety",
+            Rule::NoPanic => "no-panic",
+            Rule::Determinism => "determinism",
+            Rule::KnobRegistry => "knob-registry",
+        }
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule hit at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Workspace-relative path.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Which rule fired.
+    pub rule: Rule,
+    /// What matched (short excerpt).
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One `unsafe` site, for the generated inventory report.
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    /// Workspace-relative path.
+    pub file: String,
+    /// 1-based line of the `unsafe` keyword.
+    pub line: usize,
+    /// The code line (trimmed).
+    pub excerpt: String,
+    /// First line of the attached `SAFETY:` comment ("" when missing).
+    pub justification: String,
+}
+
+/// Files the determinism rule covers: the fused-optimizer step, the
+/// training loop that feeds suite records, and the record writer itself.
+/// (Workspace-relative paths.)
+pub const DETERMINISM_SCOPE: &[&str] =
+    &["rust/src/optim.rs", "rust/src/train/mod.rs", "rust/src/suite/record.rs"];
+
+/// Scope flags for one file, derived from its workspace-relative path.
+#[derive(Debug, Clone, Copy)]
+pub struct FileScope {
+    /// Under `rust/src/` (no-panic and knob-registry apply).
+    pub lib_src: bool,
+    /// Listed in [`DETERMINISM_SCOPE`].
+    pub determinism: bool,
+    /// Is the knob registry itself (exempt from knob-registry).
+    pub knob_registry: bool,
+}
+
+impl FileScope {
+    /// Classify a workspace-relative path.
+    pub fn of(rel: &str) -> FileScope {
+        FileScope {
+            lib_src: rel.starts_with("rust/src/"),
+            determinism: DETERMINISM_SCOPE.contains(&rel),
+            knob_registry: rel == "rust/src/knobs.rs",
+        }
+    }
+}
+
+/// Run every rule over one lexed file. Returns the violations and the
+/// file's `unsafe` inventory (annotated sites included).
+pub fn check_file(rel: &str, scan: &Scan) -> (Vec<Violation>, Vec<UnsafeSite>) {
+    let scope = FileScope::of(rel);
+    let mut violations = Vec::new();
+    let mut unsafe_sites = Vec::new();
+    let code_lines: Vec<&str> = scan.code.split('\n').collect();
+
+    for (idx, ln) in code_lines.iter().enumerate() {
+        let line = idx + 1;
+        let in_test = scan.in_test(line);
+
+        for (off, word) in idents(ln) {
+            match word {
+                "unsafe" => {
+                    let justification = safety_comment(scan, &code_lines, line);
+                    unsafe_sites.push(UnsafeSite {
+                        file: rel.to_string(),
+                        line,
+                        excerpt: ln.trim().to_string(),
+                        justification: justification.clone().unwrap_or_default(),
+                    });
+                    if justification.is_none() && !waived(scan, Rule::UnsafeSafety, line) {
+                        violations.push(Violation {
+                            file: rel.to_string(),
+                            line,
+                            rule: Rule::UnsafeSafety,
+                            msg: format!("`unsafe` without a SAFETY: comment: {}", ln.trim()),
+                        });
+                    }
+                }
+                "unwrap" | "expect"
+                    if scope.lib_src && !in_test && is_method_call(ln, off, word) =>
+                {
+                    if !waived(scan, Rule::NoPanic, line) {
+                        violations.push(Violation {
+                            file: rel.to_string(),
+                            line,
+                            rule: Rule::NoPanic,
+                            msg: format!(".{word}() in library code"),
+                        });
+                    }
+                }
+                "panic" | "todo" | "unimplemented"
+                    if scope.lib_src && !in_test && is_macro_call(ln, off, word) =>
+                {
+                    if !waived(scan, Rule::NoPanic, line) {
+                        violations.push(Violation {
+                            file: rel.to_string(),
+                            line,
+                            rule: Rule::NoPanic,
+                            msg: format!("{word}! in library code"),
+                        });
+                    }
+                }
+                "Instant" | "SystemTime" | "HashMap" if scope.determinism && !in_test => {
+                    if !waived(scan, Rule::Determinism, line) {
+                        violations.push(Violation {
+                            file: rel.to_string(),
+                            line,
+                            rule: Rule::Determinism,
+                            msg: format!("{word} in determinism-scoped file"),
+                        });
+                    }
+                }
+                "var"
+                    if scope.lib_src
+                        && !scope.knob_registry
+                        && !in_test
+                        && is_env_var(ln, off) =>
+                {
+                    if !waived(scan, Rule::KnobRegistry, line) {
+                        violations.push(Violation {
+                            file: rel.to_string(),
+                            line,
+                            rule: Rule::KnobRegistry,
+                            msg: "env::var outside the knob registry (crate::knobs)".into(),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    (violations, unsafe_sites)
+}
+
+/// Extract every `SSM_PEFT_*` name mentioned in the *raw* source (string
+/// literals included — that's where the names live).
+pub fn knob_mentions(raw_src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = raw_src.as_bytes();
+    let pat = b"SSM_PEFT_";
+    let mut i = 0;
+    while i + pat.len() <= bytes.len() {
+        if &bytes[i..i + pat.len()] == pat {
+            // must not be the tail of a longer identifier
+            if i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_') {
+                i += 1;
+                continue;
+            }
+            let mut j = i + pat.len();
+            while j < bytes.len()
+                && (bytes[j].is_ascii_uppercase() || bytes[j].is_ascii_digit() || bytes[j] == b'_')
+            {
+                j += 1;
+            }
+            if j > i + pat.len() {
+                out.push(raw_src[i..j].trim_end_matches('_').to_string());
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Whether a `lint: allow(<rule>)` waiver covers this line (same line or
+/// the line above).
+pub fn waived(scan: &Scan, rule: Rule, line: usize) -> bool {
+    let needle = format!("lint: allow({})", rule.name());
+    scan.comment(line).contains(&needle)
+        || (line > 1 && scan.comment(line - 1).contains(&needle))
+}
+
+/// Find the `SAFETY:` comment attached to an `unsafe` at `line`: on the
+/// line itself, or scanning upward over blank lines, comment-only lines,
+/// attributes, and sibling `unsafe impl … {}` one-liners (so one block
+/// comment can justify both `Send` and `Sync`).
+fn safety_comment(scan: &Scan, code_lines: &[&str], line: usize) -> Option<String> {
+    let extract = |c: &str| {
+        c.find("SAFETY:").map(|p| c[p..].lines().next().unwrap_or("").trim().to_string())
+    };
+    if let Some(j) = extract(scan.comment(line)) {
+        return Some(j);
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let comment = scan.comment(l);
+        if let Some(j) = extract(comment) {
+            return Some(j);
+        }
+        // blank and comment-only lines have empty blanked code; attributes
+        // and sibling `unsafe impl … {}` one-liners are also transparent
+        let code = code_lines.get(l - 1).copied().unwrap_or("").trim();
+        let passable = code.is_empty()
+            || code.starts_with("#[")
+            || (code.starts_with("unsafe impl ") && code.ends_with("{}"));
+        if !passable {
+            return None; // a real code line breaks the chain
+        }
+        l -= 1;
+    }
+    None
+}
+
+/// Identifier tokens of one line as `(byte_offset, word)`.
+fn idents(line: &str) -> Vec<(usize, &str)> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < bytes.len()
+                && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+            {
+                i += 1;
+            }
+            out.push((start, &line[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Whether the word at `off` is called as a method: preceded (modulo
+/// whitespace) by `.` and followed by `(`. Word-level tokenization already
+/// excludes `unwrap_or*` / `expect_err`.
+fn is_method_call(line: &str, off: usize, word: &str) -> bool {
+    let before = line[..off].trim_end();
+    let after = line[off + word.len()..].trim_start();
+    before.ends_with('.') && after.starts_with('(')
+}
+
+/// Whether the word at `off` is a macro invocation (`word!`).
+fn is_macro_call(line: &str, off: usize, word: &str) -> bool {
+    line[off + word.len()..].trim_start().starts_with('!')
+}
+
+/// Whether the `var` at `off` is an `env::var` path (covers `std::env::var`
+/// and a `use std::env;` + `env::var` split).
+fn is_env_var(line: &str, off: usize) -> bool {
+    let before = line[..off].trim_end();
+    before.ends_with("env::")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::scan;
+
+    fn check(rel: &str, src: &str) -> Vec<Violation> {
+        check_file(rel, &scan(src)).0
+    }
+
+    #[test]
+    fn flags_unwrap_and_expect_not_variants() {
+        let v = check(
+            "rust/src/x.rs",
+            "fn f(o: Option<u32>) -> u32 {\n    let a = o.unwrap();\n    let b = o.expect(\"x\");\n    let c = o.unwrap_or(0);\n    let d = o.unwrap_or_else(|| 0);\n    a + b + c + d\n}\n",
+        );
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == Rule::NoPanic));
+        assert_eq!(v[0].line, 2);
+        assert_eq!(v[1].line, 3);
+    }
+
+    #[test]
+    fn flags_panic_macros_not_names() {
+        let v = check(
+            "rust/src/x.rs",
+            "fn f() {\n    panic!(\"boom\");\n    let panic = 1; let _ = panic;\n}\nfn todo_list() {}\n",
+        );
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn test_code_and_non_src_exempt_from_no_panic() {
+        let in_test = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+        assert!(check("rust/src/x.rs", in_test).is_empty());
+        let bench = "fn main() { Some(1).unwrap(); }\n";
+        assert!(check("rust/benches/b.rs", bench).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() {\n    let p = unsafe { std::mem::transmute::<u32, i32>(1) };\n    let _ = p;\n}\n";
+        let v = check("rust/src/x.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, Rule::UnsafeSafety);
+
+        let good = "fn f() {\n    // SAFETY: u32 and i32 have identical layout.\n    let p = unsafe { std::mem::transmute::<u32, i32>(1) };\n    let _ = p;\n}\n";
+        assert!(check("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_scan_passes_over_sibling_unsafe_impls() {
+        let src = "struct E;\n// SAFETY: E owns its data; no shared mutability.\nunsafe impl Send for E {}\nunsafe impl Sync for E {}\n";
+        let (v, sites) = check_file("rust/src/x.rs", &scan(src));
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(sites.len(), 2);
+        assert!(sites[1].justification.starts_with("SAFETY:"));
+    }
+
+    #[test]
+    fn safety_chain_broken_by_code_line() {
+        let src = "// SAFETY: stale comment.\nfn other() {}\nfn f() { let _ = unsafe { std::mem::transmute::<u32, i32>(1) }; }\n";
+        let v = check("rust/src/x.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+    }
+
+    #[test]
+    fn determinism_scoped_by_file() {
+        let src = "use std::time::Instant;\nuse std::collections::HashMap;\n";
+        assert_eq!(check("rust/src/optim.rs", src).len(), 2);
+        assert!(check("rust/src/tensor.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_on_line_above_or_same_line() {
+        let src = "// lint: allow(determinism) telemetry only\nlet t = Instant::now();\nlet u = Instant::now(); // lint: allow(determinism)\nlet bad = Instant::now();\n";
+        let v = check("rust/src/optim.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn env_var_outside_knobs_flagged() {
+        let src = "fn f() -> Option<String> { std::env::var(\"SSM_PEFT_X\").ok() }\n";
+        let v = check("rust/src/lib.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, Rule::KnobRegistry);
+        assert!(check("rust/src/knobs.rs", src).is_empty());
+        // a local fn named var is fine
+        assert!(check("rust/src/lib.rs", "fn f() { var(1); }\nfn var(_x: u32) {}\n").is_empty());
+    }
+
+    #[test]
+    fn knob_mention_extraction() {
+        let src = "let a = std::env::var(\"SSM_PEFT_WORKERS\");\n// mentions SSM_PEFT_BENCH_SCALE and SSM_PEFT_WORKERS again\n";
+        let names = knob_mentions(src);
+        assert_eq!(names, vec!["SSM_PEFT_BENCH_SCALE", "SSM_PEFT_WORKERS"]);
+    }
+
+    #[test]
+    fn strings_do_not_trigger_rules() {
+        let src = "fn f() -> &'static str { \"call .unwrap() or panic! now\" }\n";
+        assert!(check("rust/src/x.rs", src).is_empty());
+    }
+}

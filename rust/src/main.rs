@@ -26,10 +26,16 @@
 //!                                SSM_PEFT_BENCH_SCALE=0.1; falls back to a
 //!                                mock host-optimizer comparison when no
 //!                                artifacts exist — rust/docs/performance.md)
+//!   lint                         repolint: first-party static analysis
+//!                                (unsafe-safety, no-panic, determinism,
+//!                                knob-registry) + unsafe inventory report,
+//!                                written to results/LINT_unsafe.md
+//!                                (rules: rust/docs/linting.md)
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use ssm_peft::err;
+use ssm_peft::error::Result;
 
 use ssm_peft::bench::TablePrinter;
 use ssm_peft::config::{parse_args, ExperimentConfig};
@@ -56,10 +62,34 @@ fn main() -> Result<()> {
         "generate" => generate(&kvs),
         "serve" => serve(&kvs),
         "bench" => bench(&kvs, &pos),
+        "lint" => lint(),
         other => {
             eprintln!("unknown command {other}; see src/main.rs header");
-            std::process::exit(2);
+            exit(2);
         }
+    }
+}
+
+/// The CLI's one sanctioned `process::exit` site (clippy.toml disallows it
+/// elsewhere so library code can never kill a suite worker's process).
+#[allow(clippy::disallowed_methods)]
+fn exit(code: i32) -> ! {
+    std::process::exit(code)
+}
+
+/// Run repolint over the workspace and write the unsafe inventory
+/// (rules and waiver etiquette: rust/docs/linting.md).
+fn lint() -> Result<()> {
+    let root = ssm_peft::lint::workspace_root();
+    let report = ssm_peft::lint::run(&root)?;
+    print!("{}", report.render());
+    let inv = ssm_peft::results_dir().join("LINT_unsafe.md");
+    std::fs::write(&inv, ssm_peft::lint::render_unsafe_inventory(&report.unsafe_sites))?;
+    println!("unsafe inventory -> {}", inv.display());
+    if report.ok() {
+        Ok(())
+    } else {
+        Err(err!("repolint found problems (see output above)"))
     }
 }
 
@@ -128,7 +158,7 @@ fn finetune(kvs: &BTreeMap<String, String>) -> Result<()> {
 fn suite(kvs: &BTreeMap<String, String>) -> Result<()> {
     let path = kvs
         .get("config")
-        .ok_or_else(|| anyhow!("suite requires config=<file.json>"))?;
+        .ok_or_else(|| err!("suite requires config=<file.json>"))?;
     let spec = SuiteSpec::from_file(path)?;
     let par: usize = kvs
         .get("par")
@@ -185,9 +215,7 @@ fn suite(kvs: &BTreeMap<String, String>) -> Result<()> {
 fn bench(kvs: &BTreeMap<String, String>, pos: &[String]) -> Result<()> {
     match pos.get(1).map(String::as_str) {
         Some("hotpath") => ssm_peft::bench::hotpath::run(kvs),
-        other => Err(anyhow!(
-            "unknown bench target {other:?}; available: hotpath"
-        )),
+        other => Err(err!("unknown bench target {other:?}; available: hotpath")),
     }
 }
 
@@ -206,7 +234,7 @@ fn sdt_report(kvs: &BTreeMap<String, String>) -> Result<()> {
     let p = Pipeline::new(&engine, &manifest);
     let vid = VariantId::parse(&cfg.variant)?;
     let base = p.pretrained(&vid.arch, cfg.pretrain_steps, cfg.seed)?;
-    let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train);
+    let ds = tasks::by_name(&cfg.dataset, cfg.seed, cfg.n_train)?;
     let tcfg = TrainConfig { lr: cfg.sdt.warmup_lr, ..Default::default() };
     let mut tr = Trainer::new(&engine, &manifest, &cfg.variant, &tcfg)?;
     tr.load_base(&base);

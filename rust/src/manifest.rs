@@ -9,7 +9,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{bail, err};
+use crate::error::{Context, Result};
 
 use crate::json::{self, Value};
 use crate::suite::PeftMethod;
@@ -142,7 +143,7 @@ pub struct Manifest {
 }
 
 fn parse_params(v: &Value) -> Result<Vec<ParamMeta>> {
-    let arr = v.as_arr().ok_or_else(|| anyhow!("params not an array"))?;
+    let arr = v.as_arr().ok_or_else(|| err!("params not an array"))?;
     arr.iter()
         .map(|p| {
             Ok(ParamMeta {
@@ -170,20 +171,20 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let root = json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let root = json::parse(&src).map_err(|e| err!("manifest parse: {e}"))?;
         let mut variants = BTreeMap::new();
         for v in root
             .path("variants")
             .and_then(Value::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing variants"))?
+            .ok_or_else(|| err!("manifest missing variants"))?
         {
             let name = v
                 .path("name")
                 .and_then(Value::as_str)
-                .ok_or_else(|| anyhow!("variant missing name"))?
+                .ok_or_else(|| err!("variant missing name"))?
                 .to_string();
-            let arch = v.path("arch").ok_or_else(|| anyhow!("missing arch"))?;
-            let peft = v.path("peft").ok_or_else(|| anyhow!("missing peft"))?;
+            let arch = v.path("arch").ok_or_else(|| err!("missing arch"))?;
+            let peft = v.path("peft").ok_or_else(|| err!("missing peft"))?;
             let var = Variant {
                 name: name.clone(),
                 arch: Arch {
@@ -226,10 +227,10 @@ impl Manifest {
                     if let Some(Value::Obj(m)) = v.path("files.prefill") {
                         for (w, f) in m {
                             let width: usize = w.parse().map_err(|_| {
-                                anyhow!("variant {name}: bad prefill width key {w:?}")
+                                err!("variant {name}: bad prefill width key {w:?}")
                             })?;
                             let file = f.as_str().ok_or_else(|| {
-                                anyhow!("variant {name}: prefill.{w} not a string")
+                                err!("variant {name}: prefill.{w} not a string")
                             })?;
                             pf.push((width, file.to_string()));
                         }
@@ -243,10 +244,10 @@ impl Manifest {
                     .unwrap_or("")
                     .to_string(),
                 train_params: parse_params(
-                    v.path("train_params").ok_or_else(|| anyhow!("missing train_params"))?,
+                    v.path("train_params").ok_or_else(|| err!("missing train_params"))?,
                 )?,
                 frozen_params: parse_params(
-                    v.path("frozen_params").ok_or_else(|| anyhow!("missing frozen_params"))?,
+                    v.path("frozen_params").ok_or_else(|| err!("missing frozen_params"))?,
                 )?,
             };
             variants.insert(name, var);
@@ -258,7 +259,7 @@ impl Manifest {
     pub fn variant(&self, name: &str) -> Result<&Variant> {
         self.variants
             .get(name)
-            .ok_or_else(|| anyhow!("variant {name:?} not in manifest (have: {:?})",
+            .ok_or_else(|| err!("variant {name:?} not in manifest (have: {:?})",
                 self.variants.keys().take(8).collect::<Vec<_>>()))
     }
 
@@ -268,7 +269,11 @@ impl Manifest {
             .with_context(|| format!("reading {}", v.params_bin))?;
         let mut out = BTreeMap::new();
         for p in v.train_params.iter().chain(v.frozen_params.iter()) {
-            let bytes = &raw[p.offset..p.offset + 4 * p.numel];
+            let bytes = raw
+                .get(p.offset..p.offset + 4 * p.numel)
+                .with_context(|| {
+                    format!("{}: offsets out of bounds in {}", p.name, v.params_bin)
+                })?;
             let mut data = Vec::with_capacity(p.numel);
             for c in bytes.chunks_exact(4) {
                 data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));

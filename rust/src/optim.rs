@@ -467,17 +467,12 @@ struct AdamScalars {
     scale: f32,
 }
 
-/// Worker count for the fused pass: `SSM_PEFT_FUSED_WORKERS`, else a
-/// modest default (min(cores, 4)) — suite cells already parallelize at the
-/// cell level, so the per-step pool stays small by default.
+/// Worker count for the fused pass: `SSM_PEFT_FUSED_WORKERS` (read through
+/// the typed knob registry), else a modest default (min(cores, 4)) — suite
+/// cells already parallelize at the cell level, so the per-step pool stays
+/// small by default.
 pub fn fused_workers() -> usize {
-    std::env::var("SSM_PEFT_FUSED_WORKERS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(1)
-        })
-        .max(1)
+    crate::knobs::fused_workers()
 }
 
 /// Contiguous chunk-index ranges with roughly equal work totals (`costs`

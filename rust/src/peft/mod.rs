@@ -170,7 +170,9 @@ pub fn merge_lora(params: &mut BTreeMap<String, Tensor>, peft: &crate::manifest:
         let b = params[&format!("{base}.lora_b")].clone();
         let delta = matmul(&a, &b);
         let dora_m = params.get(&format!("{base}.dora_m")).cloned();
-        let w = params.get_mut(&base).expect("lora base weight");
+        // `base` was derived from a present `.lora_a` key; a missing base
+        // weight means a malformed checkpoint, which we skip rather than kill
+        let Some(w) = params.get_mut(&base) else { continue };
         for (x, d) in w.data.iter_mut().zip(delta.data.iter()) {
             *x += scale * d;
         }

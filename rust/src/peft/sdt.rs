@@ -94,9 +94,7 @@ fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
     }
     // strict total order (score desc, index asc): makes the unstable
     // partial selection reproduce the stable sort's output exactly
-    let by = |a: &usize, b: &usize| {
-        scores[*b].partial_cmp(&scores[*a]).unwrap().then(a.cmp(b))
-    };
+    let by = |a: &usize, b: &usize| scores[*b].total_cmp(&scores[*a]).then(a.cmp(b));
     if k < idx.len() {
         idx.select_nth_unstable_by(k - 1, by);
         idx.truncate(k);
@@ -153,7 +151,7 @@ pub fn select_dimensions(
                 .collect();
             let n_prune = (cfg.prune_frac * d as f32).floor() as usize;
             let mut idx: Vec<usize> = (0..d).collect();
-            idx.sort_by(|&x, &y| mag[x].partial_cmp(&mag[y]).unwrap());
+            idx.sort_by(|&x, &y| mag[x].total_cmp(&mag[y]));
             idx.truncate(n_prune);
             idx.into_iter().filter(|i| !train_ch.contains(i)).collect()
         } else {
@@ -186,8 +184,11 @@ pub fn select_dimensions(
         // ---- companion tensors gated by channel ------------------------------
         // S6: xproj rows (channels); only the B/C columns train.
         let x_name = format!("layers.{layer}.xproj");
-        if let Some(x_idx) = variant.train_index(&x_name) {
-            let meta = variant.param(&x_name).unwrap();
+        // train_index and param are both keyed on the variant's param list,
+        // so a present index implies present metadata
+        if let (Some(x_idx), Some(meta)) =
+            (variant.train_index(&x_name), variant.param(&x_name))
+        {
             let cols = meta.shape[1];
             let r = variant.arch.dt_rank;
             let mut m = vec![0.0f32; meta.numel];
@@ -200,8 +201,9 @@ pub fn select_dimensions(
         }
         // S4: C gated like A_log (channel ∧ state).
         let c_name = format!("layers.{layer}.C");
-        if let Some(c_idx) = variant.train_index(&c_name) {
-            let meta = variant.param(&c_name).unwrap();
+        if let (Some(c_idx), Some(meta)) =
+            (variant.train_index(&c_name), variant.param(&c_name))
+        {
             let mut m = vec![0.0f32; meta.numel];
             for (ci, &di) in train_ch.iter().enumerate() {
                 for &hi in &states_per_ch[ci] {

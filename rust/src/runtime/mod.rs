@@ -17,9 +17,11 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::error::{Context, Result};
 
 use crate::tensor::{IntTensor, Tensor};
+use crate::xla;
 
 /// Process-wide PJRT engine: one CPU client + compiled-executable cache.
 pub struct Engine {
@@ -69,7 +71,8 @@ impl Engine {
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
         let key = path.as_ref().to_string_lossy().to_string();
         {
-            let cache = self.cache.lock().unwrap();
+            // a worker panicking mid-compile must not wedge every other lane
+            let cache = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             if let Some(exe) = cache.get(&key) {
                 return Ok(Executable { exe: exe.clone() });
             }
@@ -82,13 +85,16 @@ impl Engine {
             .compile(&comp)
             .with_context(|| format!("XLA compile of {:?}", path.as_ref()))?;
         let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(key, exe.clone());
+        self.cache
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(key, exe.clone());
         Ok(Executable { exe })
     }
 
     /// Number of compiled executables currently cached.
     pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).len()
     }
 }
 
@@ -100,38 +106,46 @@ pub struct Executable {
 
 /// Convert a float tensor to an XLA literal (one memcpy).
 pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    // SAFETY: viewing `&[f32]` as `&[u8]` of 4x the length: f32 has no
+    // invalid bit patterns when read as bytes, the Vec allocation is at
+    // least `len * 4` bytes, alignment only decreases (4 -> 1), and the
+    // borrow ties the view's lifetime to `t`.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
     };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
-        .map_err(|e| anyhow!("literal_f32: {e:?}"))
+        .map_err(|e| err!("literal_f32: {e:?}"))
 }
 
 /// Convert an int tensor to an s32 literal.
 pub fn literal_i32(t: &IntTensor) -> Result<xla::Literal> {
+    // SAFETY: same argument as `literal_f32` — an `&[i32]` reinterpreted as
+    // `&[u8]` of 4x the length is a valid, lifetime-bound byte view.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
     };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &t.shape, bytes)
-        .map_err(|e| anyhow!("literal_i32: {e:?}"))
+        .map_err(|e| err!("literal_i32: {e:?}"))
 }
 
 /// Convert a shaped f32 slice to an XLA literal (one memcpy) — the arena
 /// hot path serializes leaf ranges without materializing a `Tensor`.
 pub fn literal_f32_slice(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    // SAFETY: same argument as `literal_f32`; `data` is a live `&[f32]`, so
+    // the 4x-length byte view stays in bounds and lifetime-bound.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
-        .map_err(|e| anyhow!("literal_f32_slice: {e:?}"))
+        .map_err(|e| err!("literal_f32_slice: {e:?}"))
 }
 
 /// Read a literal back into a host tensor (shape from the literal).
 pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
+    let shape = lit.array_shape().map_err(|e| err!("array_shape: {e:?}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+    let data = lit.to_vec::<f32>().map_err(|e| err!("to_vec f32: {e:?}"))?;
     Ok(Tensor::from_vec(&dims, data))
 }
 
@@ -140,8 +154,8 @@ pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
 /// (One transient `Vec` still comes from the `xla` wrapper's `to_vec`; the
 /// destination storage itself is stable across steps.)
 pub fn read_f32_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
-    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
-    anyhow::ensure!(
+    let v = lit.to_vec::<f32>().map_err(|e| err!("to_vec f32: {e:?}"))?;
+    crate::ensure!(
         v.len() == dst.len(),
         "literal has {} elements, destination {}",
         v.len(),
@@ -153,8 +167,8 @@ pub fn read_f32_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
 
 /// Read a rank-0/1-element f32 literal (the step artifact's loss output).
 pub fn read_scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
-    v.first().copied().ok_or_else(|| anyhow!("empty literal where scalar expected"))
+    let v = lit.to_vec::<f32>().map_err(|e| err!("to_vec f32: {e:?}"))?;
+    v.first().copied().ok_or_else(|| err!("empty literal where scalar expected"))
 }
 
 /// A persistent executable-argument table: literals are uploaded once and
@@ -267,12 +281,12 @@ impl Executable {
         let bufs = self
             .exe
             .execute::<&xla::Literal>(args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
+            .map_err(|e| err!("execute: {e:?}"))?;
         let out = bufs[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+            .map_err(|e| err!("to_literal_sync: {e:?}"))?;
         // aot.py lowers with return_tuple=True: single tuple output.
-        out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+        out.to_tuple().map_err(|e| err!("to_tuple: {e:?}"))
     }
 
     /// Execute and return raw literals (used when outputs are reused as-is).
@@ -287,12 +301,12 @@ impl Executable {
         let bufs = self
             .exe
             .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
+            .map_err(|e| err!("execute: {e:?}"))?;
         let out = bufs[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+            .map_err(|e| err!("to_literal_sync: {e:?}"))?;
         // aot.py lowers with return_tuple=True: single tuple output.
-        out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+        out.to_tuple().map_err(|e| err!("to_tuple: {e:?}"))
     }
 }
 

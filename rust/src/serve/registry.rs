@@ -20,7 +20,8 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use crate::manifest::Manifest;
 use crate::peft::{self, Budget};
@@ -106,7 +107,7 @@ impl<S: AdapterSource> AdapterRegistry<S> {
     /// Fetch (materializing on first use) the adapter for `name`.
     pub fn get(&self, name: &str) -> Result<Arc<Adapter>> {
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             if let Some(a) = inner.map.get(name).cloned() {
                 // refresh recency
                 inner.order.retain(|k| k != name);
@@ -120,7 +121,7 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         // don't arise in practice (and would only waste work, not break)
         let adapter = Arc::new(self.source.load(name)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if !inner.map.contains_key(name) {
             inner.map.insert(name.to_string(), adapter.clone());
             inner.order.push_back(name.to_string());
@@ -136,7 +137,7 @@ impl<S: AdapterSource> AdapterRegistry<S> {
 
     /// Whether `name` is currently resident (does not touch recency).
     pub fn contains(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().map.contains_key(name)
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).map.contains_key(name)
     }
 
     /// Cache counters snapshot.
@@ -145,7 +146,7 @@ impl<S: AdapterSource> AdapterRegistry<S> {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
-            resident: self.inner.lock().unwrap().map.len(),
+            resident: self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).map.len(),
         }
     }
 }

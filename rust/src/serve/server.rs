@@ -15,7 +15,8 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{bail, err};
+use crate::error::{Context, Result};
 
 use crate::coordinator::Pipeline;
 use crate::eval::DecodeCore;
@@ -131,7 +132,7 @@ struct WireRequest {
 const REQUEST_KEYS: &[&str] = &["id", "adapter", "prompt", "max_new", "stop", "beam"];
 
 fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
-    let v = json::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+    let v = json::parse(line).map_err(|e| err!("bad request JSON: {e}"))?;
     let obj = match &v {
         Value::Obj(m) => m,
         _ => bail!("request must be a JSON object"),
@@ -144,22 +145,22 @@ fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
     let adapter = obj
         .get("adapter")
         .and_then(Value::as_str)
-        .ok_or_else(|| anyhow!("request missing \"adapter\" (string)"))?
+        .ok_or_else(|| err!("request missing \"adapter\" (string)"))?
         .to_string();
     let prompt = obj
         .get("prompt")
         .and_then(Value::as_str)
-        .ok_or_else(|| anyhow!("request missing \"prompt\" (string)"))?
+        .ok_or_else(|| err!("request missing \"prompt\" (string)"))?
         .as_bytes()
         .to_vec();
     let max_new = match obj.get("max_new") {
-        Some(n) => n.as_usize().ok_or_else(|| anyhow!("max_new: expected number"))?,
+        Some(n) => n.as_usize().ok_or_else(|| err!("max_new: expected number"))?,
         None => default_max_new,
     };
     let stop_byte = match obj.get("stop") {
         None => b'\n',
         Some(s) => {
-            let s = s.as_str().ok_or_else(|| anyhow!("stop: expected 1-byte string"))?;
+            let s = s.as_str().ok_or_else(|| err!("stop: expected 1-byte string"))?;
             match s.as_bytes() {
                 [b] => *b,
                 _ => bail!("stop: expected exactly one byte, got {s:?}"),
@@ -167,7 +168,7 @@ fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
         }
     };
     let beam = match obj.get("beam") {
-        Some(n) => n.as_usize().ok_or_else(|| anyhow!("beam: expected number"))?.max(1),
+        Some(n) => n.as_usize().ok_or_else(|| err!("beam: expected number"))?.max(1),
         None => 1,
     };
     Ok(WireRequest {

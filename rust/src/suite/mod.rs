@@ -13,7 +13,7 @@
 //!
 //! ```no_run
 //! # use ssm_peft::{manifest::Manifest, runtime::Engine, suite::Suite};
-//! # fn main() -> anyhow::Result<()> {
+//! # fn main() -> ssm_peft::error::Result<()> {
 //! let engine = Engine::cpu()?;
 //! let manifest = Manifest::load(ssm_peft::artifacts_dir())?;
 //! let records = Suite::new(&engine, &manifest)
@@ -37,7 +37,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Pipeline;
@@ -61,13 +61,10 @@ pub fn cell_seed(base: u64, variant: &str, dataset: &str) -> u64 {
     base ^ fnv64(variant) ^ fnv64(dataset).rotate_left(17)
 }
 
-/// Worker count from `SSM_PEFT_WORKERS`, else the given default.
+/// Worker count from `SSM_PEFT_WORKERS` (via the typed knob registry),
+/// else the given default.
 pub fn worker_count(default: usize) -> usize {
-    std::env::var("SSM_PEFT_WORKERS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
-        .max(1)
+    crate::knobs::workers(default)
 }
 
 /// The engine-independent part of a suite: named cell list + template.
@@ -260,7 +257,9 @@ impl<'a> Suite<'a> {
                             rec.total_s,
                             if cached { ", resumed" } else { "" },
                         );
-                        results.lock().unwrap()[i] = Some(rec);
+                        // a panicked sibling must not wedge result collection
+                        results.lock().unwrap_or_else(std::sync::PoisonError::into_inner)[i] =
+                            Some(rec);
                     }
                 });
             }
@@ -268,9 +267,22 @@ impl<'a> Suite<'a> {
 
         let out: Vec<RunRecord> = results
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .into_iter()
-            .map(|r| r.expect("every cell produces a record"))
+            .enumerate()
+            .map(|(i, r)| {
+                // every index is written by exactly one worker; if a worker
+                // died anyway, surface a failed record instead of panicking
+                r.unwrap_or_else(|| {
+                    RunRecord::failed(
+                        &name,
+                        &cells[i],
+                        "worker produced no record for this cell".into(),
+                        0.0,
+                        &git,
+                    )
+                })
+            })
             .collect();
         Ok(out)
     }

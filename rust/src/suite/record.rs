@@ -10,7 +10,8 @@ use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::error::{Context, Result};
 
 use crate::bench::TablePrinter;
 use crate::config::ExperimentConfig;
@@ -170,7 +171,7 @@ impl RunRecord {
             }
         }
         if str_of("variant").is_empty() || str_of("dataset").is_empty() {
-            return Err(anyhow!("record missing variant/dataset"));
+            return Err(err!("record missing variant/dataset"));
         }
         // seed is a stringified u64 (see to_json); accept a plain number
         // too for hand-written files

@@ -21,7 +21,8 @@
 //! cells with optional per-cell overrides. Unknown keys anywhere are
 //! rejected (typos fail loudly, mirroring `ExperimentConfig::set`).
 
-use anyhow::{anyhow, bail, Result};
+use crate::{bail, err};
+use crate::error::Result;
 
 use crate::config::ExperimentConfig;
 use crate::json::{self, Value};
@@ -42,12 +43,12 @@ const TOP_KEYS: &[&str] =
 const CELL_KEYS: &[&str] = &["variant", "dataset", "overrides"];
 
 fn str_list(v: &Value, key: &str) -> Result<Vec<String>> {
-    let arr = v.as_arr().ok_or_else(|| anyhow!("{key}: expected array"))?;
+    let arr = v.as_arr().ok_or_else(|| err!("{key}: expected array"))?;
     arr.iter()
         .map(|x| {
             x.as_str()
                 .map(String::from)
-                .ok_or_else(|| anyhow!("{key}: expected array of strings"))
+                .ok_or_else(|| err!("{key}: expected array of strings"))
         })
         .collect()
 }
@@ -56,7 +57,7 @@ impl SuiteSpec {
     /// Load and parse a suite file.
     pub fn from_file(path: &str) -> Result<SuiteSpec> {
         let src = std::fs::read_to_string(path)?;
-        let v = json::parse(&src).map_err(|e| anyhow!("{path}: {e}"))?;
+        let v = json::parse(&src).map_err(|e| err!("{path}: {e}"))?;
         Self::from_json(&v)
     }
 
@@ -72,18 +73,18 @@ impl SuiteSpec {
             }
         }
         let name = match obj.get("name") {
-            Some(n) => n.as_str().ok_or_else(|| anyhow!("name: expected string"))?.to_string(),
+            Some(n) => n.as_str().ok_or_else(|| err!("name: expected string"))?.to_string(),
             None => "suite".to_string(),
         };
         let par = obj
             .get("par")
-            .map(|p| p.as_f64().ok_or_else(|| anyhow!("par: expected number")))
+            .map(|p| p.as_f64().ok_or_else(|| err!("par: expected number")))
             .transpose()?
             .map(|p| p as usize)
             .unwrap_or(2);
         let resume = obj
             .get("resume")
-            .map(|r| r.as_bool().ok_or_else(|| anyhow!("resume: expected bool")))
+            .map(|r| r.as_bool().ok_or_else(|| err!("resume: expected bool")))
             .transpose()?
             .unwrap_or(false);
         let template = match obj.get("template") {
@@ -110,7 +111,7 @@ impl SuiteSpec {
         }
 
         if let Some(cells) = obj.get("cells") {
-            let arr = cells.as_arr().ok_or_else(|| anyhow!("cells: expected array"))?;
+            let arr = cells.as_arr().ok_or_else(|| err!("cells: expected array"))?;
             for (i, cell) in arr.iter().enumerate() {
                 let cobj = match cell {
                     Value::Obj(m) => m,
@@ -124,11 +125,11 @@ impl SuiteSpec {
                 let variant = cobj
                     .get("variant")
                     .and_then(Value::as_str)
-                    .ok_or_else(|| anyhow!("cells[{i}]: missing variant"))?;
+                    .ok_or_else(|| err!("cells[{i}]: missing variant"))?;
                 let dataset = cobj
                     .get("dataset")
                     .and_then(Value::as_str)
-                    .ok_or_else(|| anyhow!("cells[{i}]: missing dataset"))?;
+                    .ok_or_else(|| err!("cells[{i}]: missing dataset"))?;
                 let mut cfg = plan.template.clone();
                 cfg.variant = variant.to_string();
                 cfg.dataset = dataset.to_string();
@@ -139,7 +140,7 @@ impl SuiteSpec {
                         _ => bail!("cells[{i}].overrides: expected object"),
                     };
                     for (k, val) in ovm {
-                        cfg.set(k, val).map_err(|e| anyhow!("cells[{i}]: {e}"))?;
+                        cfg.set(k, val).map_err(|e| err!("cells[{i}]: {e}"))?;
                     }
                 }
                 plan.push(cfg);

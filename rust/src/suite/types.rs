@@ -9,7 +9,8 @@
 //! python/compile/configs.py::PEFTS — the two sides share the naming
 //! contract `<arch>_<peft_suffix>`.
 
-use anyhow::{anyhow, bail, Result};
+use crate::{bail, err};
+use crate::error::Result;
 
 /// Which weight matrices a LoRA/DoRA adapter targets (paper Sec. 4.2:
 /// LinProj ≥ Both > SSM-only).
@@ -227,7 +228,7 @@ impl PeftMethod {
                     }
                 } else {
                     let t = Target::from_manifest(t0)
-                        .ok_or_else(|| anyhow!("unknown LoRA target {t0:?}"))?;
+                        .ok_or_else(|| err!("unknown LoRA target {t0:?}"))?;
                     if method == "lora" {
                         PeftMethod::Lora(t)
                     } else {
@@ -248,9 +249,9 @@ impl std::fmt::Display for PeftMethod {
 }
 
 impl std::str::FromStr for PeftMethod {
-    type Err = anyhow::Error;
+    type Err = crate::error::Error;
     fn from_str(s: &str) -> Result<Self> {
-        PeftMethod::from_suffix(s).ok_or_else(|| anyhow!("unknown PEFT suffix {s:?}"))
+        PeftMethod::from_suffix(s).ok_or_else(|| err!("unknown PEFT suffix {s:?}"))
     }
 }
 
@@ -286,7 +287,7 @@ impl VariantId {
             }
         }
         let (len, method) =
-            best.ok_or_else(|| anyhow!("variant {name:?} has no recognized PEFT suffix"))?;
+            best.ok_or_else(|| err!("variant {name:?} has no recognized PEFT suffix"))?;
         Ok(VariantId { arch: name[..name.len() - len - 1].to_string(), method })
     }
 
@@ -309,7 +310,7 @@ impl std::fmt::Display for VariantId {
 }
 
 impl std::str::FromStr for VariantId {
-    type Err = anyhow::Error;
+    type Err = crate::error::Error;
     fn from_str(s: &str) -> Result<Self> {
         VariantId::parse(s)
     }

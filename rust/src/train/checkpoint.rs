@@ -5,7 +5,8 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{bail, err};
+use crate::error::{Context, Result};
 
 use crate::json::{self, Value};
 use crate::tensor::Tensor;
@@ -51,22 +52,31 @@ pub fn load(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
     let mut hbytes = vec![0u8; hlen];
     f.read_exact(&mut hbytes)?;
     let header = json::parse(std::str::from_utf8(&hbytes)?)
-        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        .map_err(|e| err!("checkpoint header: {e}"))?;
     let mut blob = Vec::new();
     f.read_to_end(&mut blob)?;
     let mut out = BTreeMap::new();
-    for ent in header.as_arr().ok_or_else(|| anyhow!("bad header"))? {
-        let name = ent.path("name").and_then(Value::as_str).unwrap().to_string();
+    for ent in header.as_arr().ok_or_else(|| err!("bad header"))? {
+        let name = ent
+            .path("name")
+            .and_then(Value::as_str)
+            .context("checkpoint header entry missing name")?
+            .to_string();
         let shape: Vec<usize> = ent
             .path("shape")
             .and_then(Value::as_arr)
-            .unwrap()
+            .with_context(|| format!("checkpoint entry {name:?} missing shape"))?
             .iter()
             .filter_map(Value::as_usize)
             .collect();
-        let off = ent.path("offset").and_then(Value::as_usize).unwrap();
+        let off = ent
+            .path("offset")
+            .and_then(Value::as_usize)
+            .with_context(|| format!("checkpoint entry {name:?} missing offset"))?;
         let numel: usize = shape.iter().product();
-        let bytes = &blob[off..off + 4 * numel];
+        let bytes = blob
+            .get(off..off + 4 * numel)
+            .with_context(|| format!("checkpoint entry {name:?} payload out of bounds"))?;
         let data = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))

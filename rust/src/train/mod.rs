@@ -16,14 +16,18 @@
 pub mod checkpoint;
 
 use std::collections::BTreeMap;
+// Instant feeds the BENCH step-latency telemetry (upload/execute/readback/
+// optim breakdown), never a suite record's payload — lint: allow(determinism)
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use crate::data::Batch;
 use crate::manifest::{Manifest, Variant};
 use crate::optim::{fused_workers, FusedAdamW, MaskPlan, ParamArena, Schedule};
 use crate::peft::Masks;
+use crate::xla;
 use crate::runtime::{
     literal_f32_slice, read_f32_into, read_scalar_f32, Engine, Executable, Input,
     ResidentArgs,
@@ -352,13 +356,13 @@ impl Trainer {
 
     fn step_impl(&mut self, batch_inputs: &[Input]) -> Result<f32> {
         // ---- upload: dirty leaves + batch --------------------------------
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // lint: allow(determinism) telemetry
         self.refresh_dirty_lits()?;
         let batch_lits = Self::batch_literals(batch_inputs)?;
         let upload_s = t0.elapsed().as_secs_f64();
 
         // ---- execute -----------------------------------------------------
-        let t1 = Instant::now();
+        let t1 = Instant::now(); // lint: allow(determinism) telemetry
         let outs = {
             let mut refs: Vec<&xla::Literal> = Vec::with_capacity(
                 self.resident.len() + self.frozen_lits.len() + batch_lits.len(),
@@ -376,7 +380,7 @@ impl Trainer {
         }
 
         // ---- readback: loss + grads into the reused arena ----------------
-        let t2 = Instant::now();
+        let t2 = Instant::now(); // lint: allow(determinism) telemetry
         let loss = read_scalar_f32(&outs[0])?;
         for i in 0..n {
             let (off, len) = {
@@ -388,7 +392,7 @@ impl Trainer {
         let readback_s = t2.elapsed().as_secs_f64();
 
         // ---- fused mask + clip + AdamW -----------------------------------
-        let t3 = Instant::now();
+        let t3 = Instant::now(); // lint: allow(determinism) telemetry
         let lr = self.sched.lr_at(self.step_count);
         let rep = self.opt.step(
             &mut self.arena,
@@ -429,13 +433,13 @@ impl Trainer {
     /// Forward pass: logits (B, L, V) for a token batch.
     pub fn logits(&self, batch: &Batch) -> Result<Tensor> {
         let outs = self.exec(&self.fwd_exe, &[Input::I(&batch.tokens)])?;
-        Ok(outs.into_iter().next().unwrap())
+        outs.into_iter().next().context("fwd executable returned no outputs")
     }
 
     /// Forward pass for regression variants: y (B, L, D).
     pub fn forward_reg(&self, x: &Tensor) -> Result<Tensor> {
         let outs = self.exec(&self.fwd_exe, &[Input::F(x)])?;
-        Ok(outs.into_iter().next().unwrap())
+        outs.into_iter().next().context("fwd executable returned no outputs")
     }
 
     /// Eval loss on a batch without updating (runs step, discards grads).

@@ -1,0 +1,331 @@
+//! In-tree stand-in for the `xla` PJRT binding, exposing exactly the API
+//! surface `crate::runtime` uses.
+//!
+//! The offline build vendors no third-party crates, so the crate ships its
+//! own host-side implementation of the literal layer (shape + bytes
+//! storage, fully functional — the trainer's serialization paths and their
+//! tests run on it) and a stub of the device layer ([`PjRtClient::compile`]
+//! reports that no PJRT backend is vendored). Artifact-gated paths check
+//! for `artifacts/manifest.json` before constructing an engine, so the
+//! stub only ever reports its absence where execution was actually
+//! requested.
+//!
+//! The module keeps the external crate's names (`PjRtClient`, `Literal`,
+//! `ElementType`, …) so `crate::runtime` reads identically against a real
+//! vendored binding; swapping one back in is a one-line import change.
+
+use std::path::Path;
+
+/// Error type for the XLA facade (message-only; `crate::error::Error`
+/// classifies it as [`ErrorKind::Runtime`](crate::error::ErrorKind)).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(op: &str) -> XlaError {
+    XlaError(format!(
+        "{op}: no PJRT backend is vendored in this build (in-tree xla stub); \
+         artifact execution requires a real PJRT plugin"
+    ))
+}
+
+/// Element dtype of an array [`Literal`] (the artifact ABI uses f32
+/// parameters/activations and s32 token ids only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    S32,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// Array dims of a literal, as the binding reports them (i64, row-major).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Sealed dtype marker for [`Literal::to_vec`].
+pub trait NativeType: Sized + Copy + private::Sealed {
+    /// The dtype tag this native type stores as.
+    const TY: ElementType;
+    /// Decode one element from little-endian bytes.
+    fn from_le(b: [u8; 4]) -> Self;
+}
+
+mod private {
+    /// Seals [`super::NativeType`] to the two ABI dtypes.
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side value: a typed, shaped byte buffer (or a tuple of them).
+/// This half of the facade is fully functional — conversions, resident
+/// argument tables and their tests all run on it.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    /// A dense array: dtype + dims + row-major little-endian payload.
+    Array {
+        /// Element dtype.
+        ty: ElementType,
+        /// Dimension sizes.
+        dims: Vec<usize>,
+        /// Row-major little-endian payload, `ty.size() * product(dims)`.
+        bytes: Vec<u8>,
+    },
+    /// A tuple of literals (executables return one tuple output).
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build an array literal from a shape and a raw byte payload (the
+    /// binding's untyped-copy constructor; one memcpy).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        let want = dims.iter().product::<usize>() * ty.size();
+        if data.len() != want {
+            return Err(XlaError(format!(
+                "create_from_shape_and_untyped_data: {} bytes for shape {dims:?} \
+                 ({want} expected)",
+                data.len()
+            )));
+        }
+        Ok(Literal::Array { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    /// The array shape (errors on tuple literals).
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        match self {
+            Literal::Array { dims, .. } => {
+                Ok(ArrayShape { dims: dims.iter().map(|&d| d as i64).collect() })
+            }
+            Literal::Tuple(_) => Err(XlaError("array_shape on tuple literal".into())),
+        }
+    }
+
+    /// Total element count (0 for tuple literals, as a diagnostic value).
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { ty, bytes, .. } => bytes.len() / ty.size(),
+            Literal::Tuple(_) => 0,
+        }
+    }
+
+    /// Decode the payload into native elements (dtype-checked).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        match self {
+            Literal::Array { ty, bytes, .. } => {
+                if *ty != T::TY {
+                    return Err(XlaError(format!(
+                        "to_vec: literal is {ty:?}, requested {:?}",
+                        T::TY
+                    )));
+                }
+                Ok(bytes
+                    .chunks_exact(4)
+                    .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => Err(XlaError("to_vec on tuple literal".into())),
+        }
+    }
+
+    /// Unpack a tuple literal into its elements (errors on array literals —
+    /// executables return exactly one tuple, see `aot.py` return_tuple).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self {
+            Literal::Tuple(elems) => Ok(elems),
+            Literal::Array { .. } => Err(XlaError("to_tuple on array literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module text (the AOT artifacts are HLO text files).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact. The stub validates readability and
+    /// carries the text; a vendored backend would parse it here.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| XlaError(format!("reading {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// The HLO text length in bytes (diagnostics).
+    pub fn text_len(&self) -> usize {
+        self.text.len()
+    }
+}
+
+/// A computation handle wrapping a parsed HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _proto_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module as a compilable computation.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto_len: proto.text_len() }
+    }
+}
+
+/// The PJRT client. Construction succeeds (the host side is real); only
+/// [`compile`](PjRtClient::compile) reports the missing device backend.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (no PJRT backend vendored)".to_string()
+    }
+
+    /// Compile a computation. The stub has no device backend, so this
+    /// always reports unavailability; callers gate on artifact presence
+    /// before reaching here.
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// A compiled executable. Uninhabited in the stub — [`PjRtClient::compile`]
+/// never succeeds, so no code path can hold one; its methods exist only to
+/// typecheck the runtime layer.
+#[derive(Debug)]
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals, returning per-device
+    /// output buffers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        match *self {}
+    }
+}
+
+/// A device buffer. Uninhabited in the stub (see [`PjRtLoadedExecutable`]).
+#[derive(Debug)]
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_create_checks_size() {
+        let ok = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 16],
+        );
+        assert!(ok.is_ok());
+        let bad = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 12],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_and_shape() {
+        let vals = [1.5f32, -2.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+                .unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3i64]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn tuple_literal_unpacks() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[1],
+            &7i32.to_le_bytes(),
+        )
+        .unwrap();
+        let t = Literal::Tuple(vec![a.clone()]);
+        assert!(t.array_shape().is_err());
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 1);
+        assert_eq!(elems[0].to_vec::<i32>().unwrap(), vec![7]);
+        assert!(a.to_tuple().is_err(), "array literal is not a tuple");
+    }
+
+    #[test]
+    fn client_constructs_compile_reports_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let e = c.compile(&comp).unwrap_err();
+        assert!(e.to_string().contains("no PJRT backend"), "{e}");
+    }
+}

@@ -88,7 +88,7 @@ fn masked_entries_never_change() {
     }
     tr.set_masks(ssm_peft::peft::Masks { masks });
     let before = tr.snapshot_train();
-    let ds = tasks::by_name("glue/rte", 0, 64);
+    let ds = tasks::by_name("glue/rte", 0, 64).unwrap();
     let mut rng = Rng::new(1);
     let it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b, tr.variant.batch_l);
     for (b, _) in it.take(3) {
@@ -112,7 +112,7 @@ fn sdt_selection_budget_under_one_percent() {
     let cfg = TrainConfig { lr: 1e-2, schedule_total: 10, ..Default::default() };
     let mut tr = Trainer::new(e, m, "mamba1_xs_sdt", &cfg).unwrap();
     let before = tr.train_map();
-    let ds = tasks::by_name("glue/rte", 0, 64);
+    let ds = tasks::by_name("glue/rte", 0, 64).unwrap();
     let mut rng = Rng::new(2);
     let it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b, tr.variant.batch_l);
     for (b, _) in it.take(4) {
@@ -374,7 +374,7 @@ impl StepDecode for StepwiseOnly {
         self.0.dims()
     }
     fn step(&self, tokens: &IntTensor, state: &mut DecodeState)
-        -> anyhow::Result<Tensor> {
+        -> ssm_peft::error::Result<Tensor> {
         self.0.step(tokens, state)
     }
 }
@@ -469,7 +469,7 @@ fn lora_merge_preserves_fwd_logits() {
     let cfg = TrainConfig { lr: 1e-2, schedule_total: 6, ..Default::default() };
     let mut tr = Trainer::new(e, m, "mamba1_xs_lora_lin", &cfg).unwrap();
     // train a few steps so adapters are non-trivial
-    let ds = tasks::by_name("glue/rte", 0, 64);
+    let ds = tasks::by_name("glue/rte", 0, 64).unwrap();
     let mut rng = Rng::new(3);
     let it = BatchIter::new(&ds.train, &mut rng, tr.variant.batch_b, tr.variant.batch_l);
     let mut batch0 = None;

@@ -1,0 +1,12 @@
+// Fixture: nondeterminism sources in a determinism-scoped file (the test
+// presents this file under a scoped path, e.g. rust/src/optim.rs).
+
+use std::collections::HashMap;
+use std::time::{Instant, SystemTime};
+
+fn bad() -> usize {
+    let m: HashMap<u32, u32> = HashMap::new();
+    let _t = Instant::now();
+    let _s = SystemTime::now();
+    m.len()
+}

@@ -1,0 +1,6 @@
+// Fixture: raw env reads outside the knob registry must be flagged (the
+// test presents this file under rust/src/).
+
+fn bad() -> Option<String> {
+    std::env::var("SSM_PEFT_SOMETHING").ok()
+}

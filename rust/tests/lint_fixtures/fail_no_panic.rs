@@ -1,0 +1,17 @@
+// Fixture: every line the no-panic rule must flag (and a few it must not).
+// Not compiled — consumed by rust/tests/repolint_selfcheck.rs as data.
+
+fn bad(o: Option<u32>) -> u32 {
+    let a = o.unwrap(); // flagged
+    let b = o.expect("present"); // flagged
+    if a > 3 {
+        panic!("boom"); // flagged
+    }
+    if b > 4 {
+        todo!() // flagged
+    }
+    if a + b > 9 {
+        unimplemented!() // flagged
+    }
+    a + b
+}

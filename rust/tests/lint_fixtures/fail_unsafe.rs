@@ -1,0 +1,8 @@
+// Fixture: unsafe without a SAFETY: justification must be flagged.
+
+fn bad() -> i32 {
+    unsafe { std::mem::transmute::<u32, i32>(1) }
+}
+
+struct Wrapper(*const u8);
+unsafe impl Send for Wrapper {}

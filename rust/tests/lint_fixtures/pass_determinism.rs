@@ -1,0 +1,12 @@
+// Fixture: annotated telemetry sites and ordered maps pass in a
+// determinism-scoped file.
+
+use std::collections::BTreeMap;
+// telemetry only, never recorded — lint: allow(determinism)
+use std::time::Instant;
+
+fn fine() -> usize {
+    let m: BTreeMap<u32, u32> = BTreeMap::new();
+    let _t = Instant::now(); // lint: allow(determinism) telemetry
+    m.len()
+}

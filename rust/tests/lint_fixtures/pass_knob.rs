@@ -1,0 +1,10 @@
+// Fixture: going through the typed registry passes; a local `var` function
+// is not an env read.
+
+fn fine() -> usize {
+    var(3)
+}
+
+fn var(x: usize) -> usize {
+    x + 1
+}

@@ -1,0 +1,20 @@
+// Fixture: panic-adjacent code the no-panic rule must NOT flag.
+
+fn fine(o: Option<u32>) -> u32 {
+    let a = o.unwrap_or(1);
+    let b = o.unwrap_or_else(|| 2);
+    let c = o.unwrap_or_default();
+    let d: Result<u32, u32> = Err(3);
+    let e = d.expect_err("always err");
+    let s = "calls .unwrap() and panic! inside a string";
+    let t = s.len() as u32; // comment saying .expect( is also fine
+    a + b + c + e + t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        Some(1).unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: properly annotated unsafe must pass.
+
+fn good() -> i32 {
+    // SAFETY: u32 and i32 have identical size and alignment; any bit
+    // pattern is valid for both.
+    unsafe { std::mem::transmute::<u32, i32>(1) }
+}
+
+struct Wrapper(*const u8);
+
+// SAFETY: the pointer is only ever read on the owning thread; Send/Sync
+// here only move the (opaque) handle between threads.
+unsafe impl Send for Wrapper {}
+unsafe impl Sync for Wrapper {}

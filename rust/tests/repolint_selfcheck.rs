@@ -1,0 +1,133 @@
+//! repolint self-check: the tree must lint clean, the allowlist ledger must
+//! not grow, and the rules must behave as specified on the fixture corpus
+//! under `tests/lint_fixtures/`.
+//!
+//! Fixtures are data, not compiled code: they live in a subdirectory of
+//! `tests/` (cargo only builds top-level files) and are excluded from the
+//! lint walk itself, so they may violate rules on purpose.
+
+use std::path::Path;
+
+use ssm_peft::lint::allowlist::{ALLOWLIST, MAX_ENTRIES};
+use ssm_peft::lint::rules::{check_file, Rule, Violation};
+use ssm_peft::lint::{lexer, run, workspace_root};
+
+/// Lex + rule-check one fixture file, presenting it under `rel` so the
+/// right scopes apply.
+fn check_fixture(name: &str, rel: &str) -> Vec<Violation> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()));
+    check_file(rel, &lexer::scan(&src)).0
+}
+
+fn lines_of(v: &[Violation], rule: Rule) -> Vec<usize> {
+    let mut out: Vec<usize> =
+        v.iter().filter(|x| x.rule == rule).map(|x| x.line).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[test]
+fn workspace_lints_clean() {
+    let report = run(&workspace_root()).expect("lint pass must complete");
+    assert!(
+        report.ok(),
+        "repolint found problems:\n{}",
+        report.render()
+    );
+    // zero-growth pins: the two ledgered panic sites, and nothing more.
+    assert_eq!(
+        report.allowlisted, 2,
+        "allowlisted hit count drifted — update the ledger AND \
+         rust/docs/linting.md together"
+    );
+    assert!(
+        report.files_scanned >= 20,
+        "suspiciously few files scanned ({}) — did the walk break?",
+        report.files_scanned
+    );
+}
+
+#[test]
+fn ledger_is_bounded() {
+    assert!(
+        ALLOWLIST.len() <= MAX_ENTRIES,
+        "allowlist ledger has {} entries, ceiling is {MAX_ENTRIES}",
+        ALLOWLIST.len()
+    );
+}
+
+#[test]
+fn unsafe_inventory_fully_justified() {
+    let report = run(&workspace_root()).expect("lint pass must complete");
+    for site in &report.unsafe_sites {
+        assert!(
+            !site.justification.is_empty(),
+            "{}:{} has an unsafe site without a SAFETY: comment: {}",
+            site.file,
+            site.line,
+            site.excerpt
+        );
+    }
+    // the runtime byte-view transmutes must be in the inventory
+    assert!(
+        report
+            .unsafe_sites
+            .iter()
+            .any(|s| s.file == "rust/src/runtime/mod.rs"),
+        "runtime transmute sites missing from the unsafe inventory"
+    );
+}
+
+#[test]
+fn fixture_no_panic() {
+    let v = check_fixture("fail_no_panic.rs", "rust/src/fixture.rs");
+    assert_eq!(lines_of(&v, Rule::NoPanic), vec![5, 6, 8, 11, 14], "{v:?}");
+
+    let v = check_fixture("pass_no_panic.rs", "rust/src/fixture.rs");
+    assert!(v.is_empty(), "{v:?}");
+
+    // same file outside rust/src/ is out of scope entirely
+    let v = check_fixture("fail_no_panic.rs", "rust/benches/fixture.rs");
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn fixture_unsafe_safety() {
+    let v = check_fixture("fail_unsafe.rs", "rust/src/fixture.rs");
+    assert_eq!(lines_of(&v, Rule::UnsafeSafety), vec![4, 8], "{v:?}");
+
+    let v = check_fixture("pass_unsafe.rs", "rust/src/fixture.rs");
+    assert!(v.is_empty(), "{v:?}");
+}
+
+#[test]
+fn fixture_determinism() {
+    // scoped: presented as the fused-optimizer file
+    let v = check_fixture("fail_determinism.rs", "rust/src/optim.rs");
+    assert_eq!(lines_of(&v, Rule::Determinism), vec![4, 5, 8, 9, 10], "{v:?}");
+
+    let v = check_fixture("pass_determinism.rs", "rust/src/optim.rs");
+    assert!(v.is_empty(), "{v:?}");
+
+    // the same nondeterminism outside the scope list is not the lint's business
+    let v = check_fixture("fail_determinism.rs", "rust/src/fixture.rs");
+    assert!(lines_of(&v, Rule::Determinism).is_empty(), "{v:?}");
+}
+
+#[test]
+fn fixture_knob_registry() {
+    let v = check_fixture("fail_knob.rs", "rust/src/fixture.rs");
+    assert_eq!(lines_of(&v, Rule::KnobRegistry), vec![5], "{v:?}");
+
+    let v = check_fixture("pass_knob.rs", "rust/src/fixture.rs");
+    assert!(v.is_empty(), "{v:?}");
+
+    // the registry itself is exempt — it is where raw reads belong
+    let v = check_fixture("fail_knob.rs", "rust/src/knobs.rs");
+    assert!(lines_of(&v, Rule::KnobRegistry).is_empty(), "{v:?}");
+}
