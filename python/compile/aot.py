@@ -12,6 +12,11 @@ Per variant we emit:
   <name>.prefill<C>.hlo.txt (params..., tokens (B,C), conv_st, ssm_st)
                             -> (logits_last, st')   [decode variants only,
                             one artifact per chunk width C in PREFILL_WIDTHS]
+  <name>.decode_adapters.hlo.txt
+                            (params..., token, conv_st, ssm_st,
+                             adapter_operands...) -> (logits, st')
+                            [decode variants only: unmerged multi-adapter
+                            decode — per-row LoRA/SDT delta operands]
   <name>.params.bin         f32-LE initial values, train-then-frozen order
 plus a single artifacts/manifest.json describing all of it for the Rust
 runtime (which is fully layout-agnostic).
@@ -36,6 +41,14 @@ from . import configs, model as model_mod
 # a prompt with the largest-fitting chunks and finishes the remainder
 # through the single-token decode artifact, so a couple of widths suffice.
 PREFILL_WIDTHS = (16, 64)
+
+# Per-row adapter slot sizes baked into the decode_adapters artifact:
+# LoRA factors are zero-padded to rank ADAPTER_RANK (the largest rank the
+# PEFT presets use) and each SDT sparse offset carries up to ADAPTER_K
+# (index, value) pairs per SSM tensor — generous for the ~1% masks the
+# paper trains. Adapters that do not fit fall back to the merged path.
+ADAPTER_RANK = 8
+ADAPTER_K = 256
 
 
 def to_hlo_text(lowered) -> str:
@@ -94,6 +107,7 @@ def export_variant(v, outdir):
     files["fwd"] = f"{v['name']}.fwd.hlo.txt"
     open(os.path.join(outdir, files["fwd"]), "w").write(fwd_hlo)
 
+    adapter_meta = None
     if v["decode"]:
         dec = model_mod.decode_fn(spec, peft)
         anames = tnames + fnames
@@ -130,6 +144,32 @@ def export_variant(v, outdir):
             prefill_files[str(c)] = fname
         files["prefill"] = prefill_files
 
+        # unmerged multi-adapter decode: same base batch, plus per-row
+        # LoRA/SDT delta operands appended after the state inputs
+        deca = model_mod.decode_adapters_fn(spec, peft)
+        ops = model_mod.adapter_operands(spec, B, ADAPTER_RANK, ADAPTER_K)
+
+        def deca_flat(*args):
+            p = dict(zip(anames, args[:len(anames)]))
+            token, conv_st, ssm_st = args[len(anames):len(anames) + 3]
+            ad = {name: arr for (name, _, _), arr
+                  in zip(ops, args[len(anames) + 3:])}
+            return deca(p, token, conv_st, ssm_st, ad)
+
+        op_specs = [jax.ShapeDtypeStruct(shape, dtype)
+                    for _, shape, dtype in ops]
+        deca_hlo = to_hlo_text(jax.jit(deca_flat).lower(
+            *arg_specs, tok_s, conv_s, ssm_s, *op_specs))
+        files["decode_adapters"] = f"{v['name']}.decode_adapters.hlo.txt"
+        open(os.path.join(outdir, files["decode_adapters"]), "w").write(deca_hlo)
+        adapter_meta = {
+            "rank": ADAPTER_RANK, "k": ADAPTER_K,
+            "operands": [
+                {"name": n, "shape": list(shape),
+                 "dtype": "i32" if dtype == jnp.int32 else "f32"}
+                for n, shape, dtype in ops],
+        }
+
     # ---- params.bin + manifest entry ---------------------------------------
     blob = bytearray()
     def entry(n, src):
@@ -144,7 +184,7 @@ def export_variant(v, outdir):
     bin_name = f"{v['name']}.params.bin"
     open(os.path.join(outdir, bin_name), "wb").write(bytes(blob))
 
-    return {
+    out = {
         "name": v["name"],
         "arch": {
             "kind": spec.kind, "vocab": spec.vocab, "d_model": spec.d_model,
@@ -167,6 +207,9 @@ def export_variant(v, outdir):
         "train_params": train_meta,
         "frozen_params": frozen_meta,
     }
+    if adapter_meta is not None:
+        out["adapter_operands"] = adapter_meta
+    return out
 
 
 def main():
@@ -189,8 +232,10 @@ def main():
     for i, v in enumerate(vs):
         print(f"[{i + 1}/{len(vs)}] {v['name']}", flush=True)
         entries.append(export_variant(v, args.out))
-    # version 2: decode variants carry files.prefill.{width} chunk artifacts
-    manifest = {"version": 2, "variants": entries}
+    # version 3: decode variants additionally carry files.decode_adapters
+    # (unmerged multi-adapter decode) + the adapter_operands layout table;
+    # version 2 added files.prefill.{width} chunk artifacts
+    manifest = {"version": 3, "variants": entries}
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"wrote {len(entries)} variants to {args.out}/manifest.json")

@@ -95,6 +95,58 @@ def decode_fn(spec, peft):
     return decode
 
 
+def _adapter_target_shape(spec, leaf):
+    """Base-weight shape for a per-row adapter slot target."""
+    H = 1 if spec.kind == "mamba2" else spec.d_state
+    return {
+        "Win_x": (spec.d_model, spec.d_inner),
+        "Win_z": (spec.d_model, spec.d_inner),
+        "xproj": (spec.d_inner, spec.dt_rank + 2 * spec.d_state),
+        "dtproj.w": (spec.dt_rank, spec.d_inner),
+        "Wout": (spec.d_inner, spec.d_model),
+        "A_log": (spec.d_inner, H),
+    }[leaf]
+
+
+def adapter_operands(spec, B, rank, k):
+    """Canonical per-row adapter operand list for the decode_adapters
+    artifact: (name, shape, dtype) triples in exactly the order the
+    executable takes them after (params..., token, conv_st, ssm_st).
+    The manifest records this order so the Rust runtime stays
+    layout-agnostic."""
+    ops = [("scale", (B,), jnp.float32)]
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        for t in s6.LORA_SLOT_TARGETS:
+            din, dout = _adapter_target_shape(spec, t)
+            ops.append((pre + t + ".lora_a", (B, din, rank), jnp.float32))
+            ops.append((pre + t + ".lora_b", (B, rank, dout), jnp.float32))
+        for p in s6.SDT_SLOT_PARAMS:
+            ops.append((pre + p + ".sdt_idx", (B, k), jnp.int32))
+            ops.append((pre + p + ".sdt_val", (B, k), jnp.float32))
+    return ops
+
+
+def zero_adapter_operands(spec, B, rank, k):
+    """All-zero operand dict (every row decodes the unmodified base)."""
+    return {name: jnp.zeros(shape, dtype)
+            for name, shape, dtype in adapter_operands(spec, B, rank, k)}
+
+
+def decode_adapters_fn(spec, peft):
+    """Unmerged multi-adapter decode: (params..., token, conv_st, ssm_st,
+    adapter_operands...) -> (logits, conv_st', ssm_st'). One shared base
+    dispatch; per-row LoRA/SDT deltas applied as a second pass."""
+    assert spec.kind in ("mamba1", "mamba2")
+
+    def decode(params, token, conv_states, ssm_states, adapters):
+        eff = peft_mod.make_eff(params, peft)
+        return s6.decode_step_adapters(params, eff, spec, token, conv_states,
+                                       ssm_states, adapters)
+
+    return decode
+
+
 def prefill_fn(spec, peft):
     """Chunked prefill: (params..., tokens (B, C), conv_st, ssm_st)
     -> (logits_last, conv_st', ssm_st'). One dispatch scans C tokens and

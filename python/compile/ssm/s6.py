@@ -156,6 +156,94 @@ def prefill_chunk(params, eff, spec, tokens, conv_states, ssm_states):
     return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
 
 
+# Per-row adapter slots baked into the `decode_adapters` artifact: every
+# matmul weight gets a (zero-padded) LoRA factor pair, and the SDT-trained
+# SSM tensors get an index-set sparse offset. Rows whose adapter does not
+# use a slot pass zeros (idx 0 / val 0 scatters are no-ops).
+LORA_SLOT_TARGETS = ("Win_x", "Win_z", "xproj", "dtproj.w", "Wout")
+SDT_SLOT_PARAMS = ("A_log", "xproj")
+
+
+def decode_step_adapters(params, eff, spec, token, conv_states, ssm_states,
+                         adapters):
+    """Single-token decode over ONE shared base batch with per-row deltas.
+
+    Unmerged multi-adapter serving (S-LoRA-style): the staged base weights
+    are used once for the whole batch; each row then adds its own low-rank
+    LoRA correction `scale · (x·a)·b` on the projection matmuls and an
+    index-set sparse offset on the SDT-trained SSM tensors. Semantically
+    identical to `decode_step` run per row with that row's merged weights.
+
+    token (B,) int32; conv_states (n_layer, B, K-1, Di);
+    ssm_states (n_layer, B, Di, H). `adapters` maps (see
+    model.adapter_operands for the canonical order/shapes):
+      "scale"                 (B,)        LoRA merge scale (alpha/rank) per row
+      "<w>.lora_a"            (B, din, R) per-row LoRA A (zero-padded to R)
+      "<w>.lora_b"            (B, R, dout)
+      "<p>.sdt_idx"           (B, K) i32  flat indices into <p> (0-padded)
+      "<p>.sdt_val"           (B, K) f32  offset values (0 on padding)
+    Returns (logits (B, V), conv_states', ssm_states').
+    """
+    Bsz = token.shape[0]
+    scale = adapters["scale"]                         # (B,)
+
+    def mm(x, name):
+        """x (B, din) through the per-row effective weight for `name`."""
+        y = x @ eff(name)
+        if name + ".lora_a" in adapters:
+            lo = jnp.einsum("bi,bir->br", x, adapters[name + ".lora_a"])
+            y = y + scale[:, None] * jnp.einsum(
+                "br,bro->bo", lo, adapters[name + ".lora_b"])
+        return y
+
+    def sdt_delta(name):
+        """Dense per-row offset (B, *shape) scattered from the index set."""
+        W = params[name]
+        idx = adapters[name + ".sdt_idx"]             # (B, K) flat indices
+        val = adapters[name + ".sdt_val"]             # (B, K) values
+        flat = jax.vmap(
+            lambda i, v: jnp.zeros((W.size,), W.dtype).at[i].add(v))(idx, val)
+        return flat.reshape((Bsz,) + W.shape)
+
+    R, H = spec.dt_rank, spec.d_state
+    x = params["embed"][token]                        # (B, Dm)
+    new_conv, new_ssm = [], []
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        un = cm.rmsnorm(x, params[pre + "norm.w"])
+        xi = mm(un, pre + "Win_x")
+        z = mm(un, pre + "Win_z")
+        xi, cs = cm.conv1d_step(xi, conv_states[i], params[pre + "conv.w"],
+                                params[pre + "conv.b"])
+        xi = cm.silu(xi)
+        dbl = mm(xi, pre + "xproj")                   # (B, R+2H)
+        if pre + "xproj.sdt_idx" in adapters:
+            dbl = dbl + jnp.einsum("bd,bdo->bo", xi, sdt_delta(pre + "xproj"))
+        dt_low, Bm, C = dbl[..., :R], dbl[..., R:R + H], dbl[..., R + H:]
+        delta = cm.softplus(mm(dt_low, pre + "dtproj.w")
+                            + params[pre + "dtproj.b"])
+        A_log = params[pre + "A_log"][None]           # (1, Di, Ha)
+        if pre + "A_log.sdt_idx" in adapters:
+            A_log = A_log + sdt_delta(pre + "A_log")
+        A = -jnp.exp(A_log)
+        if spec.kind == "mamba2":
+            A = jnp.broadcast_to(A, (Bsz, spec.d_inner, H))
+        # selective_scan's A operand is batch-invariant, so the L=1
+        # recurrence is inlined here with the per-row A (same math).
+        h = ssm_states[i]                             # (B, Di, H)
+        abar = jnp.exp(delta[:, :, None] * A)
+        hl = abar * h + (delta * xi)[:, :, None] * Bm[:, None, :]
+        y = jnp.einsum("bdh,bh->bd", hl, C)
+        y = y + params[pre + "Dskip"][None, :] * xi
+        y = y * cm.silu(z)
+        x = x + mm(y, pre + "Wout")
+        new_conv.append(cs)
+        new_ssm.append(hl)
+    x = cm.rmsnorm(x, params["norm_f.w"])
+    logits = x @ eff("head")
+    return logits, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+
 def decode_step(params, eff, spec, token, conv_states, ssm_states):
     """Single-token stepwise decode using recurrent state.
 

@@ -1,0 +1,187 @@
+"""Unmerged multi-adapter decode: per-row deltas == per-row merged weights.
+
+`s6.decode_step_adapters` must be semantically identical to running
+`s6.decode_step` row by row with that row's merged parameters — the Rust
+serving path demotes the merged-copy registry on the strength of this
+equivalence (plus the Rust-side byte-equivalence harness).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import peft as P
+from compile.ssm import s6
+from compile.ssm.common import ArchSpec
+
+SPEC = ArchSpec(kind="mamba1", d_model=8, n_layer=2, d_inner=16,
+                d_state=4, d_conv=4, dt_rank=2, vocab=32)
+SPEC2 = ArchSpec(kind="mamba2", d_model=8, n_layer=2, d_inner=16,
+                 d_state=4, d_conv=4, dt_rank=2, vocab=32)
+FULL = {"method": "full"}
+RANK = 3
+K = 8
+B = 4
+
+
+def base_model(spec):
+    params, _ = M.init_model(0, spec, FULL)
+    return params
+
+
+def states(spec, rng, B):
+    conv = 0.1 * jax.random.normal(
+        rng, (spec.n_layer, B, spec.d_conv - 1, spec.d_inner))
+    ssm = 0.1 * jax.random.normal(
+        jax.random.fold_in(rng, 1),
+        (spec.n_layer, B, spec.d_inner, spec.d_state))
+    return conv, ssm
+
+
+def row_slice(states_nb, r):
+    """(n_layer, B, ...) -> (n_layer, 1, ...) for row r."""
+    return states_nb[:, r:r + 1]
+
+
+def random_adapters(spec, rng, B, rank=RANK, k=K, lora=True, sdt=True):
+    """Random per-row operands + the equivalent per-row merged param dicts."""
+    ops = M.zero_adapter_operands(spec, B, rank, k)
+    ops = {n: np.array(v) for n, v in ops.items()}
+    base = base_model(spec)
+    merged = [dict(base) for _ in range(B)]
+    rs = np.random.RandomState(int(jax.random.randint(rng, (), 0, 1 << 30)))
+    ops["scale"] = np.full((B,), 1.0, np.float32)
+    for i in range(spec.n_layer):
+        pre = f"layers.{i}."
+        if lora:
+            for t in s6.LORA_SLOT_TARGETS:
+                name = pre + t
+                din, dout = M._adapter_target_shape(spec, t)
+                for r in range(B):
+                    a = 0.05 * rs.randn(din, rank).astype(np.float32)
+                    b = 0.05 * rs.randn(rank, dout).astype(np.float32)
+                    ops[name + ".lora_a"][r] = a
+                    ops[name + ".lora_b"][r] = b
+                    merged[r][name] = merged[r][name] + a @ b
+        if sdt:
+            for p in s6.SDT_SLOT_PARAMS:
+                name = pre + p
+                size = int(np.prod(M._adapter_target_shape(spec, p)))
+                for r in range(B):
+                    nz = rs.randint(1, k + 1)
+                    idx = rs.choice(size, size=nz, replace=False)
+                    val = 0.1 * rs.randn(nz).astype(np.float32)
+                    ops[name + ".sdt_idx"][r, :nz] = idx
+                    ops[name + ".sdt_val"][r, :nz] = val
+                    flat = np.asarray(merged[r][name]).reshape(-1).copy()
+                    flat[idx] += val
+                    merged[r][name] = jnp.asarray(
+                        flat.reshape(merged[r][name].shape))
+    ops = {n: jnp.asarray(v) for n, v in ops.items()}
+    return base, ops, merged
+
+
+def run_adapters(spec, base, ops, token, conv, ssm):
+    eff = P.make_eff(base, FULL)
+    return s6.decode_step_adapters(base, eff, spec, token, conv, ssm, ops)
+
+
+def run_merged_row(spec, merged_r, token_r, conv_r, ssm_r):
+    eff = P.make_eff(merged_r, FULL)
+    return s6.decode_step(merged_r, eff, spec, token_r, conv_r, ssm_r)
+
+
+@pytest.mark.parametrize("spec", [SPEC, SPEC2], ids=["mamba1", "mamba2"])
+def test_zero_adapters_match_decode_step(spec):
+    base = base_model(spec)
+    ops = M.zero_adapter_operands(spec, B, RANK, K)
+    rng = jax.random.PRNGKey(7)
+    conv, ssm = states(spec, rng, B)
+    token = jnp.arange(B, dtype=jnp.int32)
+    eff = P.make_eff(base, FULL)
+    la, ca, sa = run_adapters(spec, base, ops, token, conv, ssm)
+    lb, cb, sb = s6.decode_step(base, eff, spec, token, conv, ssm)
+    np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ca, cb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(sa, sb, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("spec", [SPEC, SPEC2], ids=["mamba1", "mamba2"])
+@pytest.mark.parametrize("mode", ["lora", "sdt", "both"])
+def test_mixed_rows_match_per_row_merged(spec, mode):
+    rng = jax.random.PRNGKey(11)
+    base, ops, merged = random_adapters(
+        spec, rng, B, lora=mode in ("lora", "both"),
+        sdt=mode in ("sdt", "both"))
+    conv, ssm = states(spec, jax.random.fold_in(rng, 2), B)
+    token = jnp.asarray([3, 1, 4, 1], jnp.int32)
+    la, ca, sa = run_adapters(spec, base, ops, token, conv, ssm)
+    for r in range(B):
+        lr, cr, sr = run_merged_row(
+            spec, merged[r], token[r:r + 1], row_slice(conv, r),
+            row_slice(ssm, r))
+        np.testing.assert_allclose(la[r], lr[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(ca[:, r], cr[:, 0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(sa[:, r], sr[:, 0], rtol=1e-4, atol=1e-5)
+
+
+def test_multi_step_state_carry():
+    """Three chained steps: carried states stay per-row equivalent."""
+    spec = SPEC
+    rng = jax.random.PRNGKey(23)
+    base, ops, merged = random_adapters(spec, rng, B)
+    conv = jnp.zeros((spec.n_layer, B, spec.d_conv - 1, spec.d_inner))
+    ssm = jnp.zeros((spec.n_layer, B, spec.d_inner, spec.d_state))
+    per_row = [(jnp.zeros((spec.n_layer, 1, spec.d_conv - 1, spec.d_inner)),
+                jnp.zeros((spec.n_layer, 1, spec.d_inner, spec.d_state)))
+               for _ in range(B)]
+    token = jnp.asarray([5, 9, 2, 6], jnp.int32)
+    for _ in range(3):
+        la, conv, ssm = run_adapters(spec, base, ops, token, conv, ssm)
+        nxt = []
+        for r in range(B):
+            cr, sr = per_row[r]
+            lr, cr, sr = run_merged_row(spec, merged[r], token[r:r + 1],
+                                        cr, sr)
+            per_row[r] = (cr, sr)
+            np.testing.assert_allclose(la[r], lr[0], rtol=1e-4, atol=1e-5)
+            nxt.append(int(jnp.argmax(lr[0])))
+        token = jnp.asarray(nxt, jnp.int32)
+
+
+def test_adapter_operands_table_is_canonical():
+    ops = M.adapter_operands(SPEC, B, RANK, K)
+    names = [n for n, _, _ in ops]
+    assert names[0] == "scale"
+    assert len(names) == len(set(names))
+    # every lora slot target and sdt param appears per layer
+    for i in range(SPEC.n_layer):
+        for t in s6.LORA_SLOT_TARGETS:
+            assert f"layers.{i}.{t}.lora_a" in names
+            assert f"layers.{i}.{t}.lora_b" in names
+        for p in s6.SDT_SLOT_PARAMS:
+            assert f"layers.{i}.{p}.sdt_idx" in names
+            assert f"layers.{i}.{p}.sdt_val" in names
+    # shapes carry the requested rank / k
+    by = {n: (shape, dt) for n, shape, dt in ops}
+    shape, dt = by["layers.0.Win_x.lora_a"]
+    assert shape == (B, SPEC.d_model, RANK) and dt == jnp.float32
+    shape, dt = by["layers.0.A_log.sdt_idx"]
+    assert shape == (B, K) and dt == jnp.int32
+
+
+def test_aot_exports_decode_adapters(tmp_path):
+    from compile import aot
+    v = dict(name="tiny_ad", arch="tiny", spec=SPEC, peft_name="full",
+             peft=FULL, B=2, L=8, decode=True)
+    entry = aot.export_variant(v, str(tmp_path))
+    assert "decode_adapters" in entry["files"]
+    text = (tmp_path / entry["files"]["decode_adapters"]).read_text()
+    assert text.startswith("HloModule")
+    meta = entry["adapter_operands"]
+    assert meta["rank"] == aot.ADAPTER_RANK and meta["k"] == aot.ADAPTER_K
+    ops = M.adapter_operands(SPEC, 2, meta["rank"], meta["k"])
+    assert [o["name"] for o in meta["operands"]] == [n for n, _, _ in ops]
+    assert all(o["dtype"] in ("f32", "i32") for o in meta["operands"])

@@ -18,6 +18,13 @@
 //! mock in every run (dispatch counts are the durable signal there) and
 //! on the real prefill executables in artifacts mode.
 //!
+//! Schema 3 adds an `adapters` section: unmerged batched multi-adapter
+//! decode — one shared batch carrying distinct per-row deltas (ONE
+//! dispatch per step) against per-adapter merged lanes (one dispatch per
+//! adapter per step), plus the resident-KB cost of a raw delta vs a
+//! whole-model merged copy. Host mocks; the dispatch counts and byte
+//! sizes are the durable signal.
+//!
 //! `SSM_PEFT_BENCH_SCALE` scales iteration counts and the synthetic model
 //! size (0.1 = tiny CI mode). The JSON schema is documented in
 //! rust/docs/performance.md; every number is a mean over timed iterations.
@@ -43,7 +50,7 @@ use crate::train::{StepTimings, TrainConfig, Trainer};
 /// `BENCH_hotpath.json` schema version. The lint pins this against the
 /// example payload in rust/docs/performance.md, so bumping it without a
 /// docs update fails `cargo run -- lint`.
-pub const BENCH_HOTPATH_SCHEMA: u32 = 2;
+pub const BENCH_HOTPATH_SCHEMA: u32 = 3;
 
 fn bench_scale() -> f32 {
     crate::knobs::bench_scale()
@@ -325,6 +332,147 @@ fn bench_prefill_mock(scale: f32) -> Result<Value> {
     ]))
 }
 
+/// A realistically shaped [`crate::eval::AdapterDelta`] over the
+/// synthetic leaves: rank-8 LoRA pairs on the square projection leaves,
+/// ~1% SDT sparse offsets on the rest — the paper's recipe, sized for
+/// the resident-KB comparison against a whole-model merged copy.
+fn synth_adapter_delta(leaves: &[Tensor]) -> crate::eval::AdapterDelta {
+    use crate::eval::{AdapterDelta, LoraOp, SparseOffset};
+    let rank = 8usize;
+    let mut lora = Vec::new();
+    let mut sparse = Vec::new();
+    for (i, t) in leaves.iter().enumerate() {
+        if t.shape.len() == 2 && t.shape[0] == t.shape[1] {
+            lora.push(LoraOp {
+                target: format!("leaf{i}"),
+                a: Tensor::zeros(&[t.shape[0], rank]),
+                b: Tensor::zeros(&[rank, t.shape[1]]),
+            });
+        } else {
+            let n = (t.numel() / 100).max(1);
+            sparse.push(SparseOffset {
+                param: format!("leaf{i}"),
+                idx: (0..n).map(|j| j * 100).collect(),
+                val: vec![0.0; n],
+            });
+        }
+    }
+    AdapterDelta {
+        meta: crate::manifest::PeftMeta {
+            method: crate::suite::PeftMethod::Sdt,
+            rank,
+            alpha: rank,
+            targets: Vec::new(),
+            n_tokens: 0,
+        },
+        lora,
+        sparse,
+        h0: BTreeMap::new(),
+    }
+}
+
+/// Schema 3's `adapters` section: unmerged batched multi-adapter decode
+/// on the host mocks. One [`crate::eval::testing::AccumAdapters`] batch
+/// carries four distinct per-row deltas in ONE dispatch per step; the
+/// merged baseline decodes the same four adapters as four dedicated
+/// single-row lanes (four dispatches per step). The dispatch counts are
+/// the durable telemetry; the resident-KB pair quantifies why the
+/// registry keeps raw deltas instead of whole-model merged copies.
+fn bench_adapters_mock(scale: f32) -> Result<Value> {
+    use std::sync::atomic::Ordering;
+
+    use crate::eval::testing::{mock_delta, Accum, AccumAdapters};
+    use crate::eval::{AdapterRow, AdapterStepDecode};
+
+    let offs = [3.0f32, 5.0, 7.0, 11.0];
+    let b = offs.len();
+    let steps = ((96.0 * scale).round() as usize).max(16);
+    let iters = ((10.0 * scale).round() as usize).max(3);
+    let tok = |s: usize, r: usize| ((s * 7 + r * 13 + 3) % 251) as i32;
+
+    // unmerged: one shared batch, per-row deltas, one dispatch per step
+    let shared = AccumAdapters::new(b);
+    let rows: Vec<AdapterRow> = offs.iter().map(|&o| Some(mock_delta(o))).collect();
+    let run_shared = || -> Result<()> {
+        let mut state = shared.new_state(None);
+        let mut toks = IntTensor::from_vec(&[b], vec![0i32; b]);
+        for s in 0..steps {
+            for r in 0..b {
+                toks.data[r] = tok(s, r);
+            }
+            shared.step_rows(&toks, &mut state, &rows)?;
+        }
+        Ok(())
+    };
+    run_shared()?; // count-establishing run
+    let mut err = None;
+    let shared_st = time("unmerged", 0, iters, || {
+        if let Err(e) = run_shared() {
+            err = Some(e);
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let runs = (iters + 1) as u64;
+    let shared_d = shared.steps.load(Ordering::Relaxed) / runs;
+
+    // merged baseline: one dedicated single-row lane per adapter
+    let merged: Vec<Accum> = offs.iter().map(|&o| Accum::with_off(1, &[], o)).collect();
+    let run_merged = || -> Result<()> {
+        for (r, m) in merged.iter().enumerate() {
+            let mut state = m.new_state(None);
+            let mut t1 = IntTensor::from_vec(&[1], vec![0i32]);
+            for s in 0..steps {
+                t1.data[0] = tok(s, r);
+                m.step(&t1, &mut state)?;
+            }
+        }
+        Ok(())
+    };
+    run_merged()?;
+    let mut err = None;
+    let merged_st = time("merged", 0, iters, || {
+        if let Err(e) = run_merged() {
+            err = Some(e);
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let merged_d: u64 = merged
+        .iter()
+        .map(|m| m.steps.load(Ordering::Relaxed))
+        .sum::<u64>()
+        / runs;
+
+    // residency: raw delta vs whole-model merged copy, on the same
+    // synthetic Mamba shapes the optimizer scenarios use
+    let mut rng = Rng::new(0x5D7);
+    let leaves = synth_leaves(scale, &mut rng);
+    let full_copy_bytes =
+        leaves.iter().map(Tensor::numel).sum::<usize>() * std::mem::size_of::<f32>();
+    let delta_bytes = synth_adapter_delta(&leaves).resident_bytes();
+
+    let tokens = (b * steps) as f64;
+    Ok(json::obj(vec![
+        ("requests", json::num(b as f64)),
+        ("steps", json::num(steps as f64)),
+        ("adapters_per_batch", json::num(b as f64)),
+        ("dispatches_unmerged", json::num(shared_d as f64)),
+        ("dispatches_merged", json::num(merged_d as f64)),
+        ("tok_per_s_unmerged", json::num(tokens / shared_st.mean_s.max(1e-12))),
+        ("tok_per_s_merged", json::num(tokens / merged_st.mean_s.max(1e-12))),
+        ("speedup", json::num(merged_st.mean_s / shared_st.mean_s.max(1e-12))),
+        ("resident_kb_per_adapter", json::num(delta_bytes as f64 / 1024.0)),
+        ("resident_kb_full_copy", json::num(full_copy_bytes as f64 / 1024.0)),
+        (
+            "residency_ratio",
+            json::num(full_copy_bytes as f64 / (delta_bytes as f64).max(1.0)),
+        ),
+    ]))
+}
+
 /// The `prefill` section's artifact half: the same comparison through the
 /// real prefill executables (None when the manifest has no prefill
 /// entries — pre-v2 artifacts).
@@ -449,6 +597,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
     let mut train_val = None;
     let mut decode_val = None;
     let mut prefill_fields = vec![("mock", bench_prefill_mock(scale)?)];
+    let adapters_val = bench_adapters_mock(scale)?;
     if crate::artifacts_dir().join("manifest.json").exists() {
         let engine = Engine::cpu()?;
         let manifest = Manifest::load(crate::artifacts_dir())?;
@@ -486,18 +635,32 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
             get("tok_per_s_stepwise"),
         );
     }
+    {
+        let get = |k: &str| adapters_val.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        println!(
+            "adapters (mock): {:.0}/batch, {:.0} vs {:.0} dispatches \
+             (unmerged vs merged lanes), {:.1} vs {:.1} KB resident/adapter",
+            get("adapters_per_batch"),
+            get("dispatches_unmerged"),
+            get("dispatches_merged"),
+            get("resident_kb_per_adapter"),
+            get("resident_kb_full_copy"),
+        );
+    }
 
     let mock_obj = Value::Obj(
         mock_fields.into_iter().collect::<BTreeMap<String, Value>>(),
     );
     let mut root = vec![
-        // schema 2: adds the `prefill` section (§Perf L5)
+        // schema 3: adds the `adapters` section (unmerged multi-adapter
+        // decode); schema 2 added `prefill` (§Perf L5)
         ("schema", json::num(BENCH_HOTPATH_SCHEMA as f64)),
         ("scale", json::num(scale as f64)),
         ("mode", json::s(mode)),
         ("workers", json::num(workers as f64)),
         ("optimizer_mock", mock_obj),
         ("prefill", json::obj(prefill_fields)),
+        ("adapters", adapters_val),
         ("host_overhead_reduction", json::num(headline)),
     ];
     if let Some(tv) = train_val {
@@ -542,6 +705,24 @@ mod tests {
         );
         assert!(get("tok_per_s_chunked") > 0.0);
         assert!(get("tok_per_s_stepwise") > 0.0);
+    }
+
+    #[test]
+    fn adapters_mock_section_accounting() {
+        let v = bench_adapters_mock(0.1).unwrap();
+        let get = |k: &str| v.get(k).and_then(Value::as_f64).unwrap();
+        // one dispatch per step for the whole mixed batch, vs one per
+        // adapter per step on dedicated merged lanes
+        assert_eq!(get("dispatches_unmerged"), get("steps"));
+        assert_eq!(
+            get("dispatches_merged"),
+            get("adapters_per_batch") * get("dispatches_unmerged"),
+        );
+        assert!(get("tok_per_s_unmerged") > 0.0);
+        assert!(get("tok_per_s_merged") > 0.0);
+        // a raw delta must be materially smaller than a merged copy
+        assert!(get("residency_ratio") > 2.0, "{}", get("residency_ratio"));
+        assert!(get("resident_kb_per_adapter") < get("resident_kb_full_copy"));
     }
 
     #[test]

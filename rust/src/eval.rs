@@ -34,8 +34,21 @@
 //! beam search prefills ONE row and broadcasts its state
 //! ([`DecodeState::broadcast_row`]) instead of scanning the same prompt
 //! across every row.
+//!
+//! Unmerged multi-adapter decode: a single continuous batch can mix
+//! adapters. An adapter is held as its raw [`AdapterDelta`] (LoRA factors,
+//! SDT sparse offsets, h0 seeds) instead of a merged whole-model copy;
+//! [`AdapterStepDecode::step_rows`] advances the batch with a per-row
+//! adapter assignment, either through the compiled `decode_adapters`
+//! artifact (one base dispatch + per-row delta operands) or through a
+//! host-side fallback that groups rows by adapter and replays the exact
+//! merged path — byte-identical to per-adapter merged cores, which is what
+//! lets the serving scheduler collapse per-adapter lanes into one shared
+//! batch. [`PinnedAdapter`] adapts the shared core back to a plain
+//! single-adapter [`StepDecode`] for beam search.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, Weak};
 
 use crate::error::{Context, Result};
 
@@ -44,7 +57,7 @@ use crate::xla;
 use crate::data::tasks::spider_table;
 use crate::data::words_to_ids;
 use crate::data::{make_batch, Dataset, Example, BOS, PAD};
-use crate::manifest::{Manifest, Variant};
+use crate::manifest::{Manifest, OperandDtype, OperandMeta, PeftMeta, Variant};
 use crate::metrics;
 use crate::runtime::{Engine, Executable};
 use crate::suite::Metric;
@@ -413,6 +426,155 @@ pub fn chunk_prefill_cover(pf: &dyn ChunkPrefill, b: usize,
     Ok((pos, last))
 }
 
+/// One unmerged low-rank update against a named base weight:
+/// `W_target += scale · a · b` (scale from the owning delta's
+/// [`PeftMeta`], exactly as [`crate::peft::merge_lora`] applies it).
+pub struct LoraOp {
+    /// Base-weight key the factors target (e.g. `layers.0.Win_x`).
+    pub target: String,
+    /// Left factor, `(d_in, r)`.
+    pub a: Tensor,
+    /// Right factor, `(r, d_out)`.
+    pub b: Tensor,
+}
+
+/// Trained values replacing a sparse index set of one base parameter
+/// (SDT-style ~1% masks, BitFit-ish scalar tweaks). Stores the trained
+/// VALUES, not additive offsets: replacement reproduces the merged
+/// parameter map bit-for-bit, where `base + (trained − base)` would round.
+pub struct SparseOffset {
+    /// Base-parameter key the offsets target.
+    pub param: String,
+    /// Flat indices into the parameter's data (strictly within bounds).
+    pub idx: Vec<usize>,
+    /// Trained replacement values, parallel to `idx`.
+    pub val: Vec<f32>,
+}
+
+/// An adapter held unmerged: everything that distinguishes a fine-tuned
+/// variant from the shared base model, in KBs instead of a whole-model
+/// copy. This is what the serving registry keeps resident per adapter and
+/// what [`AdapterStepDecode::step_rows`] binds per batch row.
+pub struct AdapterDelta {
+    /// PEFT description (supplies the LoRA merge scale `alpha / rank`).
+    pub meta: PeftMeta,
+    /// Low-rank factor pairs, one per adapted weight.
+    pub lora: Vec<LoraOp>,
+    /// Sparse trained-value replacements, one per adapted parameter.
+    pub sparse: Vec<SparseOffset>,
+    /// Trained initial SSM states (`layers.{i}.h0`), if any.
+    pub h0: BTreeMap<String, Tensor>,
+}
+
+impl AdapterDelta {
+    /// Bytes this delta keeps resident — the registry's memory accounting.
+    /// Scales with rank × adapted weights + sparse nnz + h0, not with the
+    /// base model.
+    pub fn resident_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let mut n = 0usize;
+        for op in &self.lora {
+            n += (op.a.numel() + op.b.numel()) * f;
+        }
+        for s in &self.sparse {
+            n += s.idx.len() * std::mem::size_of::<usize>() + s.val.len() * f;
+        }
+        for t in self.h0.values() {
+            n += t.numel() * f;
+        }
+        n
+    }
+
+    /// Merge this delta into a clone of `base`, reproducing the adapter's
+    /// merged parameter map bit-for-bit: sparse entries REPLACE (they hold
+    /// trained values), LoRA factors go through the exact same
+    /// [`crate::peft::merge_lora`] the merged path uses, and h0 keys ride
+    /// along for initial-state seeding.
+    pub fn apply(&self, base: &BTreeMap<String, Tensor>)
+        -> Result<BTreeMap<String, Tensor>> {
+        let mut m = base.clone();
+        for s in &self.sparse {
+            crate::ensure!(s.idx.len() == s.val.len(),
+                           "sparse offset for {} has {} indices but {} values",
+                           s.param, s.idx.len(), s.val.len());
+            let t = m.get_mut(&s.param).with_context(|| {
+                format!("sparse offset targets unknown param {}", s.param)
+            })?;
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                let slot = t.data.get_mut(i).with_context(|| {
+                    format!("sparse index {i} out of bounds for {}", s.param)
+                })?;
+                *slot = v;
+            }
+        }
+        for op in &self.lora {
+            crate::ensure!(m.contains_key(&op.target),
+                           "lora target {} not in base params", op.target);
+            m.insert(format!("{}.lora_a", op.target), op.a.clone());
+            m.insert(format!("{}.lora_b", op.target), op.b.clone());
+        }
+        crate::peft::merge_lora(&mut m, &self.meta);
+        for (k, v) in &self.h0 {
+            m.insert(k.clone(), v.clone());
+        }
+        Ok(m)
+    }
+}
+
+/// Per-row adapter assignment of an unmerged batched step: `None` decodes
+/// the unmodified base, `Some(delta)` applies that adapter's deltas to the
+/// row. The `Arc` identity doubles as the row-grouping / literal-cache key.
+pub type AdapterRow = Option<Arc<AdapterDelta>>;
+
+/// A stepwise decode model that can mix adapters within one batch: the
+/// serving scheduler's shared-lane interface. `step_rows` must be
+/// byte-identical, row for row, to stepping each row through a core bound
+/// to that row's merged parameters — the equivalence harness in this
+/// module and `serve::scheduler` pins exactly that.
+pub trait AdapterStepDecode: StepDecode {
+    /// Advance one token with a per-row adapter assignment (`rows.len()`
+    /// must equal `arch_b()`), advancing `state` in place.
+    fn step_rows(&self, tokens: &IntTensor, state: &mut DecodeState,
+                 rows: &[AdapterRow]) -> Result<Tensor>;
+}
+
+/// Adapter-pinned view of a shared unmerged model: a [`StepDecode`] whose
+/// every row decodes with one fixed adapter. Lets single-adapter consumers
+/// (beam search, offline eval) reuse the shared batched core without a
+/// merged whole-model copy.
+///
+/// No [`ChunkPrefill`] passthrough: adapter deltas change the prefill math
+/// too, and the prefill artifacts take no delta operands — prompts go
+/// stepwise through `step_rows`, which keeps the pinned path exactly as
+/// correct (if slower on long prompts) as a merged core.
+pub struct PinnedAdapter {
+    model: Arc<dyn AdapterStepDecode>,
+    delta: AdapterRow,
+}
+
+impl PinnedAdapter {
+    /// Pin `delta` (or the plain base, when `None`) across every row of
+    /// `model`'s batch.
+    pub fn new(model: Arc<dyn AdapterStepDecode>, delta: AdapterRow) -> Self {
+        PinnedAdapter { model, delta }
+    }
+}
+
+impl StepDecode for PinnedAdapter {
+    fn arch_b(&self) -> usize {
+        self.model.arch_b()
+    }
+
+    fn dims(&self) -> StateDims {
+        self.model.dims()
+    }
+
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        let rows: Vec<AdapterRow> = vec![self.delta.clone(); self.model.arch_b()];
+        self.model.step_rows(tokens, state, &rows)
+    }
+}
+
 /// A decode-ready model: the compiled stepwise `decode` executable bound to
 /// one merged parameter set. This is the unit the adapter registry caches —
 /// same executable, different parameters per fine-tuned variant. Parameter
@@ -434,8 +596,45 @@ pub struct DecodeCore {
     /// Executable dispatches issued (decode steps + prefill chunks) —
     /// telemetry for `bench hotpath` and the dispatch-count tests.
     dispatches: std::sync::atomic::AtomicU64,
+    /// Unmerged multi-adapter support ([`DecodeCore::new_unmerged`]);
+    /// `None` for plain merged cores, whose `step_rows` errors.
+    unmerged: Option<UnmergedCore>,
     arch_b: usize,
     dims: StateDims,
+}
+
+/// The compiled `decode_adapters` executable plus the operand layout the
+/// manifest recorded for it (per-row LoRA factor slots zero-padded to
+/// `rank`, per-row sparse-offset slots of capacity `k`).
+struct AdapterArtifact {
+    exe: Executable,
+    rank: usize,
+    k: usize,
+    operands: Vec<OperandMeta>,
+}
+
+/// Fallback merged-literal cache entries kept per unmerged core: enough to
+/// cover the handful of adapters resident in one shared batch without
+/// re-merging every step, small enough that memory stays bounded by a few
+/// whole-model literal sets even under adapter churn.
+const FALLBACK_CACHE_CAP: usize = 4;
+
+/// State of the unmerged multi-adapter path: the shared base parameter map
+/// (for host-side fallback merging), the decode argument order (to
+/// serialize merged fallbacks), the optional compiled `decode_adapters`
+/// artifact, and an MRU cache of fallback parameter literals keyed by
+/// adapter identity.
+struct UnmergedCore {
+    base: Arc<BTreeMap<String, Tensor>>,
+    /// Decode-executable parameter argument order (train then frozen).
+    order: Vec<String>,
+    artifact: Option<AdapterArtifact>,
+    /// `Weak` keys make the cache ABA-safe: an entry resolves only while
+    /// its delta is alive AND the upgraded `Arc` is pointer-equal, and the
+    /// weak count keeps the allocation itself alive — so a dead delta's
+    /// address cannot be reused by a new one while its entry remains.
+    /// MRU-ordered, last = most recent.
+    cache: Mutex<Vec<(Weak<AdapterDelta>, Arc<Vec<xla::Literal>>)>>,
 }
 
 impl DecodeCore {
@@ -486,9 +685,55 @@ impl DecodeCore {
             param_lits,
             params,
             dispatches: std::sync::atomic::AtomicU64::new(0),
+            unmerged: None,
             arch_b: v.batch_b,
             dims: StateDims::of(v),
         })
+    }
+
+    /// Like [`DecodeCore::new`], but the core additionally implements
+    /// [`AdapterStepDecode`]: one core bound to the shared BASE parameters
+    /// serves every adapter, taking per-row [`AdapterDelta`]s at step time.
+    /// When the manifest carries a `decode_adapters` artifact it is used
+    /// for fitting deltas (one dispatch per step regardless of adapter
+    /// mix); otherwise — and for deltas exceeding the artifact's rank/k
+    /// slots — rows are grouped by adapter and dispatched through the
+    /// plain decode executable with host-merged parameters, byte-identical
+    /// to per-adapter merged cores.
+    pub fn new_unmerged(engine: &Engine, manifest: &Manifest, decode_variant: &str,
+                        base: Arc<BTreeMap<String, Tensor>>) -> Result<Self> {
+        let mut core = Self::build(engine, manifest, decode_variant, &base, false)?;
+        let v: &Variant = manifest.variant(decode_variant)?;
+        let order: Vec<String> = v
+            .train_params
+            .iter()
+            .chain(v.frozen_params.iter())
+            .map(|m| m.name.clone())
+            .collect();
+        let artifact = match (&v.decode_adapters_file, &v.adapter_operands) {
+            (Some(f), Some(ops)) => Some(AdapterArtifact {
+                exe: engine.load(manifest.hlo_path(f))?,
+                rank: ops.rank,
+                k: ops.k,
+                operands: ops.operands.clone(),
+            }),
+            _ => None,
+        };
+        core.unmerged = Some(UnmergedCore {
+            base,
+            order,
+            artifact,
+            cache: Mutex::new(Vec::new()),
+        });
+        Ok(core)
+    }
+
+    /// Whether the compiled `decode_adapters` artifact is loaded (vs the
+    /// host-side grouped fallback only).
+    pub fn has_adapter_artifact(&self) -> bool {
+        self.unmerged
+            .as_ref()
+            .is_some_and(|u| u.artifact.is_some())
     }
 
     /// Chunk widths of the loaded prefill artifacts (empty = none).
@@ -514,15 +759,18 @@ impl DecodeCore {
 
     fn step_inner(&self, tokens: &IntTensor, state: &mut DecodeState,
                   resident_params: bool) -> Result<Tensor> {
-        self.run_exec(&self.decode, tokens, state, resident_params)
+        self.run_exec(&self.decode, tokens, state, resident_params, &[])
     }
 
-    /// Shared execute path for the decode and prefill artifacts: both take
-    /// `(params..., tokens, conv, ssm)` and return `(logits, conv', ssm')`,
-    /// and both feed the output state literals straight back as the next
-    /// dispatch's inputs (§Perf L4/L5).
+    /// Shared execute path for the decode, prefill, and decode_adapters
+    /// artifacts: all take `(params..., tokens, conv, ssm, extra...)` and
+    /// return `(logits, conv', ssm')`, and all feed the output state
+    /// literals straight back as the next dispatch's inputs (§Perf L4/L5).
+    /// `extra` carries the per-row adapter operands of the unmerged path
+    /// (empty for decode/prefill).
     fn run_exec(&self, exe: &Executable, tokens: &IntTensor,
-                state: &mut DecodeState, resident_params: bool)
+                state: &mut DecodeState, resident_params: bool,
+                extra: &[xla::Literal])
         -> Result<Tensor> {
         self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let tok_lit = crate::runtime::literal_i32(tokens)?;
@@ -539,7 +787,7 @@ impl DecodeCore {
         let mut outs = {
             let (conv_lit, ssm_lit) = state.exec_literals()?;
             let mut refs: Vec<&xla::Literal> =
-                Vec::with_capacity(self.param_lits.len() + 3);
+                Vec::with_capacity(self.param_lits.len() + 3 + extra.len());
             if resident_params {
                 refs.extend(self.param_lits.iter());
             } else {
@@ -548,6 +796,7 @@ impl DecodeCore {
             refs.push(&tok_lit);
             refs.push(conv_lit);
             refs.push(ssm_lit);
+            refs.extend(extra.iter());
             exe.run_refs_literals(&refs)?
         };
         let ssm_out = outs.pop().context("decode returned no ssm state")?;
@@ -556,6 +805,262 @@ impl DecodeCore {
         let logits = crate::runtime::tensor_from_literal(&logits)?;
         state.install(crate::runtime::StatePair { conv: conv_out, ssm: ssm_out });
         Ok(logits)
+    }
+
+    /// Whether `delta` fits the artifact's per-row operand slots: every
+    /// LoRA pair has a slot of its target's shape with rank ≤ the baked
+    /// slot rank, and every sparse offset has a slot with nnz ≤ k. Deltas
+    /// that don't fit (oversized rank, non-slot target, dense-ish sparse
+    /// set) take the grouped host fallback instead.
+    fn delta_fits(delta: &AdapterDelta, art: &AdapterArtifact) -> bool {
+        let find = |name: &str| art.operands.iter().find(|o| o.name == name);
+        for op in &delta.lora {
+            if op.a.shape.len() != 2 || op.b.shape.len() != 2 {
+                return false;
+            }
+            let (Some(ma), Some(mb)) = (find(&format!("{}.lora_a", op.target)),
+                                        find(&format!("{}.lora_b", op.target)))
+            else {
+                return false;
+            };
+            let r = op.a.shape[1];
+            if op.a.shape[0] != ma.shape[1] || r > art.rank
+                || op.b.shape[0] != r || op.b.shape[1] != mb.shape[2] {
+                return false;
+            }
+        }
+        for s in &delta.sparse {
+            let Some(mi) = find(&format!("{}.sdt_idx", s.param)) else {
+                return false;
+            };
+            if s.idx.len() > mi.shape[1].min(art.k) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Unmerged step through the `decode_adapters` artifact: ONE dispatch
+    /// advances the whole mixed batch — per-row LoRA factors zero-padded
+    /// to the slot rank, per-row sparse offsets as additive
+    /// `(index, trained − base)` pairs (unused slots index 0 with value 0,
+    /// a no-op add).
+    fn step_rows_artifact(&self, un: &UnmergedCore, art: &AdapterArtifact,
+                          tokens: &IntTensor, state: &mut DecodeState,
+                          rows: &[AdapterRow]) -> Result<Tensor> {
+        let b = self.arch_b;
+        let mut extra: Vec<xla::Literal> = Vec::with_capacity(art.operands.len());
+        for meta in &art.operands {
+            crate::ensure!(meta.shape.first() == Some(&b),
+                           "adapter operand {} batch dim {:?} != arch B {b}",
+                           meta.name, meta.shape.first());
+            let lit = match meta.dtype {
+                OperandDtype::I32 => {
+                    let mut t = IntTensor::zeros(&meta.shape);
+                    if let Some(param) = meta.name.strip_suffix(".sdt_idx") {
+                        let k = meta.shape[1];
+                        for (r, row) in rows.iter().enumerate() {
+                            let Some(s) = row.as_ref()
+                                .and_then(|d| d.sparse.iter().find(|s| s.param == param))
+                            else { continue };
+                            for (j, &i) in s.idx.iter().enumerate() {
+                                t.data[r * k + j] = i as i32;
+                            }
+                        }
+                    }
+                    crate::runtime::literal_i32(&t)?
+                }
+                OperandDtype::F32 => {
+                    let mut t = Tensor::zeros(&meta.shape);
+                    if meta.name == "scale" {
+                        for (r, row) in rows.iter().enumerate() {
+                            t.data[r] = match row {
+                                Some(d) if d.meta.rank > 0 => {
+                                    d.meta.alpha as f32 / d.meta.rank as f32
+                                }
+                                _ => 1.0,
+                            };
+                        }
+                    } else if let Some(target) = meta.name.strip_suffix(".lora_a") {
+                        let (din, rank) = (meta.shape[1], meta.shape[2]);
+                        for (r, row) in rows.iter().enumerate() {
+                            let Some(op) = row.as_ref()
+                                .and_then(|d| d.lora.iter().find(|o| o.target == target))
+                            else { continue };
+                            let rr = op.a.shape[1];
+                            for i in 0..din {
+                                let at = (r * din + i) * rank;
+                                t.data[at..at + rr]
+                                    .copy_from_slice(&op.a.data[i * rr..(i + 1) * rr]);
+                            }
+                        }
+                    } else if let Some(target) = meta.name.strip_suffix(".lora_b") {
+                        let (rank, dout) = (meta.shape[1], meta.shape[2]);
+                        for (r, row) in rows.iter().enumerate() {
+                            let Some(op) = row.as_ref()
+                                .and_then(|d| d.lora.iter().find(|o| o.target == target))
+                            else { continue };
+                            let rr = op.b.shape[0];
+                            let at = r * rank * dout;
+                            t.data[at..at + rr * dout].copy_from_slice(&op.b.data);
+                        }
+                    } else if let Some(param) = meta.name.strip_suffix(".sdt_val") {
+                        let k = meta.shape[1];
+                        let base_t = un.base.get(param).with_context(|| {
+                            format!("adapter operand {} has no base param", meta.name)
+                        })?;
+                        for (r, row) in rows.iter().enumerate() {
+                            let Some(s) = row.as_ref()
+                                .and_then(|d| d.sparse.iter().find(|s| s.param == param))
+                            else { continue };
+                            for (j, (&i, &v)) in s.idx.iter().zip(&s.val).enumerate() {
+                                let bv = *base_t.data.get(i).with_context(|| {
+                                    format!("sparse index {i} out of bounds for {param}")
+                                })?;
+                                t.data[r * k + j] = v - bv;
+                            }
+                        }
+                    }
+                    crate::runtime::literal_f32(&t)?
+                }
+            };
+            extra.push(lit);
+        }
+        self.run_exec(&art.exe, tokens, state, true, &extra)
+    }
+
+    /// Serialized merged-parameter literals for one adapter delta, through
+    /// the MRU fallback cache (keyed by `Arc` identity via `Weak` — see
+    /// [`UnmergedCore::cache`]). A miss merges the delta against the base
+    /// map and serializes in decode argument order, outside the lock.
+    fn group_literals(&self, un: &UnmergedCore, delta: &Arc<AdapterDelta>)
+        -> Result<Arc<Vec<xla::Literal>>> {
+        {
+            let mut cache = un.cache.lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Some(pos) = cache.iter().position(|(w, _)| {
+                w.upgrade().is_some_and(|a| Arc::ptr_eq(&a, delta))
+            }) {
+                let entry = cache.remove(pos);
+                let lits = entry.1.clone();
+                cache.push(entry); // most-recent to the back
+                return Ok(lits);
+            }
+            cache.retain(|(w, _)| w.strong_count() > 0);
+        }
+        let merged = delta.apply(&un.base)?;
+        let mut lits = Vec::with_capacity(un.order.len());
+        for name in &un.order {
+            let t = merged.get(name).with_context(|| {
+                format!("merged adapter params missing {name} for decode")
+            })?;
+            lits.push(crate::runtime::literal_f32(t)?);
+        }
+        let lits = Arc::new(lits);
+        let mut cache = un.cache.lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if cache.len() >= FALLBACK_CACHE_CAP {
+            cache.remove(0); // least-recent at the front
+        }
+        cache.push((Arc::downgrade(delta), lits.clone()));
+        Ok(lits)
+    }
+
+    /// Unmerged step without (or past) the artifact: group rows by adapter
+    /// identity and dispatch the plain decode executable once per group
+    /// with that group's host-merged parameters. Batch rows are computed
+    /// independently by the executable, so each row's slice of its group's
+    /// output is exactly what a dedicated merged core would produce —
+    /// byte-identical, which is what the equivalence harness pins.
+    fn step_rows_fallback(&self, un: &UnmergedCore, tokens: &IntTensor,
+                          state: &mut DecodeState, rows: &[AdapterRow])
+        -> Result<Tensor> {
+        let b = self.arch_b;
+        let mut groups: Vec<(AdapterRow, Vec<usize>)> = Vec::new();
+        for (r, row) in rows.iter().enumerate() {
+            let found = groups.iter_mut().find(|(g, _)| match (g, row) {
+                (None, None) => true,
+                (Some(a), Some(bb)) => Arc::ptr_eq(a, bb),
+                _ => false,
+            });
+            match found {
+                Some((_, idxs)) => idxs.push(r),
+                None => groups.push((row.clone(), vec![r])),
+            }
+        }
+        let tok_lit = crate::runtime::literal_i32(tokens)?;
+        let mut parts: Vec<(&Vec<usize>, Tensor, Tensor, Tensor)> =
+            Vec::with_capacity(groups.len());
+        {
+            let (conv_lit, ssm_lit) = state.exec_literals()?;
+            for (delta, idxs) in &groups {
+                let lits = match delta {
+                    Some(d) => Some(self.group_literals(un, d)?),
+                    None => None,
+                };
+                self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let mut refs: Vec<&xla::Literal> =
+                    Vec::with_capacity(self.param_lits.len() + 3);
+                match &lits {
+                    Some(l) => refs.extend(l.iter()),
+                    None => refs.extend(self.param_lits.iter()),
+                }
+                refs.push(&tok_lit);
+                refs.push(conv_lit);
+                refs.push(ssm_lit);
+                let mut outs = self.decode.run_refs_literals(&refs)?;
+                let ssm_out = outs.pop().context("decode returned no ssm state")?;
+                let conv_out = outs.pop().context("decode returned no conv state")?;
+                let lg = outs.pop().context("decode returned no logits")?;
+                parts.push((idxs,
+                            crate::runtime::tensor_from_literal(&lg)?,
+                            crate::runtime::tensor_from_literal(&conv_out)?,
+                            crate::runtime::tensor_from_literal(&ssm_out)?));
+            }
+        }
+        let dims = self.dims;
+        let v = parts.first().map(|(_, lg, _, _)| lg.shape[1])
+            .context("unmerged step produced no groups")?;
+        let (cper, sper) = (dims.conv_per_row(), dims.ssm_per_row());
+        let mut logits = Tensor::zeros(&[b, v]);
+        // every row belongs to exactly one group, so overwriting all rows
+        // leaves the state fully post-step (the pre-step mirror synced by
+        // host_mut is a scaffold, not a leak)
+        let (conv, ssm) = state.host_mut()?;
+        for (idxs, glog, gconv, gssm) in &parts {
+            for &r in idxs.iter() {
+                logits.data[r * v..(r + 1) * v]
+                    .copy_from_slice(&glog.data[r * v..(r + 1) * v]);
+                for layer in 0..dims.n_layer {
+                    let c = (layer * b + r) * cper;
+                    conv.data[c..c + cper].copy_from_slice(&gconv.data[c..c + cper]);
+                    let s = (layer * b + r) * sper;
+                    ssm.data[s..s + sper].copy_from_slice(&gssm.data[s..s + sper]);
+                }
+            }
+        }
+        Ok(logits)
+    }
+}
+
+impl AdapterStepDecode for DecodeCore {
+    fn step_rows(&self, tokens: &IntTensor, state: &mut DecodeState,
+                 rows: &[AdapterRow]) -> Result<Tensor> {
+        crate::ensure!(rows.len() == self.arch_b,
+                       "step_rows needs one adapter slot per batch row ({} != {})",
+                       rows.len(), self.arch_b);
+        let un = self.unmerged.as_ref()
+            .context("DecodeCore was not built with new_unmerged")?;
+        if rows.iter().all(Option::is_none) {
+            // pure-base batch: identical to the plain resident step
+            return self.step_inner(tokens, state, true);
+        }
+        if let Some(art) = &un.artifact {
+            if rows.iter().flatten().all(|d| Self::delta_fits(d, art)) {
+                return self.step_rows_artifact(un, art, tokens, state, rows);
+            }
+        }
+        self.step_rows_fallback(un, tokens, state, rows)
     }
 }
 
@@ -573,7 +1078,7 @@ impl ChunkPrefill for DecodeCore {
             .find(|&&(pw, _)| pw == w)
             .map(|(_, e)| e)
             .with_context(|| format!("no prefill artifact for chunk width {w}"))?;
-        self.run_exec(exe, tokens, state, true)
+        self.run_exec(exe, tokens, state, true, &[])
     }
 }
 
@@ -1027,15 +1532,24 @@ pub(crate) mod testing {
         pub(crate) b: usize,
         /// Advertised chunk widths (ascending); empty = stepwise-only.
         pub(crate) widths: Vec<usize>,
+        /// Model-wide hash offset: stands in for "merged adapter weights"
+        /// — an `Accum::with_off(_, _, o)` is the merged counterpart of an
+        /// [`AccumAdapters`] row whose delta carries `o`.
+        pub(crate) off: f32,
         pub(crate) steps: std::sync::atomic::AtomicU64,
         pub(crate) chunks: std::sync::atomic::AtomicU64,
     }
 
     impl Accum {
         pub(crate) fn new(b: usize, widths: &[usize]) -> Accum {
+            Self::with_off(b, widths, 0.0)
+        }
+
+        pub(crate) fn with_off(b: usize, widths: &[usize], off: f32) -> Accum {
             Accum {
                 b,
                 widths: widths.to_vec(),
+                off,
                 steps: std::sync::atomic::AtomicU64::new(0),
                 chunks: std::sync::atomic::AtomicU64::new(0),
             }
@@ -1050,10 +1564,12 @@ pub(crate) mod testing {
         }
 
         /// One token of the rolling hash (all values stay < 2^13, so every
-        /// f32 op here is exact — chunked and stepwise agree bitwise).
-        fn advance(a: f32, prev: f32, tok: i32) -> (f32, f32) {
+        /// f32 op here is exact — chunked and stepwise agree bitwise, and
+        /// so do the merged (`off` baked in) and unmerged (`off` from a
+        /// row's delta) paths).
+        fn advance(a: f32, prev: f32, tok: i32, off: f32) -> (f32, f32) {
             let v = Self::val(tok);
-            ((a * 31.0 + v + prev) % 257.0, v)
+            ((a * 31.0 + v + prev + off) % 257.0, v)
         }
 
         fn logits_from(&self, hashes: &[f32]) -> Tensor {
@@ -1077,7 +1593,8 @@ pub(crate) mod testing {
             let (conv, ssm) = state.host_mut()?;
             let mut hashes = vec![0.0f32; self.b];
             for r in 0..self.b {
-                let (a, v) = Self::advance(ssm.data[r], conv.data[r], tokens.data[r]);
+                let (a, v) = Self::advance(ssm.data[r], conv.data[r],
+                                           tokens.data[r], self.off);
                 ssm.data[r] = a;
                 conv.data[r] = v;
                 hashes[r] = a;
@@ -1103,13 +1620,101 @@ pub(crate) mod testing {
             for r in 0..self.b {
                 let (mut a, mut prev) = (ssm.data[r], conv.data[r]);
                 for i in 0..w {
-                    (a, prev) = Self::advance(a, prev, tokens.data[r * w + i]);
+                    (a, prev) = Self::advance(a, prev, tokens.data[r * w + i],
+                                              self.off);
                 }
                 ssm.data[r] = a;
                 conv.data[r] = prev;
                 hashes[r] = a;
             }
             Ok(self.logits_from(&hashes))
+        }
+    }
+
+    /// A mock [`AdapterDelta`] whose whole payload is one sparse value:
+    /// [`AccumAdapters`] reads it as the row's hash offset, so `off`
+    /// plays the role "which adapter" in the equivalence tests.
+    pub(crate) fn mock_delta(off: f32) -> Arc<AdapterDelta> {
+        Arc::new(AdapterDelta {
+            meta: PeftMeta {
+                method: crate::suite::PeftMethod::Sdt,
+                rank: 0,
+                alpha: 0,
+                targets: Vec::new(),
+                n_tokens: 0,
+            },
+            lora: Vec::new(),
+            sparse: vec![SparseOffset {
+                param: "off".to_string(),
+                idx: vec![0],
+                val: vec![off],
+            }],
+            h0: BTreeMap::new(),
+        })
+    }
+
+    /// Unmerged-adapter mock: the same rolling hash as [`Accum`], but each
+    /// row's offset comes from that row's [`AdapterDelta`] (its first
+    /// sparse value; `None` rows run the plain base, offset 0). A mixed
+    /// batch through [`AdapterStepDecode::step_rows`] must therefore be
+    /// byte-identical, row for row, to dedicated [`Accum::with_off`]
+    /// models — the mock mirror of "per-row deltas == per-row merged
+    /// weights". Counts batched steps for the dispatch-count pins.
+    pub(crate) struct AccumAdapters {
+        pub(crate) b: usize,
+        pub(crate) steps: std::sync::atomic::AtomicU64,
+    }
+
+    impl AccumAdapters {
+        pub(crate) fn new(b: usize) -> AccumAdapters {
+            AccumAdapters { b, steps: std::sync::atomic::AtomicU64::new(0) }
+        }
+
+        fn row_off(row: &AdapterRow) -> f32 {
+            row.as_ref()
+                .and_then(|d| d.sparse.first())
+                .and_then(|s| s.val.first())
+                .copied()
+                .unwrap_or(0.0)
+        }
+    }
+
+    impl StepDecode for AccumAdapters {
+        fn arch_b(&self) -> usize {
+            self.b
+        }
+        fn dims(&self) -> StateDims {
+            StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 }
+        }
+        fn step(&self, tokens: &IntTensor, state: &mut DecodeState)
+            -> Result<Tensor> {
+            let rows: Vec<AdapterRow> = vec![None; self.b];
+            self.step_rows(tokens, state, &rows)
+        }
+    }
+
+    impl AdapterStepDecode for AccumAdapters {
+        fn step_rows(&self, tokens: &IntTensor, state: &mut DecodeState,
+                     rows: &[AdapterRow]) -> Result<Tensor> {
+            crate::ensure!(rows.len() == self.b,
+                           "step_rows needs {} adapter slots, got {}",
+                           self.b, rows.len());
+            self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let (conv, ssm) = state.host_mut()?;
+            let mut hashes = vec![0.0f32; self.b];
+            for r in 0..self.b {
+                let (a, v) = Accum::advance(ssm.data[r], conv.data[r],
+                                            tokens.data[r],
+                                            Self::row_off(&rows[r]));
+                ssm.data[r] = a;
+                conv.data[r] = v;
+                hashes[r] = a;
+            }
+            let mut logits = Tensor::zeros(&[self.b, 256]);
+            for r in 0..self.b {
+                logits.data[r * 256 + (hashes[r] as usize) % 256] = 10.0;
+            }
+            Ok(logits)
         }
     }
 }
@@ -1334,5 +1939,215 @@ mod tests {
         let (src_conv, src_ssm) = d.init_states(b, Some(&h0));
         d.copy_row(&src_conv, &src_ssm, &mut conv, &mut ssm, b, 1, 0);
         assert_eq!(&ssm.data[per * b..per * b + per], &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn unmerged_mixed_rows_match_solo_models() {
+        use super::testing::{mock_delta, AccumAdapters};
+        // one batch mixing three "adapters" (off 5 / base / off 9): every
+        // row must be byte-identical, step for step, to a dedicated
+        // single-row merged model with that adapter baked in
+        let b = 3;
+        let m = AccumAdapters::new(b);
+        let rows: Vec<AdapterRow> =
+            vec![Some(mock_delta(5.0)), None, Some(mock_delta(9.0))];
+        let solos = [
+            Accum::with_off(1, &[], 5.0),
+            Accum::with_off(1, &[], 0.0),
+            Accum::with_off(1, &[], 9.0),
+        ];
+        let mut state = m.new_state(None);
+        let mut solo_states: Vec<DecodeState> =
+            solos.iter().map(|s| s.new_state(None)).collect();
+        let mut toks = vec![7i32, 11, 13];
+        for step in 0..6 {
+            let t = IntTensor::from_vec(&[b], toks.clone());
+            let lg = m.step_rows(&t, &mut state, &rows).unwrap();
+            let v = lg.shape[1];
+            for r in 0..b {
+                let t1 = IntTensor::from_vec(&[1], vec![toks[r]]);
+                let sl = solos[r].step(&t1, &mut solo_states[r]).unwrap();
+                assert_eq!(bits(&lg.data[r * v..(r + 1) * v]), bits(&sl.data),
+                           "row {r} diverged at step {step}");
+                toks[r] = argmax(&lg.data[r * v..r * v + 256]) as i32;
+            }
+        }
+        // one batched dispatch per step, regardless of the adapter mix
+        assert_eq!(m.steps.load(Ordering::Relaxed), 6);
+        // and a wrong-width row assignment is rejected
+        let t = IntTensor::from_vec(&[b], toks);
+        assert!(m.step_rows(&t, &mut state, &rows[..2]).is_err());
+    }
+
+    #[test]
+    fn pinned_adapter_greedy_matches_merged() {
+        use super::testing::{mock_delta, AccumAdapters};
+        let shared: Arc<dyn AdapterStepDecode> = Arc::new(AccumAdapters::new(2));
+        let pinned = PinnedAdapter::new(shared, Some(mock_delta(4.0)));
+        let merged = Accum::with_off(2, &[], 4.0);
+        let prompts = vec![vec![9u8, 8, 7], vec![1u8, 2]];
+        let want = greedy_decode(&merged, &prompts, 6, 255, None).unwrap();
+        let got = greedy_decode(&pinned, &prompts, 6, 255, None).unwrap();
+        assert_eq!(got, want, "pinned shared core must match a merged core");
+        // pinning the base (None) matches the plain off-0 model too
+        let shared: Arc<dyn AdapterStepDecode> = Arc::new(AccumAdapters::new(2));
+        let base = PinnedAdapter::new(shared, None);
+        let plain = Accum::new(2, &[]);
+        assert_eq!(greedy_decode(&base, &prompts, 6, 255, None).unwrap(),
+                   greedy_decode(&plain, &prompts, 6, 255, None).unwrap());
+    }
+
+    #[test]
+    fn unmerged_random_churn_stays_row_equivalent() {
+        use super::testing::{mock_delta, AccumAdapters};
+        // randomized property: random adapter per row, mid-stream
+        // retirement/admission (row reset + new adapter), per-row logits
+        // bitwise-equal to lockstep single-adapter merged models
+        let b = 4;
+        let m = AccumAdapters::new(b);
+        let offs = [2.0f32, 3.0, 5.0, 7.0];
+        let mut rng = crate::tensor::Rng::new(42);
+        let pick = |rng: &mut crate::tensor::Rng| -> AdapterRow {
+            let i = (rng.uniform() * 5.0) as usize;
+            (i < offs.len()).then(|| mock_delta(offs[i]))
+        };
+        let solo = |row: &AdapterRow| {
+            let off = row.as_ref().map_or(0.0, |d| d.sparse[0].val[0]);
+            Accum::with_off(1, &[], off)
+        };
+        let dims = m.dims();
+        let mut rows: Vec<AdapterRow> = (0..b).map(|_| pick(&mut rng)).collect();
+        let mut state = m.new_state(None);
+        let mut solos: Vec<Accum> = rows.iter().map(solo).collect();
+        let mut solo_states: Vec<DecodeState> =
+            solos.iter().map(|s| s.new_state(None)).collect();
+        let mut toks: Vec<i32> = (0..b as i32).map(|r| r * 37 % 256).collect();
+        let mut churned = 0usize;
+        for step in 0..48 {
+            for r in 0..b {
+                if rng.uniform() < 0.2 {
+                    churned += 1;
+                    rows[r] = pick(&mut rng);
+                    state.reset_row(&dims, b, r, None).unwrap();
+                    solos[r] = solo(&rows[r]);
+                    solo_states[r] = solos[r].new_state(None);
+                    toks[r] = (rng.uniform() * 256.0) as i32 & 255;
+                }
+            }
+            let t = IntTensor::from_vec(&[b], toks.clone());
+            let lg = m.step_rows(&t, &mut state, &rows).unwrap();
+            let v = lg.shape[1];
+            for r in 0..b {
+                let t1 = IntTensor::from_vec(&[1], vec![toks[r]]);
+                let sl = solos[r].step(&t1, &mut solo_states[r]).unwrap();
+                assert_eq!(bits(&lg.data[r * v..(r + 1) * v]), bits(&sl.data),
+                           "row {r} diverged at step {step}");
+                toks[r] = argmax(&lg.data[r * v..r * v + 256]) as i32;
+            }
+        }
+        assert!(churned >= 10, "churn probability too low to exercise resets");
+    }
+
+    #[test]
+    fn adapter_delta_apply_reproduces_merged_map_bitwise() {
+        let mut base = BTreeMap::new();
+        base.insert("w".to_string(),
+                    Tensor::from_vec(&[2, 2], vec![0.1, 0.2, 0.3, 0.4]));
+        base.insert("v".to_string(),
+                    Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]));
+        let meta = PeftMeta {
+            method: crate::suite::PeftMethod::SdtLora,
+            rank: 1,
+            alpha: 3,
+            targets: vec!["w".to_string()],
+            n_tokens: 0,
+        };
+        let delta = AdapterDelta {
+            meta: meta.clone(),
+            lora: vec![LoraOp {
+                target: "w".to_string(),
+                a: Tensor::from_vec(&[2, 1], vec![0.5, -0.25]),
+                b: Tensor::from_vec(&[1, 2], vec![0.125, 8.0]),
+            }],
+            sparse: vec![SparseOffset {
+                param: "v".to_string(),
+                idx: vec![1, 3],
+                val: vec![0.3, -0.7],
+            }],
+            h0: BTreeMap::from([("layers.0.h0".to_string(),
+                                 Tensor::from_vec(&[1], vec![2.5]))]),
+        };
+        let got = delta.apply(&base).unwrap();
+
+        // reference: the merged-registry construction (raw map containing
+        // trained values + lora leaves, then the same merge_lora)
+        let mut want = base.clone();
+        want.get_mut("v").unwrap().data[1] = 0.3;
+        want.get_mut("v").unwrap().data[3] = -0.7;
+        want.insert("w.lora_a".to_string(),
+                    Tensor::from_vec(&[2, 1], vec![0.5, -0.25]));
+        want.insert("w.lora_b".to_string(),
+                    Tensor::from_vec(&[1, 2], vec![0.125, 8.0]));
+        crate::peft::merge_lora(&mut want, &meta);
+        want.insert("layers.0.h0".to_string(), Tensor::from_vec(&[1], vec![2.5]));
+
+        assert_eq!(got.keys().collect::<Vec<_>>(), want.keys().collect::<Vec<_>>());
+        for (k, t) in &want {
+            assert_eq!(bits(&got[k].data), bits(&t.data),
+                       "param {k} must match bit-for-bit");
+        }
+        // replacement semantics: the trained value lands exactly, no
+        // base + (trained − base) rounding
+        assert_eq!(got["v"].data[1].to_bits(), 0.3f32.to_bits());
+        // the lora merge really happened (scale = alpha/rank = 3)
+        assert_ne!(got["w"].data[0].to_bits(), 0.1f32.to_bits());
+        // out-of-bounds sparse index is rejected, not wrapped
+        let bad = AdapterDelta {
+            meta,
+            lora: Vec::new(),
+            sparse: vec![SparseOffset {
+                param: "v".to_string(),
+                idx: vec![9],
+                val: vec![0.0],
+            }],
+            h0: BTreeMap::new(),
+        };
+        assert!(bad.apply(&base).is_err());
+    }
+
+    #[test]
+    fn adapter_delta_resident_bytes_are_delta_sized() {
+        let meta = PeftMeta {
+            method: crate::suite::PeftMethod::SdtLora,
+            rank: 8,
+            alpha: 8,
+            targets: Vec::new(),
+            n_tokens: 0,
+        };
+        let d = AdapterDelta {
+            meta,
+            lora: vec![LoraOp {
+                target: "w".to_string(),
+                a: Tensor::zeros(&[64, 8]),
+                b: Tensor::zeros(&[8, 64]),
+            }],
+            sparse: vec![SparseOffset {
+                param: "p".to_string(),
+                idx: vec![0; 16],
+                val: vec![0.0; 16],
+            }],
+            h0: BTreeMap::from([("layers.0.h0".to_string(),
+                                 Tensor::zeros(&[32]))]),
+        };
+        let expect = (64 * 8 + 8 * 64 + 16 + 32) * 4
+            + 16 * std::mem::size_of::<usize>();
+        assert_eq!(d.resident_bytes(), expect);
+        // a single full copy of one 64×4096 base weight alone dwarfs the
+        // whole delta — the registry accounting must scale with KBs
+        assert!(d.resident_bytes() * 10 < 64 * 4096 * 4);
     }
 }

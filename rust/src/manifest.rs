@@ -74,6 +74,42 @@ pub struct PeftMeta {
     pub n_tokens: usize,
 }
 
+/// Element dtype of one adapter operand slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandDtype {
+    /// 32-bit float operand (LoRA factors, scales, offset values).
+    F32,
+    /// 32-bit int operand (sparse-offset index sets).
+    I32,
+}
+
+/// One per-row adapter operand of the `decode_adapters` artifact, in the
+/// exact position the executable takes it after (params..., token,
+/// conv_st, ssm_st).
+#[derive(Debug, Clone)]
+pub struct OperandMeta {
+    /// Operand name (`scale`, `<w>.lora_a/.lora_b`, `<p>.sdt_idx/.sdt_val`).
+    pub name: String,
+    /// Operand shape (leading dim is the batch B).
+    pub shape: Vec<usize>,
+    /// Element dtype.
+    pub dtype: OperandDtype,
+}
+
+/// Layout of the `decode_adapters` artifact's trailing operand list
+/// (manifest v3): the compiled LoRA slot rank, the sparse-offset capacity
+/// per SSM tensor, and the canonical operand order.
+#[derive(Debug, Clone)]
+pub struct AdapterOperands {
+    /// LoRA slot rank R the artifact was compiled with (smaller adapter
+    /// ranks are zero-padded up to R).
+    pub rank: usize,
+    /// Sparse-offset capacity K per SDT-trained SSM tensor per layer.
+    pub k: usize,
+    /// Operands in executable argument order.
+    pub operands: Vec<OperandMeta>,
+}
+
 /// One exported (architecture × PEFT) variant.
 #[derive(Debug, Clone)]
 pub struct Variant {
@@ -99,6 +135,11 @@ pub struct Variant {
     /// width; empty when the variant has no prefill export (pre-v2
     /// manifests, non-decode variants).
     pub prefill_files: Vec<(usize, String)>,
+    /// Unmerged multi-adapter decode HLO artifact (manifest v3, decode
+    /// variants only): same base batch plus per-row delta operands.
+    pub decode_adapters_file: Option<String>,
+    /// Operand layout of `decode_adapters_file`; present iff the artifact is.
+    pub adapter_operands: Option<AdapterOperands>,
     /// Initial parameter values file (f32 LE, train-then-frozen).
     pub params_bin: String,
     /// Trainable parameters, in artifact argument order.
@@ -162,6 +203,38 @@ fn parse_params(v: &Value) -> Result<Vec<ParamMeta>> {
 
 fn get_usize(v: &Value, key: &str) -> usize {
     v.path(key).and_then(Value::as_usize).unwrap_or(0)
+}
+
+fn parse_adapter_operands(v: &Value) -> Result<AdapterOperands> {
+    let arr = v
+        .path("operands")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| err!("adapter_operands missing operands array"))?;
+    let operands = arr
+        .iter()
+        .map(|o| {
+            let name = o
+                .path("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| err!("adapter operand missing name"))?
+                .to_string();
+            let dtype = match o.path("dtype").and_then(Value::as_str) {
+                Some("f32") => OperandDtype::F32,
+                Some("i32") => OperandDtype::I32,
+                other => bail!("operand {name}: bad dtype {other:?}"),
+            };
+            Ok(OperandMeta {
+                name,
+                shape: o
+                    .path("shape")
+                    .and_then(Value::as_arr)
+                    .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(AdapterOperands { rank: get_usize(v, "rank"), k: get_usize(v, "k"), operands })
 }
 
 impl Manifest {
@@ -238,6 +311,15 @@ impl Manifest {
                     pf.sort_unstable();
                     pf
                 },
+                decode_adapters_file: v
+                    .path("files.decode_adapters")
+                    .and_then(Value::as_str)
+                    .map(String::from),
+                adapter_operands: match v.path("adapter_operands") {
+                    None => None,
+                    Some(ao) => Some(parse_adapter_operands(ao)
+                        .with_context(|| format!("variant {name}"))?),
+                },
                 params_bin: v
                     .path("params_bin")
                     .and_then(Value::as_str)
@@ -309,7 +391,12 @@ mod tests {
             "batch":{"B":2,"L":4},"reg":false,
             "files":{"step":"v.step.hlo.txt","fwd":"v.fwd.hlo.txt",
                      "decode":"v.decode.hlo.txt",
-                     "prefill":{"4":"v.prefill4.hlo.txt","16":"v.prefill16.hlo.txt"}},
+                     "prefill":{"4":"v.prefill4.hlo.txt","16":"v.prefill16.hlo.txt"},
+                     "decode_adapters":"v.decode_adapters.hlo.txt"},
+            "adapter_operands":{"rank":8,"k":16,"operands":[
+                {"name":"scale","shape":[2],"dtype":"f32"},
+                {"name":"layers.0.Win_x.lora_a","shape":[2,2,8],"dtype":"f32"},
+                {"name":"layers.0.A_log.sdt_idx","shape":[2,16],"dtype":"i32"}]},
             "params_bin":"v.params.bin",
             "train_params":[{"name":"a","shape":[2,2],"offset":0,"numel":4}],
             "frozen_params":[{"name":"b","shape":[2],"offset":16,"numel":2}]
@@ -343,6 +430,16 @@ mod tests {
         let params = m.load_params(v).unwrap();
         assert_eq!(params["a"].data, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(params["b"].data, vec![5.0, 6.0]);
+        // v3: unmerged-decode artifact + operand layout table
+        assert_eq!(v.decode_adapters_file.as_deref(),
+                   Some("v.decode_adapters.hlo.txt"));
+        let ao = v.adapter_operands.as_ref().unwrap();
+        assert_eq!((ao.rank, ao.k), (8, 16));
+        assert_eq!(ao.operands.len(), 3);
+        assert_eq!(ao.operands[0].name, "scale");
+        assert_eq!(ao.operands[1].shape, vec![2, 2, 8]);
+        assert_eq!(ao.operands[2].dtype, OperandDtype::I32);
+        assert_eq!(ao.operands[1].dtype, OperandDtype::F32);
         std::fs::remove_dir_all(&dir).ok();
     }
 

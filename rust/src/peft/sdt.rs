@@ -241,6 +241,8 @@ mod tests {
             },
             batch_b: 1, batch_l: 4, reg: false,
             step_file: None, fwd_file: None, decode_file: None,
+            prefill_files: vec![],
+            decode_adapters_file: None, adapter_operands: None,
             params_bin: String::new(),
             train_params: vec![
                 ParamMeta { name: "layers.0.A_log".into(), shape: vec![d, h], offset: 0, numel: d * h },

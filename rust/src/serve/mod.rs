@@ -7,12 +7,19 @@
 //! module turns those two properties into a serving path:
 //!
 //! - [`registry`] — [`AdapterRegistry`]: lazily materialized, LRU-capped
-//!   cache of decode-ready parameter sets (base + trained deltas, LoRA
-//!   folded via [`crate::peft::merge_lora`], trained `h0` split out).
+//!   cache of **raw adapter deltas** (LoRA factors + SDT sparse offsets +
+//!   trained `h0`, KBs per adapter instead of whole-model merged copies),
+//!   with pinning so in-flight adapters survive eviction and an on-demand
+//!   merged materialization ([`AdapterRegistry::load_merged`]) for the
+//!   fallback path.
 //! - [`scheduler`] — [`Scheduler`]: continuous batching over the stepwise
 //!   decode executable; requests are admitted into and retired from batch
 //!   rows **between any two decode steps**, with per-request stop bytes,
-//!   `max_new` limits, and greedy or beam decoding.
+//!   `max_new` limits, and greedy or beam decoding. Adapters served as
+//!   deltas share ONE mixed batch (a single
+//!   [`crate::eval::AdapterStepDecode::step_rows`] dispatch per tick);
+//!   adapters the delta path can't represent fall back to per-adapter
+//!   merged lanes.
 //! - [`server`] — the `serve` CLI subcommand: line-delimited JSON over
 //!   stdin/stdout and TCP, per-request latency/throughput stats streamed
 //!   as RunRecord-style JSONL into `results/`.
@@ -30,6 +37,7 @@ pub mod server;
 
 pub use registry::{Adapter, AdapterRegistry, AdapterSource, ManifestSource, RegistryStats};
 pub use scheduler::{
-    FinishReason, LaneFactory, LaneModel, Request, Response, Scheduler,
+    FinishReason, LaneModel, Request, Response, RetireHook, Scheduler, ServeFactory,
+    ServeModel,
 };
 pub use server::{run, ServeOptions, ServeRecord};

@@ -1,14 +1,24 @@
-//! Adapter registry: lazily materialized, LRU-capped cache of decode-ready
-//! parameter sets — one per fine-tuned variant served from the shared base.
+//! Adapter registry: lazily materialized, LRU-capped cache of unmerged
+//! adapter deltas — one per fine-tuned variant served from the shared base.
 //!
-//! Materializing an adapter is the expensive step (read the variant's
+//! An adapter is held as its raw [`AdapterDelta`] (LoRA factor pairs, SDT
+//! sparse trained values, h0 seeds) — KBs per adapter — instead of a
+//! merged whole-model parameter copy; the unmerged decode path
+//! ([`crate::eval::AdapterStepDecode`]) binds deltas per batch row at step
+//! time. Materializing is still the expensive step (read the variant's
 //! parameter layout, overlay the staged pretrained base and any trained
-//! checkpoint, fold LoRA/DoRA factors with [`crate::peft::merge_lora`],
-//! split out trained initial states). The registry does it once per
+//! checkpoint, diff against the base), so the registry does it once per
 //! adapter, hands out `Arc<Adapter>` clones, and evicts the least recently
-//! used entry when the cap is exceeded. Evicted adapters that are still
-//! bound to an active scheduler lane stay alive through their `Arc` until
-//! the lane retires.
+//! used entry when the cap is exceeded. Adapters referenced by in-flight
+//! scheduler rows are [pinned](AdapterRegistry::pin): the LRU pass skips
+//! them (temporarily exceeding the cap when everything is pinned) so an
+//! active request can never have its adapter dropped underneath it.
+//!
+//! Adapters the delta form cannot represent (DoRA's column renorm,
+//! prompt/prefix virtual tokens, dense updates like full FT or BitFit)
+//! load with `delta: None`; the serve layer falls back to a dedicated
+//! merged core via [`AdapterRegistry::load_merged`], which bypasses the
+//! cache entirely.
 //!
 //! The loading policy lives behind the [`AdapterSource`] trait so the LRU
 //! machinery is unit-testable without artifacts; [`ManifestSource`] is the
@@ -23,21 +33,26 @@ use std::sync::{Arc, Mutex};
 use crate::bail;
 use crate::error::{Context, Result};
 
-use crate::manifest::Manifest;
+use crate::eval::{AdapterDelta, LoraOp, SparseOffset};
+use crate::manifest::{Manifest, PeftMeta};
 use crate::peft::{self, Budget};
-use crate::suite::VariantId;
+use crate::suite::{PeftMethod, VariantId};
 use crate::tensor::Tensor;
 use crate::train::checkpoint;
 
-/// A decode-ready adapter: merged parameters for one fine-tuned variant.
+/// A decode-ready adapter: the unmerged delta (when representable) plus
+/// serving metadata for one fine-tuned variant.
 pub struct Adapter {
     /// Adapter id as requested (variant name, optionally `@ckpt-path`).
     pub name: String,
-    /// The decode-capable variant the merged parameters target
+    /// The decode-capable variant the adapter targets
     /// (`<arch>_full` — see [`VariantId::decode_variant`]).
     pub decode_variant: String,
-    /// Merged parameter map: base weights with LoRA/DoRA deltas folded in.
-    pub params: BTreeMap<String, Tensor>,
+    /// The adapter's unmerged delta against the shared base; `None` when
+    /// the method cannot be represented unmerged (DoRA, prompt/prefix,
+    /// dense updates) and serving must fall back to
+    /// [`AdapterRegistry::load_merged`].
+    pub delta: Option<Arc<AdapterDelta>>,
     /// Trained initial states (`layers.{i}.h0`), present for
     /// initial-state-tuning adapters; seeds each admitted request's SSM
     /// state ([`crate::eval::StateDims::init_states`]).
@@ -47,11 +62,35 @@ pub struct Adapter {
     pub budget_pct: f64,
 }
 
+impl Adapter {
+    /// Bytes this adapter keeps resident: delta-sized (rank × targets +
+    /// sparse nnz + h0), NOT a whole-model copy. The delta already counts
+    /// its own h0 tensors, so the standalone `h0` map (same content) is
+    /// counted only for delta-less adapters.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.delta {
+            Some(d) => d.resident_bytes(),
+            None => self.h0.as_ref().map_or(0, |m| {
+                m.values().map(|t| t.numel() * std::mem::size_of::<f32>()).sum()
+            }),
+        }
+    }
+}
+
 /// Where adapters come from: maps an adapter id to a materialized
 /// [`Adapter`]. Closures implement it, so tests can count loads.
 pub trait AdapterSource {
     /// Materialize the adapter for `name` (expensive; called on cache miss).
     fn load(&self, name: &str) -> Result<Adapter>;
+
+    /// Materialize the full merged parameter map for `name` — the serving
+    /// fallback for adapters whose [`Adapter::delta`] is `None`. Never
+    /// cached by the registry (a merged map is whole-model-sized); callers
+    /// bind it into a dedicated core. Sources that cannot merge (test
+    /// closures) inherit this refusal.
+    fn load_merged(&self, name: &str) -> Result<BTreeMap<String, Tensor>> {
+        bail!("adapter source cannot materialize merged parameters for {name:?}")
+    }
 }
 
 impl<F: Fn(&str) -> Result<Adapter>> AdapterSource for F {
@@ -60,7 +99,7 @@ impl<F: Fn(&str) -> Result<Adapter>> AdapterSource for F {
     }
 }
 
-/// Cache counters (all monotone; read via [`AdapterRegistry::stats`]).
+/// Cache counters (counts monotone; read via [`AdapterRegistry::stats`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RegistryStats {
     /// Requests served from cache.
@@ -71,12 +110,19 @@ pub struct RegistryStats {
     pub evictions: usize,
     /// Adapters currently resident.
     pub resident: usize,
+    /// Bytes the resident adapters keep ([`Adapter::resident_bytes`]) —
+    /// delta-sized accounting, demonstrating KBs/adapter instead of
+    /// whole-model copies.
+    pub resident_bytes: usize,
 }
 
 struct Inner {
     map: BTreeMap<String, Arc<Adapter>>,
     /// Recency order, least recently used first.
     order: VecDeque<String>,
+    /// Pin counts: adapters referenced by in-flight scheduler rows. The
+    /// eviction pass skips pinned names (exceeding `cap` when necessary).
+    pins: BTreeMap<String, usize>,
 }
 
 /// LRU-capped adapter cache. `get` is the only entry point: hit moves the
@@ -97,7 +143,11 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         AdapterRegistry {
             source,
             cap: cap.max(1),
-            inner: Mutex::new(Inner { map: BTreeMap::new(), order: VecDeque::new() }),
+            inner: Mutex::new(Inner {
+                map: BTreeMap::new(),
+                order: VecDeque::new(),
+                pins: BTreeMap::new(),
+            }),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
@@ -125,14 +175,51 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         if !inner.map.contains_key(name) {
             inner.map.insert(name.to_string(), adapter.clone());
             inner.order.push_back(name.to_string());
+            // LRU pass, skipping pinned victims: an adapter bound to an
+            // in-flight row must stay resident, so the cache may run over
+            // cap until pins are released
+            let mut skipped: Vec<String> = Vec::new();
             while inner.map.len() > self.cap {
-                if let Some(victim) = inner.order.pop_front() {
-                    inner.map.remove(&victim);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                let Some(victim) = inner.order.pop_front() else { break };
+                if inner.pins.get(&victim).copied().unwrap_or(0) > 0 {
+                    skipped.push(victim);
+                    continue;
                 }
+                inner.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            for k in skipped.into_iter().rev() {
+                inner.order.push_front(k); // preserve recency of survivors
             }
         }
         Ok(adapter)
+    }
+
+    /// Materialize the merged whole-model parameter map for `name`,
+    /// bypassing the delta cache — the serving fallback for adapters whose
+    /// [`Adapter::delta`] is `None`.
+    pub fn load_merged(&self, name: &str) -> Result<BTreeMap<String, Tensor>> {
+        self.source.load_merged(name)
+    }
+
+    /// Pin `name`: an in-flight scheduler row references this adapter, so
+    /// the LRU pass must not drop it. Pins count and nest; pair each with
+    /// one [`AdapterRegistry::unpin`] when the row retires.
+    pub fn pin(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        *inner.pins.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    /// Release one pin on `name` (no-op when not pinned); at zero the
+    /// adapter becomes evictable again on the next cache insertion.
+    pub fn unpin(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(n) = inner.pins.get_mut(name) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                inner.pins.remove(name);
+            }
+        }
     }
 
     /// Whether `name` is currently resident (does not touch recency).
@@ -142,11 +229,13 @@ impl<S: AdapterSource> AdapterRegistry<S> {
 
     /// Cache counters snapshot.
     pub fn stats(&self) -> RegistryStats {
+        let inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         RegistryStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
-            resident: self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).map.len(),
+            resident: inner.map.len(),
+            resident_bytes: inner.map.values().map(|a| a.resident_bytes()).sum(),
         }
     }
 }
@@ -171,6 +260,78 @@ pub struct ManifestSource<'a> {
     pub adapter_dir: Option<PathBuf>,
 }
 
+/// Sparse-diff density cap: a leaf whose changed-entry index set would
+/// cost more than 1/8 of the dense tensor (usize index + f32 value per
+/// entry vs f32 per element) is "dense" — representing it sparsely saves
+/// nothing, so the whole adapter falls back to the merged path. Covers
+/// full FT and BitFit (every bias entry trained).
+const SPARSE_DENSITY_CAP: usize = 8;
+
+/// Distill an adapter's raw (pre-merge) parameter map into an
+/// [`AdapterDelta`] against the shared base, or `None` when the adapter
+/// cannot be represented unmerged:
+///
+/// - DoRA (post-merge column renorm is not base + delta), prompt/prefix
+///   (virtual tokens change sequence geometry), and add-scan (extra state
+///   dims) are structurally unrepresentable;
+/// - a non-adapter leaf missing from the base (or shape-mismatched) has
+///   nowhere to delta against;
+/// - a leaf with more than `1/SPARSE_DENSITY_CAP` of its entries changed
+///   is dense — merged serving is strictly better.
+///
+/// Changed entries are detected bitwise and stored as TRAINED VALUES
+/// (replacement), so [`AdapterDelta::apply`] reproduces the merged map
+/// bit-for-bit. This works because every variant of one architecture
+/// shares the base initialization (same seed, PEFT only adds leaves), so
+/// after the base overlay only checkpoint-trained entries differ.
+pub fn delta_from_params(base: &BTreeMap<String, Tensor>,
+                         raw: &BTreeMap<String, Tensor>,
+                         meta: &PeftMeta) -> Option<AdapterDelta> {
+    match meta.method {
+        PeftMethod::Dora(_) | PeftMethod::Prompt | PeftMethod::Prefix
+        | PeftMethod::AddScan => return None,
+        _ => {}
+    }
+    let mut lora: Vec<LoraOp> = Vec::new();
+    let mut sparse: Vec<SparseOffset> = Vec::new();
+    let mut h0: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (k, t) in raw {
+        if let Some(target) = k.strip_suffix(".lora_a") {
+            let b = raw.get(&format!("{target}.lora_b"))?;
+            if !base.contains_key(target) {
+                return None;
+            }
+            lora.push(LoraOp {
+                target: target.to_string(),
+                a: t.clone(),
+                b: b.clone(),
+            });
+        } else if k.ends_with(".lora_b") {
+            // consumed by its `.lora_a` partner above
+        } else if k.ends_with(".dora_m") {
+            return None; // belt and braces: method check already bailed
+        } else if k.ends_with(".h0") {
+            h0.insert(k.clone(), t.clone());
+        } else {
+            let bt = base.get(k)?;
+            if bt.shape != t.shape {
+                return None;
+            }
+            let idx: Vec<usize> = (0..t.data.len())
+                .filter(|&i| t.data[i].to_bits() != bt.data[i].to_bits())
+                .collect();
+            if idx.len() * SPARSE_DENSITY_CAP > t.numel().max(1) {
+                return None;
+            }
+            if !idx.is_empty() {
+                let val = idx.iter().map(|&i| t.data[i]).collect();
+                sparse.push(SparseOffset { param: k.clone(), idx, val });
+            }
+        }
+    }
+    Some(AdapterDelta { meta: meta.clone(), lora, sparse, h0 })
+}
+
 impl ManifestSource<'_> {
     fn resolve_ckpt(&self, variant: &str, explicit: Option<&str>) -> Option<PathBuf> {
         if let Some(p) = explicit {
@@ -179,10 +340,11 @@ impl ManifestSource<'_> {
         let p = self.adapter_dir.as_ref()?.join(format!("{variant}.ckpt"));
         p.exists().then_some(p)
     }
-}
 
-impl AdapterSource for ManifestSource<'_> {
-    fn load(&self, name: &str) -> Result<Adapter> {
+    /// The raw pre-merge parameter map both serving paths start from:
+    /// fresh init for every leaf, staged pretrained base overlaid, then
+    /// trained checkpoint weights. Returns the variant name alongside.
+    fn raw_params(&self, name: &str) -> Result<(String, BTreeMap<String, Tensor>)> {
         let (vname, ckpt) = match name.split_once('@') {
             Some((v, p)) => (v, Some(p)),
             None => (name, None),
@@ -236,8 +398,17 @@ impl AdapterSource for ManifestSource<'_> {
                 );
             }
         }
+        Ok((vname.to_string(), params))
+    }
+}
+
+impl AdapterSource for ManifestSource<'_> {
+    fn load(&self, name: &str) -> Result<Adapter> {
+        let (vname, params) = self.raw_params(name)?;
+        let variant = self.manifest.variant(&vname)?;
+        let vid = VariantId::parse(&vname)?;
         let budget_pct = Budget::of(variant, None).percent();
-        peft::merge_lora(&mut params, &variant.peft);
+        let delta = delta_from_params(&self.base, &params, &variant.peft);
         let h0_map: BTreeMap<String, Tensor> = params
             .iter()
             .filter(|(k, _)| k.ends_with(".h0"))
@@ -247,10 +418,20 @@ impl AdapterSource for ManifestSource<'_> {
         Ok(Adapter {
             name: name.to_string(),
             decode_variant: vid.decode_variant(),
-            params,
+            delta: delta.map(Arc::new),
             h0,
             budget_pct,
         })
+    }
+
+    /// The old merged-copy construction, now the fallback for delta-less
+    /// adapters: raw map + [`crate::peft::merge_lora`]. The `.h0` leaves
+    /// stay in the map (the decode argument order ignores extras).
+    fn load_merged(&self, name: &str) -> Result<BTreeMap<String, Tensor>> {
+        let (vname, mut params) = self.raw_params(name)?;
+        let variant = self.manifest.variant(&vname)?;
+        peft::merge_lora(&mut params, &variant.peft);
+        Ok(params)
     }
 }
 
@@ -258,11 +439,13 @@ impl AdapterSource for ManifestSource<'_> {
 mod tests {
     use super::*;
 
+    use crate::suite::Target;
+
     fn dummy(name: &str) -> Adapter {
         Adapter {
             name: name.to_string(),
             decode_variant: "a_full".into(),
-            params: BTreeMap::new(),
+            delta: None,
             h0: None,
             budget_pct: 1.0,
         }
@@ -327,5 +510,156 @@ mod tests {
         reg.get("a").unwrap();
         reg.get("b").unwrap();
         assert_eq!(reg.stats().resident, 1);
+    }
+
+    #[test]
+    fn pinned_adapter_survives_eviction() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads.clone()), 2);
+        reg.get("a").unwrap();
+        reg.pin("a"); // an in-flight row holds a
+        reg.get("b").unwrap();
+        reg.get("c").unwrap(); // over cap: a is LRU but pinned → b goes
+        assert!(reg.contains("a"), "pinned adapter must not be evicted");
+        assert!(!reg.contains("b"), "eviction falls through to the next LRU");
+        assert!(reg.contains("c"));
+        assert_eq!(reg.stats().evictions, 1);
+        // once released, a is evictable again (and still the LRU)
+        reg.unpin("a");
+        reg.get("d").unwrap();
+        assert!(!reg.contains("a"), "unpinned adapter evicts normally");
+        assert!(reg.contains("c") && reg.contains("d"));
+        assert_eq!(loads.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn all_pinned_exceeds_cap_without_evicting() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads), 1);
+        reg.get("a").unwrap();
+        reg.pin("a");
+        reg.get("b").unwrap();
+        reg.pin("b");
+        let st = reg.stats();
+        assert_eq!(st.resident, 2, "pins force the cache over cap");
+        assert_eq!(st.evictions, 0);
+        // pins nest: two pins need two releases
+        reg.pin("a");
+        reg.unpin("a");
+        reg.unpin("b");
+        reg.get("c").unwrap(); // b unpinned → evictable; a still pinned
+        assert!(reg.contains("a") && reg.contains("c"));
+        assert!(!reg.contains("b"));
+    }
+
+    fn base_map() -> BTreeMap<String, Tensor> {
+        BTreeMap::from([
+            ("w".to_string(),
+             Tensor::from_vec(&[2, 2], vec![0.1, 0.2, 0.3, 0.4])),
+            ("v".to_string(),
+             Tensor::from_vec(&[8], (0..8).map(|i| i as f32).collect())),
+        ])
+    }
+
+    fn lora_meta() -> PeftMeta {
+        PeftMeta {
+            method: PeftMethod::Lora(Target::LinProj),
+            rank: 1,
+            alpha: 1,
+            targets: vec!["w".to_string()],
+            n_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn delta_from_params_roundtrips_bitwise() {
+        // raw = base + trained lora leaves + one trained sparse entry; the
+        // distilled delta applied to the base must equal raw + merge_lora
+        // bit-for-bit (the demotion-gate equivalence)
+        let base = base_map();
+        let mut raw = base.clone();
+        raw.insert("w.lora_a".to_string(),
+                   Tensor::from_vec(&[2, 1], vec![0.5, -0.25]));
+        raw.insert("w.lora_b".to_string(),
+                   Tensor::from_vec(&[1, 2], vec![0.125, 8.0]));
+        raw.get_mut("v").unwrap().data[3] = 17.5;
+        raw.insert("layers.0.h0".to_string(), Tensor::from_vec(&[1], vec![2.5]));
+        let meta = lora_meta();
+        let delta = delta_from_params(&base, &raw, &meta)
+            .expect("lora + sparse adapter is representable");
+        assert_eq!(delta.lora.len(), 1);
+        assert_eq!(delta.sparse.len(), 1);
+        assert_eq!(delta.sparse[0].idx, vec![3]);
+        assert_eq!(delta.sparse[0].val[0].to_bits(), 17.5f32.to_bits());
+        assert_eq!(delta.h0.len(), 1);
+
+        let got = delta.apply(&base).unwrap();
+        let mut want = raw;
+        crate::peft::merge_lora(&mut want, &meta);
+        assert_eq!(got.keys().collect::<Vec<_>>(), want.keys().collect::<Vec<_>>());
+        for (k, t) in &want {
+            let g: Vec<u32> = got[k].data.iter().map(|x| x.to_bits()).collect();
+            let w: Vec<u32> = t.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(g, w, "param {k}");
+        }
+    }
+
+    #[test]
+    fn delta_from_params_rejects_unrepresentable() {
+        let base = base_map();
+        // dense change: every entry of v trained → merged fallback
+        let mut dense = base.clone();
+        for x in &mut dense.get_mut("v").unwrap().data {
+            *x += 1.0;
+        }
+        assert!(delta_from_params(&base, &dense, &lora_meta()).is_none());
+        // structurally unrepresentable methods bail regardless of content
+        let mut meta = lora_meta();
+        meta.method = PeftMethod::Prompt;
+        assert!(delta_from_params(&base, &base.clone(), &meta).is_none());
+        meta.method = PeftMethod::Dora(Target::LinProj);
+        assert!(delta_from_params(&base, &base.clone(), &meta).is_none());
+        // a raw leaf the base lacks has nowhere to delta against
+        let mut extra = base.clone();
+        extra.insert("mystery".to_string(), Tensor::zeros(&[4]));
+        assert!(delta_from_params(&base, &extra, &lora_meta()).is_none());
+        // lora_a without its lora_b partner is malformed
+        let mut widowed = base.clone();
+        widowed.insert("w.lora_a".to_string(), Tensor::zeros(&[2, 1]));
+        assert!(delta_from_params(&base, &widowed, &lora_meta()).is_none());
+        // the identity adapter is representable and empty
+        let id = delta_from_params(&base, &base.clone(), &lora_meta()).unwrap();
+        assert!(id.lora.is_empty() && id.sparse.is_empty() && id.h0.is_empty());
+        assert_eq!(id.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn registry_accounts_delta_bytes_not_model_copies() {
+        let base = base_map();
+        let mut raw = base.clone();
+        raw.get_mut("v").unwrap().data[1] = 99.0;
+        let delta = delta_from_params(&base, &raw, &lora_meta()).unwrap();
+        let delta_bytes = delta.resident_bytes();
+        let model_bytes: usize = base.values()
+            .map(|t| t.numel() * std::mem::size_of::<f32>())
+            .sum();
+        assert!(delta_bytes < model_bytes,
+                "delta ({delta_bytes} B) must undercut a full copy ({model_bytes} B)");
+        let source = move |name: &str| -> Result<Adapter> {
+            Ok(Adapter {
+                name: name.to_string(),
+                decode_variant: "a_full".into(),
+                delta: Some(Arc::new(delta_from_params(&base, &raw, &lora_meta())
+                    .context("delta")?)),
+                h0: None,
+                budget_pct: 1.0,
+            })
+        };
+        let reg = AdapterRegistry::new(source, 4);
+        reg.get("x").unwrap();
+        reg.get("y").unwrap();
+        assert_eq!(reg.stats().resident_bytes, 2 * delta_bytes);
+        // and the closure source refuses merged materialization by default
+        assert!(reg.load_merged("x").is_err());
     }
 }

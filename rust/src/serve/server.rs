@@ -19,14 +19,16 @@ use crate::{bail, err};
 use crate::error::{Context, Result};
 
 use crate::coordinator::Pipeline;
-use crate::eval::DecodeCore;
+use crate::eval::{AdapterStepDecode, DecodeCore};
 use crate::json::{self, Value};
 use crate::manifest::Manifest;
 use crate::runtime::Engine;
 use crate::suite::{git_describe, JsonlSink};
 
 use super::registry::{AdapterRegistry, ManifestSource};
-use super::scheduler::{LaneFactory, LaneModel, Request, Response, Scheduler};
+use super::scheduler::{
+    LaneModel, Request, Response, Scheduler, ServeFactory, ServeModel,
+};
 
 /// `serve` subcommand configuration (CLI `key=value` overrides — see
 /// [`ServeOptions::from_kvs`]).
@@ -256,16 +258,53 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     let source = ManifestSource {
         manifest,
         base_arch: opts.arch.clone(),
-        base,
+        base: base.clone(),
         adapter_dir: opts.adapter_dir.clone(),
     };
     let registry = AdapterRegistry::new(source, opts.cache_cap);
-    let factory: LaneFactory = Box::new(|adapter: &str| {
+    // the unmerged multi-adapter core: ONE executable bound to the plain
+    // base, stepping a mixed-adapter batch with per-row deltas. When it
+    // can't be built (e.g. unknown decode variant) every adapter falls
+    // back to merged per-adapter lanes.
+    let decode_variant = format!("{}_full", opts.arch);
+    let shared_core: Option<Arc<DecodeCore>> =
+        match DecodeCore::new_unmerged(engine, manifest, &decode_variant, base.clone()) {
+            Ok(core) => {
+                eprintln!(
+                    "[serve] unmerged multi-adapter decode ready ({})",
+                    if core.has_adapter_artifact() {
+                        "decode_adapters artifact"
+                    } else {
+                        "grouped host fallback"
+                    }
+                );
+                Some(Arc::new(core))
+            }
+            Err(e) => {
+                eprintln!("[serve] unmerged decode unavailable ({e:#}); merged lanes only");
+                None
+            }
+        };
+    let factory: ServeFactory = Box::new(|adapter: &str| {
         let a = registry.get(adapter)?;
-        let core = DecodeCore::new(engine, manifest, &a.decode_variant, &a.params)?;
-        Ok(LaneModel { model: Arc::new(core), h0: a.h0.clone() })
+        if let (Some(core), Some(delta)) = (&shared_core, &a.delta) {
+            // pin for the lifetime of the scheduler's hold on this delta;
+            // released through the on_release hook below
+            registry.pin(adapter);
+            let model: Arc<dyn AdapterStepDecode> = core.clone();
+            return Ok(ServeModel::Shared {
+                model,
+                delta: Some(delta.clone()),
+                h0: a.h0.clone(),
+            });
+        }
+        // unrepresentable delta (or no unmerged core): merge on demand
+        let params = registry.load_merged(adapter)?;
+        let core = DecodeCore::new(engine, manifest, &a.decode_variant, &params)?;
+        Ok(ServeModel::Merged(LaneModel { model: Arc::new(core), h0: a.h0.clone() }))
     });
     let mut sched = Scheduler::new(factory, opts.max_lanes);
+    sched.on_release(Box::new(|adapter: &str| registry.unpin(adapter)));
 
     let (tx, rx) = mpsc::channel::<(String, Sink)>();
     if opts.stdin {
@@ -379,11 +418,12 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     }
     let st = registry.stats();
     eprintln!(
-        "[serve] done: {served} requests, {} decode steps / {} ticks, \
-         {} prefill chunks ({} prompt tokens); adapter cache \
-         {} hits / {} misses / {} evictions",
-        sched.decode_steps, sched.ticks, sched.prefill_dispatches,
-        sched.prefill_tokens, st.hits, st.misses, st.evictions,
+        "[serve] done: {served} requests, {} decode steps / {} ticks \
+         (max admit wait {} ticks), {} prefill chunks ({} prompt tokens); \
+         adapter cache {} hits / {} misses / {} evictions, {:.1} KB resident",
+        sched.decode_steps, sched.ticks, sched.max_admit_wait_ticks,
+        sched.prefill_dispatches, sched.prefill_tokens, st.hits, st.misses,
+        st.evictions, st.resident_bytes as f64 / 1024.0,
     );
     Ok(())
 }

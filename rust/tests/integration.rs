@@ -7,15 +7,16 @@ use ssm_peft::config::ExperimentConfig;
 use ssm_peft::coordinator::Pipeline;
 use ssm_peft::data::{make_lm_batch, tasks, BatchIter};
 use ssm_peft::eval::{
-    beam_search, greedy_decode, plan_chunks, DecodeCore, DecodeState, Generator,
-    StateDims, StepDecode,
+    beam_search, greedy_decode, plan_chunks, AdapterStepDecode, DecodeCore, DecodeState,
+    Generator, StateDims, StepDecode,
 };
 use ssm_peft::tensor::{IntTensor, Tensor};
 use ssm_peft::manifest::Manifest;
 use ssm_peft::peft::{select_dimensions, Budget, SdtConfig};
 use ssm_peft::runtime::Engine;
 use ssm_peft::serve::{
-    AdapterRegistry, LaneFactory, LaneModel, ManifestSource, Request, Scheduler,
+    AdapterRegistry, LaneModel, ManifestSource, Request, Scheduler, ServeFactory,
+    ServeModel,
 };
 use ssm_peft::suite::{JsonlSink, PeftMethod, Suite, VariantId};
 use ssm_peft::tensor::Rng;
@@ -304,16 +305,35 @@ fn serve_two_adapters_from_one_staged_base() {
     let source = ManifestSource {
         manifest: m,
         base_arch: "mamba1_xs".into(),
-        base,
+        base: base.clone(),
         adapter_dir: None,
     };
     let registry = AdapterRegistry::new(source, 2);
-    let factory: LaneFactory = Box::new(|a: &str| {
+    // one shared unmerged core serves every delta-representable adapter;
+    // anything else falls back to a per-adapter merged lane
+    let shared = DecodeCore::new_unmerged(e, m, "mamba1_xs_full", base.clone())
+        .ok()
+        .map(std::sync::Arc::new);
+    let factory: ServeFactory = Box::new(|a: &str| {
         let ad = registry.get(a)?;
-        let core = DecodeCore::new(e, m, &ad.decode_variant, &ad.params)?;
-        Ok(LaneModel { model: std::sync::Arc::new(core), h0: ad.h0.clone() })
+        if let (Some(core), Some(delta)) = (&shared, &ad.delta) {
+            registry.pin(a);
+            let model: std::sync::Arc<dyn AdapterStepDecode> = core.clone();
+            return Ok(ServeModel::Shared {
+                model,
+                delta: Some(delta.clone()),
+                h0: ad.h0.clone(),
+            });
+        }
+        let params = registry.load_merged(a)?;
+        let core = DecodeCore::new(e, m, &ad.decode_variant, &params)?;
+        Ok(ServeModel::Merged(LaneModel {
+            model: std::sync::Arc::new(core),
+            h0: ad.h0.clone(),
+        }))
     });
     let mut sched = Scheduler::new(factory, 4);
+    sched.on_release(Box::new(|a: &str| registry.unpin(a)));
     sched.submit(Request {
         id: 1,
         adapter: "mamba1_xs_lora_lin".into(),
@@ -357,8 +377,8 @@ fn serve_two_adapters_from_one_staged_base() {
     let more = sched.run_to_completion();
     assert_eq!(more.len(), 1);
     assert!(more[0].error.is_none());
-    // the lane was kept, so the registry wasn't even consulted again;
-    // misses certainly must not grow
+    // the repeat admission hits the delta cache (or the kept merged lane);
+    // either way, misses must not grow
     assert_eq!(registry.stats().misses, 2);
 }
 
@@ -433,8 +453,8 @@ fn serve_prefill_then_admit_on_real_executables() {
     let widths = core.prefill_widths().to_vec();
     let prompt = b"name=ann|team=red|city=oslo|role=lead".to_vec();
     let run = |model: std::sync::Arc<dyn StepDecode>| {
-        let factory: LaneFactory = Box::new(move |_adapter: &str| {
-            Ok(LaneModel { model: model.clone(), h0: None })
+        let factory: ServeFactory = Box::new(move |_adapter: &str| {
+            Ok(ServeModel::Merged(LaneModel { model: model.clone(), h0: None }))
         });
         let mut sched = Scheduler::new(factory, 2);
         sched.submit(Request {
