@@ -25,6 +25,12 @@
 //! whole-model merged copy. Host mocks; the dispatch counts and byte
 //! sizes are the durable signal.
 //!
+//! Schema 4 adds a `faults` section: the serve scheduler under
+//! deterministic seeded exec faults (transient kind), comparing a healthy
+//! pass against a degraded pass of the same request mix — injected
+//! faults, in-place retries, request outcomes, and the throughput cost of
+//! recovery. The fault/retry counters are the durable signal.
+//!
 //! `SSM_PEFT_BENCH_SCALE` scales iteration counts and the synthetic model
 //! size (0.1 = tiny CI mode). The JSON schema is documented in
 //! rust/docs/performance.md; every number is a mean over timed iterations.
@@ -50,7 +56,7 @@ use crate::train::{StepTimings, TrainConfig, Trainer};
 /// `BENCH_hotpath.json` schema version. The lint pins this against the
 /// example payload in rust/docs/performance.md, so bumping it without a
 /// docs update fails `cargo run -- lint`.
-pub const BENCH_HOTPATH_SCHEMA: u32 = 3;
+pub const BENCH_HOTPATH_SCHEMA: u32 = 4;
 
 fn bench_scale() -> f32 {
     crate::knobs::bench_scale()
@@ -473,6 +479,123 @@ fn bench_adapters_mock(scale: f32) -> Result<Value> {
     ]))
 }
 
+/// Schema 4's `faults` section: the serve scheduler under deterministic
+/// seeded exec faults, on the host mocks. A healthy pass and a degraded
+/// pass (fixed-seed transient [`crate::fault::FaultSite::ExecRun`] faults)
+/// run the same request mix through [`Scheduler::run_to_completion`]; the
+/// injected/retry counters and the recovery-overhead ratio are the
+/// durable telemetry — transient faults must cost retried ticks, not
+/// failed requests.
+fn bench_faults_mock(scale: f32) -> Result<Value> {
+    use std::sync::Arc;
+
+    use crate::eval::testing::Accum;
+    use crate::fault::{FaultInject, FaultPlan, FaultSite};
+    use crate::serve::{LaneModel, Request, Response, Scheduler, ServeModel};
+
+    /// Merged-lane mock whose exec site consults the fault plan BEFORE
+    /// touching state (the real `DecodeCore::run_exec` ordering), so a
+    /// faulted step is retryable byte-for-byte after rollback.
+    struct FaultyStep {
+        inner: Accum,
+        plan: Arc<FaultPlan>,
+    }
+
+    impl StepDecode for FaultyStep {
+        fn arch_b(&self) -> usize {
+            self.inner.arch_b()
+        }
+        fn dims(&self) -> crate::eval::StateDims {
+            self.inner.dims()
+        }
+        fn step(&self, tokens: &IntTensor, state: &mut DecodeState)
+            -> Result<Tensor> {
+            self.plan.check(FaultSite::ExecRun)?;
+            self.inner.step(tokens, state)
+        }
+    }
+
+    const FAULT_RATE: f64 = 0.05;
+    let adapters = 4usize;
+    let requests = ((16.0 * scale).round() as usize).max(8);
+    let max_new = ((24.0 * scale).round() as usize).max(8);
+    let iters = ((6.0 * scale).round() as usize).max(2);
+
+    // one request mix, replayed under a healthy and a faulty exec site;
+    // the generous tick budget is a hang backstop, never hit in practice
+    let run = |plan: Option<Arc<FaultPlan>>| -> (Vec<Response>, u64, u64, u64) {
+        let fplan = plan.clone();
+        let factory: crate::serve::ServeFactory = Box::new(move |_adapter: &str| {
+            let inner = Accum::with_off(1, &[], 2.0);
+            let model: Arc<dyn StepDecode> = match &fplan {
+                Some(p) => Arc::new(FaultyStep { inner, plan: p.clone() }),
+                None => Arc::new(inner),
+            };
+            Ok(ServeModel::Merged(LaneModel { model, h0: None }))
+        });
+        let mut sched = Scheduler::new(factory, adapters);
+        if let Some(p) = plan {
+            sched.set_fault_inject(p);
+        }
+        sched.set_max_run_ticks(requests * (max_new + 8) * 8 + 64);
+        for id in 0..requests {
+            sched.submit(Request {
+                id: id as u64,
+                adapter: format!("a{}", id % adapters),
+                prompt: vec![((id * 17) % 200 + 1) as u8],
+                max_new,
+                stop_byte: 0,
+                beam: 1,
+                deadline: 0,
+            });
+        }
+        let out = sched.run_to_completion();
+        (out, sched.step_faults, sched.step_retries, sched.demotions)
+    };
+    // fresh plan per run: same seed => identical fault pattern every run
+    let mk_plan =
+        || Arc::new(FaultPlan::seeded(0xFA17).with_rate(FaultSite::ExecRun, FAULT_RATE));
+
+    let (resps, _, _, _) = run(None); // count-establishing healthy run
+    let tokens: usize = resps.iter().map(|r| r.output.len()).sum();
+    let completed_healthy = resps.iter().filter(|r| r.error.is_none()).count();
+    let healthy_st = time("serve_healthy", 0, iters, || {
+        let _ = run(None);
+    });
+
+    let plan = mk_plan();
+    let (dresps, step_faults, step_retries, demotions) = run(Some(plan.clone()));
+    let injected = plan.injected(FaultSite::ExecRun);
+    let dtokens: usize = dresps.iter().map(|r| r.output.len()).sum();
+    let completed_degraded = dresps.iter().filter(|r| r.error.is_none()).count();
+    let failed_degraded = dresps.len() - completed_degraded;
+    let degraded_st = time("serve_degraded", 0, iters, || {
+        let _ = run(Some(mk_plan()));
+    });
+
+    Ok(json::obj(vec![
+        ("requests", json::num(requests as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("fault_rate_exec", json::num(FAULT_RATE)),
+        ("injected_exec_faults", json::num(injected as f64)),
+        ("step_faults", json::num(step_faults as f64)),
+        ("step_retries", json::num(step_retries as f64)),
+        ("demotions", json::num(demotions as f64)),
+        ("completed_healthy", json::num(completed_healthy as f64)),
+        ("completed_degraded", json::num(completed_degraded as f64)),
+        ("failed_degraded", json::num(failed_degraded as f64)),
+        ("tok_per_s_healthy", json::num(tokens as f64 / healthy_st.mean_s.max(1e-12))),
+        (
+            "tok_per_s_degraded",
+            json::num(dtokens as f64 / degraded_st.mean_s.max(1e-12)),
+        ),
+        (
+            "recovery_overhead",
+            json::num(degraded_st.mean_s / healthy_st.mean_s.max(1e-12)),
+        ),
+    ]))
+}
+
 /// The `prefill` section's artifact half: the same comparison through the
 /// real prefill executables (None when the manifest has no prefill
 /// entries — pre-v2 artifacts).
@@ -598,6 +721,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
     let mut decode_val = None;
     let mut prefill_fields = vec![("mock", bench_prefill_mock(scale)?)];
     let adapters_val = bench_adapters_mock(scale)?;
+    let faults_val = bench_faults_mock(scale)?;
     if crate::artifacts_dir().join("manifest.json").exists() {
         let engine = Engine::cpu()?;
         let manifest = Manifest::load(crate::artifacts_dir())?;
@@ -647,12 +771,25 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
             get("resident_kb_full_copy"),
         );
     }
+    {
+        let get = |k: &str| faults_val.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        println!(
+            "faults (mock): {:.0} injected exec faults -> {:.0} retries, \
+             {:.0}/{:.0} requests completed degraded ({:.2}x healthy cost)",
+            get("injected_exec_faults"),
+            get("step_retries"),
+            get("completed_degraded"),
+            get("requests"),
+            get("recovery_overhead"),
+        );
+    }
 
     let mock_obj = Value::Obj(
         mock_fields.into_iter().collect::<BTreeMap<String, Value>>(),
     );
     let mut root = vec![
-        // schema 3: adds the `adapters` section (unmerged multi-adapter
+        // schema 4: adds the `faults` section (serve under injected
+        // faults); schema 3 added `adapters` (unmerged multi-adapter
         // decode); schema 2 added `prefill` (§Perf L5)
         ("schema", json::num(BENCH_HOTPATH_SCHEMA as f64)),
         ("scale", json::num(scale as f64)),
@@ -661,6 +798,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
         ("optimizer_mock", mock_obj),
         ("prefill", json::obj(prefill_fields)),
         ("adapters", adapters_val),
+        ("faults", faults_val),
         ("host_overhead_reduction", json::num(headline)),
     ];
     if let Some(tv) = train_val {
@@ -723,6 +861,24 @@ mod tests {
         // a raw delta must be materially smaller than a merged copy
         assert!(get("residency_ratio") > 2.0, "{}", get("residency_ratio"));
         assert!(get("resident_kb_per_adapter") < get("resident_kb_full_copy"));
+    }
+
+    #[test]
+    fn faults_mock_section_accounting() {
+        let v = bench_faults_mock(0.1).unwrap();
+        let get = |k: &str| v.get(k).and_then(Value::as_f64).unwrap();
+        // the healthy pass must be fault-free and complete everything
+        assert_eq!(get("completed_healthy"), get("requests"));
+        // every injected exec fault surfaces as exactly one step fault
+        assert_eq!(get("step_faults"), get("injected_exec_faults"));
+        // retries never exceed faults, and every request terminates
+        assert!(get("step_retries") <= get("step_faults"));
+        assert_eq!(
+            get("completed_degraded") + get("failed_degraded"),
+            get("requests"),
+        );
+        assert!(get("tok_per_s_healthy") > 0.0);
+        assert!(get("tok_per_s_degraded") > 0.0);
     }
 
     #[test]

@@ -34,8 +34,24 @@ pub enum ErrorKind {
     /// A violated internal invariant surfaced as an error instead of a
     /// panic (the no-panic lint converts "impossible" states to these).
     Invariant,
+    /// A budget ran out: request deadline, retry budget, or the
+    /// scheduler's max-tick budget. Always terminal — retrying an
+    /// exhausted request would just re-spend the budget it already spent.
+    Exhausted,
     /// Anything else.
     Other,
+}
+
+impl ErrorKind {
+    /// Whether the serve layer's retry policy treats this kind as
+    /// transient (worth a bounded retry with backoff) rather than
+    /// terminal. I/O and runtime/accelerator failures are the two
+    /// classes that plausibly succeed on a second attempt; malformed
+    /// requests, parse errors, violated invariants and exhausted budgets
+    /// never do.
+    pub fn is_transient(self) -> bool {
+        matches!(self, ErrorKind::Io | ErrorKind::Runtime)
+    }
 }
 
 /// The crate-wide error type. See the [module docs](self) for the display
@@ -283,6 +299,17 @@ mod tests {
         assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
         let e = err!("plain {}", 1);
         assert_eq!(format!("{e}"), "plain 1");
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(ErrorKind::Io.is_transient());
+        assert!(ErrorKind::Runtime.is_transient());
+        assert!(!ErrorKind::Request.is_transient());
+        assert!(!ErrorKind::Parse.is_transient());
+        assert!(!ErrorKind::Invariant.is_transient());
+        assert!(!ErrorKind::Exhausted.is_transient());
+        assert!(!ErrorKind::Other.is_transient());
     }
 
     #[test]

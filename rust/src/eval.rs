@@ -335,6 +335,48 @@ impl DecodeState {
         self.resident = Some(pair);
         self.host_fresh = false;
     }
+
+    /// Capture a host-side snapshot of the full `(conv, ssm)` state.
+    ///
+    /// Syncs the host mirror (one device→host readback when the state was
+    /// resident-only) but leaves residency intact, so checkpointing
+    /// between steps does not change the dispatch/serialization pattern.
+    /// The serve scheduler captures one of these before each fault-guarded
+    /// step so a mid-tick failure can [`rollback`](Self::rollback) instead
+    /// of poisoning every row in the batch.
+    pub fn checkpoint(&mut self) -> Result<StateCheckpoint> {
+        self.sync_host()?;
+        Ok(StateCheckpoint { conv: self.conv.data.clone(), ssm: self.ssm.data.clone() })
+    }
+
+    /// Restore the state captured by [`checkpoint`](Self::checkpoint):
+    /// every row's `(conv, ssm)` reverts to the snapshot and the next step
+    /// re-serializes from host (resident literals from the failed step are
+    /// dropped).
+    pub fn rollback(&mut self, ck: &StateCheckpoint) -> Result<()> {
+        crate::ensure!(
+            ck.conv.len() == self.conv.data.len() && ck.ssm.len() == self.ssm.data.len(),
+            "checkpoint geometry mismatch: conv {} vs {}, ssm {} vs {}",
+            ck.conv.len(),
+            self.conv.data.len(),
+            ck.ssm.len(),
+            self.ssm.data.len(),
+        );
+        self.conv.data.copy_from_slice(&ck.conv);
+        self.ssm.data.copy_from_slice(&ck.ssm);
+        self.host_fresh = true;
+        self.resident = None;
+        Ok(())
+    }
+}
+
+/// An opaque host-side snapshot of a [`DecodeState`]'s `(conv, ssm)`
+/// buffers, produced by [`DecodeState::checkpoint`] and consumed by
+/// [`DecodeState::rollback`]. The same primitive the ROADMAP's
+/// speculative-decoding item needs for rejected drafts.
+pub struct StateCheckpoint {
+    conv: Vec<f32>,
+    ssm: Vec<f32>,
 }
 
 /// The stepwise decode interface shared by offline eval ([`Generator`]) and
@@ -599,6 +641,10 @@ pub struct DecodeCore {
     /// Unmerged multi-adapter support ([`DecodeCore::new_unmerged`]);
     /// `None` for plain merged cores, whose `step_rows` errors.
     unmerged: Option<UnmergedCore>,
+    /// Fault-injection hook consulted before each executable dispatch
+    /// ([`crate::fault::FaultSite::ExecRun`]). `None` in production —
+    /// the no-fault cost is one branch per dispatch.
+    faults: Option<Arc<dyn crate::fault::FaultInject>>,
     arch_b: usize,
     dims: StateDims,
 }
@@ -686,9 +732,17 @@ impl DecodeCore {
             params,
             dispatches: std::sync::atomic::AtomicU64::new(0),
             unmerged: None,
+            faults: None,
             arch_b: v.batch_b,
             dims: StateDims::of(v),
         })
+    }
+
+    /// Install a fault-injection hook checked before every executable
+    /// dispatch. Serving wires this when the fault knobs are set; cores
+    /// without a hook behave exactly as before.
+    pub fn set_fault_inject(&mut self, faults: Arc<dyn crate::fault::FaultInject>) {
+        self.faults = Some(faults);
     }
 
     /// Like [`DecodeCore::new`], but the core additionally implements
@@ -772,6 +826,9 @@ impl DecodeCore {
                 state: &mut DecodeState, resident_params: bool,
                 extra: &[xla::Literal])
         -> Result<Tensor> {
+        if let Some(f) = &self.faults {
+            f.check(crate::fault::FaultSite::ExecRun)?;
+        }
         self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let tok_lit = crate::runtime::literal_i32(tokens)?;
         let fresh: Vec<xla::Literal> = if resident_params {
@@ -1839,6 +1896,56 @@ mod tests {
         let (conv, ssm) = src.host().unwrap();
         assert_eq!(conv.data, vec![1.0, 1.0, 1.0]);
         assert_eq!(ssm.data, vec![4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn checkpoint_rollback_restores_state() {
+        let d = StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 };
+        let b = 2;
+        let mut st = DecodeState::new(d, b, None);
+        {
+            let (conv, ssm) = st.host_mut().unwrap();
+            conv.data.copy_from_slice(&[1.0, 2.0]);
+            ssm.data.copy_from_slice(&[3.0, 4.0]);
+        }
+        let ck = st.checkpoint().unwrap();
+        {
+            let (conv, ssm) = st.host_mut().unwrap();
+            conv.data.copy_from_slice(&[9.0, 9.0]);
+            ssm.data.copy_from_slice(&[9.0, 9.0]);
+        }
+        st.rollback(&ck).unwrap();
+        let (conv, ssm) = st.host().unwrap();
+        assert_eq!(conv.data, vec![1.0, 2.0]);
+        assert_eq!(ssm.data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn rollback_rejects_mismatched_geometry() {
+        let d = StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 };
+        let ck = DecodeState::new(d, 2, None).checkpoint().unwrap();
+        let mut other = DecodeState::new(d, 3, None);
+        assert!(other.rollback(&ck).is_err());
+    }
+
+    #[test]
+    fn checkpointed_steps_stay_byte_identical() {
+        // a checkpoint between steps must not perturb the decode stream
+        let toks = crate::tensor::IntTensor::from_vec(&[2], vec![3, 7]);
+        let model = Accum::new(2, &[]);
+        let mut state = model.new_state(None);
+        let mut logits_plain = Vec::new();
+        for _ in 0..4 {
+            logits_plain.push(model.step(&toks, &mut state).unwrap().data.clone());
+        }
+        let model2 = Accum::new(2, &[]);
+        let mut state2 = model2.new_state(None);
+        let mut logits_ck = Vec::new();
+        for _ in 0..4 {
+            let _ck = state2.checkpoint().unwrap();
+            logits_ck.push(model2.step(&toks, &mut state2).unwrap().data.clone());
+        }
+        assert_eq!(logits_plain, logits_ck, "checkpointing changed the stream");
     }
 
     #[test]

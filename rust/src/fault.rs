@@ -1,0 +1,314 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! Robustness claims are only as good as the failures they were tested
+//! against, so the crate injects its own: a [`FaultPlan`] decides — purely
+//! from a seed and per-site check counters, never from wall-clock time or
+//! real I/O flakiness — whether a given operation "fails" on this
+//! particular attempt. The same seed always yields the same fault
+//! schedule, which keeps the fault-matrix suite (rust/tests/
+//! fault_injection.rs) reproducible and the module inside the
+//! determinism lint's scope.
+//!
+//! Faults are keyed by [`FaultSite`] — the four operation classes whose
+//! real-world failures the serve layer must survive:
+//!
+//! | site | models |
+//! |------|--------|
+//! | [`FaultSite::ExecRun`] | a failed accelerator dispatch mid-decode |
+//! | [`FaultSite::AdapterLoad`] | a corrupt or missing adapter checkpoint |
+//! | [`FaultSite::ArtifactRead`] | unreadable AOT artifacts / manifest |
+//! | [`FaultSite::StateReadback`] | a failed device→host state readback |
+//!
+//! Production pays a no-op: the hooks hold an `Option<Arc<dyn
+//! FaultInject>>` that is `None` unless the fault knobs are set (see
+//! [`FaultPlan::from_env`]), so the hot path's only cost is a branch on a
+//! `None`. Sites check in with [`FaultInject::check`]; a `Err` return is
+//! injected as a classified [`Error`] that then exercises the *real*
+//! retry/rollback/quarantine machinery downstream.
+//!
+//! Knobs (registered in [`crate::knobs`]): `SSM_PEFT_FAULT_SEED` seeds
+//! the schedule; `SSM_PEFT_FAULT_EXEC`, `SSM_PEFT_FAULT_ADAPTER_LOAD`,
+//! `SSM_PEFT_FAULT_ARTIFACT_READ` and `SSM_PEFT_FAULT_STATE_READBACK`
+//! set per-site fault rates in [0, 1].
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, ErrorKind, Result};
+
+/// One operation class where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A compiled-executable dispatch (decode step, prefill chunk).
+    ExecRun,
+    /// Loading an adapter delta into the registry.
+    AdapterLoad,
+    /// Reading AOT artifacts / manifest bytes (merged-lane model load).
+    ArtifactRead,
+    /// Device→host state readback (checkpoint capture).
+    StateReadback,
+}
+
+impl FaultSite {
+    /// Every site, in a fixed order ([`Self::index`] indexes this).
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::ExecRun,
+        FaultSite::AdapterLoad,
+        FaultSite::ArtifactRead,
+        FaultSite::StateReadback,
+    ];
+
+    /// Stable dense index into per-site arrays.
+    pub fn index(self) -> usize {
+        match self {
+            FaultSite::ExecRun => 0,
+            FaultSite::AdapterLoad => 1,
+            FaultSite::ArtifactRead => 2,
+            FaultSite::StateReadback => 3,
+        }
+    }
+
+    /// Stable label used in injected error messages and telemetry.
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::ExecRun => "exec_run",
+            FaultSite::AdapterLoad => "adapter_load",
+            FaultSite::ArtifactRead => "artifact_read",
+            FaultSite::StateReadback => "state_readback",
+        }
+    }
+}
+
+/// The hook fallible operations consult before doing real work.
+///
+/// Implementations must be deterministic given their own configuration:
+/// the nth [`check`](Self::check) at a given site always gives the same
+/// answer, regardless of threads, wall-clock time, or machine.
+pub trait FaultInject: Send + Sync {
+    /// Called at a fault site immediately before the real operation.
+    /// `Ok(())` lets the operation proceed; `Err` is the injected fault.
+    fn check(&self, site: FaultSite) -> Result<()>;
+}
+
+/// The production implementation: never injects.
+///
+/// Exists so tests can thread "faults disabled" explicitly; the serve
+/// wiring itself prefers `None` over `Some(NoFaults)` to keep the hot
+/// path's no-fault cost to a branch.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoFaults;
+
+impl FaultInject for NoFaults {
+    fn check(&self, _site: FaultSite) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// A deterministic seeded fault schedule.
+///
+/// Each site keeps a check counter; check `n` at site `s` faults when
+/// either `n` is in the site's explicit [`with_fault_at`](
+/// Self::with_fault_at) set, or the site's rate is non-zero and the
+/// splitmix64 hash of `(seed, s, n)` maps below the rate. Both paths are
+/// pure functions of the plan's configuration and the check index.
+pub struct FaultPlan {
+    seed: u64,
+    kind: ErrorKind,
+    rate: [f64; 4],
+    at: [BTreeSet<u64>; 4],
+    counters: [AtomicU64; 4],
+    injected: [AtomicU64; 4],
+}
+
+impl FaultPlan {
+    /// An empty plan (no rates, no explicit faults) with the given seed.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            kind: ErrorKind::Runtime,
+            rate: [0.0; 4],
+            at: std::array::from_fn(|_| BTreeSet::new()),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Set a site's fault rate in [0, 1] (builder style).
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> FaultPlan {
+        self.rate[site.index()] = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Force a fault on exactly the `n`th check (0-based) at a site —
+    /// the precision tool for byte-identity tests that need ONE fault at
+    /// a known point.
+    pub fn with_fault_at(mut self, site: FaultSite, n: u64) -> FaultPlan {
+        self.at[site.index()].insert(n);
+        self
+    }
+
+    /// Classify injected errors as `kind` (default [`ErrorKind::Runtime`],
+    /// which the retry policy treats as transient).
+    pub fn with_kind(mut self, kind: ErrorKind) -> FaultPlan {
+        self.kind = kind;
+        self
+    }
+
+    /// Build a plan from the fault knobs, or `None` when every rate is 0
+    /// (the production case: callers then skip installing any hook).
+    pub fn from_env() -> Option<FaultPlan> {
+        let rates = crate::knobs::fault_rates();
+        if rates.iter().all(|&r| r <= 0.0) {
+            return None;
+        }
+        let mut plan = FaultPlan::seeded(crate::knobs::fault_seed());
+        for (i, &r) in rates.iter().enumerate() {
+            plan.rate[i] = f64::from(r).clamp(0.0, 1.0);
+        }
+        Some(plan)
+    }
+
+    /// How many times a site has checked in.
+    pub fn checks(&self, site: FaultSite) -> u64 {
+        self.counters[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// How many faults a site has injected.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Would check `n` at `site` fault? Pure; does not advance counters.
+    fn hits(&self, site: FaultSite, n: u64) -> bool {
+        let i = site.index();
+        if self.at[i].contains(&n) {
+            return true;
+        }
+        let rate = self.rate[i];
+        rate > 0.0 && unit(splitmix64(self.seed ^ mix(i as u64, n))) < rate
+    }
+}
+
+impl FaultInject for FaultPlan {
+    fn check(&self, site: FaultSite) -> Result<()> {
+        let i = site.index();
+        let n = self.counters[i].fetch_add(1, Ordering::Relaxed);
+        if self.hits(site, n) {
+            self.injected[i].fetch_add(1, Ordering::Relaxed);
+            return Err(Error::new(
+                self.kind,
+                format!("injected fault at {} (check #{n})", site.label()),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// splitmix64: the standard 64-bit finalizer — deterministic, seedable,
+/// and good enough to turn (seed, site, n) into an i.i.d.-looking stream.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Combine site index and check index into one well-spread word.
+fn mix(site: u64, n: u64) -> u64 {
+    splitmix64(site.wrapping_mul(0x517c_c1b7_2722_0a95).wrapping_add(n))
+}
+
+/// Map a hash to the unit interval [0, 1).
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mk = || FaultPlan::seeded(42).with_rate(FaultSite::ExecRun, 0.3);
+        let (a, b) = (mk(), mk());
+        let sched = |p: &FaultPlan| -> Vec<bool> {
+            (0..200).map(|_| p.check(FaultSite::ExecRun).is_err()).collect()
+        };
+        assert_eq!(sched(&a), sched(&b));
+        assert!(a.injected(FaultSite::ExecRun) > 0, "rate 0.3 over 200 checks");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultPlan::seeded(1).with_rate(FaultSite::ExecRun, 0.5);
+        let b = FaultPlan::seeded(2).with_rate(FaultSite::ExecRun, 0.5);
+        let sched = |p: &FaultPlan| -> Vec<bool> {
+            (0..128).map(|_| p.check(FaultSite::ExecRun).is_err()).collect()
+        };
+        assert_ne!(sched(&a), sched(&b));
+    }
+
+    #[test]
+    fn explicit_fault_at_fires_exactly_once() {
+        let p = FaultPlan::seeded(7).with_fault_at(FaultSite::AdapterLoad, 2);
+        let hits: Vec<bool> =
+            (0..6).map(|_| p.check(FaultSite::AdapterLoad).is_err()).collect();
+        assert_eq!(hits, vec![false, false, true, false, false, false]);
+        assert_eq!(p.injected(FaultSite::AdapterLoad), 1);
+        assert_eq!(p.checks(FaultSite::AdapterLoad), 6);
+    }
+
+    #[test]
+    fn sites_have_independent_counters() {
+        let p = FaultPlan::seeded(9).with_fault_at(FaultSite::ExecRun, 0);
+        assert!(p.check(FaultSite::ExecRun).is_err());
+        // other sites are untouched by ExecRun's schedule
+        assert!(p.check(FaultSite::ArtifactRead).is_ok());
+        assert!(p.check(FaultSite::StateReadback).is_ok());
+        assert_eq!(p.checks(FaultSite::ExecRun), 1);
+        assert_eq!(p.checks(FaultSite::ArtifactRead), 1);
+    }
+
+    #[test]
+    fn injected_error_is_classified_and_labeled() {
+        let p = FaultPlan::seeded(1)
+            .with_fault_at(FaultSite::StateReadback, 0)
+            .with_kind(ErrorKind::Io);
+        let e = p.check(FaultSite::StateReadback).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Io);
+        assert!(format!("{e}").contains("state_readback"), "{e}");
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = FaultPlan::seeded(3);
+        assert!((0..64).all(|_| never.check(FaultSite::ExecRun).is_ok()));
+        let always = FaultPlan::seeded(3).with_rate(FaultSite::ExecRun, 1.0);
+        assert!((0..64).all(|_| always.check(FaultSite::ExecRun).is_err()));
+    }
+
+    #[test]
+    fn rate_roughly_matches_over_many_checks() {
+        let p = FaultPlan::seeded(0xF00D).with_rate(FaultSite::ExecRun, 0.25);
+        let n = 4000u64;
+        for _ in 0..n {
+            let _ = p.check(FaultSite::ExecRun);
+        }
+        let frac = p.injected(FaultSite::ExecRun) as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.05, "observed fault rate {frac}");
+    }
+
+    #[test]
+    fn no_faults_is_a_noop() {
+        let nf = NoFaults;
+        assert!((0..8).all(|_| nf.check(FaultSite::ExecRun).is_ok()));
+    }
+
+    #[test]
+    fn site_labels_and_indices_are_stable() {
+        for (i, s) in FaultSite::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.label().is_empty());
+        }
+    }
+}

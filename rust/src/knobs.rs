@@ -67,6 +67,42 @@ pub const KNOBS: &[Knob] = &[
         default: "1.0",
         doc: "Scales bench iteration counts and synthetic model size (0.1 = CI tiny mode).",
     },
+    Knob {
+        name: "SSM_PEFT_MAX_TICKS",
+        kind: KnobKind::Usize,
+        default: "0 (unlimited)",
+        doc: "Scheduler run_to_completion tick budget; active rows drain as failed past it.",
+    },
+    Knob {
+        name: "SSM_PEFT_FAULT_SEED",
+        kind: KnobKind::Usize,
+        default: "0",
+        doc: "Seed for the deterministic fault-injection schedule (fault module).",
+    },
+    Knob {
+        name: "SSM_PEFT_FAULT_EXEC",
+        kind: KnobKind::Float,
+        default: "0.0",
+        doc: "Injected fault rate [0,1] for executable dispatches (decode/prefill steps).",
+    },
+    Knob {
+        name: "SSM_PEFT_FAULT_ADAPTER_LOAD",
+        kind: KnobKind::Float,
+        default: "0.0",
+        doc: "Injected fault rate [0,1] for adapter loads into the registry.",
+    },
+    Knob {
+        name: "SSM_PEFT_FAULT_ARTIFACT_READ",
+        kind: KnobKind::Float,
+        default: "0.0",
+        doc: "Injected fault rate [0,1] for artifact/manifest reads (merged-lane loads).",
+    },
+    Knob {
+        name: "SSM_PEFT_FAULT_STATE_READBACK",
+        kind: KnobKind::Float,
+        default: "0.0",
+        doc: "Injected fault rate [0,1] for device-to-host state readbacks (checkpoints).",
+    },
 ];
 
 /// Registry lookup by full name.
@@ -117,6 +153,33 @@ pub fn bench_scale() -> f32 {
     raw("SSM_PEFT_BENCH_SCALE").and_then(|s| s.parse().ok()).unwrap_or(1.0)
 }
 
+/// `SSM_PEFT_MAX_TICKS`: scheduler run-to-completion tick budget,
+/// default 0 = unlimited.
+pub fn max_ticks() -> usize {
+    raw("SSM_PEFT_MAX_TICKS").and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// `SSM_PEFT_FAULT_SEED`: fault-injection schedule seed, default 0.
+pub fn fault_seed() -> u64 {
+    raw("SSM_PEFT_FAULT_SEED").and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// Per-site injected fault rates, in [`crate::fault::FaultSite::ALL`]
+/// order: `SSM_PEFT_FAULT_EXEC`, `SSM_PEFT_FAULT_ADAPTER_LOAD`,
+/// `SSM_PEFT_FAULT_ARTIFACT_READ`, `SSM_PEFT_FAULT_STATE_READBACK`.
+/// All default 0.0 (faults off).
+pub fn fault_rates() -> [f32; 4] {
+    let get = |name: &str| -> f32 {
+        raw(name).and_then(|s| s.parse().ok()).unwrap_or(0.0)
+    };
+    [
+        get("SSM_PEFT_FAULT_EXEC"),
+        get("SSM_PEFT_FAULT_ADAPTER_LOAD"),
+        get("SSM_PEFT_FAULT_ARTIFACT_READ"),
+        get("SSM_PEFT_FAULT_STATE_READBACK"),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +206,15 @@ mod tests {
     fn lookup_finds_registered_only() {
         assert!(lookup("SSM_PEFT_WORKERS").is_some());
         assert!(lookup("SSM_PEFT_NOPE").is_none());
+    }
+
+    #[test]
+    fn fault_knobs_registered_and_default_off() {
+        assert!(lookup("SSM_PEFT_MAX_TICKS").is_some());
+        assert!(lookup("SSM_PEFT_FAULT_SEED").is_some());
+        for r in fault_rates() {
+            assert!(r.is_finite());
+        }
     }
 
     #[test]

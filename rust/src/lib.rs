@@ -31,6 +31,8 @@
 //! - [`bench`] — timing harness used by `cargo bench` targets + the
 //!   `bench hotpath` telemetry ([`bench::hotpath`])
 //! - [`error`] — the crate-wide [`error::Error`]/[`error::Result`] taxonomy
+//! - [`fault`] — deterministic seeded fault injection for the serve stack
+//!   (rust/docs/robustness.md)
 //! - [`knobs`] — the typed `SSM_PEFT_*` environment-knob registry
 //! - [`lint`] — repolint, the first-party static-analysis pass (`lint` CLI)
 //! - [`xla`] — in-tree PJRT facade (host-side literals + device stub)
@@ -43,6 +45,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod eval;
+pub mod fault;
 pub mod json;
 pub mod knobs;
 pub mod lint;

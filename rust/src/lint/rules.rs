@@ -79,10 +79,15 @@ pub struct UnsafeSite {
 }
 
 /// Files the determinism rule covers: the fused-optimizer step, the
-/// training loop that feeds suite records, and the record writer itself.
-/// (Workspace-relative paths.)
-pub const DETERMINISM_SCOPE: &[&str] =
-    &["rust/src/optim.rs", "rust/src/train/mod.rs", "rust/src/suite/record.rs"];
+/// training loop that feeds suite records, the record writer itself, and
+/// the fault-injection schedule (whose whole contract is seeded
+/// reproducibility). (Workspace-relative paths.)
+pub const DETERMINISM_SCOPE: &[&str] = &[
+    "rust/src/optim.rs",
+    "rust/src/train/mod.rs",
+    "rust/src/suite/record.rs",
+    "rust/src/fault.rs",
+];
 
 /// Scope flags for one file, derived from its workspace-relative path.
 #[derive(Debug, Clone, Copy)]

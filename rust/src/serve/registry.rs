@@ -24,14 +24,15 @@
 //! machinery is unit-testable without artifacts; [`ManifestSource`] is the
 //! real policy used by the `serve` subcommand.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::{Context, Error, ErrorKind, Result};
+use crate::fault::{FaultInject, FaultSite};
 
 use crate::eval::{AdapterDelta, LoraOp, SparseOffset};
 use crate::manifest::{Manifest, PeftMeta};
@@ -114,6 +115,11 @@ pub struct RegistryStats {
     /// delta-sized accounting, demonstrating KBs/adapter instead of
     /// whole-model copies.
     pub resident_bytes: usize,
+    /// Adapters currently quarantined by the circuit breaker.
+    pub quarantined: usize,
+    /// Outstanding pin count across all adapters. Zero whenever the
+    /// scheduler is idle — a non-zero value then is a leaked pin.
+    pub pins: usize,
 }
 
 struct Inner {
@@ -123,6 +129,11 @@ struct Inner {
     /// Pin counts: adapters referenced by in-flight scheduler rows. The
     /// eviction pass skips pinned names (exceeding `cap` when necessary).
     pins: BTreeMap<String, usize>,
+    /// Terminal failures per adapter ([`AdapterRegistry::record_failure`]).
+    failures: BTreeMap<String, u32>,
+    /// Adapters past the failure threshold: [`AdapterRegistry::get`]
+    /// rejects them until [`AdapterRegistry::reinstate`].
+    quarantined: BTreeSet<String>,
 }
 
 /// LRU-capped adapter cache. `get` is the only entry point: hit moves the
@@ -135,7 +146,16 @@ pub struct AdapterRegistry<S> {
     hits: AtomicUsize,
     misses: AtomicUsize,
     evictions: AtomicUsize,
+    /// Terminal failures before an adapter is quarantined.
+    quarantine_threshold: u32,
+    /// Fault-injection hook for the adapter-load and artifact-read sites
+    /// (`None` in production: a no-op).
+    faults: Option<Arc<dyn FaultInject>>,
 }
+
+/// Terminal failures before [`AdapterRegistry::record_failure`] opens the
+/// circuit for an adapter (overridable per registry).
+pub const DEFAULT_QUARANTINE_THRESHOLD: u32 = 3;
 
 impl<S: AdapterSource> AdapterRegistry<S> {
     /// New registry holding at most `cap` materialized adapters (min 1).
@@ -147,17 +167,72 @@ impl<S: AdapterSource> AdapterRegistry<S> {
                 map: BTreeMap::new(),
                 order: VecDeque::new(),
                 pins: BTreeMap::new(),
+                failures: BTreeMap::new(),
+                quarantined: BTreeSet::new(),
             }),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
+            quarantine_threshold: DEFAULT_QUARANTINE_THRESHOLD,
+            faults: None,
         }
+    }
+
+    /// Override the circuit-breaker threshold (min 1).
+    pub fn set_quarantine_threshold(&mut self, threshold: u32) {
+        self.quarantine_threshold = threshold.max(1);
+    }
+
+    /// Install the fault-injection hook (adapter-load + artifact-read
+    /// sites).
+    pub fn set_fault_inject(&mut self, faults: Arc<dyn FaultInject>) {
+        self.faults = Some(faults);
+    }
+
+    /// Count one terminal failure against `name`; returns `true` when this
+    /// call crossed the threshold and quarantined the adapter. The cached
+    /// delta is dropped so a later [`AdapterRegistry::reinstate`] reloads
+    /// from scratch.
+    pub fn record_failure(&self, name: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let n = inner.failures.entry(name.to_string()).or_insert(0);
+        *n += 1;
+        if *n >= self.quarantine_threshold && !inner.quarantined.contains(name) {
+            inner.quarantined.insert(name.to_string());
+            inner.map.remove(name);
+            inner.order.retain(|k| k != name);
+            return true;
+        }
+        false
+    }
+
+    /// Whether the circuit breaker currently rejects `name`.
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .quarantined
+            .contains(name)
+    }
+
+    /// Close the circuit for `name`: clear its failure count and admit it
+    /// again (operator action — nothing reinstates automatically).
+    pub fn reinstate(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        inner.failures.remove(name);
+        inner.quarantined.remove(name);
     }
 
     /// Fetch (materializing on first use) the adapter for `name`.
     pub fn get(&self, name: &str) -> Result<Arc<Adapter>> {
         {
             let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if inner.quarantined.contains(name) {
+                return Err(Error::new(
+                    ErrorKind::Request,
+                    format!("adapter {name:?} is quarantined after repeated failures"),
+                ));
+            }
             if let Some(a) = inner.map.get(name).cloned() {
                 // refresh recency
                 inner.order.retain(|k| k != name);
@@ -169,6 +244,10 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         // materialize outside the lock: a slow load must not block stats
         // readers; the serve loop admits sequentially so duplicate loads
         // don't arise in practice (and would only waste work, not break)
+        if let Some(f) = &self.faults {
+            f.check(FaultSite::AdapterLoad)
+                .with_context(|| format!("loading adapter {name:?}"))?;
+        }
         let adapter = Arc::new(self.source.load(name)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -199,6 +278,16 @@ impl<S: AdapterSource> AdapterRegistry<S> {
     /// bypassing the delta cache — the serving fallback for adapters whose
     /// [`Adapter::delta`] is `None`.
     pub fn load_merged(&self, name: &str) -> Result<BTreeMap<String, Tensor>> {
+        if self.is_quarantined(name) {
+            return Err(Error::new(
+                ErrorKind::Request,
+                format!("adapter {name:?} is quarantined after repeated failures"),
+            ));
+        }
+        if let Some(f) = &self.faults {
+            f.check(FaultSite::ArtifactRead)
+                .with_context(|| format!("reading merged parameters for {name:?}"))?;
+        }
         self.source.load_merged(name)
     }
 
@@ -210,10 +299,17 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         *inner.pins.entry(name.to_string()).or_insert(0) += 1;
     }
 
-    /// Release one pin on `name` (no-op when not pinned); at zero the
-    /// adapter becomes evictable again on the next cache insertion.
+    /// Release one pin on `name`; at zero the adapter becomes evictable
+    /// again on the next cache insertion. An unpin without a matching pin
+    /// is a release-protocol bug (the scheduler must report each factory
+    /// `Shared` result exactly once): debug builds assert, release builds
+    /// treat it as a no-op.
     pub fn unpin(&self, name: &str) {
         let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        debug_assert!(
+            inner.pins.get(name).copied().unwrap_or(0) > 0,
+            "unpin without a matching pin: {name:?}"
+        );
         if let Some(n) = inner.pins.get_mut(name) {
             *n = n.saturating_sub(1);
             if *n == 0 {
@@ -236,6 +332,8 @@ impl<S: AdapterSource> AdapterRegistry<S> {
             evictions: self.evictions.load(Ordering::Relaxed),
             resident: inner.map.len(),
             resident_bytes: inner.map.values().map(|a| a.resident_bytes()).sum(),
+            quarantined: inner.quarantined.len(),
+            pins: inner.pins.values().sum(),
         }
     }
 }
@@ -661,5 +759,102 @@ mod tests {
         assert_eq!(reg.stats().resident_bytes, 2 * delta_bytes);
         // and the closure source refuses merged materialization by default
         assert!(reg.load_merged("x").is_err());
+    }
+
+    #[test]
+    fn circuit_breaker_quarantines_after_threshold() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads.clone()), 4);
+        reg.get("a").unwrap();
+        assert!(!reg.record_failure("a"));
+        assert!(!reg.record_failure("a"));
+        assert!(!reg.is_quarantined("a"));
+        assert!(reg.get("a").is_ok(), "below threshold: still served");
+        assert!(reg.record_failure("a"), "third failure opens the circuit");
+        assert!(reg.is_quarantined("a"));
+        assert!(!reg.contains("a"), "quarantine drops the cached delta");
+        let e = reg.get("a").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Request);
+        assert!(format!("{e}").contains("quarantined"), "{e}");
+        assert!(reg.load_merged("a").is_err(), "merged path rejects too");
+        assert_eq!(reg.stats().quarantined, 1);
+        // repeated failures don't "re-open" an open circuit
+        assert!(!reg.record_failure("a"));
+        // other adapters are unaffected
+        reg.get("b").unwrap();
+        // operator reinstatement closes the circuit and reloads
+        let before = loads.load(Ordering::Relaxed);
+        reg.reinstate("a");
+        assert!(!reg.is_quarantined("a"));
+        reg.get("a").unwrap();
+        assert_eq!(loads.load(Ordering::Relaxed), before + 1, "fresh load");
+        assert_eq!(reg.stats().quarantined, 0);
+    }
+
+    #[test]
+    fn injected_load_faults_are_classified() {
+        use crate::fault::FaultPlan;
+        let loads = Arc::new(AtomicUsize::new(0));
+        let plan = Arc::new(
+            FaultPlan::seeded(3)
+                .with_fault_at(FaultSite::AdapterLoad, 0)
+                .with_fault_at(FaultSite::ArtifactRead, 0),
+        );
+        let mut reg = AdapterRegistry::new(counting_source(loads.clone()), 4);
+        reg.set_fault_inject(plan.clone());
+        let e = reg.get("a").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Runtime, "plan's default kind survives");
+        assert_eq!(loads.load(Ordering::Relaxed), 0,
+                   "fault fires before the source loads");
+        assert!(!reg.contains("a"), "failed load caches nothing");
+        assert!(reg.load_merged("a").unwrap_err().kind() == ErrorKind::Runtime);
+        // the next checks pass (single-shot faults) — the cache recovers
+        reg.get("a").unwrap();
+        assert_eq!(plan.injected(FaultSite::AdapterLoad), 1);
+        assert_eq!(plan.injected(FaultSite::ArtifactRead), 1);
+    }
+
+    #[test]
+    fn pin_balance_survives_churn_with_injected_errors() {
+        // seeded property: interleaved get/pin/unpin churn where loads
+        // randomly fail — every successful get is pinned once and unpinned
+        // once, so the outstanding pin count must come back to zero
+        use crate::fault::FaultPlan;
+        use crate::tensor::Rng;
+        let loads = Arc::new(AtomicUsize::new(0));
+        let plan =
+            Arc::new(FaultPlan::seeded(42).with_rate(FaultSite::AdapterLoad, 0.3));
+        let mut reg = AdapterRegistry::new(counting_source(loads), 2);
+        reg.set_fault_inject(plan);
+        let mut rng = Rng::new(99);
+        let names = ["a", "b", "c", "d", "bad"];
+        let mut held: Vec<String> = Vec::new();
+        for _ in 0..200 {
+            let name = names[(rng.next_u64() % names.len() as u64) as usize];
+            if rng.next_u64() % 2 == 0 || held.is_empty() {
+                if reg.get(name).is_ok() {
+                    reg.pin(name);
+                    held.push(name.to_string());
+                }
+            } else {
+                let i = (rng.next_u64() % held.len() as u64) as usize;
+                let name = held.swap_remove(i);
+                reg.unpin(&name);
+            }
+        }
+        for name in held.drain(..) {
+            reg.unpin(&name);
+        }
+        assert_eq!(reg.stats().pins, 0, "every pin released exactly once");
+    }
+
+    #[test]
+    #[should_panic(expected = "unpin without a matching pin")]
+    #[cfg(debug_assertions)]
+    fn unbalanced_unpin_asserts_in_debug() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = AdapterRegistry::new(counting_source(loads), 2);
+        reg.get("a").unwrap();
+        reg.unpin("a");
     }
 }

@@ -52,6 +52,9 @@ pub struct ServeOptions {
     pub stats_name: String,
     /// Directory searched for `<variant>.ckpt` trained adapters.
     pub adapter_dir: Option<PathBuf>,
+    /// Default per-request deadline in scheduler ticks (0 = none), used
+    /// when a request omits `deadline`.
+    pub deadline: usize,
 }
 
 impl Default for ServeOptions {
@@ -66,13 +69,15 @@ impl Default for ServeOptions {
             default_max_new: 48,
             stats_name: "serve".into(),
             adapter_dir: None,
+            deadline: 0,
         }
     }
 }
 
 impl ServeOptions {
     /// Parse CLI `key=value` overrides: `arch`, `pretrain_steps`, `addr`,
-    /// `stdin` (0/1), `cache`, `lanes`, `max_new`, `name`, `adapter_dir`.
+    /// `stdin` (0/1), `cache`, `lanes`, `max_new`, `name`, `adapter_dir`,
+    /// `deadline`.
     pub fn from_kvs(kvs: &std::collections::BTreeMap<String, String>) -> Result<ServeOptions> {
         let mut o = ServeOptions::default();
         for (k, v) in kvs {
@@ -86,6 +91,7 @@ impl ServeOptions {
                 "max_new" => o.default_max_new = v.parse().context("max_new")?,
                 "name" => o.stats_name = v.clone(),
                 "adapter_dir" => o.adapter_dir = Some(PathBuf::from(v)),
+                "deadline" => o.deadline = v.parse().context("deadline")?,
                 other => bail!("unknown serve option {other:?}"),
             }
         }
@@ -129,9 +135,13 @@ struct WireRequest {
     max_new: usize,
     stop_byte: u8,
     beam: usize,
+    /// Per-request deadline override in ticks; `None` falls back to
+    /// [`ServeOptions::deadline`].
+    deadline: Option<usize>,
 }
 
-const REQUEST_KEYS: &[&str] = &["id", "adapter", "prompt", "max_new", "stop", "beam"];
+const REQUEST_KEYS: &[&str] =
+    &["id", "adapter", "prompt", "max_new", "stop", "beam", "deadline"];
 
 fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
     let v = json::parse(line).map_err(|e| err!("bad request JSON: {e}"))?;
@@ -173,6 +183,10 @@ fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
         Some(n) => n.as_usize().ok_or_else(|| err!("beam: expected number"))?.max(1),
         None => 1,
     };
+    let deadline = match obj.get("deadline") {
+        Some(n) => Some(n.as_usize().ok_or_else(|| err!("deadline: expected number"))?),
+        None => None,
+    };
     Ok(WireRequest {
         client_id: obj.get("id").cloned().unwrap_or(Value::Null),
         adapter,
@@ -180,6 +194,7 @@ fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
         max_new,
         stop_byte,
         beam,
+        deadline,
     })
 }
 
@@ -195,6 +210,7 @@ fn response_json(resp: &Response, client_id: &Value) -> Value {
         ("total_s", json::num(resp.total_s)),
         ("tok_per_s", json::num(resp.tok_per_s())),
         ("steps", json::num(resp.steps as f64)),
+        ("retries", json::num(resp.retries as f64)),
         ("finish", json::s(resp.finish.label())),
         (
             "error",
@@ -231,6 +247,7 @@ impl ServeRecord<'_> {
             ("total_s", json::num(self.resp.total_s)),
             ("tok_per_s", json::num(self.resp.tok_per_s())),
             ("steps", json::num(self.resp.steps as f64)),
+            ("retries", json::num(self.resp.retries as f64)),
             ("finish", json::s(self.resp.finish.label())),
             (
                 "error",
@@ -261,7 +278,17 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
         base: base.clone(),
         adapter_dir: opts.adapter_dir.clone(),
     };
-    let registry = AdapterRegistry::new(source, opts.cache_cap);
+    // seeded fault injection, active only when the fault knobs ask for it
+    // (rust/docs/robustness.md); production runs with `None` everywhere
+    let fault_plan = crate::fault::FaultPlan::from_env().map(Arc::new);
+    if fault_plan.is_some() {
+        eprintln!("[serve] fault injection active (seeded from the fault knobs)");
+    }
+    let mut registry = AdapterRegistry::new(source, opts.cache_cap);
+    if let Some(p) = &fault_plan {
+        registry.set_fault_inject(p.clone());
+    }
+    let registry = registry;
     // the unmerged multi-adapter core: ONE executable bound to the plain
     // base, stepping a mixed-adapter batch with per-row deltas. When it
     // can't be built (e.g. unknown decode variant) every adapter falls
@@ -269,7 +296,7 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     let decode_variant = format!("{}_full", opts.arch);
     let shared_core: Option<Arc<DecodeCore>> =
         match DecodeCore::new_unmerged(engine, manifest, &decode_variant, base.clone()) {
-            Ok(core) => {
+            Ok(mut core) => {
                 eprintln!(
                     "[serve] unmerged multi-adapter decode ready ({})",
                     if core.has_adapter_artifact() {
@@ -278,6 +305,9 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
                         "grouped host fallback"
                     }
                 );
+                if let Some(p) = &fault_plan {
+                    core.set_fault_inject(p.clone());
+                }
                 Some(Arc::new(core))
             }
             Err(e) => {
@@ -305,6 +335,24 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     });
     let mut sched = Scheduler::new(factory, opts.max_lanes);
     sched.on_release(Box::new(|adapter: &str| registry.unpin(adapter)));
+    if let Some(p) = &fault_plan {
+        sched.set_fault_inject(p.clone());
+    }
+    // terminal per-adapter step failures feed the registry's circuit
+    // breaker; past the threshold the adapter is rejected at admission
+    sched.on_adapter_failure(Box::new(|adapter: &str, _kind| {
+        if registry.record_failure(adapter) {
+            eprintln!("[serve] adapter {adapter:?} quarantined after repeated failures");
+        }
+    }));
+    // demotion target for shared-batch rows after a terminal shared step
+    // failure: a dedicated merged lane (rung two of the cascade)
+    sched.set_merged_fallback(Box::new(|adapter: &str| {
+        let a = registry.get(adapter)?;
+        let params = registry.load_merged(adapter)?;
+        let core = DecodeCore::new(engine, manifest, &a.decode_variant, &params)?;
+        Ok(LaneModel { model: Arc::new(core), h0: a.h0.clone() })
+    }));
 
     let (tx, rx) = mpsc::channel::<(String, Sink)>();
     if opts.stdin {
@@ -368,6 +416,7 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
                     max_new: w.max_new,
                     stop_byte: w.stop_byte,
                     beam: w.beam,
+                    deadline: w.deadline.unwrap_or(opts.deadline),
                 });
             }
             Err(e) => {
@@ -425,6 +474,15 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
         sched.prefill_dispatches, sched.prefill_tokens, st.hits, st.misses,
         st.evictions, st.resident_bytes as f64 / 1024.0,
     );
+    if sched.step_faults + sched.deadline_failures + st.quarantined as u64 > 0 {
+        eprintln!(
+            "[serve] resilience: {} step faults ({} retried in place, {} rows \
+             demoted), {} deadline failures, {} adapters quarantined, \
+             {} pins outstanding",
+            sched.step_faults, sched.step_retries, sched.demotions,
+            sched.deadline_failures, st.quarantined, st.pins,
+        );
+    }
     Ok(())
 }
 
@@ -437,7 +495,7 @@ mod tests {
     fn parse_request_full_and_defaults() {
         let w = parse_request(
             r#"{"id": 7, "adapter": "a_lora_lin", "prompt": "hi", "max_new": 5,
-                "stop": "\n", "beam": 2}"#,
+                "stop": "\n", "beam": 2, "deadline": 12}"#,
             48,
         )
         .unwrap();
@@ -446,12 +504,14 @@ mod tests {
         assert_eq!(w.max_new, 5);
         assert_eq!(w.stop_byte, b'\n');
         assert_eq!(w.beam, 2);
+        assert_eq!(w.deadline, Some(12));
         assert_eq!(w.client_id, Value::Num(7.0));
 
         let w = parse_request(r#"{"adapter": "a", "prompt": "x"}"#, 48).unwrap();
         assert_eq!(w.max_new, 48);
         assert_eq!(w.stop_byte, b'\n');
         assert_eq!(w.beam, 1);
+        assert_eq!(w.deadline, None, "falls back to the serve-level default");
         assert_eq!(w.client_id, Value::Null);
     }
 
@@ -482,12 +542,14 @@ mod tests {
             steps: 6,
             finish: FinishReason::Stop,
             error: None,
+            retries: 1,
         };
         let v = response_json(&resp, &Value::Str("req-1".into()));
         assert_eq!(v.path("id").unwrap().as_str(), Some("req-1"));
         assert_eq!(v.path("output").unwrap().as_str(), Some("out"));
         assert_eq!(v.path("new_tokens").unwrap().as_usize(), Some(3));
         assert_eq!(v.path("finish").unwrap().as_str(), Some("stop"));
+        assert_eq!(v.path("retries").unwrap().as_usize(), Some(1));
         assert_eq!(v.path("error"), Some(&Value::Null));
         // 3 bytes over 0.5s of slot occupancy (total 1.0 minus 0.5 queued)
         assert_eq!(v.path("tok_per_s").unwrap().as_f64(), Some(6.0));
@@ -508,11 +570,13 @@ mod tests {
         kv.insert("cache".to_string(), "2".to_string());
         kv.insert("addr".to_string(), "127.0.0.1:0".to_string());
         kv.insert("stdin".to_string(), "0".to_string());
+        kv.insert("deadline".to_string(), "64".to_string());
         let o = ServeOptions::from_kvs(&kv).unwrap();
         assert_eq!(o.arch, "mamba2_xs");
         assert_eq!(o.cache_cap, 2);
         assert!(!o.stdin);
         assert_eq!(o.addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(o.deadline, 64);
 
         let mut bad = std::collections::BTreeMap::new();
         bad.insert("stdin".to_string(), "0".to_string());

@@ -1,0 +1,590 @@
+//! Robustness acceptance suite: deterministic seeded fault injection
+//! through the full serving stack, on host mocks (runs without `make
+//! artifacts`; CI's `fault-smoke` step executes exactly this file).
+//!
+//! Pins the PR-8 contracts (rust/docs/robustness.md):
+//!
+//! - faults disabled => bytes and step counts identical to a fault-free run
+//! - transient exec faults are retried in place after rollback, and the
+//!   retried request's bytes match a fault-free reference
+//! - terminal faults produce typed `failed:*` finishes, never hangs
+//! - a poisoned adapter in the shared batch demotes the batch to merged
+//!   lanes, gets quarantined by the circuit breaker, and leaves innocent
+//!   rows byte-identical to solo runs
+//! - registry pins balance to zero after churn with injected errors
+//! - deadlines and the tick budget bound every request's lifetime
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use ssm_peft::error::{Error, ErrorKind, Result};
+use ssm_peft::eval::{
+    AdapterDelta, AdapterRow, AdapterStepDecode, DecodeState, SparseOffset, StateDims,
+    StepDecode,
+};
+use ssm_peft::fault::{FaultInject, FaultPlan, FaultSite};
+use ssm_peft::manifest::PeftMeta;
+use ssm_peft::serve::{
+    Adapter, AdapterRegistry, LaneModel, Request, Response, Scheduler, ServeFactory,
+    ServeModel,
+};
+use ssm_peft::suite::PeftMethod;
+use ssm_peft::tensor::{IntTensor, Rng, Tensor};
+
+// ---------------------------------------------------------------- mocks
+// Local rolling-hash decode mocks (the crate's internal test mocks are
+// not exported): every f32 op stays far below 2^24, so the recurrence is
+// exact and byte-equivalence assertions are meaningful.
+
+fn val(t: i32) -> f32 {
+    if (0..256).contains(&t) {
+        t as f32
+    } else {
+        1.0 // BOS / PAD
+    }
+}
+
+fn advance(a: f32, prev: f32, t: i32, off: f32) -> (f32, f32) {
+    let v = val(t);
+    ((a * 33.0 + v + prev + off) % 251.0, v)
+}
+
+fn one_hot(b: usize, hashes: &[f32]) -> Tensor {
+    let mut l = Tensor::zeros(&[b, 256]);
+    for r in 0..b {
+        l.data[r * 256 + (hashes[r] as usize) % 256] = 10.0;
+    }
+    l
+}
+
+fn mock_dims() -> StateDims {
+    StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 }
+}
+
+/// Merged-lane mock: one model-wide hash offset stands in for "merged
+/// adapter weights".
+struct Roll {
+    b: usize,
+    off: f32,
+}
+
+impl StepDecode for Roll {
+    fn arch_b(&self) -> usize {
+        self.b
+    }
+    fn dims(&self) -> StateDims {
+        mock_dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        let (conv, ssm) = state.host_mut()?;
+        let mut hashes = vec![0.0f32; self.b];
+        for r in 0..self.b {
+            let (a, v) = advance(ssm.data[r], conv.data[r], tokens.data[r], self.off);
+            ssm.data[r] = a;
+            conv.data[r] = v;
+            hashes[r] = a;
+        }
+        Ok(one_hot(self.b, &hashes))
+    }
+}
+
+/// [`Roll`] whose exec site consults a fault plan BEFORE touching state
+/// (the real `DecodeCore::run_exec` ordering), so a faulted step leaves
+/// the state untouched and a post-rollback retry is byte-identical.
+struct FaultyRoll {
+    inner: Roll,
+    plan: Arc<FaultPlan>,
+}
+
+impl StepDecode for FaultyRoll {
+    fn arch_b(&self) -> usize {
+        self.inner.arch_b()
+    }
+    fn dims(&self) -> StateDims {
+        self.inner.dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        self.plan.check(FaultSite::ExecRun)?;
+        self.inner.step(tokens, state)
+    }
+}
+
+/// Shared-lane mock: each row's offset comes from that row's delta (first
+/// sparse value). `poison` marks one offset as a corrupt adapter whose
+/// presence fails the whole batched dispatch — the scenario the
+/// degradation cascade exists for.
+struct RollShared {
+    b: usize,
+    plan: Option<Arc<FaultPlan>>,
+    poison: Option<f32>,
+}
+
+fn row_off(row: &AdapterRow) -> f32 {
+    row.as_ref()
+        .and_then(|d| d.sparse.first())
+        .and_then(|s| s.val.first())
+        .copied()
+        .unwrap_or(0.0)
+}
+
+impl StepDecode for RollShared {
+    fn arch_b(&self) -> usize {
+        self.b
+    }
+    fn dims(&self) -> StateDims {
+        mock_dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        let rows: Vec<AdapterRow> = vec![None; self.b];
+        self.step_rows(tokens, state, &rows)
+    }
+}
+
+impl AdapterStepDecode for RollShared {
+    fn step_rows(&self, tokens: &IntTensor, state: &mut DecodeState,
+                 rows: &[AdapterRow]) -> Result<Tensor> {
+        assert_eq!(rows.len(), self.b);
+        if let Some(p) = &self.plan {
+            p.check(FaultSite::ExecRun)?;
+        }
+        if let Some(bad) = self.poison {
+            if rows.iter().any(|r| row_off(r) == bad) {
+                return Err(Error::new(
+                    ErrorKind::Invariant,
+                    "poisoned adapter delta in batch",
+                ));
+            }
+        }
+        let (conv, ssm) = state.host_mut()?;
+        let mut hashes = vec![0.0f32; self.b];
+        for r in 0..self.b {
+            let (a, v) =
+                advance(ssm.data[r], conv.data[r], tokens.data[r], row_off(&rows[r]));
+            ssm.data[r] = a;
+            conv.data[r] = v;
+            hashes[r] = a;
+        }
+        Ok(one_hot(self.b, &hashes))
+    }
+}
+
+/// Merged lane standing in for unusably corrupt adapter parameters.
+struct FailingStep;
+
+impl StepDecode for FailingStep {
+    fn arch_b(&self) -> usize {
+        1
+    }
+    fn dims(&self) -> StateDims {
+        mock_dims()
+    }
+    fn step(&self, _tokens: &IntTensor, _state: &mut DecodeState) -> Result<Tensor> {
+        Err(Error::new(ErrorKind::Invariant, "poisoned adapter parameters"))
+    }
+}
+
+fn delta(off: f32) -> Arc<AdapterDelta> {
+    Arc::new(AdapterDelta {
+        meta: PeftMeta {
+            method: PeftMethod::Sdt,
+            rank: 0,
+            alpha: 0,
+            targets: Vec::new(),
+            n_tokens: 0,
+        },
+        lora: Vec::new(),
+        sparse: vec![SparseOffset { param: "off".into(), idx: vec![0], val: vec![off] }],
+        h0: BTreeMap::new(),
+    })
+}
+
+fn req(id: u64, adapter: &str, max_new: usize) -> Request {
+    Request {
+        id,
+        adapter: adapter.into(),
+        prompt: vec![(id * 7 % 200) as u8 + 1, 42],
+        max_new,
+        // hashes land in [0, 250], so generation always runs to max_new
+        stop_byte: 255,
+        beam: 1,
+        deadline: 0,
+    }
+}
+
+/// Run `reqs` through a fresh scheduler to completion, sorted by id.
+fn drive(factory: ServeFactory, reqs: Vec<Request>) -> Vec<Response> {
+    let mut sched = Scheduler::new(factory, 4);
+    for r in reqs {
+        sched.submit(r);
+    }
+    let mut out = sched.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+/// Fault-free reference: the same request on a dedicated merged lane.
+fn solo(off: f32, r: Request) -> Response {
+    let factory: ServeFactory = Box::new(move |_: &str| {
+        Ok(ServeModel::Merged(LaneModel { model: Arc::new(Roll { b: 1, off }), h0: None }))
+    });
+    drive(factory, vec![r]).pop().unwrap()
+}
+
+// ---------------------------------------------------------------- tests
+
+#[test]
+fn disabled_faults_leave_bytes_and_steps_identical() {
+    // installing the fault layer with an empty plan (no rates, no
+    // schedule) must not change a single byte or step count
+    let mk_factory = || -> ServeFactory {
+        Box::new(|a: &str| {
+            let off = if a == "a" { 3.0 } else { 5.0 };
+            Ok(ServeModel::Merged(LaneModel {
+                model: Arc::new(Roll { b: 1, off }),
+                h0: None,
+            }))
+        })
+    };
+    let reqs = vec![req(1, "a", 8), req(2, "b", 6)];
+    let want = drive(mk_factory(), reqs.clone());
+
+    let mut sched = Scheduler::new(mk_factory(), 4);
+    let plan = Arc::new(FaultPlan::seeded(7)); // empty: never injects
+    sched.set_fault_inject(plan.clone());
+    for r in reqs {
+        sched.submit(r);
+    }
+    let mut got = sched.run_to_completion();
+    got.sort_by_key(|r| r.id);
+
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert!(g.error.is_none(), "request {} failed: {:?}", g.id, g.error);
+        assert_eq!(g.output, w.output, "fault layer perturbed request {}", g.id);
+        assert_eq!(g.steps, w.steps, "fault layer changed step count for {}", g.id);
+    }
+    assert_eq!(plan.injected(FaultSite::ExecRun), 0);
+}
+
+#[test]
+fn transient_exec_fault_retries_to_identical_bytes() {
+    // a single transient exec fault rolls back, retries in place, and the
+    // finished request is byte-identical to a fault-free reference
+    let plan = Arc::new(FaultPlan::seeded(5).with_fault_at(FaultSite::ExecRun, 2));
+    let p = plan.clone();
+    let factory: ServeFactory = Box::new(move |_: &str| {
+        Ok(ServeModel::Merged(LaneModel {
+            model: Arc::new(FaultyRoll { inner: Roll { b: 1, off: 4.0 }, plan: p.clone() }),
+            h0: None,
+        }))
+    });
+    let mut sched = Scheduler::new(factory, 4);
+    sched.set_fault_inject(plan.clone());
+    sched.submit(req(1, "a", 8));
+    let out = sched.run_to_completion();
+
+    assert_eq!(out.len(), 1);
+    assert!(out[0].error.is_none(), "retry did not recover: {:?}", out[0].error);
+    assert_eq!(out[0].output, solo(4.0, req(1, "a", 8)).output);
+    assert_eq!(plan.injected(FaultSite::ExecRun), 1);
+    assert_eq!(sched.step_faults, 1);
+    assert_eq!(sched.step_retries, 1);
+}
+
+#[test]
+fn terminal_exec_fault_types_the_failure() {
+    // a non-transient fault is not retried: the request retires with a
+    // typed `failed:*` finish carrying the injected error
+    let plan = Arc::new(
+        FaultPlan::seeded(6)
+            .with_fault_at(FaultSite::ExecRun, 1)
+            .with_kind(ErrorKind::Invariant),
+    );
+    let p = plan.clone();
+    let factory: ServeFactory = Box::new(move |_: &str| {
+        Ok(ServeModel::Merged(LaneModel {
+            model: Arc::new(FaultyRoll { inner: Roll { b: 1, off: 2.0 }, plan: p.clone() }),
+            h0: None,
+        }))
+    });
+    let mut sched = Scheduler::new(factory, 4);
+    sched.set_fault_inject(plan);
+    sched.submit(req(1, "a", 8));
+    let out = sched.run_to_completion();
+
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish.label(), "failed:invariant");
+    let msg = out[0].error.as_deref().unwrap_or("");
+    assert!(msg.contains("injected fault"), "error lost its cause: {msg}");
+    assert_eq!(sched.step_retries, 0);
+}
+
+#[test]
+fn readback_fault_disables_retry_for_transient_step() {
+    // when the pre-step checkpoint itself cannot be taken (state readback
+    // faults), a transient step error has nothing to roll back to and
+    // must fail terminally instead of retrying on corrupt state
+    let plan = Arc::new(
+        FaultPlan::seeded(8)
+            .with_fault_at(FaultSite::ExecRun, 2)
+            .with_rate(FaultSite::StateReadback, 1.0),
+    );
+    let p = plan.clone();
+    let factory: ServeFactory = Box::new(move |_: &str| {
+        Ok(ServeModel::Merged(LaneModel {
+            model: Arc::new(FaultyRoll { inner: Roll { b: 1, off: 2.0 }, plan: p.clone() }),
+            h0: None,
+        }))
+    });
+    let mut sched = Scheduler::new(factory, 4);
+    sched.set_fault_inject(plan);
+    sched.submit(req(1, "a", 8));
+    let out = sched.run_to_completion();
+
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish.label(), "failed:runtime");
+    assert_eq!(sched.step_retries, 0, "retried without a rollback point");
+}
+
+#[test]
+fn poisoned_adapter_demotes_batch_quarantines_and_spares_innocents() {
+    // one corrupt adapter joins a healthy shared batch: the batch demotes
+    // to merged lanes, innocents finish byte-identical to solo runs, the
+    // bad adapter fails typed and trips the circuit breaker, and later
+    // requests for it are rejected as quarantined
+    let off_of = |name: &str| match name {
+        "a" => 3.0,
+        "b" => 5.0,
+        _ => 13.0,
+    };
+    let source = move |name: &str| -> Result<Adapter> {
+        Ok(Adapter {
+            name: name.to_string(),
+            decode_variant: "mock_full".to_string(),
+            delta: Some(delta(off_of(name))),
+            h0: None,
+            budget_pct: 0.0,
+        })
+    };
+    let mut registry = AdapterRegistry::new(source, 8);
+    registry.set_quarantine_threshold(1);
+    let registry = registry;
+
+    let shared: Arc<RollShared> =
+        Arc::new(RollShared { b: 4, plan: None, poison: Some(13.0) });
+
+    let factory: ServeFactory = Box::new(|name: &str| {
+        let a = registry.get(name)?;
+        registry.pin(name);
+        let model: Arc<dyn AdapterStepDecode> = shared.clone();
+        Ok(ServeModel::Shared { model, delta: a.delta.clone(), h0: None })
+    });
+    let mut sched = Scheduler::new(factory, 4);
+    sched.on_release(Box::new(|name: &str| registry.unpin(name)));
+    sched.on_adapter_failure(Box::new(|name: &str, _kind| {
+        registry.record_failure(name);
+    }));
+    sched.set_merged_fallback(Box::new(|name: &str| {
+        let a = registry.get(name)?;
+        let model: Arc<dyn StepDecode> = if name == "bad" {
+            Arc::new(FailingStep)
+        } else {
+            Arc::new(Roll { b: 1, off: row_off(&a.delta) })
+        };
+        Ok(LaneModel { model, h0: None })
+    }));
+
+    sched.submit(req(1, "a", 8));
+    sched.submit(req(2, "b", 6));
+    sched.submit(req(3, "bad", 8));
+    let mut out = sched.run_to_completion();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), 3);
+    // innocents: demoted exactly once, bytes identical to solo merged runs
+    for (resp, name, max_new) in [(&out[0], "a", 8), (&out[1], "b", 6)] {
+        assert!(resp.error.is_none(), "innocent {name} failed: {:?}", resp.error);
+        assert_eq!(resp.retries, 1, "innocent {name} not demoted exactly once");
+        let reference = solo(off_of(name), req(resp.id, name, max_new));
+        assert_eq!(resp.output, reference.output, "innocent {name} bytes drifted");
+    }
+    // the bad adapter: typed terminal failure, quarantined, pins balanced
+    assert_eq!(out[2].finish.label(), "failed:invariant");
+    assert!(registry.is_quarantined("bad"));
+    assert!(!registry.is_quarantined("a"));
+    assert_eq!(sched.demotions, 3);
+    assert_eq!(registry.stats().pins, 0, "leaked adapter pins");
+
+    // a follow-up request for the quarantined adapter is rejected typed
+    sched.submit(req(4, "bad", 4));
+    let rejected = sched.run_to_completion();
+    assert_eq!(rejected.len(), 1);
+    assert_eq!(rejected[0].finish.label(), "failed:request");
+    let msg = rejected[0].error.as_deref().unwrap_or("");
+    assert!(msg.contains("quarantined"), "rejection lost its cause: {msg}");
+
+    // ...until an operator reinstates it
+    registry.reinstate("bad");
+    assert!(!registry.is_quarantined("bad"));
+    assert!(registry.get("bad").is_ok());
+}
+
+/// [`AdapterSource`] for the churn matrix: every name materializes, the
+/// poisoned one included (its *decode* is what fails, not its load), and
+/// merged materialization succeeds so the fallback path is reachable.
+struct MockSource;
+
+impl ssm_peft::serve::AdapterSource for MockSource {
+    fn load(&self, name: &str) -> Result<Adapter> {
+        let off = if name == "bad" { 13.0 } else { name.len() as f32 + 2.0 };
+        Ok(Adapter {
+            name: name.to_string(),
+            decode_variant: "mock_full".to_string(),
+            delta: Some(delta(off)),
+            h0: None,
+            budget_pct: 0.0,
+        })
+    }
+    fn load_merged(&self, _name: &str) -> Result<BTreeMap<String, Tensor>> {
+        Ok(BTreeMap::new()) // mock lanes carry their params in `off`
+    }
+}
+
+#[test]
+fn fault_matrix_churn_terminates_typed_with_balanced_pins() {
+    // the fault matrix: seeded churn with faults injected at EVERY site
+    // (exec, adapter load, artifact read, state readback) plus one
+    // poisoned adapter. Properties: no panic, every request terminates
+    // with a typed finish, the poisoned adapter trips the breaker, and no
+    // registry pin leaks.
+    let mut registry = AdapterRegistry::new(MockSource, 4);
+    registry.set_quarantine_threshold(2);
+    let plan = Arc::new(
+        FaultPlan::seeded(42)
+            .with_rate(FaultSite::ExecRun, 0.15)
+            .with_rate(FaultSite::AdapterLoad, 0.05)
+            .with_rate(FaultSite::ArtifactRead, 0.05)
+            .with_rate(FaultSite::StateReadback, 0.02),
+    );
+    registry.set_fault_inject(plan.clone());
+    let registry = registry;
+    let shared: Arc<RollShared> =
+        Arc::new(RollShared { b: 4, plan: Some(plan.clone()), poison: Some(13.0) });
+
+    let factory: ServeFactory = Box::new(|name: &str| {
+        let a = registry.get(name)?;
+        registry.pin(name);
+        let model: Arc<dyn AdapterStepDecode> = shared.clone();
+        Ok(ServeModel::Shared { model, delta: a.delta.clone(), h0: None })
+    });
+    let mut sched = Scheduler::new(factory, 4);
+    sched.set_fault_inject(plan.clone());
+    sched.on_release(Box::new(|name: &str| registry.unpin(name)));
+    sched.on_adapter_failure(Box::new(|name: &str, _kind| {
+        registry.record_failure(name);
+    }));
+    sched.set_merged_fallback(Box::new(|name: &str| {
+        let a = registry.get(name)?;
+        let _params = registry.load_merged(name)?; // exercises artifact_read
+        let model: Arc<dyn StepDecode> = if name == "bad" {
+            Arc::new(FailingStep)
+        } else {
+            Arc::new(Roll { b: 1, off: row_off(&a.delta) })
+        };
+        Ok(LaneModel { model, h0: None })
+    }));
+
+    let names = ["alpha", "beta", "gamma", "delta", "eps"];
+    let mut rng = Rng::new(99);
+    let total = 33u64;
+    for id in 0..total {
+        let name = if id % 11 == 10 {
+            "bad" // 3 poisoned requests interleaved with the healthy churn
+        } else {
+            names[(rng.uniform() * names.len() as f32) as usize % names.len()]
+        };
+        sched.submit(req(id, name, 4 + (id % 5) as usize));
+    }
+    let out = sched.run_to_completion();
+
+    assert_eq!(out.len() as u64, total, "requests lost under injected faults");
+    assert!(sched.is_idle());
+    for r in &out {
+        let label = r.finish.label();
+        assert!(
+            label == "stop" || label == "length" || label.starts_with("failed:"),
+            "request {} finished untyped: {label}",
+            r.id
+        );
+        if r.adapter == "bad" {
+            assert!(label.starts_with("failed:"), "poisoned request {} passed", r.id);
+        }
+    }
+    // every fault site was actually exercised by the churn
+    for site in [
+        FaultSite::ExecRun,
+        FaultSite::AdapterLoad,
+        FaultSite::ArtifactRead,
+        FaultSite::StateReadback,
+    ] {
+        assert!(plan.checks(site) > 0, "site {} never checked", site.label());
+    }
+    assert!(plan.injected(FaultSite::ExecRun) > 0, "exec fault rate never fired");
+    assert!(sched.step_retries > 0, "no transient fault was retried");
+    assert!(registry.is_quarantined("bad"), "poisoned adapter not quarantined");
+    assert_eq!(registry.stats().pins, 0, "leaked adapter pins after churn");
+}
+
+#[test]
+fn deadline_expires_queued_request_under_load() {
+    // a queued request whose deadline lapses while a long request hogs the
+    // only lane retires typed, with zero decode steps burned
+    let factory: ServeFactory = Box::new(|a: &str| {
+        let off = if a == "a" { 3.0 } else { 5.0 };
+        Ok(ServeModel::Merged(LaneModel {
+            model: Arc::new(Roll { b: 1, off }),
+            h0: None,
+        }))
+    });
+    let mut sched = Scheduler::new(factory, 1);
+    sched.submit(req(1, "a", 20));
+    let mut starved = req(2, "b", 4);
+    starved.deadline = 3;
+    sched.submit(starved);
+    let mut out = sched.run_to_completion();
+    out.sort_by_key(|r| r.id);
+
+    assert_eq!(out.len(), 2);
+    assert!(out[0].error.is_none());
+    assert_eq!(out[1].finish.label(), "failed:exhausted");
+    assert_eq!(out[1].steps, 0, "expired request burned decode steps");
+    let msg = out[1].error.as_deref().unwrap_or("");
+    assert!(msg.contains("deadline"), "error lost its cause: {msg}");
+    assert_eq!(sched.deadline_failures, 1);
+}
+
+#[test]
+fn tick_budget_drains_everything_typed() {
+    // the max-tick budget is a global liveness backstop: when it expires,
+    // every resident and queued request drains as `failed:exhausted`
+    // instead of hanging the caller
+    let factory: ServeFactory = Box::new(|_: &str| {
+        Ok(ServeModel::Merged(LaneModel {
+            model: Arc::new(Roll { b: 1, off: 2.0 }),
+            h0: None,
+        }))
+    });
+    let mut sched = Scheduler::new(factory, 2);
+    sched.set_max_run_ticks(5);
+    sched.submit(req(1, "a", 1000));
+    sched.submit(req(2, "b", 1000));
+    let out = sched.run_to_completion();
+
+    assert_eq!(out.len(), 2);
+    for r in &out {
+        assert_eq!(r.finish.label(), "failed:exhausted", "request {}", r.id);
+        let msg = r.error.as_deref().unwrap_or("");
+        assert!(msg.contains("tick budget"), "error lost its cause: {msg}");
+    }
+    assert!(sched.is_idle());
+}

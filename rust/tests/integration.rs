@@ -341,6 +341,7 @@ fn serve_two_adapters_from_one_staged_base() {
         max_new: 12,
         stop_byte: b'\n',
         beam: 1,
+        deadline: 0,
     });
     sched.submit(Request {
         id: 2,
@@ -349,6 +350,7 @@ fn serve_two_adapters_from_one_staged_base() {
         max_new: 12,
         stop_byte: b'\n',
         beam: 1,
+        deadline: 0,
     });
     sched.tick();
     assert_eq!(sched.active(), 2, "both adapters decode concurrently");
@@ -373,6 +375,7 @@ fn serve_two_adapters_from_one_staged_base() {
         max_new: 4,
         stop_byte: b'\n',
         beam: 1,
+        deadline: 0,
     });
     let more = sched.run_to_completion();
     assert_eq!(more.len(), 1);
@@ -464,6 +467,7 @@ fn serve_prefill_then_admit_on_real_executables() {
             max_new: 12,
             stop_byte: b'\n',
             beam: 1,
+            deadline: 0,
         });
         let resp = sched.run_to_completion().pop().unwrap();
         (resp, sched.prefill_dispatches, sched.prefill_tokens)

@@ -108,6 +108,7 @@ fn req(id: u64, adapter: &str, prompt: &[u8], max_new: usize) -> Request {
         max_new,
         stop_byte: b'\n',
         beam: 1,
+        deadline: 0,
     }
 }
 
