@@ -31,6 +31,13 @@
 //! faults, in-place retries, request outcomes, and the throughput cost of
 //! recovery. The fault/retry counters are the durable signal.
 //!
+//! Schema 5 adds a `sessions` section: multi-turn conversation latency
+//! with the durable session store (state resurrected at admission, zero
+//! prefill after turn 1) against stateless full-history re-prefill, plus
+//! a simulated crash — drain to disk, drop everything, recover, resume —
+//! pinned byte-identical to a fresh replay. The prefill-chunk and
+//! resurrection counters are the durable signal.
+//!
 //! `SSM_PEFT_BENCH_SCALE` scales iteration counts and the synthetic model
 //! size (0.1 = tiny CI mode). The JSON schema is documented in
 //! rust/docs/performance.md; every number is a mean over timed iterations.
@@ -56,7 +63,7 @@ use crate::train::{StepTimings, TrainConfig, Trainer};
 /// `BENCH_hotpath.json` schema version. The lint pins this against the
 /// example payload in rust/docs/performance.md, so bumping it without a
 /// docs update fails `cargo run -- lint`.
-pub const BENCH_HOTPATH_SCHEMA: u32 = 4;
+pub const BENCH_HOTPATH_SCHEMA: u32 = 5;
 
 fn bench_scale() -> f32 {
     crate::knobs::bench_scale()
@@ -547,6 +554,7 @@ fn bench_faults_mock(scale: f32) -> Result<Value> {
                 stop_byte: 0,
                 beam: 1,
                 deadline: 0,
+                session: None,
             });
         }
         let out = sched.run_to_completion();
@@ -593,6 +601,164 @@ fn bench_faults_mock(scale: f32) -> Result<Value> {
             "recovery_overhead",
             json::num(degraded_st.mean_s / healthy_st.mean_s.max(1e-12)),
         ),
+    ]))
+}
+
+/// Schema 5's `sessions` section: multi-turn conversation serving with
+/// the durable session store against stateless full-history re-prefill,
+/// on the host mocks. One conversation runs turn by turn; with the store,
+/// every turn after the first resurrects the retired row's `(conv, ssm)`
+/// state at admission and skips prefill entirely, so the prefill-chunk
+/// counter stays flat while the stateless baseline re-ingests the whole
+/// growing history each turn. A simulated crash (drain to a spill dir,
+/// drop everything, recover with a fresh store) then pins disk-resumed
+/// output byte-identical to a fresh stateless replay with zero prefill
+/// chunks. Counters are the durable telemetry; times say "TTFT scales
+/// with history" vs "TTFT is O(1)".
+fn bench_sessions_mock(scale: f32) -> Result<Value> {
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    use crate::eval::testing::Accum;
+    use crate::serve::{LaneModel, Request, Scheduler, ServeModel, SessionStore};
+
+    let turns = ((8.0 * scale).round() as usize).max(4);
+    let grow = 3usize; // fresh user bytes appended per turn
+    let max_new = 3usize;
+    let iters = ((6.0 * scale).round() as usize).max(2);
+    let widths = [8usize, 32];
+    let first: Vec<u8> = (0..12).map(|i| ((i * 7 + 3) % 199 + 1) as u8).collect();
+
+    // turn t+1's prompt = turn t's prompt ++ turn t's output ++ fresh bytes
+    let next_turn = |prev: &[u8], out: &[u8], t: usize| -> Vec<u8> {
+        let mut p = prev.to_vec();
+        p.extend_from_slice(out);
+        p.extend((0..grow).map(|i| ((t * 29 + i * 7 + 11) % 199 + 1) as u8));
+        p
+    };
+    let accum_factory = |model: Arc<Accum>| -> crate::serve::ServeFactory<'static> {
+        Box::new(move |_adapter: &str| {
+            Ok(ServeModel::Merged(LaneModel { model: model.clone(), h0: None }))
+        })
+    };
+    let mk_req = |id: u64, prompt: Vec<u8>, session: Option<&str>| Request {
+        id,
+        adapter: "chat".into(),
+        prompt,
+        max_new,
+        stop_byte: 0,
+        beam: 1,
+        deadline: 0,
+        session: session.map(str::to_string),
+    };
+
+    // the whole conversation, turn by turn, on one scheduler; with_store
+    // uses a memory-tier store (explicit cap — independent of the
+    // SSM_PEFT_SESSIONS_* knobs), without re-prefills the full history
+    let run_pass = |with_store: bool| -> Result<(Vec<Vec<u8>>, u64, u64, u64)> {
+        let model = Arc::new(Accum::new(1, &widths));
+        let mut sched = Scheduler::new(accum_factory(model.clone()), 2);
+        if with_store {
+            sched.set_session_store(Arc::new(SessionStore::new(8)));
+        }
+        let mut outputs = Vec::new();
+        let mut prompt = first.clone();
+        for t in 0..turns {
+            let sid = with_store.then_some("bench-conv");
+            sched.submit(mk_req(t as u64, prompt.clone(), sid));
+            let r = sched
+                .run_to_completion()
+                .pop()
+                .ok_or_else(|| crate::err!("turn {t} did not retire"))?;
+            if let Some(e) = r.error {
+                crate::bail!("turn {t} failed: {e}");
+            }
+            prompt = next_turn(&prompt, &r.output, t);
+            outputs.push(r.output);
+        }
+        let chunks = model.chunks.load(Ordering::Relaxed);
+        Ok((outputs, chunks, sched.session_resurrections, sched.session_fallbacks))
+    };
+
+    let (outs_store, chunks_store, resurrections, fallbacks) = run_pass(true)?;
+    let (outs_replay, chunks_replay, _, _) = run_pass(false)?;
+    let transcripts_match = outs_store == outs_replay;
+    let gen_tokens: usize = outs_store.iter().map(Vec::len).sum();
+    let final_len = first.len() + gen_tokens + turns * grow;
+    let mut err = None;
+    let store_st = time("sessions_store", 0, iters, || {
+        if let Err(e) = run_pass(true) {
+            err = Some(e);
+        }
+    });
+    let replay_st = time("sessions_reprefill", 0, iters, || {
+        if let Err(e) = run_pass(false) {
+            err = Some(e);
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+
+    // simulated crash: turn 1 drains its snapshot to a spill dir, the
+    // process "dies" (scheduler, store, and model drop), a fresh store
+    // recovers the record, and turn 2 resumes from disk
+    let dir = std::env::temp_dir()
+        .join(format!("ssm-peft-bench-sessions-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (prompt2, flushed) = {
+        let model = Arc::new(Accum::new(1, &widths));
+        let mut sched = Scheduler::new(accum_factory(model), 2);
+        sched.set_session_store(Arc::new(SessionStore::new(8).with_dir(&dir)));
+        sched.submit(mk_req(0, first.clone(), Some("crash-conv")));
+        let (mut resps, flushed, _fail) = sched.drain();
+        let r = resps.pop().ok_or_else(|| crate::err!("crash turn 1 lost"))?;
+        (next_turn(&first, &r.output, 0), flushed)
+    };
+    let store = Arc::new(SessionStore::new(8).with_dir(&dir));
+    let rec = store.recover();
+    let model = Arc::new(Accum::new(1, &widths));
+    let mut sched = Scheduler::new(accum_factory(model.clone()), 2);
+    sched.set_session_store(store);
+    sched.submit(mk_req(1, prompt2.clone(), Some("crash-conv")));
+    let resumed = sched
+        .run_to_completion()
+        .pop()
+        .ok_or_else(|| crate::err!("crash turn 2 did not retire"))?;
+    let resume_chunks = model.chunks.load(Ordering::Relaxed);
+    // ground truth: the same turn as a fresh stateless request
+    let ref_model = Arc::new(Accum::new(1, &widths));
+    let mut sref = Scheduler::new(accum_factory(ref_model), 2);
+    sref.submit(mk_req(2, prompt2.clone(), None));
+    let want = sref
+        .run_to_completion()
+        .pop()
+        .ok_or_else(|| crate::err!("crash replay did not retire"))?;
+    let crash_matches = resumed.output == want.output && resumed.error.is_none();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    Ok(json::obj(vec![
+        ("turns", json::num(turns as f64)),
+        ("prompt_len_first", json::num(first.len() as f64)),
+        ("prompt_len_final", json::num(final_len as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("prefill_chunks_store", json::num(chunks_store as f64)),
+        ("prefill_chunks_reprefill", json::num(chunks_replay as f64)),
+        ("resurrections", json::num(resurrections as f64)),
+        ("fallbacks", json::num(fallbacks as f64)),
+        ("transcripts_match", json::num(f64::from(u8::from(transcripts_match)))),
+        ("turn_s_store", json::num(store_st.mean_s / turns as f64)),
+        ("turn_s_reprefill", json::num(replay_st.mean_s / turns as f64)),
+        ("speedup", json::num(replay_st.mean_s / store_st.mean_s.max(1e-12))),
+        (
+            "tok_per_s_store",
+            json::num(gen_tokens as f64 / store_st.mean_s.max(1e-12)),
+        ),
+        ("drain_flushed", json::num(flushed as f64)),
+        ("recovered_records", json::num(rec.valid as f64)),
+        ("recovery_quarantined", json::num(rec.quarantined as f64)),
+        ("crash_resume_prefill_chunks", json::num(resume_chunks as f64)),
+        ("crash_resume_matches", json::num(f64::from(u8::from(crash_matches)))),
     ]))
 }
 
@@ -722,6 +888,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
     let mut prefill_fields = vec![("mock", bench_prefill_mock(scale)?)];
     let adapters_val = bench_adapters_mock(scale)?;
     let faults_val = bench_faults_mock(scale)?;
+    let sessions_val = bench_sessions_mock(scale)?;
     if crate::artifacts_dir().join("manifest.json").exists() {
         let engine = Engine::cpu()?;
         let manifest = Manifest::load(crate::artifacts_dir())?;
@@ -783,14 +950,27 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
             get("recovery_overhead"),
         );
     }
+    {
+        let get = |k: &str| sessions_val.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        println!(
+            "sessions (mock): {:.0} turns, {:.0} resurrected, {:.0} vs {:.0} \
+             prefill chunks (store vs re-prefill), crash recovery {}",
+            get("turns"),
+            get("resurrections"),
+            get("prefill_chunks_store"),
+            get("prefill_chunks_reprefill"),
+            if get("crash_resume_matches") == 1.0 { "ok" } else { "FAILED" },
+        );
+    }
 
     let mock_obj = Value::Obj(
         mock_fields.into_iter().collect::<BTreeMap<String, Value>>(),
     );
     let mut root = vec![
-        // schema 4: adds the `faults` section (serve under injected
-        // faults); schema 3 added `adapters` (unmerged multi-adapter
-        // decode); schema 2 added `prefill` (§Perf L5)
+        // schema 5: adds the `sessions` section (durable session store);
+        // schema 4 added `faults` (serve under injected faults); schema 3
+        // added `adapters` (unmerged multi-adapter decode); schema 2
+        // added `prefill` (§Perf L5)
         ("schema", json::num(BENCH_HOTPATH_SCHEMA as f64)),
         ("scale", json::num(scale as f64)),
         ("mode", json::s(mode)),
@@ -799,6 +979,7 @@ pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
         ("prefill", json::obj(prefill_fields)),
         ("adapters", adapters_val),
         ("faults", faults_val),
+        ("sessions", sessions_val),
         ("host_overhead_reduction", json::num(headline)),
     ];
     if let Some(tv) = train_val {
@@ -879,6 +1060,33 @@ mod tests {
         );
         assert!(get("tok_per_s_healthy") > 0.0);
         assert!(get("tok_per_s_degraded") > 0.0);
+    }
+
+    #[test]
+    fn sessions_mock_section_accounting() {
+        let v = bench_sessions_mock(0.1).unwrap();
+        let get = |k: &str| v.get(k).and_then(Value::as_f64).unwrap();
+        // every turn after the first resumes from the store — no fallback
+        assert_eq!(get("resurrections"), get("turns") - 1.0);
+        assert_eq!(get("fallbacks"), 0.0);
+        // O(1) resume: the store pass prefills once, the stateless
+        // baseline re-ingests the growing history every turn
+        assert!(
+            get("prefill_chunks_store") < get("prefill_chunks_reprefill"),
+            "{} vs {}",
+            get("prefill_chunks_store"),
+            get("prefill_chunks_reprefill"),
+        );
+        // resuming must not change a single output byte
+        assert_eq!(get("transcripts_match"), 1.0);
+        // crash sim: one drained record recovered clean, resumed with
+        // ZERO prefill chunks, byte-identical to a fresh replay
+        assert_eq!(get("drain_flushed"), 1.0);
+        assert_eq!(get("recovered_records"), 1.0);
+        assert_eq!(get("recovery_quarantined"), 0.0);
+        assert_eq!(get("crash_resume_prefill_chunks"), 0.0);
+        assert_eq!(get("crash_resume_matches"), 1.0);
+        assert!(get("turn_s_store") > 0.0 && get("turn_s_reprefill") > 0.0);
     }
 
     #[test]

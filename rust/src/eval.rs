@@ -336,6 +336,49 @@ impl DecodeState {
         self.host_fresh = false;
     }
 
+    /// Build a batch-`b` state holding the given per-row `(conv, ssm)`
+    /// buffers in row `row` (every other row zero) — the bridge a
+    /// resurrected session snapshot takes back into a live batch via
+    /// [`DecodeState::splice_row_from`]. The buffers must be exactly one
+    /// row across every layer (the shape [`StateCheckpoint::row`]
+    /// produces); anything else is a typed geometry error.
+    pub fn with_row(dims: &StateDims, b: usize, row: usize, conv_row: &[f32],
+                    ssm_row: &[f32]) -> Result<DecodeState> {
+        let cper = dims.conv_per_row();
+        let sper = dims.ssm_per_row();
+        crate::ensure!(
+            row < b
+                && conv_row.len() == dims.n_layer * cper
+                && ssm_row.len() == dims.n_layer * sper,
+            "row-state geometry mismatch: conv {} (want {}), ssm {} (want {})",
+            conv_row.len(),
+            dims.n_layer * cper,
+            ssm_row.len(),
+            dims.n_layer * sper,
+        );
+        let mut state = DecodeState::new(*dims, b, None);
+        {
+            let (conv, ssm) = state.host_mut()?;
+            for layer in 0..dims.n_layer {
+                let cat = (layer * b + row) * cper;
+                conv.data[cat..cat + cper]
+                    .copy_from_slice(&conv_row[layer * cper..(layer + 1) * cper]);
+                let sat = (layer * b + row) * sper;
+                ssm.data[sat..sat + sper]
+                    .copy_from_slice(&ssm_row[layer * sper..(layer + 1) * sper]);
+            }
+        }
+        Ok(state)
+    }
+
+    /// Read one row's `(conv, ssm)` back through the checkpoint path —
+    /// one host sync, residency left intact (same contract as
+    /// [`DecodeState::checkpoint`]).
+    pub fn row_snapshot(&mut self, dims: &StateDims, b: usize, row: usize)
+        -> Result<(Vec<f32>, Vec<f32>)> {
+        self.checkpoint()?.row(dims, b, row)
+    }
+
     /// Capture a host-side snapshot of the full `(conv, ssm)` state.
     ///
     /// Syncs the host mirror (one device→host readback when the state was
@@ -373,10 +416,53 @@ impl DecodeState {
 /// An opaque host-side snapshot of a [`DecodeState`]'s `(conv, ssm)`
 /// buffers, produced by [`DecodeState::checkpoint`] and consumed by
 /// [`DecodeState::rollback`]. The same primitive the ROADMAP's
-/// speculative-decoding item needs for rejected drafts.
+/// speculative-decoding item needs for rejected drafts, and the readback
+/// path the serve session store rides for per-row snapshots
+/// ([`StateCheckpoint::row`]).
 pub struct StateCheckpoint {
     conv: Vec<f32>,
     ssm: Vec<f32>,
+}
+
+impl StateCheckpoint {
+    /// The captured conv-state buffer (layout `(n_layer, B, d_conv-1,
+    /// d_inner)`, row-major).
+    pub fn conv(&self) -> &[f32] {
+        &self.conv
+    }
+
+    /// The captured SSM-state buffer (layout `(n_layer, B, d_inner,
+    /// d_state)`, row-major).
+    pub fn ssm(&self) -> &[f32] {
+        &self.ssm
+    }
+
+    /// Extract one batch row's `(conv, ssm)` slices across every layer —
+    /// the per-session payload the serve session store persists. Errors
+    /// when the checkpoint's geometry cannot hold `(b, row)`.
+    pub fn row(&self, dims: &StateDims, b: usize, row: usize)
+        -> Result<(Vec<f32>, Vec<f32>)> {
+        let cper = dims.conv_per_row();
+        let sper = dims.ssm_per_row();
+        crate::ensure!(
+            row < b
+                && self.conv.len() == dims.n_layer * b * cper
+                && self.ssm.len() == dims.n_layer * b * sper,
+            "checkpoint row extraction out of geometry: row {row} of b {b}, \
+             conv {} ssm {}",
+            self.conv.len(),
+            self.ssm.len(),
+        );
+        let mut conv = Vec::with_capacity(dims.n_layer * cper);
+        let mut ssm = Vec::with_capacity(dims.n_layer * sper);
+        for layer in 0..dims.n_layer {
+            let cat = (layer * b + row) * cper;
+            conv.extend_from_slice(&self.conv[cat..cat + cper]);
+            let sat = (layer * b + row) * sper;
+            ssm.extend_from_slice(&self.ssm[sat..sat + sper]);
+        }
+        Ok((conv, ssm))
+    }
 }
 
 /// The stepwise decode interface shared by offline eval ([`Generator`]) and

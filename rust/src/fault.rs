@@ -9,7 +9,7 @@
 //! fault_injection.rs) reproducible and the module inside the
 //! determinism lint's scope.
 //!
-//! Faults are keyed by [`FaultSite`] — the four operation classes whose
+//! Faults are keyed by [`FaultSite`] — the six operation classes whose
 //! real-world failures the serve layer must survive:
 //!
 //! | site | models |
@@ -18,6 +18,8 @@
 //! | [`FaultSite::AdapterLoad`] | a corrupt or missing adapter checkpoint |
 //! | [`FaultSite::ArtifactRead`] | unreadable AOT artifacts / manifest |
 //! | [`FaultSite::StateReadback`] | a failed device→host state readback |
+//! | [`FaultSite::StatePersist`] | a failed session-state record write |
+//! | [`FaultSite::StateLoad`] | a failed session-state record read |
 //!
 //! Production pays a no-op: the hooks hold an `Option<Arc<dyn
 //! FaultInject>>` that is `None` unless the fault knobs are set (see
@@ -28,8 +30,9 @@
 //!
 //! Knobs (registered in [`crate::knobs`]): `SSM_PEFT_FAULT_SEED` seeds
 //! the schedule; `SSM_PEFT_FAULT_EXEC`, `SSM_PEFT_FAULT_ADAPTER_LOAD`,
-//! `SSM_PEFT_FAULT_ARTIFACT_READ` and `SSM_PEFT_FAULT_STATE_READBACK`
-//! set per-site fault rates in [0, 1].
+//! `SSM_PEFT_FAULT_ARTIFACT_READ`, `SSM_PEFT_FAULT_STATE_READBACK`,
+//! `SSM_PEFT_FAULT_STATE_PERSIST` and `SSM_PEFT_FAULT_STATE_LOAD` set
+//! per-site fault rates in [0, 1].
 
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,15 +50,25 @@ pub enum FaultSite {
     ArtifactRead,
     /// Device→host state readback (checkpoint capture).
     StateReadback,
+    /// Writing a session-state record to the durable store
+    /// ([`crate::serve::SessionStore`]).
+    StatePersist,
+    /// Reading a session-state record back from the durable store.
+    StateLoad,
 }
+
+/// Number of fault sites (the width of every per-site array).
+pub const SITES: usize = 6;
 
 impl FaultSite {
     /// Every site, in a fixed order ([`Self::index`] indexes this).
-    pub const ALL: [FaultSite; 4] = [
+    pub const ALL: [FaultSite; SITES] = [
         FaultSite::ExecRun,
         FaultSite::AdapterLoad,
         FaultSite::ArtifactRead,
         FaultSite::StateReadback,
+        FaultSite::StatePersist,
+        FaultSite::StateLoad,
     ];
 
     /// Stable dense index into per-site arrays.
@@ -65,6 +78,8 @@ impl FaultSite {
             FaultSite::AdapterLoad => 1,
             FaultSite::ArtifactRead => 2,
             FaultSite::StateReadback => 3,
+            FaultSite::StatePersist => 4,
+            FaultSite::StateLoad => 5,
         }
     }
 
@@ -75,6 +90,8 @@ impl FaultSite {
             FaultSite::AdapterLoad => "adapter_load",
             FaultSite::ArtifactRead => "artifact_read",
             FaultSite::StateReadback => "state_readback",
+            FaultSite::StatePersist => "state_persist",
+            FaultSite::StateLoad => "state_load",
         }
     }
 }
@@ -114,10 +131,10 @@ impl FaultInject for NoFaults {
 pub struct FaultPlan {
     seed: u64,
     kind: ErrorKind,
-    rate: [f64; 4],
-    at: [BTreeSet<u64>; 4],
-    counters: [AtomicU64; 4],
-    injected: [AtomicU64; 4],
+    rate: [f64; SITES],
+    at: [BTreeSet<u64>; SITES],
+    counters: [AtomicU64; SITES],
+    injected: [AtomicU64; SITES],
 }
 
 impl FaultPlan {
@@ -126,7 +143,7 @@ impl FaultPlan {
         FaultPlan {
             seed,
             kind: ErrorKind::Runtime,
-            rate: [0.0; 4],
+            rate: [0.0; SITES],
             at: std::array::from_fn(|_| BTreeSet::new()),
             counters: std::array::from_fn(|_| AtomicU64::new(0)),
             injected: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -310,5 +327,21 @@ mod tests {
             assert_eq!(s.index(), i);
             assert!(!s.label().is_empty());
         }
+    }
+
+    #[test]
+    fn session_sites_are_registered_and_independent() {
+        // the PR-9 session sites append after the original four, so every
+        // pre-existing seeded schedule stays byte-for-byte stable
+        assert_eq!(FaultSite::ALL.len(), SITES);
+        assert_eq!(FaultSite::StatePersist.index(), 4);
+        assert_eq!(FaultSite::StateLoad.index(), 5);
+        assert_eq!(FaultSite::StatePersist.label(), "state_persist");
+        assert_eq!(FaultSite::StateLoad.label(), "state_load");
+        let p = FaultPlan::seeded(11).with_fault_at(FaultSite::StatePersist, 0);
+        assert!(p.check(FaultSite::StatePersist).is_err());
+        assert!(p.check(FaultSite::StateLoad).is_ok());
+        assert_eq!(p.injected(FaultSite::StatePersist), 1);
+        assert_eq!(p.injected(FaultSite::StateLoad), 0);
     }
 }

@@ -10,16 +10,56 @@
 //!
 //! Adding a knob therefore means adding a [`Knob`] row, a typed accessor,
 //! and a docs mention — or the build fails.
+//!
+//! Malformed values are never silently dropped: typed accessors warn once
+//! per knob on stderr and fall back to the default, and [`validate`]
+//! returns a typed parse error naming every offender (the serve CLI runs
+//! it at startup).
 
 /// Value type of a knob (how the raw string is parsed).
+///
+/// Malformed values are **never silently ignored**: the typed accessors
+/// log a once-per-knob warning and fall back to the default, and
+/// [`validate`] turns the same condition into a typed
+/// [`ErrorKind::Parse`](crate::error::ErrorKind) error for callers that
+/// want hard failure at startup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KnobKind {
-    /// Parsed with `usize::from_str`; invalid values fall back to default.
+    /// Parsed with `usize::from_str`.
     Usize,
-    /// Parsed with `f32::from_str`; invalid values fall back to default.
+    /// Parsed with `f32::from_str`.
     Float,
-    /// Used verbatim as a filesystem path.
+    /// Used verbatim as a filesystem path (any non-empty string).
     Path,
+}
+
+impl KnobKind {
+    /// Human-readable name for warnings and errors.
+    pub fn label(self) -> &'static str {
+        match self {
+            KnobKind::Usize => "unsigned integer",
+            KnobKind::Float => "float",
+            KnobKind::Path => "path",
+        }
+    }
+
+    /// Validate a raw string against this kind. The parse itself — no env
+    /// access — so every kind gets a direct unit test.
+    pub fn check(self, raw: &str) -> crate::error::Result<()> {
+        let ok = match self {
+            KnobKind::Usize => raw.parse::<usize>().is_ok(),
+            KnobKind::Float => raw.parse::<f32>().map(|v| v.is_finite()).unwrap_or(false),
+            KnobKind::Path => !raw.is_empty(),
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(crate::error::Error::new(
+                crate::error::ErrorKind::Parse,
+                format!("malformed knob value {raw:?} (expected {})", self.label()),
+            ))
+        }
+    }
 }
 
 /// One registered environment knob.
@@ -103,6 +143,30 @@ pub const KNOBS: &[Knob] = &[
         default: "0.0",
         doc: "Injected fault rate [0,1] for device-to-host state readbacks (checkpoints).",
     },
+    Knob {
+        name: "SSM_PEFT_FAULT_STATE_PERSIST",
+        kind: KnobKind::Float,
+        default: "0.0",
+        doc: "Injected fault rate [0,1] for session-state record writes (session store).",
+    },
+    Knob {
+        name: "SSM_PEFT_FAULT_STATE_LOAD",
+        kind: KnobKind::Float,
+        default: "0.0",
+        doc: "Injected fault rate [0,1] for session-state record reads (session store).",
+    },
+    Knob {
+        name: "SSM_PEFT_SESSIONS_DIR",
+        kind: KnobKind::Path,
+        default: "unset (session spill tier disabled; in-memory tier only)",
+        doc: "Spill directory for durable per-session state records (serve sessions).",
+    },
+    Knob {
+        name: "SSM_PEFT_SESSIONS_CAP",
+        kind: KnobKind::Usize,
+        default: "64",
+        doc: "In-memory LRU capacity (entries) of the serve session-state store.",
+    },
 ];
 
 /// Registry lookup by full name.
@@ -118,6 +182,60 @@ fn raw(name: &str) -> Option<String> {
     std::env::var(name).ok()
 }
 
+/// Warn exactly once per knob about a malformed value. Silent fallback
+/// hid real operator typos (`SSM_PEFT_MAX_TICKS=abc` just vanished);
+/// once-per-knob keeps a hot accessor from spamming stderr.
+fn warn_malformed(name: &'static str, raw_value: &str, kind: KnobKind) {
+    use std::sync::Mutex;
+    static WARNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut warned = WARNED.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    if !warned.contains(&name) {
+        warned.push(name);
+        eprintln!(
+            "warning: ignoring malformed {name}={raw_value:?} \
+             (expected {}); using the default",
+            kind.label()
+        );
+    }
+}
+
+/// Parse a set knob strictly: a malformed value warns once and yields
+/// `None` (the caller's default applies), never a silently-wrong parse.
+fn parsed<T: std::str::FromStr>(name: &'static str, kind: KnobKind) -> Option<T> {
+    let raw_value = raw(name)?;
+    match raw_value.parse::<T>() {
+        Ok(v) if kind.check(&raw_value).is_ok() => Some(v),
+        _ => {
+            warn_malformed(name, &raw_value, kind);
+            None
+        }
+    }
+}
+
+/// Validate every *set* `SSM_PEFT_*` variable against its registered
+/// kind. Returns a typed [`ErrorKind::Parse`](crate::error::ErrorKind)
+/// error naming every offender — the hard-failure counterpart to the
+/// accessors' warn-once-and-default behavior (the serve CLI calls this at
+/// startup so a typo'd knob cannot ride along unnoticed).
+pub fn validate() -> crate::error::Result<()> {
+    let mut bad = Vec::new();
+    for k in KNOBS {
+        if let Some(raw_value) = raw(k.name) {
+            if k.kind.check(&raw_value).is_err() {
+                bad.push(format!("{}={raw_value:?} (expected {})", k.name, k.kind.label()));
+            }
+        }
+    }
+    if bad.is_empty() {
+        Ok(())
+    } else {
+        Err(crate::error::Error::new(
+            crate::error::ErrorKind::Parse,
+            format!("malformed environment knob(s): {}", bad.join(", ")),
+        ))
+    }
+}
+
 /// `SSM_PEFT_ARTIFACTS`: artifacts directory override.
 pub fn artifacts_override() -> Option<std::path::PathBuf> {
     raw("SSM_PEFT_ARTIFACTS").map(std::path::PathBuf::from)
@@ -131,17 +249,13 @@ pub fn results_override() -> Option<std::path::PathBuf> {
 /// `SSM_PEFT_WORKERS`: suite worker threads, else the caller's default;
 /// floored at 1.
 pub fn workers(default: usize) -> usize {
-    raw("SSM_PEFT_WORKERS")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
-        .max(1)
+    parsed("SSM_PEFT_WORKERS", KnobKind::Usize).unwrap_or(default).max(1)
 }
 
 /// `SSM_PEFT_FUSED_WORKERS`: per-step fused-optimizer worker threads,
 /// else min(available cores, 4); floored at 1.
 pub fn fused_workers() -> usize {
-    raw("SSM_PEFT_FUSED_WORKERS")
-        .and_then(|s| s.parse().ok())
+    parsed("SSM_PEFT_FUSED_WORKERS", KnobKind::Usize)
         .unwrap_or_else(|| {
             std::thread::available_parallelism().map(|n| n.get().min(4)).unwrap_or(1)
         })
@@ -150,33 +264,48 @@ pub fn fused_workers() -> usize {
 
 /// `SSM_PEFT_BENCH_SCALE`: bench scale factor, default 1.0.
 pub fn bench_scale() -> f32 {
-    raw("SSM_PEFT_BENCH_SCALE").and_then(|s| s.parse().ok()).unwrap_or(1.0)
+    parsed("SSM_PEFT_BENCH_SCALE", KnobKind::Float).unwrap_or(1.0)
 }
 
 /// `SSM_PEFT_MAX_TICKS`: scheduler run-to-completion tick budget,
 /// default 0 = unlimited.
 pub fn max_ticks() -> usize {
-    raw("SSM_PEFT_MAX_TICKS").and_then(|s| s.parse().ok()).unwrap_or(0)
+    parsed("SSM_PEFT_MAX_TICKS", KnobKind::Usize).unwrap_or(0)
 }
 
 /// `SSM_PEFT_FAULT_SEED`: fault-injection schedule seed, default 0.
 pub fn fault_seed() -> u64 {
-    raw("SSM_PEFT_FAULT_SEED").and_then(|s| s.parse().ok()).unwrap_or(0)
+    parsed("SSM_PEFT_FAULT_SEED", KnobKind::Usize).unwrap_or(0)
+}
+
+/// `SSM_PEFT_SESSIONS_DIR`: spill directory for the serve session-state
+/// store; unset = in-memory tier only (no durable records).
+pub fn sessions_dir() -> Option<std::path::PathBuf> {
+    raw("SSM_PEFT_SESSIONS_DIR").map(std::path::PathBuf::from)
+}
+
+/// `SSM_PEFT_SESSIONS_CAP`: in-memory LRU capacity of the session-state
+/// store, default 64; floored at 1.
+pub fn sessions_cap() -> usize {
+    parsed("SSM_PEFT_SESSIONS_CAP", KnobKind::Usize).unwrap_or(64).max(1)
 }
 
 /// Per-site injected fault rates, in [`crate::fault::FaultSite::ALL`]
 /// order: `SSM_PEFT_FAULT_EXEC`, `SSM_PEFT_FAULT_ADAPTER_LOAD`,
-/// `SSM_PEFT_FAULT_ARTIFACT_READ`, `SSM_PEFT_FAULT_STATE_READBACK`.
+/// `SSM_PEFT_FAULT_ARTIFACT_READ`, `SSM_PEFT_FAULT_STATE_READBACK`,
+/// `SSM_PEFT_FAULT_STATE_PERSIST`, `SSM_PEFT_FAULT_STATE_LOAD`.
 /// All default 0.0 (faults off).
-pub fn fault_rates() -> [f32; 4] {
-    let get = |name: &str| -> f32 {
-        raw(name).and_then(|s| s.parse().ok()).unwrap_or(0.0)
+pub fn fault_rates() -> [f32; crate::fault::SITES] {
+    let get = |name: &'static str| -> f32 {
+        parsed(name, KnobKind::Float).unwrap_or(0.0)
     };
     [
         get("SSM_PEFT_FAULT_EXEC"),
         get("SSM_PEFT_FAULT_ADAPTER_LOAD"),
         get("SSM_PEFT_FAULT_ARTIFACT_READ"),
         get("SSM_PEFT_FAULT_STATE_READBACK"),
+        get("SSM_PEFT_FAULT_STATE_PERSIST"),
+        get("SSM_PEFT_FAULT_STATE_LOAD"),
     ]
 }
 
@@ -212,9 +341,19 @@ mod tests {
     fn fault_knobs_registered_and_default_off() {
         assert!(lookup("SSM_PEFT_MAX_TICKS").is_some());
         assert!(lookup("SSM_PEFT_FAULT_SEED").is_some());
+        assert!(lookup("SSM_PEFT_FAULT_STATE_PERSIST").is_some());
+        assert!(lookup("SSM_PEFT_FAULT_STATE_LOAD").is_some());
+        assert_eq!(fault_rates().len(), crate::fault::SITES);
         for r in fault_rates() {
             assert!(r.is_finite());
         }
+    }
+
+    #[test]
+    fn session_knobs_registered() {
+        assert!(lookup("SSM_PEFT_SESSIONS_DIR").is_some());
+        assert!(lookup("SSM_PEFT_SESSIONS_CAP").is_some());
+        assert!(sessions_cap() >= 1);
     }
 
     #[test]
@@ -223,5 +362,50 @@ mod tests {
         assert!(workers(0) >= 1);
         assert!(fused_workers() >= 1);
         assert!(bench_scale() > 0.0 || bench_scale() <= 0.0); // parses to a float
+    }
+
+    // one strict-parse unit test per KnobKind — the parse is a pure
+    // function (KnobKind::check), so no env mutation races here
+
+    #[test]
+    fn usize_kind_rejects_malformed() {
+        assert!(KnobKind::Usize.check("42").is_ok());
+        for bad in ["abc", "-3", "1.5", ""] {
+            let e = KnobKind::Usize.check(bad).unwrap_err();
+            assert_eq!(e.kind(), crate::error::ErrorKind::Parse, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn float_kind_rejects_malformed() {
+        assert!(KnobKind::Float.check("0.25").is_ok());
+        assert!(KnobKind::Float.check("2").is_ok());
+        for bad in ["abc", "", "NaN", "inf"] {
+            let e = KnobKind::Float.check(bad).unwrap_err();
+            assert_eq!(e.kind(), crate::error::ErrorKind::Parse, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn path_kind_rejects_only_empty() {
+        assert!(KnobKind::Path.check("/tmp/x").is_ok());
+        assert!(KnobKind::Path.check("relative/dir").is_ok());
+        let e = KnobKind::Path.check("").unwrap_err();
+        assert_eq!(e.kind(), crate::error::ErrorKind::Parse);
+    }
+
+    #[test]
+    fn malformed_env_value_warns_and_defaults_and_validate_rejects() {
+        // the one env-mutating test: uses a knob nothing else reads in
+        // unit tests, and restores it before returning
+        std::env::set_var("SSM_PEFT_SESSIONS_CAP", "not-a-number");
+        assert_eq!(sessions_cap(), 64, "malformed value must fall back to default");
+        let e = validate().unwrap_err();
+        assert_eq!(e.kind(), crate::error::ErrorKind::Parse);
+        assert!(format!("{e}").contains("SSM_PEFT_SESSIONS_CAP"), "{e}");
+        std::env::set_var("SSM_PEFT_SESSIONS_CAP", "8");
+        assert_eq!(sessions_cap(), 8);
+        std::env::remove_var("SSM_PEFT_SESSIONS_CAP");
+        assert_eq!(sessions_cap(), 64);
     }
 }

@@ -20,9 +20,17 @@
 //!   [`crate::eval::AdapterStepDecode::step_rows`] dispatch per tick);
 //!   adapters the delta path can't represent fall back to per-adapter
 //!   merged lanes.
+//! - [`sessions`] — [`SessionStore`]: durable per-session `(conv, ssm)`
+//!   snapshots (in-memory LRU over checksummed spill-to-disk records),
+//!   so a returning conversation resumes via
+//!   [`crate::eval::DecodeState::splice_row_from`] with **zero** prefill
+//!   dispatches; corrupt or torn records are quarantined and the session
+//!   degrades to full-history chunked prefill instead.
 //! - [`server`] — the `serve` CLI subcommand: line-delimited JSON over
 //!   stdin/stdout and TCP, per-request latency/throughput stats streamed
-//!   as RunRecord-style JSONL into `results/`.
+//!   as RunRecord-style JSONL into `results/`; stdin EOF triggers a
+//!   graceful drain that retires in-flight rows and flushes resident
+//!   sessions.
 //!
 //! The decode strategies themselves live in [`crate::eval`]
 //! ([`crate::eval::greedy_decode`], [`crate::eval::beam_search`], both
@@ -34,8 +42,10 @@
 pub mod registry;
 pub mod scheduler;
 pub mod server;
+pub mod sessions;
 
 pub use registry::{Adapter, AdapterRegistry, AdapterSource, ManifestSource, RegistryStats};
+pub use sessions::{RecoveryReport, SessionSnapshot, SessionStats, SessionStore};
 pub use scheduler::{
     FinishReason, LaneModel, Request, Response, RetireHook, Scheduler, ServeFactory,
     ServeModel,

@@ -24,7 +24,7 @@
 //! machinery is unit-testable without artifacts; [`ManifestSource`] is the
 //! real policy used by the `serve` subcommand.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -117,9 +117,22 @@ pub struct RegistryStats {
     pub resident_bytes: usize,
     /// Adapters currently quarantined by the circuit breaker.
     pub quarantined: usize,
+    /// Half-open trial loads attempted (probation probes).
+    pub probations: usize,
+    /// Trial loads that succeeded and closed the circuit.
+    pub reinstated: usize,
     /// Outstanding pin count across all adapters. Zero whenever the
     /// scheduler is idle — a non-zero value then is a leaked pin.
     pub pins: usize,
+}
+
+/// Circuit state for one quarantined adapter.
+struct Quarantine {
+    /// Scheduler ticks observed since the circuit (re-)opened
+    /// ([`AdapterRegistry::note_tick`]).
+    ticks: u32,
+    /// Probation: the next [`AdapterRegistry::get`] runs one trial load.
+    half_open: bool,
 }
 
 struct Inner {
@@ -132,8 +145,9 @@ struct Inner {
     /// Terminal failures per adapter ([`AdapterRegistry::record_failure`]).
     failures: BTreeMap<String, u32>,
     /// Adapters past the failure threshold: [`AdapterRegistry::get`]
-    /// rejects them until [`AdapterRegistry::reinstate`].
-    quarantined: BTreeSet<String>,
+    /// rejects them until a probation trial succeeds or an operator
+    /// [`AdapterRegistry::reinstate`]s.
+    quarantined: BTreeMap<String, Quarantine>,
 }
 
 /// LRU-capped adapter cache. `get` is the only entry point: hit moves the
@@ -148,6 +162,11 @@ pub struct AdapterRegistry<S> {
     evictions: AtomicUsize,
     /// Terminal failures before an adapter is quarantined.
     quarantine_threshold: u32,
+    /// Ticks an open circuit waits before going half-open (0 = probation
+    /// disabled: only an operator [`AdapterRegistry::reinstate`] closes it).
+    probation_ticks: u32,
+    probations: AtomicUsize,
+    reinstated: AtomicUsize,
     /// Fault-injection hook for the adapter-load and artifact-read sites
     /// (`None` in production: a no-op).
     faults: Option<Arc<dyn FaultInject>>,
@@ -156,6 +175,11 @@ pub struct AdapterRegistry<S> {
 /// Terminal failures before [`AdapterRegistry::record_failure`] opens the
 /// circuit for an adapter (overridable per registry).
 pub const DEFAULT_QUARANTINE_THRESHOLD: u32 = 3;
+
+/// Scheduler ticks an open circuit waits before the breaker goes
+/// half-open and admits one probation trial load (overridable per
+/// registry; 0 disables automatic probation).
+pub const DEFAULT_PROBATION_TICKS: u32 = 256;
 
 impl<S: AdapterSource> AdapterRegistry<S> {
     /// New registry holding at most `cap` materialized adapters (min 1).
@@ -168,12 +192,15 @@ impl<S: AdapterSource> AdapterRegistry<S> {
                 order: VecDeque::new(),
                 pins: BTreeMap::new(),
                 failures: BTreeMap::new(),
-                quarantined: BTreeSet::new(),
+                quarantined: BTreeMap::new(),
             }),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
             quarantine_threshold: DEFAULT_QUARANTINE_THRESHOLD,
+            probation_ticks: DEFAULT_PROBATION_TICKS,
+            probations: AtomicUsize::new(0),
+            reinstated: AtomicUsize::new(0),
             faults: None,
         }
     }
@@ -181,6 +208,33 @@ impl<S: AdapterSource> AdapterRegistry<S> {
     /// Override the circuit-breaker threshold (min 1).
     pub fn set_quarantine_threshold(&mut self, threshold: u32) {
         self.quarantine_threshold = threshold.max(1);
+    }
+
+    /// Override how many [`AdapterRegistry::note_tick`]s an open circuit
+    /// waits before going half-open (0 disables automatic probation).
+    pub fn set_probation_ticks(&mut self, ticks: u32) {
+        self.probation_ticks = ticks;
+    }
+
+    /// Advance the probation clock by one scheduler tick: every open
+    /// circuit ages, and one that has waited [`probation
+    /// ticks`](AdapterRegistry::set_probation_ticks) goes half-open — the
+    /// next [`AdapterRegistry::get`] for that adapter runs a single trial
+    /// load instead of rejecting.
+    pub fn note_tick(&self) {
+        if self.probation_ticks == 0 {
+            return;
+        }
+        let mut inner =
+            self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for q in inner.quarantined.values_mut() {
+            if !q.half_open {
+                q.ticks = q.ticks.saturating_add(1);
+                if q.ticks >= self.probation_ticks {
+                    q.half_open = true;
+                }
+            }
+        }
     }
 
     /// Install the fault-injection hook (adapter-load + artifact-read
@@ -197,8 +251,10 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let n = inner.failures.entry(name.to_string()).or_insert(0);
         *n += 1;
-        if *n >= self.quarantine_threshold && !inner.quarantined.contains(name) {
-            inner.quarantined.insert(name.to_string());
+        if *n >= self.quarantine_threshold && !inner.quarantined.contains_key(name) {
+            inner
+                .quarantined
+                .insert(name.to_string(), Quarantine { ticks: 0, half_open: false });
             inner.map.remove(name);
             inner.order.retain(|k| k != name);
             return true;
@@ -212,11 +268,22 @@ impl<S: AdapterSource> AdapterRegistry<S> {
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner)
             .quarantined
-            .contains(name)
+            .contains_key(name)
     }
 
-    /// Close the circuit for `name`: clear its failure count and admit it
-    /// again (operator action — nothing reinstates automatically).
+    /// Whether `name`'s circuit is half-open (the next get runs a trial).
+    pub fn is_half_open(&self, name: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .quarantined
+            .get(name)
+            .is_some_and(|q| q.half_open)
+    }
+
+    /// Close the circuit for `name` immediately: clear its failure count
+    /// and admit it again (operator action; the automatic path is the
+    /// half-open probation driven by [`AdapterRegistry::note_tick`]).
     pub fn reinstate(&self, name: &str) {
         let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         inner.failures.remove(name);
@@ -225,13 +292,23 @@ impl<S: AdapterSource> AdapterRegistry<S> {
 
     /// Fetch (materializing on first use) the adapter for `name`.
     pub fn get(&self, name: &str) -> Result<Arc<Adapter>> {
+        let mut trial = false;
         {
             let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-            if inner.quarantined.contains(name) {
-                return Err(Error::new(
-                    ErrorKind::Request,
-                    format!("adapter {name:?} is quarantined after repeated failures"),
-                ));
+            if let Some(q) = inner.quarantined.get_mut(name) {
+                if !q.half_open {
+                    return Err(Error::new(
+                        ErrorKind::Request,
+                        format!("adapter {name:?} is quarantined after repeated failures"),
+                    ));
+                }
+                // half-open: admit exactly ONE trial load. Re-open the
+                // circuit first so concurrent gets keep rejecting while
+                // the probe runs; success removes the entry below.
+                q.half_open = false;
+                q.ticks = 0;
+                trial = true;
+                self.probations.fetch_add(1, Ordering::Relaxed);
             }
             if let Some(a) = inner.map.get(name).cloned() {
                 // refresh recency
@@ -244,11 +321,32 @@ impl<S: AdapterSource> AdapterRegistry<S> {
         // materialize outside the lock: a slow load must not block stats
         // readers; the serve loop admits sequentially so duplicate loads
         // don't arise in practice (and would only waste work, not break)
-        if let Some(f) = &self.faults {
-            f.check(FaultSite::AdapterLoad)
-                .with_context(|| format!("loading adapter {name:?}"))?;
+        let loaded = match &self.faults {
+            Some(f) => f
+                .check(FaultSite::AdapterLoad)
+                .with_context(|| format!("loading adapter {name:?}"))
+                .and_then(|()| self.source.load(name)),
+            None => self.source.load(name),
+        };
+        let adapter = match loaded {
+            Ok(a) => Arc::new(a),
+            Err(e) => {
+                return Err(if trial {
+                    // failed probe: the circuit stays open (entry already
+                    // reset above) and the probation clock restarts
+                    e.context(format!("probation trial for adapter {name:?} failed"))
+                } else {
+                    e
+                });
+            }
+        };
+        if trial {
+            // the probe passed: close the circuit and forget the failures
+            let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            inner.quarantined.remove(name);
+            inner.failures.remove(name);
+            self.reinstated.fetch_add(1, Ordering::Relaxed);
         }
-        let adapter = Arc::new(self.source.load(name)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if !inner.map.contains_key(name) {
@@ -333,6 +431,8 @@ impl<S: AdapterSource> AdapterRegistry<S> {
             resident: inner.map.len(),
             resident_bytes: inner.map.values().map(|a| a.resident_bytes()).sum(),
             quarantined: inner.quarantined.len(),
+            probations: self.probations.load(Ordering::Relaxed),
+            reinstated: self.reinstated.load(Ordering::Relaxed),
             pins: inner.pins.values().sum(),
         }
     }
@@ -789,6 +889,69 @@ mod tests {
         reg.get("a").unwrap();
         assert_eq!(loads.load(Ordering::Relaxed), before + 1, "fresh load");
         assert_eq!(reg.stats().quarantined, 0);
+    }
+
+    #[test]
+    fn half_open_probation_reinstates_on_trial_success() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let failing = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let (l2, f2) = (loads.clone(), failing.clone());
+        let source = move |name: &str| -> Result<Adapter> {
+            l2.fetch_add(1, Ordering::Relaxed);
+            if f2.load(Ordering::Relaxed) {
+                bail!("adapter store offline");
+            }
+            Ok(dummy(name))
+        };
+        let mut reg = AdapterRegistry::new(source, 4);
+        reg.set_quarantine_threshold(1);
+        reg.set_probation_ticks(3);
+        assert!(reg.record_failure("a"), "threshold 1: first failure opens");
+        assert!(reg.get("a").is_err());
+        reg.note_tick();
+        reg.note_tick();
+        assert!(!reg.is_half_open("a"), "2 of 3 ticks: still open");
+        assert_eq!(reg.get("a").unwrap_err().kind(), ErrorKind::Request);
+        reg.note_tick();
+        assert!(reg.is_half_open("a"), "3rd tick arms the probe");
+        // trial load fails (source still down) → re-opened, clock reset
+        let e = reg.get("a").unwrap_err();
+        assert!(format!("{e}").contains("probation trial"), "{e}");
+        assert!(reg.is_quarantined("a") && !reg.is_half_open("a"));
+        assert_eq!(
+            reg.get("a").unwrap_err().kind(),
+            ErrorKind::Request,
+            "one probe per window: the circuit re-opened"
+        );
+        assert_eq!(loads.load(Ordering::Relaxed), 1, "exactly one trial load");
+        // wait out a full window again; this time the source has recovered
+        failing.store(false, Ordering::Relaxed);
+        for _ in 0..3 {
+            reg.note_tick();
+        }
+        let a = reg.get("a").expect("trial success closes the circuit");
+        assert_eq!(a.name, "a");
+        assert!(!reg.is_quarantined("a"));
+        let st = reg.stats();
+        assert_eq!((st.probations, st.reinstated, st.quarantined), (2, 1, 0));
+        // reinstatement cleared the failure count: the breaker re-arms
+        assert!(reg.record_failure("a"), "fresh failures re-open from zero");
+    }
+
+    #[test]
+    fn probation_zero_keeps_the_circuit_operator_only() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let mut reg = AdapterRegistry::new(counting_source(loads), 4);
+        reg.set_quarantine_threshold(1);
+        reg.set_probation_ticks(0);
+        assert!(reg.record_failure("a"));
+        for _ in 0..1000 {
+            reg.note_tick();
+        }
+        assert!(reg.is_quarantined("a") && !reg.is_half_open("a"));
+        assert!(reg.get("a").is_err(), "no automatic probation when disabled");
+        reg.reinstate("a");
+        reg.get("a").expect("operator reinstatement still works");
     }
 
     #[test]

@@ -68,6 +68,22 @@
 //! innocent rows re-decode to their exact solo bytes. Only when every
 //! rung of that cascade is gone does a request retire with a typed
 //! [`FinishReason::Failed`].
+//!
+//! **Sessions** (rust/docs/robustness.md § Sessions): when a
+//! [`SessionStore`] is installed ([`Scheduler::set_session_store`]), a
+//! request carrying a [`Request::session`] id tries to *resurrect* its
+//! conversation at admission: the stored `(conv, ssm)` row — the SSM's
+//! O(1) summary of the entire history — is spliced into the freshly
+//! admitted slot ([`DecodeState::splice_row_from`]) and the slot
+//! fast-forwards past the absorbed prefix, skipping prefill entirely.
+//! Retirement snapshots the row's state back into the store (the
+//! [`DecodeState::row_snapshot`] readback) tagged with the absorbed
+//! token count and a digest of the absorbed byte history, so a resumed
+//! turn can prove it continues the exact same conversation. EVERY
+//! session-layer failure — load fault, corrupt record, stale digest,
+//! geometry drift — degrades the request to ordinary full-history
+//! prefill (counted in [`Scheduler::session_fallbacks`]), never a
+//! wrong state.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
@@ -79,6 +95,7 @@ use crate::data::{BOS, PAD};
 use crate::eval::{
     beam_search, AdapterRow, AdapterStepDecode, DecodeState, PinnedAdapter, StepDecode,
 };
+use crate::serve::sessions::{history_digest, SessionSnapshot, SessionStore};
 use crate::tensor::{argmax, IntTensor, Tensor};
 
 /// One generation request.
@@ -101,6 +118,12 @@ pub struct Request {
     /// still queued or decoding this many ticks after submission retires
     /// with [`FinishReason::Failed`] (`ErrorKind::Exhausted`).
     pub deadline: usize,
+    /// Durable conversation id (`None` = stateless request). With a
+    /// [`SessionStore`] installed, admission resurrects this session's
+    /// stored state (skipping prefill when the stored history is a
+    /// prefix of [`Request::prompt`]) and retirement snapshots the
+    /// row's state back under this id.
+    pub session: Option<String>,
 }
 
 /// Why a request finished.
@@ -168,6 +191,8 @@ pub struct Response {
     /// (transient factory retries + shared-batch demotions) before it
     /// finished.
     pub retries: u64,
+    /// Echo of [`Request::session`].
+    pub session: Option<String>,
 }
 
 impl Response {
@@ -280,14 +305,15 @@ impl Lane {
         self.slots.iter().position(Option::is_none)
     }
 
-    /// Seed the recycled row and install the request. Hands the request
-    /// back on failure so the scheduler can retire it as an error. The
-    /// slot is staged exactly as the step-wise path expects (`t = 0`,
-    /// `cur = BOS`); a following [`Lane::flush_prefill`] may fast-forward
-    /// it past its prompt prefix.
+    /// Seed the recycled row and install the request; returns the row
+    /// index. Hands the request back on failure so the scheduler can
+    /// retire it as an error. The slot is staged exactly as the
+    /// step-wise path expects (`t = 0`, `cur = BOS`); a following
+    /// [`Lane::flush_prefill`] — or a session resurrection — may
+    /// fast-forward it past its prompt prefix.
     fn admit(&mut self, req: Request, enqueued: Instant, submit_tick: u64,
              attempts: u32)
-        -> std::result::Result<(), (Request, crate::error::Error)> {
+        -> std::result::Result<usize, (Request, crate::error::Error)> {
         let Some(r) = self.free_slot() else {
             // caller checked capacity; surface the broken invariant as a
             // per-request failure instead of killing the lane thread
@@ -310,7 +336,7 @@ impl Lane {
         if self.model.chunk_prefill().is_some() {
             self.pending_prefill.push(r);
         }
-        Ok(())
+        Ok(r)
     }
 
     /// Out-of-band chunked prefill for the rows staged this tick
@@ -411,8 +437,8 @@ impl Lane {
         (dispatches, covered)
     }
 
-    /// One decode step for every occupied slot; returns retired responses.
-    fn step(&mut self) -> Result<Vec<Response>> {
+    /// One decode step for every occupied slot; returns retired rows.
+    fn step(&mut self) -> Result<Vec<Retired>> {
         let logits = self.model.step(&self.cur, &mut self.state)?;
         Ok(advance_rows(&logits, &mut self.slots, &mut self.cur))
     }
@@ -461,11 +487,12 @@ impl SharedLane {
     }
 
     /// Seed the recycled row with this adapter's `h0`, bind its delta, and
-    /// install the request. Hands the request back on failure.
+    /// install the request; returns the row index. Hands the request back
+    /// on failure.
     fn admit(&mut self, req: Request, enqueued: Instant, submit_tick: u64,
              attempts: u32, delta: AdapterRow,
              h0: Option<Arc<BTreeMap<String, Tensor>>>)
-        -> std::result::Result<(), (Request, crate::error::Error)> {
+        -> std::result::Result<usize, (Request, crate::error::Error)> {
         let Some(r) = self.free_slot() else {
             return Err((req, crate::err!(
                 "scheduler invariant: shared admit without a free slot")));
@@ -485,12 +512,12 @@ impl SharedLane {
             submit_tick,
             attempts,
         });
-        Ok(())
+        Ok(r)
     }
 
     /// One mixed-adapter decode step; retired rows drop their delta so the
     /// next admission starts clean (and the delta's `Arc` can be freed).
-    fn step(&mut self) -> Result<Vec<Response>> {
+    fn step(&mut self) -> Result<Vec<Retired>> {
         let logits = self.model.step_rows(&self.cur, &mut self.state, &self.rows)?;
         let retired = advance_rows(&logits, &mut self.slots, &mut self.cur);
         for r in 0..self.slots.len() {
@@ -502,12 +529,26 @@ impl SharedLane {
     }
 }
 
+/// A row retired by [`advance_rows`]: the response plus the bookkeeping
+/// the session layer needs to snapshot the row's state — which row it
+/// was, and (for session-tagged requests) the id, absorbed token count,
+/// and history digest at the moment of retirement. The state snapshot
+/// itself is taken by the scheduler right after the step, while the
+/// lane's [`DecodeState`] still holds the retired row untouched.
+struct Retired {
+    row: usize,
+    /// `(session id, absorbed tokens incl. BOS, history digest)`;
+    /// `None` for stateless requests.
+    tag: Option<(String, u64, u64)>,
+    response: Response,
+}
+
 /// The shared retire loop: feed one step's logits to every occupied slot,
 /// advance prompts, emit greedy tokens, retire finished rows. Used by both
 /// merged lanes and the shared unmerged lane so the two paths cannot drift
 /// in stop/`max_new`/accounting semantics.
 fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor)
-    -> Vec<Response> {
+    -> Vec<Retired> {
     let v = logits.shape[1];
     let mut retired = Vec::new();
     for r in 0..slots.len() {
@@ -537,7 +578,15 @@ fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor
         };
         if let Some(reason) = finished {
             if let Some(slot) = slots[r].take() {
-                retired.push(finish(slot, reason));
+                // capture the session tag BEFORE the slot is consumed:
+                // the state has absorbed `slot.t` tokens (BOS included),
+                // i.e. the first `slot.t - 1` bytes of prompt ++ out
+                let tag = slot.req.session.clone().map(|sid| {
+                    let h = slot.t.saturating_sub(1);
+                    (sid, slot.t as u64,
+                     history_digest(&slot.req.prompt, &slot.out, h))
+                });
+                retired.push(Retired { row: r, tag, response: finish(slot, reason) });
             }
         }
         cur.data[r] = next;
@@ -549,6 +598,7 @@ fn finish(slot: Slot, finish: FinishReason) -> Response {
     let now = Instant::now();
     Response {
         id: slot.req.id,
+        session: slot.req.session.clone(),
         adapter: slot.req.adapter,
         prompt_len: slot.req.prompt.len(),
         output: slot.out,
@@ -578,6 +628,7 @@ fn fail_err(req: Request, enqueued: Instant, e: &crate::error::Error, retries: u
     -> Response {
     Response {
         id: req.id,
+        session: req.session.clone(),
         adapter: req.adapter,
         prompt_len: req.prompt.len(),
         output: Vec::new(),
@@ -601,6 +652,7 @@ fn slot_failed(slot: Slot, e: &crate::error::Error) -> Response {
     let now = Instant::now();
     Response {
         id: slot.req.id,
+        session: slot.req.session.clone(),
         adapter: slot.req.adapter,
         prompt_len: slot.req.prompt.len(),
         output: Vec::new(),
@@ -613,11 +665,95 @@ fn slot_failed(slot: Slot, e: &crate::error::Error) -> Response {
     }
 }
 
+/// Outcome of a session resurrection attempt on a freshly admitted row.
+enum Resume {
+    /// The stored state was spliced in and the slot fast-forwarded past
+    /// the absorbed history: zero prefill work for this request.
+    Resumed,
+    /// No session id, or a clean store miss: ordinary prefill.
+    Miss,
+    /// The session layer failed (load fault, corrupt/quarantined record,
+    /// stale digest, geometry drift, splice error): the slot stays
+    /// staged at `t = 0` and the request re-prefills its full history —
+    /// degraded, never wrong.
+    Fallback,
+}
+
+/// Try to resurrect a freshly admitted row from the session store. The
+/// row was just staged by `admit` (`t = 0`, `cur = BOS`, state reset);
+/// on success it is fast-forwarded to the snapshot's absorbed history
+/// and `cur` holds the next unconsumed prompt byte, exactly as
+/// [`Lane::flush_prefill`]'s splice would leave it. Any failure leaves
+/// the staged slot untouched (prefill fallback).
+fn try_resume_row(
+    store: &SessionStore,
+    dims: &crate::eval::StateDims,
+    b: usize,
+    r: usize,
+    state: &mut DecodeState,
+    cur: &mut IntTensor,
+    slots: &mut [Option<Slot>],
+) -> Resume {
+    let Some(slot) = slots.get_mut(r).and_then(Option::as_mut) else {
+        return Resume::Miss;
+    };
+    let Some(sid) = slot.req.session.clone() else { return Resume::Miss };
+    let snap = match store.load(&sid) {
+        Ok(Some(s)) => s,
+        Ok(None) => return Resume::Miss,
+        Err(_) => return Resume::Fallback, // injected fault / quarantined record
+    };
+    let consumed = snap.consumed as usize;
+    // the snapshot absorbed `consumed` tokens = BOS + the first
+    // `consumed - 1` bytes of its transcript; it resumes THIS request
+    // only if that transcript is a strict byte prefix of the new prompt
+    // (proved by the digest) under the same state geometry
+    let h = consumed.wrapping_sub(1);
+    if snap.dims != *dims
+        || consumed == 0
+        || h >= slot.req.prompt.len()
+        || history_digest(&slot.req.prompt, &[], h) != snap.history_hash
+    {
+        return Resume::Fallback;
+    }
+    let mut src = match DecodeState::with_row(dims, b, r, &snap.conv, &snap.ssm) {
+        Ok(s) => s,
+        Err(_) => return Resume::Fallback,
+    };
+    if state.splice_row_from(dims, b, &mut src, r, r).is_err() {
+        return Resume::Fallback;
+    }
+    slot.t = consumed;
+    cur.data[r] = slot.req.prompt[h] as i32;
+    Resume::Resumed
+}
+
+/// Session resurrection on a merged lane: on success the row also leaves
+/// the pending-prefill set (it has nothing left to prefill).
+fn resume_merged_row(store: &SessionStore, lane: &mut Lane, r: usize) -> Resume {
+    let dims = lane.model.dims();
+    let b = lane.model.arch_b();
+    let res = try_resume_row(store, &dims, b, r, &mut lane.state, &mut lane.cur,
+                             &mut lane.slots);
+    if matches!(res, Resume::Resumed) {
+        lane.pending_prefill.retain(|&p| p != r);
+    }
+    res
+}
+
+/// Session resurrection on the shared unmerged lane (no chunked prefill
+/// there — resumption skips the step-wise prompt ingestion instead).
+fn resume_shared_row(store: &SessionStore, sl: &mut SharedLane, r: usize) -> Resume {
+    let dims = sl.model.dims();
+    let b = sl.model.arch_b();
+    try_resume_row(store, &dims, b, r, &mut sl.state, &mut sl.cur, &mut sl.slots)
+}
+
 /// Outcome of trying to place a request on the shared lane — computed
 /// while the lane is mutably borrowed, acted on (release hook, requeue)
 /// afterwards.
 enum SharedAdmit {
-    Admitted,
+    Admitted(usize),
     Failed(Request, crate::error::Error),
     Full(Request),
 }
@@ -672,6 +808,12 @@ pub struct Scheduler<'a> {
     /// Builds a dedicated merged lane for a shared-batch adapter — the
     /// demotion target after a shared step failure.
     merged_fallback: Option<Box<dyn Fn(&str) -> Result<LaneModel> + 'a>>,
+    /// Durable session-state store (see [`crate::serve::SessionStore`]);
+    /// `None` = stateless serving, zero session overhead.
+    sessions: Option<Arc<SessionStore>>,
+    /// Called once at the top of every [`Scheduler::tick`] — the server
+    /// uses it to advance the registry circuit breaker's probation clock.
+    tick_hook: Option<Box<dyn Fn() + 'a>>,
     /// Total decode steps executed (across all lanes; the shared lane
     /// counts ONE step per tick however many adapters its rows mix).
     pub decode_steps: u64,
@@ -696,6 +838,18 @@ pub struct Scheduler<'a> {
     pub demotions: u64,
     /// Requests retired by the deadline watchdog.
     pub deadline_failures: u64,
+    /// Session-tagged rows resurrected from the store at admission
+    /// (prefill skipped entirely).
+    pub session_resurrections: u64,
+    /// Session-tagged rows that degraded to full-history prefill (load
+    /// fault, corrupt record, stale digest, geometry drift).
+    pub session_fallbacks: u64,
+    /// Session snapshots persisted at retirement.
+    pub session_persists: u64,
+    /// Retirement snapshots that failed to persist (injected fault,
+    /// readback error, geometry guard) — the session re-prefills next
+    /// turn.
+    pub session_persist_failures: u64,
 }
 
 impl<'a> Scheduler<'a> {
@@ -713,6 +867,8 @@ impl<'a> Scheduler<'a> {
             max_run_ticks: crate::knobs::max_ticks(),
             on_failure: None,
             merged_fallback: None,
+            sessions: None,
+            tick_hook: None,
             decode_steps: 0,
             ticks: 0,
             prefill_dispatches: 0,
@@ -722,7 +878,22 @@ impl<'a> Scheduler<'a> {
             step_retries: 0,
             demotions: 0,
             deadline_failures: 0,
+            session_resurrections: 0,
+            session_fallbacks: 0,
+            session_persists: 0,
+            session_persist_failures: 0,
         }
+    }
+
+    /// Install the durable session-state store: session-tagged requests
+    /// resurrect at admission and snapshot at retirement from now on.
+    pub fn set_session_store(&mut self, store: Arc<SessionStore>) {
+        self.sessions = Some(store);
+    }
+
+    /// The installed session store, if any.
+    pub fn session_store(&self) -> Option<&Arc<SessionStore>> {
+        self.sessions.as_ref()
     }
 
     /// Install the [`RetireHook`] (shared-delta release notifications).
@@ -748,6 +919,13 @@ impl<'a> Scheduler<'a> {
     /// the adapter registry's circuit breaker by the server.
     pub fn on_adapter_failure(&mut self, hook: Box<dyn Fn(&str, ErrorKind) + 'a>) {
         self.on_failure = Some(hook);
+    }
+
+    /// Install the per-tick listener, called once at the top of every
+    /// [`Scheduler::tick`] — the server drives the registry circuit
+    /// breaker's half-open probation clock with it.
+    pub fn on_tick(&mut self, hook: Box<dyn Fn() + 'a>) {
+        self.tick_hook = Some(hook);
     }
 
     /// Install the demotion target: builds a dedicated merged lane for an
@@ -809,6 +987,7 @@ impl<'a> Scheduler<'a> {
     /// for other adapters. Beam requests run to completion here (dedicated
     /// pass).
     fn admit(&mut self, out: &mut Vec<Response>) {
+        let store = self.sessions.clone();
         let mut still_queued = VecDeque::new();
         while let Some(entry) = self.queue.pop_front() {
             let QueueEntry { req, enqueued: enq, submit_tick, attempts, demoted } =
@@ -820,6 +999,7 @@ impl<'a> Scheduler<'a> {
                         let stopped = bytes.len() < req.max_new;
                         out.push(Response {
                             id: req.id,
+                            session: req.session.clone(),
                             adapter: req.adapter,
                             prompt_len: req.prompt.len(),
                             output: bytes,
@@ -844,10 +1024,21 @@ impl<'a> Scheduler<'a> {
             if self.lanes.contains_key(&req.adapter) {
                 let Some(lane) = self.lanes.get_mut(&req.adapter) else { continue };
                 if lane.free_slot().is_some() {
-                    if let Err((req, e)) = lane.admit(req, enq, submit_tick, attempts) {
-                        out.push(fail(req, enq, format!("admit failed: {e:#}")));
-                    } else {
-                        self.max_admit_wait_ticks = self.max_admit_wait_ticks.max(wait);
+                    match lane.admit(req, enq, submit_tick, attempts) {
+                        Err((req, e)) => {
+                            out.push(fail(req, enq, format!("admit failed: {e:#}")));
+                        }
+                        Ok(r) => {
+                            self.max_admit_wait_ticks =
+                                self.max_admit_wait_ticks.max(wait);
+                            if let Some(store) = &store {
+                                match resume_merged_row(store, lane, r) {
+                                    Resume::Resumed => self.session_resurrections += 1,
+                                    Resume::Fallback => self.session_fallbacks += 1,
+                                    Resume::Miss => {}
+                                }
+                            }
+                        }
                     }
                 } else {
                     still_queued.push_back(QueueEntry {
@@ -930,10 +1121,21 @@ impl<'a> Scheduler<'a> {
                         .lanes
                         .entry(req.adapter.clone())
                         .or_insert_with(|| Lane::new(lm));
-                    if let Err((req, e)) = lane.admit(req, enq, submit_tick, attempts) {
-                        out.push(fail(req, enq, format!("admit failed: {e:#}")));
-                    } else {
-                        self.max_admit_wait_ticks = self.max_admit_wait_ticks.max(wait);
+                    match lane.admit(req, enq, submit_tick, attempts) {
+                        Err((req, e)) => {
+                            out.push(fail(req, enq, format!("admit failed: {e:#}")));
+                        }
+                        Ok(r) => {
+                            self.max_admit_wait_ticks =
+                                self.max_admit_wait_ticks.max(wait);
+                            if let Some(store) = &store {
+                                match resume_merged_row(store, lane, r) {
+                                    Resume::Resumed => self.session_resurrections += 1,
+                                    Resume::Fallback => self.session_fallbacks += 1,
+                                    Resume::Miss => {}
+                                }
+                            }
+                        }
                     }
                 }
                 Ok(ServeModel::Shared { model, delta, h0 }) => {
@@ -944,16 +1146,25 @@ impl<'a> Scheduler<'a> {
                     let placed = match self.shared.as_mut() {
                         Some(sl) if sl.free_slot().is_some() => {
                             match sl.admit(req, enq, submit_tick, attempts, delta, h0) {
-                                Ok(()) => SharedAdmit::Admitted,
+                                Ok(r) => SharedAdmit::Admitted(r),
                                 Err((req, e)) => SharedAdmit::Failed(req, e),
                             }
                         }
                         _ => SharedAdmit::Full(req),
                     };
                     match placed {
-                        SharedAdmit::Admitted => {
+                        SharedAdmit::Admitted(r) => {
                             self.max_admit_wait_ticks =
                                 self.max_admit_wait_ticks.max(wait);
+                            if let (Some(store), Some(sl)) =
+                                (&store, self.shared.as_mut())
+                            {
+                                match resume_shared_row(store, sl, r) {
+                                    Resume::Resumed => self.session_resurrections += 1,
+                                    Resume::Fallback => self.session_fallbacks += 1,
+                                    Resume::Miss => {}
+                                }
+                            }
                         }
                         SharedAdmit::Failed(req, e) => {
                             // the delta never made it onto a row
@@ -1093,6 +1304,10 @@ impl<'a> Scheduler<'a> {
     /// lanes (shared batch, when a fallback is installed), and otherwise
     /// retires every request of that batch as failed.
     pub fn tick(&mut self) -> Vec<Response> {
+        if let Some(hook) = &self.tick_hook {
+            hook();
+        }
+        let store = self.sessions.clone();
         let mut out = Vec::new();
         self.enforce_deadlines(&mut out);
         self.admit(&mut out);
@@ -1119,10 +1334,36 @@ impl<'a> Scheduler<'a> {
                 None => None,
             };
             match lane.step() {
-                Ok(mut retired) => {
+                Ok(retired) => {
                     self.decode_steps += 1;
                     lane.attempts = 0;
-                    out.append(&mut retired);
+                    // snapshot session-tagged rows NOW, while the lane's
+                    // state still holds each retired row untouched
+                    let dims = lane.model.dims();
+                    let b = lane.model.arch_b();
+                    for t in retired {
+                        if let (Some(store), Some((sid, consumed, digest))) =
+                            (&store, &t.tag)
+                        {
+                            let persisted = lane
+                                .state
+                                .row_snapshot(&dims, b, t.row)
+                                .and_then(|(conv, ssm)| {
+                                    store.persist(sid, SessionSnapshot {
+                                        dims,
+                                        consumed: *consumed,
+                                        history_hash: *digest,
+                                        conv,
+                                        ssm,
+                                    })
+                                });
+                            match persisted {
+                                Ok(()) => self.session_persists += 1,
+                                Err(_) => self.session_persist_failures += 1,
+                            }
+                        }
+                        out.push(t.response);
+                    }
                 }
                 Err(e) => {
                     self.step_faults += 1;
@@ -1176,15 +1417,41 @@ impl<'a> Scheduler<'a> {
             _ => None,
         };
         match shared_res {
-            Some((Ok(mut retired), _)) => {
+            Some((Ok(retired), _)) => {
                 self.decode_steps += 1;
+                // snapshot session-tagged rows while the shared state
+                // still holds them, then release pins outside the borrow
                 if let Some(sl) = self.shared.as_mut() {
                     sl.attempts = 0;
+                    let dims = sl.model.dims();
+                    let b = sl.model.arch_b();
+                    for t in &retired {
+                        if let (Some(store), Some((sid, consumed, digest))) =
+                            (&store, &t.tag)
+                        {
+                            let persisted = sl
+                                .state
+                                .row_snapshot(&dims, b, t.row)
+                                .and_then(|(conv, ssm)| {
+                                    store.persist(sid, SessionSnapshot {
+                                        dims,
+                                        consumed: *consumed,
+                                        history_hash: *digest,
+                                        conv,
+                                        ssm,
+                                    })
+                                });
+                            match persisted {
+                                Ok(()) => self.session_persists += 1,
+                                Err(_) => self.session_persist_failures += 1,
+                            }
+                        }
+                    }
                 }
-                for r in &retired {
-                    self.release(&r.adapter);
+                for t in retired {
+                    self.release(&t.response.adapter);
+                    out.push(t.response);
                 }
-                out.append(&mut retired);
             }
             Some((Err(e), rolled)) => {
                 self.step_faults += 1;
@@ -1263,6 +1530,20 @@ impl<'a> Scheduler<'a> {
         out
     }
 
+    /// Graceful drain (the server's stdin-EOF / shutdown path): run every
+    /// queued and in-flight request to completion — retirement persists
+    /// their session snapshots as usual — then flush the store's memory
+    /// tier to durable records. Returns the retired responses plus
+    /// `(sessions flushed, flush failures)`.
+    pub fn drain(&mut self) -> (Vec<Response>, u64, u64) {
+        let out = self.run_to_completion();
+        let (flushed, failed) = match &self.sessions {
+            Some(s) => s.flush_all(),
+            None => (0, 0),
+        };
+        (out, flushed, failed)
+    }
+
     /// The max-tick budget ran out: fail everything still queued or
     /// resident (shared rows release their pins) and drop the batches.
     fn drain_failed(&mut self, out: &mut Vec<Response>) {
@@ -1339,7 +1620,14 @@ mod tests {
             stop_byte: stop,
             beam: 1,
             deadline: 0,
+            session: None,
         }
+    }
+
+    /// Same as [`req`] but tagged with a durable session id.
+    fn sreq(id: u64, adapter: &str, sid: &str, prompt: Vec<u8>, max_new: usize)
+        -> Request {
+        Request { session: Some(sid.into()), ..req(id, adapter, prompt, max_new, 255) }
     }
 
     #[test]
@@ -1503,6 +1791,7 @@ mod tests {
             finish: FinishReason::Length,
             error: None,
             retries: 0,
+            session: None,
         };
         assert!((resp.tok_per_s() - 2.0).abs() < 1e-12, "3 bytes / 1.5s occupancy");
         let degenerate = Response { queued_s: 2.0, ..resp };
@@ -2089,5 +2378,265 @@ mod tests {
         assert_eq!(resps[0].retries, REQUEST_RETRY_BUDGET as u64);
         assert_eq!(calls.get(), REQUEST_RETRY_BUDGET + 1);
         assert!(s.is_idle());
+    }
+
+    // ---- durable sessions -----------------------------------------------
+
+    use crate::fault::{FaultPlan, FaultSite};
+
+    /// Turn-2 prompt for a resumed conversation: the full turn-1
+    /// transcript (prompt ++ output) plus new user bytes.
+    fn next_turn(prompt1: &[u8], out1: &[u8], new: &[u8]) -> Vec<u8> {
+        let mut p = prompt1.to_vec();
+        p.extend_from_slice(out1);
+        p.extend_from_slice(new);
+        p
+    }
+
+    #[test]
+    fn session_resume_skips_prefill_and_matches_full_replay() {
+        // THE acceptance pin: the resumed turn's bytes are identical to
+        // replaying the full history through chunked prefill, with ZERO
+        // prefill dispatches and only the unabsorbed suffix stepped
+        let store = Arc::new(SessionStore::new(8));
+        let model = Arc::new(Accum::new(1, &[4, 8]));
+        let mut s = Scheduler::new(accum_factory(model.clone()), 2);
+        s.set_session_store(store.clone());
+        let prompt1: Vec<u8> = (0..17).map(|i| (i * 3 + 5) as u8).collect();
+        s.submit(sreq(1, "a", "chat-1", prompt1.clone(), 4));
+        let r1 = s.run_to_completion().pop().expect("turn 1 retires");
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert_eq!(s.session_persists, 1);
+        assert_eq!(r1.session.as_deref(), Some("chat-1"));
+
+        let prompt2 = next_turn(&prompt1, &r1.output, &[71, 72, 73]);
+        // ground truth: a fresh model replays the full history
+        let ref_model = Arc::new(Accum::new(1, &[4, 8]));
+        let mut s_ref = Scheduler::new(accum_factory(ref_model), 2);
+        s_ref.submit(req(2, "a", prompt2.clone(), 4, 255));
+        let want = s_ref.run_to_completion().pop().expect("replay retires");
+
+        let chunks_before = model.chunks.load(Ordering::Relaxed);
+        let steps_before = model.steps.load(Ordering::Relaxed);
+        s.submit(sreq(2, "a", "chat-1", prompt2.clone(), 4));
+        let r2 = s.run_to_completion().pop().expect("turn 2 retires");
+        assert_eq!(r2.output, want.output, "resume must be byte-identical");
+        assert_eq!(r2.steps, want.steps, "absolute token accounting unchanged");
+        assert_eq!(s.session_resurrections, 1);
+        assert_eq!(s.session_fallbacks, 0);
+        assert_eq!(model.chunks.load(Ordering::Relaxed), chunks_before,
+                   "zero prefill dispatches on resume");
+        // only the unabsorbed tail was stepped: the absolute token count
+        // (want.steps) minus what the snapshot already absorbed (r1.steps)
+        assert_eq!(model.steps.load(Ordering::Relaxed) - steps_before,
+                   want.steps - r1.steps);
+        assert_eq!(s.session_persists, 2, "turn 2 re-persisted the session");
+    }
+
+    #[test]
+    fn shared_lane_session_resume_matches_solo() {
+        // resurrection works on the mixed-adapter batch too, and the
+        // resumed row still matches its dedicated merged solo run
+        let store = Arc::new(SessionStore::new(8));
+        let model = Arc::new(AccumAdapters::new(2));
+        let mut s = Scheduler::new(shared_factory(model.clone()), 4);
+        s.set_session_store(store);
+        s.submit(sreq(1, "five", "conv", vec![10, 20, 30], 3));
+        let r1 = s.run_to_completion().pop().expect("turn 1 retires");
+        assert_eq!(s.session_persists, 1);
+        let prompt2 = next_turn(&[10, 20, 30], &r1.output, &[42]);
+        let want = solo_merged(5.0, prompt2.clone(), 3);
+        let steps_before = model.steps.load(Ordering::Relaxed);
+        s.submit(sreq(2, "five", "conv", prompt2.clone(), 3));
+        let r2 = s.run_to_completion().pop().expect("turn 2 retires");
+        assert_eq!(r2.output, want.output, "shared-lane resume is byte-identical");
+        assert_eq!(s.session_resurrections, 1);
+        assert_eq!(model.steps.load(Ordering::Relaxed) - steps_before,
+                   want.steps - r1.steps, "only the unabsorbed tail stepped");
+    }
+
+    #[test]
+    fn session_load_fault_degrades_to_full_prefill() {
+        // a saturated state_load fault can slow a session down, never
+        // change its bytes: every turn falls back to full-history prefill
+        let plan =
+            Arc::new(FaultPlan::seeded(11).with_rate(FaultSite::StateLoad, 1.0));
+        let store = Arc::new(SessionStore::new(8).with_faults(plan));
+        let model = Arc::new(Accum::new(1, &[4]));
+        let mut s = Scheduler::new(accum_factory(model.clone()), 2);
+        s.set_session_store(store);
+        let prompt1: Vec<u8> = (0..9).map(|i| (i + 2) as u8).collect();
+        s.submit(sreq(1, "a", "hurt", prompt1.clone(), 3));
+        let r1 = s.run_to_completion().pop().expect("turn 1 retires");
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert_eq!(s.session_fallbacks, 1, "turn 1's load attempt already faulted");
+
+        let prompt2 = next_turn(&prompt1, &r1.output, &[99]);
+        let ref_model = Arc::new(Accum::new(1, &[4]));
+        let mut s_ref = Scheduler::new(accum_factory(ref_model), 2);
+        s_ref.submit(req(2, "a", prompt2.clone(), 3, 255));
+        let want = s_ref.run_to_completion().pop().expect("replay retires");
+        s.submit(sreq(2, "a", "hurt", prompt2.clone(), 3));
+        let r2 = s.run_to_completion().pop().expect("turn 2 retires");
+        assert!(r2.error.is_none(), "{:?}", r2.error);
+        assert_eq!(r2.output, want.output, "degraded, never wrong");
+        assert_eq!(s.session_resurrections, 0);
+        assert_eq!(s.session_fallbacks, 2);
+    }
+
+    #[test]
+    fn persist_fault_counts_and_next_turn_reprefills() {
+        let plan =
+            Arc::new(FaultPlan::seeded(7).with_rate(FaultSite::StatePersist, 1.0));
+        let store = Arc::new(SessionStore::new(8).with_faults(plan));
+        let model = Arc::new(Accum::new(1, &[]));
+        let mut s = Scheduler::new(accum_factory(model.clone()), 2);
+        s.set_session_store(store);
+        let prompt1 = vec![10u8, 20, 30];
+        s.submit(sreq(1, "a", "lossy", prompt1.clone(), 3));
+        let r1 = s.run_to_completion().pop().expect("turn 1 retires");
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert_eq!(s.session_persists, 0);
+        assert_eq!(s.session_persist_failures, 1, "typed telemetry, not an error");
+        let prompt2 = next_turn(&prompt1, &r1.output, &[40]);
+        let ref_model = Arc::new(Accum::new(1, &[]));
+        let mut s_ref = Scheduler::new(accum_factory(ref_model), 2);
+        s_ref.submit(req(2, "a", prompt2.clone(), 3, 255));
+        let want = s_ref.run_to_completion().pop().expect("replay retires");
+        s.submit(sreq(2, "a", "lossy", prompt2.clone(), 3));
+        let r2 = s.run_to_completion().pop().expect("turn 2 retires");
+        assert_eq!(r2.output, want.output, "unpersisted session re-prefills");
+        assert_eq!(s.session_resurrections, 0, "nothing persisted, nothing resumed");
+    }
+
+    #[test]
+    fn stale_session_digest_falls_back_to_prefill() {
+        // a session id reused with an UNRELATED prompt must not splice the
+        // old conversation's state into the new one
+        let store = Arc::new(SessionStore::new(8));
+        let model = Arc::new(Accum::new(1, &[]));
+        let mut s = Scheduler::new(accum_factory(model.clone()), 2);
+        s.set_session_store(store);
+        s.submit(sreq(1, "a", "reused", vec![10, 20, 30, 40], 3));
+        s.run_to_completion().pop().expect("turn 1 retires");
+        let fresh_prompt = vec![200u8, 201, 202, 203, 204];
+        let ref_model = Arc::new(Accum::new(1, &[]));
+        let mut s_ref = Scheduler::new(accum_factory(ref_model), 2);
+        s_ref.submit(req(2, "a", fresh_prompt.clone(), 3, 255));
+        let want = s_ref.run_to_completion().pop().expect("ref retires");
+        s.submit(sreq(2, "a", "reused", fresh_prompt.clone(), 3));
+        let r2 = s.run_to_completion().pop().expect("turn 2 retires");
+        assert_eq!(r2.output, want.output, "stale snapshot must not be spliced");
+        assert_eq!(s.session_resurrections, 0);
+        assert_eq!(s.session_fallbacks, 1);
+    }
+
+    #[test]
+    fn drain_then_restart_resumes_from_disk() {
+        // the graceful-drain contract end to end: drain flushes resident
+        // sessions to durable records; a NEW scheduler + NEW store over
+        // the same dir (a process restart) resumes with zero prefill
+        let dir = std::env::temp_dir()
+            .join(format!("ssm-peft-sched-drain-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let prompt1: Vec<u8> = (0..13).map(|i| (i * 5 + 1) as u8).collect();
+        let r1 = {
+            let store = Arc::new(SessionStore::new(8).with_dir(&dir));
+            let model = Arc::new(Accum::new(1, &[4]));
+            let mut s = Scheduler::new(accum_factory(model), 2);
+            s.set_session_store(store);
+            s.submit(sreq(1, "a", "durable", prompt1.clone(), 3));
+            let (mut resps, flushed, failed) = s.drain();
+            assert_eq!((flushed, failed), (1, 0));
+            resps.pop().expect("turn 1 retires")
+        }; // "crash": scheduler, store, and model all dropped
+        let store = Arc::new(SessionStore::new(8).with_dir(&dir));
+        assert_eq!(store.recover().valid, 1, "the drained record survives");
+        let model = Arc::new(Accum::new(1, &[4]));
+        let mut s = Scheduler::new(accum_factory(model.clone()), 2);
+        s.set_session_store(store);
+        let prompt2 = next_turn(&prompt1, &r1.output, &[50, 60]);
+        let ref_model = Arc::new(Accum::new(1, &[4]));
+        let mut s_ref = Scheduler::new(accum_factory(ref_model), 2);
+        s_ref.submit(req(2, "a", prompt2.clone(), 3, 255));
+        let want = s_ref.run_to_completion().pop().expect("replay retires");
+        let chunks_before = model.chunks.load(Ordering::Relaxed);
+        s.submit(sreq(2, "a", "durable", prompt2.clone(), 3));
+        let r2 = s.run_to_completion().pop().expect("turn 2 retires");
+        assert_eq!(r2.output, want.output, "disk-resumed turn is byte-identical");
+        assert_eq!(s.session_resurrections, 1);
+        assert_eq!(model.chunks.load(Ordering::Relaxed), chunks_before,
+                   "zero prefill dispatches after restart");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tick_hook_drives_circuit_breaker_probation() {
+        use crate::serve::registry::{Adapter, AdapterRegistry};
+        use std::sync::atomic::AtomicBool;
+        // adapter source that is down at first and recovers mid-run
+        let down = Arc::new(AtomicBool::new(true));
+        let d2 = down.clone();
+        let source = move |name: &str| -> Result<Adapter> {
+            if d2.load(Ordering::Relaxed) {
+                crate::bail!("adapter artifacts unreachable");
+            }
+            Ok(Adapter {
+                name: name.to_string(),
+                decode_variant: "a_full".into(),
+                delta: None,
+                h0: None,
+                budget_pct: 1.0,
+            })
+        };
+        let mut reg = AdapterRegistry::new(source, 4);
+        reg.set_quarantine_threshold(1);
+        reg.set_probation_ticks(3);
+        let reg = reg;
+        assert!(reg.record_failure("flaky"), "one failure opens the circuit");
+        let factory: ServeFactory = Box::new(|adapter: &str| {
+            reg.get(adapter)?; // the registry gates admission
+            Ok(ServeModel::Merged(LaneModel {
+                model: Arc::new(Counter::new(2)),
+                h0: None,
+            }))
+        });
+        let mut s = Scheduler::new(factory, 2);
+        s.on_tick(Box::new(|| reg.note_tick()));
+        // open circuit: the request is rejected at admission
+        s.submit(req(1, "flaky", vec![10], 2, 0));
+        let r = s.run_to_completion().pop().expect("rejection retires");
+        assert_eq!(r.finish, FinishReason::Failed);
+        assert!(r.error.as_deref().unwrap_or("").contains("quarantined"), "{r:?}");
+        // idle scheduler ticks age the circuit through the tick hook
+        let mut ticks = 0;
+        while !reg.is_half_open("flaky") {
+            s.tick();
+            ticks += 1;
+            assert!(ticks < 10, "probation window never armed");
+        }
+        // half-open but the source is still down: the one trial load
+        // fails, re-opens the circuit, and the request retires failed
+        s.submit(req(2, "flaky", vec![10], 2, 0));
+        let r = s.run_to_completion().pop().expect("failed trial retires");
+        assert_eq!(r.finish, FinishReason::Failed);
+        assert!(reg.is_quarantined("flaky") && !reg.is_half_open("flaky"));
+        assert_eq!(reg.stats().probations, 1, "exactly one probe per window");
+        // next window: the source has recovered, so the trial passes and
+        // the very same request decodes normally
+        down.store(false, Ordering::Relaxed);
+        let mut ticks = 0;
+        while !reg.is_half_open("flaky") {
+            s.tick();
+            ticks += 1;
+            assert!(ticks < 10, "second probation window never armed");
+        }
+        s.submit(req(3, "flaky", vec![10], 2, 0));
+        let r = s.run_to_completion().pop().expect("reinstated adapter serves");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, vec![11, 12]);
+        assert!(!reg.is_quarantined("flaky"));
+        let st = reg.stats();
+        assert_eq!((st.probations, st.reinstated), (2, 1));
     }
 }

@@ -55,6 +55,16 @@ pub struct ServeOptions {
     /// Default per-request deadline in scheduler ticks (0 = none), used
     /// when a request omits `deadline`.
     pub deadline: usize,
+    /// Spill directory for the durable session store (`None` = memory-only
+    /// tier; default: the `SSM_PEFT_SESSIONS_DIR` knob).
+    pub sessions_dir: Option<PathBuf>,
+    /// In-memory session LRU capacity (default: the
+    /// `SSM_PEFT_SESSIONS_CAP` knob).
+    pub sessions_cap: usize,
+    /// Scheduler ticks a quarantined adapter waits before the circuit
+    /// breaker goes half-open and admits one probation trial load
+    /// (0 = operator-only reinstatement).
+    pub probation_ticks: u32,
 }
 
 impl Default for ServeOptions {
@@ -70,6 +80,9 @@ impl Default for ServeOptions {
             stats_name: "serve".into(),
             adapter_dir: None,
             deadline: 0,
+            sessions_dir: crate::knobs::sessions_dir(),
+            sessions_cap: crate::knobs::sessions_cap(),
+            probation_ticks: crate::serve::registry::DEFAULT_PROBATION_TICKS,
         }
     }
 }
@@ -77,7 +90,7 @@ impl Default for ServeOptions {
 impl ServeOptions {
     /// Parse CLI `key=value` overrides: `arch`, `pretrain_steps`, `addr`,
     /// `stdin` (0/1), `cache`, `lanes`, `max_new`, `name`, `adapter_dir`,
-    /// `deadline`.
+    /// `deadline`, `sessions_dir`, `sessions_cap`, `probation_ticks`.
     pub fn from_kvs(kvs: &std::collections::BTreeMap<String, String>) -> Result<ServeOptions> {
         let mut o = ServeOptions::default();
         for (k, v) in kvs {
@@ -92,6 +105,11 @@ impl ServeOptions {
                 "name" => o.stats_name = v.clone(),
                 "adapter_dir" => o.adapter_dir = Some(PathBuf::from(v)),
                 "deadline" => o.deadline = v.parse().context("deadline")?,
+                "sessions_dir" => o.sessions_dir = Some(PathBuf::from(v)),
+                "sessions_cap" => o.sessions_cap = v.parse().context("sessions_cap")?,
+                "probation_ticks" => {
+                    o.probation_ticks = v.parse().context("probation_ticks")?
+                }
                 other => bail!("unknown serve option {other:?}"),
             }
         }
@@ -138,10 +156,15 @@ struct WireRequest {
     /// Per-request deadline override in ticks; `None` falls back to
     /// [`ServeOptions::deadline`].
     deadline: Option<usize>,
+    /// Durable session id: the conversation this request continues. The
+    /// prompt must carry the FULL history (prior turns' prompt + output +
+    /// new bytes) — the stored state only proves it can skip the prefix
+    /// it already absorbed (rust/docs/serving.md § Sessions).
+    session: Option<String>,
 }
 
 const REQUEST_KEYS: &[&str] =
-    &["id", "adapter", "prompt", "max_new", "stop", "beam", "deadline"];
+    &["id", "adapter", "prompt", "max_new", "stop", "beam", "deadline", "session"];
 
 fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
     let v = json::parse(line).map_err(|e| err!("bad request JSON: {e}"))?;
@@ -187,6 +210,16 @@ fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
         Some(n) => Some(n.as_usize().ok_or_else(|| err!("deadline: expected number"))?),
         None => None,
     };
+    let session = match obj.get("session") {
+        None | Some(Value::Null) => None,
+        Some(s) => {
+            let s = s.as_str().ok_or_else(|| err!("session: expected string"))?;
+            if s.is_empty() {
+                bail!("session: expected a non-empty id");
+            }
+            Some(s.to_string())
+        }
+    };
     Ok(WireRequest {
         client_id: obj.get("id").cloned().unwrap_or(Value::Null),
         adapter,
@@ -195,6 +228,7 @@ fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
         stop_byte,
         beam,
         deadline,
+        session,
     })
 }
 
@@ -203,6 +237,13 @@ fn response_json(resp: &Response, client_id: &Value) -> Value {
     json::obj(vec![
         ("id", client_id.clone()),
         ("adapter", json::s(&resp.adapter)),
+        (
+            "session",
+            match &resp.session {
+                Some(s) => json::s(s),
+                None => Value::Null,
+            },
+        ),
         ("output", json::s(&String::from_utf8_lossy(&resp.output))),
         ("prompt_len", json::num(resp.prompt_len as f64)),
         ("new_tokens", json::num(resp.output.len() as f64)),
@@ -241,6 +282,13 @@ impl ServeRecord<'_> {
             ("serve", json::s(self.serve)),
             ("id", json::num(self.resp.id as f64)),
             ("adapter", json::s(&self.resp.adapter)),
+            (
+                "session",
+                match &self.resp.session {
+                    Some(s) => json::s(s),
+                    None => Value::Null,
+                },
+            ),
             ("prompt_len", json::num(self.resp.prompt_len as f64)),
             ("new_tokens", json::num(self.resp.output.len() as f64)),
             ("queued_s", json::num(self.resp.queued_s)),
@@ -269,6 +317,9 @@ impl ServeRecord<'_> {
 /// goes back to its originating connection; every finished request appends
 /// a [`ServeRecord`] to `results/<stats_name>.jsonl`.
 pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<()> {
+    // fail fast on malformed SSM_PEFT_* values instead of serving with
+    // silently defaulted knobs (the accessors also warn once per knob)
+    crate::knobs::validate()?;
     let pipeline = Pipeline::new(engine, manifest);
     eprintln!("[serve] staging base {} ({} steps)", opts.arch, opts.pretrain_steps);
     let base = pipeline.pretrained(&opts.arch, opts.pretrain_steps, 0)?;
@@ -288,6 +339,7 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     if let Some(p) = &fault_plan {
         registry.set_fault_inject(p.clone());
     }
+    registry.set_probation_ticks(opts.probation_ticks);
     let registry = registry;
     // the unmerged multi-adapter core: ONE executable bound to the plain
     // base, stepping a mixed-adapter batch with per-row deltas. When it
@@ -335,6 +387,8 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     });
     let mut sched = Scheduler::new(factory, opts.max_lanes);
     sched.on_release(Box::new(|adapter: &str| registry.unpin(adapter)));
+    // every scheduler tick ages open circuits toward half-open probation
+    sched.on_tick(Box::new(|| registry.note_tick()));
     if let Some(p) = &fault_plan {
         sched.set_fault_inject(p.clone());
     }
@@ -353,6 +407,27 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
         let core = DecodeCore::new(engine, manifest, &a.decode_variant, &params)?;
         Ok(LaneModel { model: Arc::new(core), h0: a.h0.clone() })
     }));
+    // the durable session store: memory LRU + optional spill dir, with a
+    // startup recovery scan that quarantines anything corrupt
+    let sessions = {
+        let mut store = super::sessions::SessionStore::new(opts.sessions_cap);
+        if let Some(dir) = &opts.sessions_dir {
+            store = store.with_dir(dir);
+        }
+        if let Some(p) = &fault_plan {
+            store = store.with_faults(p.clone());
+        }
+        Arc::new(store)
+    };
+    if let Some(dir) = &opts.sessions_dir {
+        let rep = sessions.recover();
+        eprintln!(
+            "[serve] session store at {} ({} records recovered, {} quarantined, \
+             {} temp files swept)",
+            dir.display(), rep.valid, rep.quarantined, rep.removed_tmp,
+        );
+    }
+    sched.set_session_store(sessions.clone());
 
     let (tx, rx) = mpsc::channel::<(String, Sink)>();
     if opts.stdin {
@@ -417,6 +492,7 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
                     stop_byte: w.stop_byte,
                     beam: w.beam,
                     deadline: w.deadline.unwrap_or(opts.deadline),
+                    session: w.session,
                 });
             }
             Err(e) => {
@@ -465,6 +541,21 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
             );
         }
     }
+    // graceful drain (stdin EOF / every source hung up): retire whatever
+    // is still in flight — retirement persists its session snapshot —
+    // then flush every resident session to a durable record
+    let (rest, flushed, flush_failed) = sched.drain();
+    for resp in rest {
+        let (client_id, sink) = inflight
+            .remove(&resp.id)
+            .unwrap_or((Value::Null, Sink::Stdout));
+        sink.send(&json::emit(&response_json(&resp, &client_id)));
+        stats
+            .write_line(&ServeRecord { serve: &opts.stats_name, resp: &resp, git: &git }
+                .to_json())
+            .ok();
+        served += 1;
+    }
     let st = registry.stats();
     eprintln!(
         "[serve] done: {served} requests, {} decode steps / {} ticks \
@@ -474,13 +565,27 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
         sched.prefill_dispatches, sched.prefill_tokens, st.hits, st.misses,
         st.evictions, st.resident_bytes as f64 / 1024.0,
     );
+    let ss = sessions.stats();
+    if opts.sessions_dir.is_some()
+        || ss.hits + ss.misses + sched.session_persists + sched.session_fallbacks > 0
+    {
+        eprintln!(
+            "[serve] sessions: {} resurrected / {} fell back to prefill, \
+             {} persisted ({} failures), store {} hits / {} misses / {} spills, \
+             {} quarantined; drain flushed {} ({} failures)",
+            sched.session_resurrections, sched.session_fallbacks,
+            sched.session_persists, sched.session_persist_failures,
+            ss.hits, ss.misses, ss.spills, ss.quarantined, flushed, flush_failed,
+        );
+    }
     if sched.step_faults + sched.deadline_failures + st.quarantined as u64 > 0 {
         eprintln!(
             "[serve] resilience: {} step faults ({} retried in place, {} rows \
-             demoted), {} deadline failures, {} adapters quarantined, \
-             {} pins outstanding",
+             demoted), {} deadline failures, {} adapters quarantined \
+             ({} probation trials, {} reinstated), {} pins outstanding",
             sched.step_faults, sched.step_retries, sched.demotions,
-            sched.deadline_failures, st.quarantined, st.pins,
+            sched.deadline_failures, st.quarantined, st.probations,
+            st.reinstated, st.pins,
         );
     }
     Ok(())
@@ -513,6 +618,29 @@ mod tests {
         assert_eq!(w.beam, 1);
         assert_eq!(w.deadline, None, "falls back to the serve-level default");
         assert_eq!(w.client_id, Value::Null);
+        assert_eq!(w.session, None, "stateless by default");
+    }
+
+    #[test]
+    fn parse_request_session_contract() {
+        let w = parse_request(
+            r#"{"adapter": "a", "prompt": "x", "session": "chat-42"}"#,
+            8,
+        )
+        .unwrap();
+        assert_eq!(w.session.as_deref(), Some("chat-42"));
+        let w = parse_request(r#"{"adapter": "a", "prompt": "x", "session": null}"#, 8)
+            .unwrap();
+        assert_eq!(w.session, None, "explicit null = stateless");
+        assert!(
+            parse_request(r#"{"adapter": "a", "prompt": "x", "session": 7}"#, 8).is_err(),
+            "non-string session id rejected"
+        );
+        assert!(
+            parse_request(r#"{"adapter": "a", "prompt": "x", "session": ""}"#, 8)
+                .is_err(),
+            "empty session id rejected"
+        );
     }
 
     #[test]
@@ -543,9 +671,11 @@ mod tests {
             finish: FinishReason::Stop,
             error: None,
             retries: 1,
+            session: Some("chat-42".into()),
         };
         let v = response_json(&resp, &Value::Str("req-1".into()));
         assert_eq!(v.path("id").unwrap().as_str(), Some("req-1"));
+        assert_eq!(v.path("session").unwrap().as_str(), Some("chat-42"));
         assert_eq!(v.path("output").unwrap().as_str(), Some("out"));
         assert_eq!(v.path("new_tokens").unwrap().as_usize(), Some(3));
         assert_eq!(v.path("finish").unwrap().as_str(), Some("stop"));
@@ -558,6 +688,7 @@ mod tests {
         assert_eq!(rec.path("serve").unwrap().as_str(), Some("s"));
         assert_eq!(rec.path("git").unwrap().as_str(), Some("g1"));
         assert_eq!(rec.path("id").unwrap().as_usize(), Some(3));
+        assert_eq!(rec.path("session").unwrap().as_str(), Some("chat-42"));
         // round-trips through the emitter
         let back = json::parse(&json::emit(&rec)).unwrap();
         assert_eq!(back.path("adapter").unwrap().as_str(), Some("a_lora_lin"));
@@ -571,12 +702,16 @@ mod tests {
         kv.insert("addr".to_string(), "127.0.0.1:0".to_string());
         kv.insert("stdin".to_string(), "0".to_string());
         kv.insert("deadline".to_string(), "64".to_string());
+        kv.insert("sessions_dir".to_string(), "/tmp/sess".to_string());
+        kv.insert("sessions_cap".to_string(), "16".to_string());
         let o = ServeOptions::from_kvs(&kv).unwrap();
         assert_eq!(o.arch, "mamba2_xs");
         assert_eq!(o.cache_cap, 2);
         assert!(!o.stdin);
         assert_eq!(o.addr.as_deref(), Some("127.0.0.1:0"));
         assert_eq!(o.deadline, 64);
+        assert_eq!(o.sessions_dir.as_deref(), Some(std::path::Path::new("/tmp/sess")));
+        assert_eq!(o.sessions_cap, 16);
 
         let mut bad = std::collections::BTreeMap::new();
         bad.insert("stdin".to_string(), "0".to_string());

@@ -1,0 +1,876 @@
+//! Durable per-session state store: crash-safe O(1) conversation resume.
+//!
+//! An SSM conversation's entire history is a fixed-size `(conv, ssm)`
+//! state (the O(1) decode property the paper's SDT/LoRA adapters ride),
+//! so persisting a few-KB snapshot per session buys zero re-prefill
+//! multi-turn chat at any history length. This module is the robustness
+//! half of that bargain: the store must survive crashes, torn writes,
+//! corrupt records, and full disks **without ever serving a wrong
+//! state** — every failure degrades to full-history chunked prefill
+//! (rust/docs/robustness.md § Sessions).
+//!
+//! Two tiers:
+//!
+//! - an in-memory LRU tier ([`SessionStore::new`] sets its capacity) that
+//!   serves the hot path with zero I/O;
+//! - a spill-to-disk tier ([`SessionStore::with_dir`]) of one record per
+//!   session — checksummed, versioned, geometry-tagged, written via
+//!   temp-file + atomic rename so a crash can tear a *temp* file but
+//!   never a committed record.
+//!
+//! Safety invariants:
+//!
+//! - a record is only ever trusted after its FNV-1a checksum, magic,
+//!   version, geometry tag, and payload lengths all validate — anything
+//!   else is quarantined to `<name>.corrupt` (never deleted, so an
+//!   operator can inspect it) and the session re-prefills;
+//! - the resume-side prefix digest ([`history_digest`]) ties a snapshot
+//!   to the exact byte history it absorbed, so a stale or foreign
+//!   snapshot can never silently splice into the wrong conversation;
+//! - the [`FaultSite::StatePersist`] / [`FaultSite::StateLoad`] hooks
+//!   inject write/read failures (knobs `SSM_PEFT_FAULT_STATE_PERSIST`,
+//!   `SSM_PEFT_FAULT_STATE_LOAD`); transient ones get a bounded in-place
+//!   retry, terminal ones surface as typed errors the scheduler turns
+//!   into a re-prefill fallback.
+//!
+//! Knobs: `SSM_PEFT_SESSIONS_DIR` (spill directory; unset = memory-only)
+//! and `SSM_PEFT_SESSIONS_CAP` (LRU entries) — both registered in
+//! [`crate::knobs`].
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, ErrorKind, Result};
+use crate::eval::StateDims;
+use crate::fault::{FaultInject, FaultSite};
+
+/// Record magic (first 8 bytes of every spilled session record).
+pub const SESSION_MAGIC: [u8; 8] = *b"SSMSESS1";
+
+/// Record format version; bump on any layout change so old binaries
+/// quarantine new records instead of misreading them.
+pub const SESSION_RECORD_VERSION: u32 = 1;
+
+/// Bounded attempts for a persist/load guarded by the fault hooks: one
+/// in-place retry for transient failures, then degrade.
+const SESSION_IO_ATTEMPTS: u32 = 2;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes`, continuing from hash state `h`.
+pub fn fnv1a_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a of `bytes` from the standard offset basis.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, bytes)
+}
+
+/// Digest of the first `absorbed` history bytes of a conversation whose
+/// transcript so far is `prompt` followed by `out`. This is what ties a
+/// snapshot to its exact byte history: at resume time the new request's
+/// prompt must reproduce the digest over the absorbed prefix, or the
+/// snapshot is treated as a miss and the request re-prefills.
+pub fn history_digest(prompt: &[u8], out: &[u8], absorbed: usize) -> u64 {
+    let n = absorbed.min(prompt.len());
+    let rest = absorbed.saturating_sub(n).min(out.len());
+    fnv1a_extend(fnv1a(&prompt[..n]), &out[..rest])
+}
+
+/// One session's resumable state: the per-row `(conv, ssm)` buffers plus
+/// the bookkeeping that makes splicing them back *safe* — how many tokens
+/// the state absorbed (BOS included) and the digest of the absorbed byte
+/// history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    /// State geometry the buffers were captured under.
+    pub dims: StateDims,
+    /// Tokens the state has absorbed, BOS included (the resumed slot's
+    /// `t`); the absorbed *byte* history is `consumed - 1` bytes long.
+    pub consumed: u64,
+    /// [`history_digest`] over the absorbed byte history.
+    pub history_hash: u64,
+    /// One row's conv state across every layer (`n_layer *
+    /// (d_conv-1) * d_inner` floats).
+    pub conv: Vec<f32>,
+    /// One row's SSM state across every layer (`n_layer * d_inner *
+    /// d_state` floats).
+    pub ssm: Vec<f32>,
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn parse_err(msg: &str) -> Error {
+    Error::new(ErrorKind::Parse, format!("session record: {msg}"))
+}
+
+fn take<'a>(bytes: &'a [u8], at: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let end = at
+        .checked_add(n)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| parse_err("truncated"))?;
+    let s = &bytes[*at..end];
+    *at = end;
+    Ok(s)
+}
+
+fn take_u32(bytes: &[u8], at: &mut usize) -> Result<u32> {
+    let s = take(bytes, at, 4)?;
+    let mut buf = [0u8; 4];
+    buf.copy_from_slice(s);
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn take_u64(bytes: &[u8], at: &mut usize) -> Result<u64> {
+    let s = take(bytes, at, 8)?;
+    let mut buf = [0u8; 8];
+    buf.copy_from_slice(s);
+    Ok(u64::from_le_bytes(buf))
+}
+
+impl SessionSnapshot {
+    /// Serialize to the on-disk record layout: magic, version, geometry
+    /// tag, `consumed`, history digest, payload lengths, f32-LE payloads,
+    /// and a trailing FNV-1a checksum over everything before it.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(68 + 4 * (self.conv.len() + self.ssm.len()));
+        out.extend_from_slice(&SESSION_MAGIC);
+        push_u32(&mut out, SESSION_RECORD_VERSION);
+        push_u32(&mut out, self.dims.n_layer as u32);
+        push_u32(&mut out, self.dims.d_conv as u32);
+        push_u32(&mut out, self.dims.d_inner as u32);
+        push_u32(&mut out, self.dims.d_state as u32);
+        push_u64(&mut out, self.consumed);
+        push_u64(&mut out, self.history_hash);
+        push_u64(&mut out, self.conv.len() as u64);
+        push_u64(&mut out, self.ssm.len() as u64);
+        for v in self.conv.iter().chain(self.ssm.iter()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let sum = fnv1a(&out);
+        push_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse and fully validate a record. Every defect — truncation,
+    /// checksum mismatch, bad magic/version, inconsistent geometry or
+    /// lengths, trailing garbage — is a typed
+    /// [`ErrorKind::Parse`] error; a record that decodes is
+    /// byte-for-byte the one that was written.
+    pub fn decode(bytes: &[u8]) -> Result<SessionSnapshot> {
+        if bytes.len() < 8 {
+            return Err(parse_err("truncated"));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let mut sumbuf = [0u8; 8];
+        sumbuf.copy_from_slice(tail);
+        if fnv1a(body) != u64::from_le_bytes(sumbuf) {
+            return Err(parse_err("checksum mismatch"));
+        }
+        let mut at = 0usize;
+        if take(body, &mut at, 8)? != SESSION_MAGIC {
+            return Err(parse_err("bad magic"));
+        }
+        let version = take_u32(body, &mut at)?;
+        if version != SESSION_RECORD_VERSION {
+            return Err(parse_err(&format!("unsupported version {version}")));
+        }
+        let dims = StateDims {
+            n_layer: take_u32(body, &mut at)? as usize,
+            d_conv: take_u32(body, &mut at)? as usize,
+            d_inner: take_u32(body, &mut at)? as usize,
+            d_state: take_u32(body, &mut at)? as usize,
+        };
+        if dims.n_layer == 0 || dims.d_conv < 2 || dims.d_inner == 0 || dims.d_state == 0 {
+            return Err(parse_err("degenerate geometry tag"));
+        }
+        let consumed = take_u64(body, &mut at)?;
+        let history_hash = take_u64(body, &mut at)?;
+        let conv_len = take_u64(body, &mut at)? as usize;
+        let ssm_len = take_u64(body, &mut at)? as usize;
+        if conv_len != dims.n_layer * dims.conv_per_row()
+            || ssm_len != dims.n_layer * dims.ssm_per_row()
+        {
+            return Err(parse_err("payload lengths disagree with geometry tag"));
+        }
+        let mut read_f32s = |n: usize| -> Result<Vec<f32>> {
+            let raw = take(body, &mut at, 4 * n)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| {
+                    let mut b = [0u8; 4];
+                    b.copy_from_slice(c);
+                    f32::from_le_bytes(b)
+                })
+                .collect())
+        };
+        let conv = read_f32s(conv_len)?;
+        let ssm = read_f32s(ssm_len)?;
+        if at != body.len() {
+            return Err(parse_err("trailing garbage"));
+        }
+        Ok(SessionSnapshot { dims, consumed, history_hash, conv, ssm })
+    }
+
+    fn approx_bytes(&self) -> usize {
+        68 + 4 * (self.conv.len() + self.ssm.len())
+    }
+}
+
+/// Counters the store accumulates over its lifetime (monotonic; read via
+/// [`SessionStore::stats`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Loads served from memory or a valid disk record.
+    pub hits: u64,
+    /// Loads that found nothing (clean miss → re-prefill).
+    pub misses: u64,
+    /// Entries currently resident in the memory tier.
+    pub resident: usize,
+    /// Approximate bytes resident in the memory tier.
+    pub resident_bytes: usize,
+    /// LRU evictions spilled to a durable record.
+    pub spills: u64,
+    /// Corrupt/mismatched records quarantined to `*.corrupt`.
+    pub quarantined: u64,
+    /// Persist-side failures (injected faults, full disks, lost spills).
+    pub persist_failures: u64,
+    /// Load-side failures (injected faults, unreadable files).
+    pub load_failures: u64,
+}
+
+/// What the startup recovery scan found (see [`SessionStore::recover`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Records that validated end to end and remain loadable.
+    pub valid: usize,
+    /// Records quarantined to `*.corrupt` (torn, corrupt, or mismatched).
+    pub quarantined: usize,
+    /// Leftover temp files from interrupted writes, removed.
+    pub removed_tmp: usize,
+}
+
+struct Tier {
+    map: BTreeMap<String, SessionSnapshot>,
+    /// LRU order, coldest at the front. Kept in lockstep with `map`.
+    order: VecDeque<String>,
+}
+
+impl Tier {
+    fn touch(&mut self, id: &str) {
+        if let Some(pos) = self.order.iter().position(|k| k == id) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(id.to_string());
+    }
+}
+
+/// The two-tier durable session-state store. Thread-safe (the serve loop
+/// is single-threaded, but the registry precedent holds: internal
+/// locking, atomic counters, callers share it via `Arc`).
+pub struct SessionStore {
+    cap: usize,
+    dir: Option<PathBuf>,
+    dims: Option<StateDims>,
+    faults: Option<Arc<dyn FaultInject>>,
+    tier: Mutex<Tier>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    spills: AtomicU64,
+    quarantined: AtomicU64,
+    persist_failures: AtomicU64,
+    load_failures: AtomicU64,
+}
+
+impl SessionStore {
+    /// Memory-only store holding at most `cap` sessions (floored at 1).
+    pub fn new(cap: usize) -> SessionStore {
+        SessionStore {
+            cap: cap.max(1),
+            dir: None,
+            dims: None,
+            faults: None,
+            tier: Mutex::new(Tier { map: BTreeMap::new(), order: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            persist_failures: AtomicU64::new(0),
+            load_failures: AtomicU64::new(0),
+        }
+    }
+
+    /// Add the spill-to-disk tier rooted at `dir` (created on first use).
+    pub fn with_dir(mut self, dir: impl Into<PathBuf>) -> SessionStore {
+        self.dir = Some(dir.into());
+        self
+    }
+
+    /// Pin the expected state geometry: records tagged with any other
+    /// geometry are quarantined at load/recovery instead of spliced.
+    pub fn with_dims(mut self, dims: StateDims) -> SessionStore {
+        self.dims = Some(dims);
+        self
+    }
+
+    /// Install the fault-injection hook gating the
+    /// [`FaultSite::StatePersist`] / [`FaultSite::StateLoad`] sites.
+    pub fn with_faults(mut self, faults: Arc<dyn FaultInject>) -> SessionStore {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// The spill directory, when the disk tier is configured.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// The durable record path for a session id (`None` without a disk
+    /// tier). Ids are sanitized into the filename and disambiguated by a
+    /// digest suffix, so hostile ids cannot traverse out of the dir.
+    pub fn record_path(&self, id: &str) -> Option<PathBuf> {
+        let dir = self.dir.as_ref()?;
+        let safe: String = id
+            .chars()
+            .take(48)
+            .map(|c| if c.is_ascii_alphanumeric() || "._-".contains(c) { c } else { '_' })
+            .collect();
+        Some(dir.join(format!("{safe}-{:016x}.session", fnv1a(id.as_bytes()))))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Tier> {
+        self.tier.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Consult the fault hook with a bounded in-place retry: transient
+    /// injected failures get [`SESSION_IO_ATTEMPTS`] tries, terminal ones
+    /// surface immediately.
+    fn guard(&self, site: FaultSite) -> Result<()> {
+        let Some(f) = &self.faults else { return Ok(()) };
+        let mut last: Option<Error> = None;
+        for _ in 0..SESSION_IO_ATTEMPTS {
+            match f.check(site) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    let transient = e.kind().is_transient();
+                    last = Some(e);
+                    if !transient {
+                        break;
+                    }
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| crate::err!("fault guard invariant")))
+    }
+
+    /// Store (or refresh) a session's snapshot in the memory tier; LRU
+    /// evictions spill to the disk tier. A returned error means the
+    /// snapshot was NOT stored (the session will re-prefill next turn) —
+    /// never a partial or silently-wrong record.
+    pub fn persist(&self, id: &str, snap: SessionSnapshot) -> Result<()> {
+        if let Err(e) = self.guard(FaultSite::StatePersist) {
+            self.persist_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(e.context("session persist"));
+        }
+        if let Some(d) = &self.dims {
+            if snap.dims != *d {
+                self.persist_failures.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::new(
+                    ErrorKind::Invariant,
+                    "session snapshot geometry disagrees with the store's",
+                ));
+            }
+        }
+        if snap.conv.len() != snap.dims.n_layer * snap.dims.conv_per_row()
+            || snap.ssm.len() != snap.dims.n_layer * snap.dims.ssm_per_row()
+        {
+            self.persist_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::new(
+                ErrorKind::Invariant,
+                "session snapshot payload disagrees with its geometry tag",
+            ));
+        }
+        let mut evicted: Vec<(String, SessionSnapshot)> = Vec::new();
+        {
+            let mut tier = self.lock();
+            tier.map.insert(id.to_string(), snap);
+            tier.touch(id);
+            while tier.map.len() > self.cap {
+                let Some(cold) = tier.order.pop_front() else { break };
+                if let Some(s) = tier.map.remove(&cold) {
+                    evicted.push((cold, s));
+                }
+            }
+        }
+        for (eid, esnap) in evicted {
+            match self.write_record(&eid, &esnap) {
+                Ok(()) => {
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    // no disk tier, or the write failed: the evicted
+                    // session is lost and will re-prefill — degraded,
+                    // never wrong
+                    self.persist_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch a session's snapshot: memory tier first, then a validated
+    /// disk record (promoted back into memory). `Ok(None)` is a clean
+    /// miss; `Err` is a load failure or a quarantined corrupt record —
+    /// either way the caller re-prefills.
+    pub fn load(&self, id: &str) -> Result<Option<SessionSnapshot>> {
+        if let Err(e) = self.guard(FaultSite::StateLoad) {
+            self.load_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(e.context("session load"));
+        }
+        {
+            let mut tier = self.lock();
+            if let Some(snap) = tier.map.get(id).cloned() {
+                tier.touch(id);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Some(snap));
+            }
+        }
+        let Some(path) = self.record_path(id) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        };
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            Err(e) => {
+                self.load_failures.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::new(ErrorKind::Io, format!("session record read: {e}")));
+            }
+        };
+        let snap = match self.validate(&bytes) {
+            Ok(s) => s,
+            Err(e) => {
+                // corrupt / truncated / wrong-geometry: quarantine the
+                // file so it is never trusted again, and degrade
+                self.quarantine(&path);
+                return Err(e);
+            }
+        };
+        // promote back into the memory tier (same LRU/spill rules)
+        let mut evicted: Vec<(String, SessionSnapshot)> = Vec::new();
+        {
+            let mut tier = self.lock();
+            tier.map.insert(id.to_string(), snap.clone());
+            tier.touch(id);
+            while tier.map.len() > self.cap {
+                let Some(cold) = tier.order.pop_front() else { break };
+                if let Some(s) = tier.map.remove(&cold) {
+                    evicted.push((cold, s));
+                }
+            }
+        }
+        for (eid, esnap) in evicted {
+            match self.write_record(&eid, &esnap) {
+                Ok(()) => {
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    self.persist_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(snap))
+    }
+
+    /// Decode + geometry-check a record's bytes.
+    fn validate(&self, bytes: &[u8]) -> Result<SessionSnapshot> {
+        let snap = SessionSnapshot::decode(bytes)?;
+        if let Some(d) = &self.dims {
+            if snap.dims != *d {
+                return Err(parse_err("geometry tag disagrees with the serving model"));
+            }
+        }
+        Ok(snap)
+    }
+
+    fn quarantine(&self, path: &Path) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        let target = PathBuf::from(format!("{}.corrupt", path.display()));
+        if std::fs::rename(path, &target).is_err() {
+            // quarantine-by-rename failed (e.g. read-only dir): removal
+            // is the fallback; if even that fails the checksum still
+            // protects every future load
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    /// Write one durable record: temp file + `sync_all` + atomic rename.
+    fn write_record(&self, id: &str, snap: &SessionSnapshot) -> Result<()> {
+        let path = self
+            .record_path(id)
+            .ok_or_else(|| Error::new(ErrorKind::Io, "session store has no spill dir"))?;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| Error::new(ErrorKind::Io, format!("session spill dir: {e}")))?;
+        }
+        let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+        let bytes = snap.encode();
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &path)
+        };
+        write().map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::new(ErrorKind::Io, format!("session record write: {e}"))
+        })
+    }
+
+    /// Flush every memory-resident session to a durable record (the
+    /// graceful-drain path). Returns `(flushed, failures)`; entries stay
+    /// resident either way.
+    pub fn flush_all(&self) -> (u64, u64) {
+        if self.dir.is_none() {
+            return (0, 0);
+        }
+        let entries: Vec<(String, SessionSnapshot)> = {
+            let tier = self.lock();
+            tier.map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        let mut flushed = 0u64;
+        let mut failures = 0u64;
+        for (id, snap) in entries {
+            let guarded = self
+                .guard(FaultSite::StatePersist)
+                .and_then(|()| self.write_record(&id, &snap));
+            match guarded {
+                Ok(()) => flushed += 1,
+                Err(_) => {
+                    failures += 1;
+                    self.persist_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        (flushed, failures)
+    }
+
+    /// Startup recovery scan: validate every committed record under the
+    /// spill dir, quarantine everything that does not hold up
+    /// (`*.corrupt`), and sweep interrupted temp files. Never fails —
+    /// an unreadable dir just reports zero — and never loads state.
+    pub fn recover(&self) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let Some(dir) = &self.dir else { return report };
+        let _ = std::fs::create_dir_all(dir);
+        let Ok(entries) = std::fs::read_dir(dir) else { return report };
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.ends_with(".tmp") {
+                if std::fs::remove_file(&path).is_ok() {
+                    report.removed_tmp += 1;
+                }
+                continue;
+            }
+            if !name.ends_with(".session") {
+                continue; // `.corrupt` and foreign files are left alone
+            }
+            let ok = std::fs::read(&path)
+                .map_err(|e| Error::new(ErrorKind::Io, format!("recovery read: {e}")))
+                .and_then(|bytes| self.validate(&bytes));
+            match ok {
+                Ok(_) => report.valid += 1,
+                Err(_) => {
+                    self.quarantine(&path);
+                    report.quarantined += 1;
+                }
+            }
+        }
+        report
+    }
+
+    /// Sessions currently resident in the memory tier.
+    pub fn resident(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// Lifetime counters (see [`SessionStats`]).
+    pub fn stats(&self) -> SessionStats {
+        let (resident, resident_bytes) = {
+            let tier = self.lock();
+            (tier.map.len(), tier.map.values().map(SessionSnapshot::approx_bytes).sum())
+        };
+        SessionStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            resident,
+            resident_bytes,
+            spills: self.spills.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            persist_failures: self.persist_failures.load(Ordering::Relaxed),
+            load_failures: self.load_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultPlan;
+
+    fn dims() -> StateDims {
+        StateDims { n_layer: 2, d_conv: 3, d_inner: 2, d_state: 2 }
+    }
+
+    fn snap(seed: f32) -> SessionSnapshot {
+        let d = dims();
+        SessionSnapshot {
+            dims: d,
+            consumed: 7,
+            history_hash: history_digest(&[1, 2, 3, 4, 5, 6], &[], 6),
+            conv: (0..d.n_layer * d.conv_per_row()).map(|i| seed + i as f32).collect(),
+            ssm: (0..d.n_layer * d.ssm_per_row()).map(|i| seed - i as f32).collect(),
+        }
+    }
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ssm-peft-sessions-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn record_roundtrip_is_lossless() {
+        let s = snap(3.5);
+        let back = SessionSnapshot::decode(&s.encode()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        // the pin the ISSUE asks for: no single corrupted byte anywhere in
+        // the record — header, geometry tag, payload, or checksum — may
+        // decode into a state
+        let bytes = snap(1.0).encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                SessionSnapshot::decode(&bad).is_err(),
+                "byte flip at offset {i} decoded silently"
+            );
+        }
+        // truncation at every length is detected too
+        for n in 0..bytes.len() {
+            assert!(
+                SessionSnapshot::decode(&bytes[..n]).is_err(),
+                "truncation to {n} bytes decoded silently"
+            );
+        }
+    }
+
+    #[test]
+    fn memory_tier_hit_and_clean_miss() {
+        let store = SessionStore::new(4).with_dims(dims());
+        assert!(store.load("nope").unwrap().is_none());
+        store.persist("a", snap(1.0)).unwrap();
+        assert_eq!(store.load("a").unwrap().unwrap(), snap(1.0));
+        let st = store.stats();
+        assert_eq!((st.hits, st.misses, st.resident), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_spills_and_loads_back() {
+        let dir = tdir("lru");
+        let store = SessionStore::new(2).with_dir(&dir).with_dims(dims());
+        store.persist("a", snap(1.0)).unwrap();
+        store.persist("b", snap(2.0)).unwrap();
+        store.persist("c", snap(3.0)).unwrap(); // evicts "a" → disk
+        assert_eq!(store.stats().spills, 1);
+        assert_eq!(store.resident(), 2);
+        assert!(store.record_path("a").unwrap().exists());
+        // "a" promotes back from disk (evicting the coldest resident)
+        let back = store.load("a").unwrap().unwrap();
+        assert_eq!(back, snap(1.0));
+        assert_eq!(store.stats().hits, 1);
+    }
+
+    #[test]
+    fn eviction_without_disk_tier_is_a_counted_loss() {
+        let store = SessionStore::new(1).with_dims(dims());
+        store.persist("a", snap(1.0)).unwrap();
+        store.persist("b", snap(2.0)).unwrap(); // "a" has nowhere to go
+        assert_eq!(store.stats().persist_failures, 1);
+        assert!(store.load("a").unwrap().is_none(), "lost session must be a miss");
+    }
+
+    #[test]
+    fn corrupt_disk_record_is_quarantined_not_loaded() {
+        let dir = tdir("corrupt");
+        let store = SessionStore::new(1).with_dir(&dir).with_dims(dims());
+        store.persist("a", snap(1.0)).unwrap();
+        store.persist("b", snap(2.0)).unwrap(); // spill "a"
+        let path = store.record_path("a").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01; // single bit flip in the payload
+        std::fs::write(&path, &bytes).unwrap();
+
+        let e = store.load("a").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Parse, "{e}");
+        assert!(!path.exists(), "corrupt record left in place");
+        let corrupt = PathBuf::from(format!("{}.corrupt", path.display()));
+        assert!(corrupt.exists(), "corrupt record not quarantined");
+        assert_eq!(store.stats().quarantined, 1);
+        // the quarantined id is a clean miss from now on
+        assert!(store.load("a").unwrap().is_none());
+    }
+
+    #[test]
+    fn geometry_mismatch_is_quarantined() {
+        let dir = tdir("geom");
+        let writer = SessionStore::new(1).with_dir(&dir).with_dims(dims());
+        writer.persist("a", snap(1.0)).unwrap();
+        writer.persist("b", snap(2.0)).unwrap(); // spill "a"
+        let other = StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 };
+        let reader = SessionStore::new(4).with_dir(&dir).with_dims(other);
+        let e = reader.load("a").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Parse, "{e}");
+        assert_eq!(reader.stats().quarantined, 1);
+    }
+
+    #[test]
+    fn recovery_scan_classifies_every_file() {
+        let dir = tdir("recover");
+        let store = SessionStore::new(1).with_dir(&dir).with_dims(dims());
+        store.persist("good", snap(1.0)).unwrap();
+        store.persist("evictor", snap(2.0)).unwrap(); // spill "good"
+        // a torn write: committed record truncated mid-payload
+        let torn = dir.join("torn-0000000000000000.session");
+        std::fs::write(&torn, &snap(3.0).encode()[..20]).unwrap();
+        // an interrupted temp file
+        std::fs::write(dir.join("x.session.tmp"), b"partial").unwrap();
+
+        let fresh = SessionStore::new(4).with_dir(&dir).with_dims(dims());
+        let report = fresh.recover();
+        assert_eq!(report.valid, 1);
+        assert_eq!(report.quarantined, 1);
+        assert_eq!(report.removed_tmp, 1);
+        assert!(!torn.exists());
+        assert!(PathBuf::from(format!("{}.corrupt", torn.display())).exists());
+        // the surviving record still loads
+        assert_eq!(fresh.load("good").unwrap().unwrap(), snap(1.0));
+    }
+
+    #[test]
+    fn injected_transient_persist_fault_retries_in_place() {
+        // exactly one injected fault: the bounded retry absorbs it
+        let plan = Arc::new(FaultPlan::seeded(3).with_fault_at(FaultSite::StatePersist, 0));
+        let store = SessionStore::new(4).with_dims(dims()).with_faults(plan.clone());
+        store.persist("a", snap(1.0)).unwrap();
+        assert_eq!(plan.checks(FaultSite::StatePersist), 2);
+        assert_eq!(store.stats().persist_failures, 0);
+    }
+
+    #[test]
+    fn saturated_fault_rates_degrade_typed() {
+        let plan = Arc::new(
+            FaultPlan::seeded(4)
+                .with_rate(FaultSite::StatePersist, 1.0)
+                .with_rate(FaultSite::StateLoad, 1.0),
+        );
+        let store = SessionStore::new(4).with_dims(dims()).with_faults(plan);
+        let pe = store.persist("a", snap(1.0)).unwrap_err();
+        assert_eq!(pe.kind(), ErrorKind::Runtime);
+        let le = store.load("a").unwrap_err();
+        assert_eq!(le.kind(), ErrorKind::Runtime);
+        let st = store.stats();
+        assert_eq!((st.persist_failures, st.load_failures), (1, 1));
+    }
+
+    #[test]
+    fn full_spill_dir_fails_persist_side_only() {
+        // point the spill tier at a FILE: every record write fails the way
+        // a full/unwritable disk does, and the failure is counted, typed,
+        // and non-fatal
+        let dir = tdir("full");
+        let blocker = dir.join("blocked");
+        std::fs::write(&blocker, b"not a dir").unwrap();
+        let store = SessionStore::new(1).with_dir(&blocker).with_dims(dims());
+        store.persist("a", snap(1.0)).unwrap();
+        store.persist("b", snap(2.0)).unwrap(); // spill of "a" fails
+        assert_eq!(store.stats().persist_failures, 1);
+        let (flushed, failures) = store.flush_all();
+        assert_eq!(flushed, 0);
+        assert!(failures > 0);
+    }
+
+    #[test]
+    fn flush_all_makes_every_resident_session_durable() {
+        let dir = tdir("flush");
+        let store = SessionStore::new(8).with_dir(&dir).with_dims(dims());
+        store.persist("a", snap(1.0)).unwrap();
+        store.persist("b", snap(2.0)).unwrap();
+        let (flushed, failures) = store.flush_all();
+        assert_eq!((flushed, failures), (2, 0));
+        let fresh = SessionStore::new(8).with_dir(&dir).with_dims(dims());
+        assert_eq!(fresh.recover().valid, 2);
+        assert_eq!(fresh.load("a").unwrap().unwrap(), snap(1.0));
+        assert_eq!(fresh.load("b").unwrap().unwrap(), snap(2.0));
+    }
+
+    #[test]
+    fn hostile_session_ids_stay_inside_the_dir() {
+        let dir = tdir("hostile");
+        let store = SessionStore::new(4).with_dir(&dir).with_dims(dims());
+        for id in ["../../etc/passwd", "a/b/c", "..", "x y!@#"] {
+            let p = store.record_path(id).unwrap();
+            assert!(p.starts_with(&dir), "{id:?} escaped: {}", p.display());
+            store.persist(id, snap(1.0)).unwrap();
+        }
+        let (flushed, failures) = store.flush_all();
+        assert_eq!(failures, 0, "hostile ids must still spill cleanly");
+        assert_eq!(flushed, 4);
+    }
+
+    #[test]
+    fn history_digest_pins_exact_prefixes() {
+        let prompt = [10u8, 20, 30];
+        let out = [40u8, 50];
+        // absorbed shorter than, equal to, and past the prompt
+        let d2 = history_digest(&prompt, &out, 2);
+        let d3 = history_digest(&prompt, &out, 3);
+        let d4 = history_digest(&prompt, &out, 4);
+        assert_ne!(d2, d3);
+        assert_ne!(d3, d4);
+        // the digest over prompt++out equals the digest over the
+        // concatenation presented as one prompt (the replay contract)
+        let full = [10u8, 20, 30, 40, 50];
+        assert_eq!(history_digest(&full, &[], 4), d4);
+    }
+}

@@ -208,6 +208,7 @@ fn req(id: u64, adapter: &str, max_new: usize) -> Request {
         stop_byte: 255,
         beam: 1,
         deadline: 0,
+        session: None,
     }
 }
 

@@ -342,6 +342,7 @@ fn serve_two_adapters_from_one_staged_base() {
         stop_byte: b'\n',
         beam: 1,
         deadline: 0,
+        session: None,
     });
     sched.submit(Request {
         id: 2,
@@ -351,6 +352,7 @@ fn serve_two_adapters_from_one_staged_base() {
         stop_byte: b'\n',
         beam: 1,
         deadline: 0,
+        session: None,
     });
     sched.tick();
     assert_eq!(sched.active(), 2, "both adapters decode concurrently");
@@ -376,6 +378,7 @@ fn serve_two_adapters_from_one_staged_base() {
         stop_byte: b'\n',
         beam: 1,
         deadline: 0,
+        session: None,
     });
     let more = sched.run_to_completion();
     assert_eq!(more.len(), 1);
@@ -468,6 +471,7 @@ fn serve_prefill_then_admit_on_real_executables() {
             stop_byte: b'\n',
             beam: 1,
             deadline: 0,
+            session: None,
         });
         let resp = sched.run_to_completion().pop().unwrap();
         (resp, sched.prefill_dispatches, sched.prefill_tokens)

@@ -109,6 +109,7 @@ fn req(id: u64, adapter: &str, prompt: &[u8], max_new: usize) -> Request {
         stop_byte: b'\n',
         beam: 1,
         deadline: 0,
+        session: None,
     }
 }
 

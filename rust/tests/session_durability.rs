@@ -1,0 +1,347 @@
+//! Durable session-store acceptance suite: crash-safe O(1) conversation
+//! resume through the full serving stack, on host mocks (runs without
+//! `make artifacts`).
+//!
+//! Pins the session contracts (rust/docs/robustness.md):
+//!
+//! - a resumed session's next turn is byte-identical to stateless
+//!   full-history re-prefill, with ZERO prefill dispatches after turn 1 —
+//!   pinned across a thousand-turn conversation
+//! - a torn (truncated) record is quarantined by the recovery scan and
+//!   the session degrades to re-prefill with identical bytes
+//! - a bit-flipped record fails its checksum at load time, is quarantined
+//!   to `*.corrupt`, and the turn re-prefills byte-identically
+//! - an unwritable spill target loses evicted sessions on the persist
+//!   side only — counted, degraded to re-prefill, never wrong bytes
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ssm_peft::error::Result;
+use ssm_peft::eval::{ChunkPrefill, DecodeState, StateDims, StepDecode};
+use ssm_peft::serve::{
+    LaneModel, Request, Response, Scheduler, ServeFactory, ServeModel, SessionStore,
+};
+use ssm_peft::tensor::{IntTensor, Tensor};
+
+// ---------------------------------------------------------------- mocks
+// Local rolling-hash decode mock (the crate's internal test mocks are not
+// exported), chunk-capable so re-prefill cost is visible in the chunk
+// counter. Every f32 op stays far below 2^24, so the recurrence is exact
+// and byte-equivalence assertions are meaningful.
+
+fn val(t: i32) -> f32 {
+    if (0..256).contains(&t) {
+        t as f32
+    } else {
+        1.0 // BOS / PAD
+    }
+}
+
+fn advance(a: f32, prev: f32, t: i32) -> (f32, f32) {
+    let v = val(t);
+    ((a * 33.0 + v + prev + 2.0) % 251.0, v)
+}
+
+fn one_hot(b: usize, hashes: &[f32]) -> Tensor {
+    let mut l = Tensor::zeros(&[b, 256]);
+    for r in 0..b {
+        l.data[r * 256 + (hashes[r] as usize) % 256] = 10.0;
+    }
+    l
+}
+
+fn mock_dims() -> StateDims {
+    StateDims { n_layer: 1, d_conv: 2, d_inner: 1, d_state: 1 }
+}
+
+/// Chunk-capable merged-lane mock with dispatch counters: `steps` counts
+/// single-token dispatches, `chunks` counts prefill-chunk dispatches.
+struct ChunkRoll {
+    b: usize,
+    widths: Vec<usize>,
+    steps: AtomicU64,
+    chunks: AtomicU64,
+}
+
+impl ChunkRoll {
+    fn new(b: usize, widths: &[usize]) -> ChunkRoll {
+        ChunkRoll {
+            b,
+            widths: widths.to_vec(),
+            steps: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
+        }
+    }
+}
+
+impl StepDecode for ChunkRoll {
+    fn arch_b(&self) -> usize {
+        self.b
+    }
+    fn dims(&self) -> StateDims {
+        mock_dims()
+    }
+    fn step(&self, tokens: &IntTensor, state: &mut DecodeState) -> Result<Tensor> {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        let (conv, ssm) = state.host_mut()?;
+        let mut hashes = vec![0.0f32; self.b];
+        for r in 0..self.b {
+            let (a, v) = advance(ssm.data[r], conv.data[r], tokens.data[r]);
+            ssm.data[r] = a;
+            conv.data[r] = v;
+            hashes[r] = a;
+        }
+        Ok(one_hot(self.b, &hashes))
+    }
+    fn chunk_prefill(&self) -> Option<&dyn ChunkPrefill> {
+        if self.widths.is_empty() {
+            None
+        } else {
+            Some(self)
+        }
+    }
+}
+
+impl ChunkPrefill for ChunkRoll {
+    fn chunk_widths(&self) -> &[usize] {
+        &self.widths
+    }
+    fn prefill_chunk(&self, tokens: &IntTensor, state: &mut DecodeState)
+        -> Result<Tensor> {
+        self.chunks.fetch_add(1, Ordering::Relaxed);
+        let c = tokens.data.len() / self.b;
+        let (conv, ssm) = state.host_mut()?;
+        let mut hashes = vec![0.0f32; self.b];
+        for r in 0..self.b {
+            for j in 0..c {
+                let (a, v) =
+                    advance(ssm.data[r], conv.data[r], tokens.data[r * c + j]);
+                ssm.data[r] = a;
+                conv.data[r] = v;
+                hashes[r] = a;
+            }
+        }
+        Ok(one_hot(self.b, &hashes))
+    }
+}
+
+fn factory(model: Arc<ChunkRoll>) -> ServeFactory<'static> {
+    Box::new(move |_adapter: &str| {
+        Ok(ServeModel::Merged(LaneModel { model: model.clone(), h0: None }))
+    })
+}
+
+fn req(id: u64, session: Option<&str>, prompt: Vec<u8>, max_new: usize) -> Request {
+    Request {
+        id,
+        adapter: "chat".into(),
+        prompt,
+        max_new,
+        // hashes land in [0, 250], so generation always runs to max_new
+        stop_byte: 255,
+        beam: 1,
+        deadline: 0,
+        session: session.map(str::to_string),
+    }
+}
+
+fn first_prompt() -> Vec<u8> {
+    (0..16).map(|i| ((i * 11 + 5) % 199 + 1) as u8).collect()
+}
+
+/// Turn t's follow-up: previous prompt ++ previous output ++ a fresh byte.
+fn next_turn(prev: &[u8], out: &[u8], t: u64) -> Vec<u8> {
+    let mut p = prev.to_vec();
+    p.extend_from_slice(out);
+    p.push((t % 191 + 1) as u8);
+    p
+}
+
+/// Ground truth: the same prompt as a fresh stateless request.
+fn stateless_reference(prompt: Vec<u8>, max_new: usize) -> Response {
+    let model = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut sched = Scheduler::new(factory(model), 2);
+    sched.submit(req(900, None, prompt, max_new));
+    let r = sched.run_to_completion().pop().expect("reference retires");
+    assert!(r.error.is_none(), "reference failed: {:?}", r.error);
+    r
+}
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ssm-peft-session-durability-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The single spilled `.session` record under `dir`.
+fn session_record(dir: &Path) -> PathBuf {
+    let mut found: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("spill dir exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "session"))
+        .collect();
+    assert_eq!(found.len(), 1, "exactly one spilled record: {found:?}");
+    found.pop().expect("one record")
+}
+
+fn corrupt_count(dir: &Path) -> usize {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == "corrupt"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+/// Run turn 1 of a session against a spill dir and drain, leaving exactly
+/// one durable record behind; returns turn 2's prompt.
+fn drained_turn_one(dir: &Path, sid: &str, max_new: usize) -> Vec<u8> {
+    let model = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut sched = Scheduler::new(factory(model), 2);
+    sched.set_session_store(Arc::new(SessionStore::new(4).with_dir(dir)));
+    sched.submit(req(1, Some(sid), first_prompt(), max_new));
+    let (mut resps, flushed, failed) = sched.drain();
+    assert_eq!((flushed, failed), (1, 0), "drain flushes the one session");
+    let r = resps.pop().expect("turn 1 retires");
+    assert!(r.error.is_none(), "turn 1 failed: {:?}", r.error);
+    next_turn(&first_prompt(), &r.output, 1)
+}
+
+// ---------------------------------------------------------------- tests
+
+#[test]
+fn thousand_turn_conversation_prefills_exactly_once() {
+    let model = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut sched = Scheduler::new(factory(model.clone()), 2);
+    sched.set_session_store(Arc::new(SessionStore::new(4)));
+    let mut prompt = first_prompt();
+    let mut chunks_after_turn_one = 0;
+    for t in 0..1000u64 {
+        sched.submit(req(t, Some("marathon"), prompt.clone(), 2));
+        let r = sched.run_to_completion().pop().expect("turn retires");
+        assert!(r.error.is_none(), "turn {t} failed: {:?}", r.error);
+        assert_eq!(r.output.len(), 2, "turn {t} ran to max_new");
+        prompt = next_turn(&prompt, &r.output, t);
+        if t == 0 {
+            chunks_after_turn_one = model.chunks.load(Ordering::Relaxed);
+            assert!(chunks_after_turn_one > 0, "turn 1 prefills in chunks");
+        }
+    }
+    assert_eq!(
+        model.chunks.load(Ordering::Relaxed),
+        chunks_after_turn_one,
+        "zero prefill dispatches after turn 1, across 999 resumed turns"
+    );
+    assert_eq!(sched.session_resurrections, 999);
+    assert_eq!(sched.session_fallbacks, 0);
+    assert_eq!(sched.session_persists, 1000);
+    // and the resumed tail is byte-identical to a stateless replay: the
+    // final turn's prompt encodes every previous output, so one reference
+    // decode of it checks the whole chain
+    let model2 = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut s2 = Scheduler::new(factory(model2), 2);
+    s2.set_session_store(Arc::new(SessionStore::new(4)));
+    s2.submit(req(2000, Some("marathon-check"), prompt.clone(), 2));
+    let got = s2.run_to_completion().pop().expect("check turn retires");
+    let want = stateless_reference(prompt, 2);
+    assert_eq!(got.output, want.output);
+}
+
+#[test]
+fn truncated_record_is_quarantined_then_reprefilled_byte_identically() {
+    let dir = tdir("truncate");
+    let prompt2 = drained_turn_one(&dir, "torn", 3);
+    // a torn write: the record loses its tail (checksum and part of the
+    // payload) as if the machine died mid-flush
+    let path = session_record(&dir);
+    let bytes = std::fs::read(&path).expect("record readable");
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).expect("truncate");
+    // restart: the recovery scan quarantines the torn record up front
+    let store = Arc::new(SessionStore::new(4).with_dir(&dir));
+    let rec = store.recover();
+    assert_eq!((rec.valid, rec.quarantined), (0, 1), "{rec:?}");
+    assert_eq!(corrupt_count(&dir), 1, "quarantined to *.corrupt, not deleted");
+    assert!(!path.exists(), "the torn record itself is gone");
+    let model = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut sched = Scheduler::new(factory(model.clone()), 2);
+    sched.set_session_store(store);
+    sched.submit(req(2, Some("torn"), prompt2.clone(), 3));
+    let r2 = sched.run_to_completion().pop().expect("turn 2 retires");
+    assert!(r2.error.is_none(), "degradation must not surface: {:?}", r2.error);
+    let want = stateless_reference(prompt2, 3);
+    assert_eq!(r2.output, want.output, "re-prefilled turn is byte-identical");
+    assert_eq!(sched.session_resurrections, 0);
+    assert_eq!(
+        sched.session_fallbacks, 0,
+        "post-recovery the miss is clean, not an error"
+    );
+    assert!(model.chunks.load(Ordering::Relaxed) > 0, "full prefill re-ran");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bit_flipped_record_fails_checksum_at_load_and_reprefills() {
+    let dir = tdir("bitflip");
+    let prompt2 = drained_turn_one(&dir, "flipped", 3);
+    // one flipped bit in the middle of the payload
+    let path = session_record(&dir);
+    let mut bytes = std::fs::read(&path).expect("record readable");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).expect("flip");
+    // no recovery scan this time: the load path itself must catch it
+    let store = Arc::new(SessionStore::new(4).with_dir(&dir));
+    let model = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut sched = Scheduler::new(factory(model), 2);
+    sched.set_session_store(store.clone());
+    sched.submit(req(2, Some("flipped"), prompt2.clone(), 3));
+    let r2 = sched.run_to_completion().pop().expect("turn 2 retires");
+    assert!(r2.error.is_none(), "degradation must not surface: {:?}", r2.error);
+    let want = stateless_reference(prompt2, 3);
+    assert_eq!(r2.output, want.output, "re-prefilled turn is byte-identical");
+    assert_eq!(sched.session_resurrections, 0);
+    assert_eq!(sched.session_fallbacks, 1, "typed degradation, counted");
+    assert_eq!(store.stats().quarantined, 1);
+    assert_eq!(corrupt_count(&dir), 1);
+    assert!(!path.exists(), "the corrupt record is never trusted again");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unwritable_spill_target_loses_evictions_but_never_bytes() {
+    // the "spill dir" is a FILE, so every eviction spill fails — the
+    // moral equivalent of a full disk, deterministic and portable
+    let parent = tdir("blocked");
+    std::fs::create_dir_all(&parent).expect("parent dir");
+    let blocked = parent.join("spill");
+    std::fs::write(&blocked, b"not a directory").expect("blocker file");
+    let model = Arc::new(ChunkRoll::new(1, &[8, 32]));
+    let mut sched = Scheduler::new(factory(model), 2);
+    let store = Arc::new(SessionStore::new(1).with_dir(&blocked));
+    sched.set_session_store(store.clone());
+    // turn 1 of session A persists into the memory tier (cap 1)
+    sched.submit(req(1, Some("session-a"), first_prompt(), 3));
+    let ra = sched.run_to_completion().pop().expect("A turn 1 retires");
+    assert!(ra.error.is_none(), "{:?}", ra.error);
+    // session B's snapshot evicts A; A's spill hits the blocked target
+    // and is lost — counted, not an error
+    let other: Vec<u8> = (0..20).map(|i| ((i * 13 + 7) % 199 + 1) as u8).collect();
+    sched.submit(req(2, Some("session-b"), other, 3));
+    let rb = sched.run_to_completion().pop().expect("B turn 1 retires");
+    assert!(rb.error.is_none(), "{:?}", rb.error);
+    assert!(store.stats().persist_failures >= 1, "lost spill is counted");
+    assert_eq!(store.stats().spills, 0, "nothing durably spilled");
+    // A's next turn re-prefills from scratch, byte-identical to stateless
+    let prompt2 = next_turn(&first_prompt(), &ra.output, 1);
+    sched.submit(req(3, Some("session-a"), prompt2.clone(), 3));
+    let r2 = sched.run_to_completion().pop().expect("A turn 2 retires");
+    assert!(r2.error.is_none(), "degradation must not surface: {:?}", r2.error);
+    let want = stateless_reference(prompt2, 3);
+    assert_eq!(r2.output, want.output, "re-prefilled turn is byte-identical");
+    assert_eq!(sched.session_resurrections, 0, "A was never resurrected");
+    let _ = std::fs::remove_dir_all(&parent);
+}
