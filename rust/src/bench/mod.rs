@@ -1,5 +1,6 @@
 //! Timing/memory harness for the `cargo bench` targets, plus the
-//! [`hotpath`] telemetry bench behind the `bench hotpath` CLI subcommand.
+//! [`hotpath`] telemetry bench behind the `bench hotpath` CLI subcommand
+//! and the [`serving`] SLO load harness behind `bench serving`.
 //!
 //! `criterion` is not available in the offline vendor set, so benches are
 //! `harness = false` binaries built on this module: warmup + timed
@@ -7,6 +8,7 @@
 //! figures (Fig. 4 / Table 16).
 
 pub mod hotpath;
+pub mod serving;
 
 use std::time::Instant;
 

@@ -1,0 +1,361 @@
+//! `bench serving`: the SLO load harness behind the `bench serving` CLI
+//! subcommand, emitted as `results/BENCH_serving.json`.
+//!
+//! Drives the in-process continuous-batching [`Scheduler`] with host mock
+//! models under a seeded open-loop workload — Poisson arrivals, mixed
+//! prompt/output lengths, a skewed adapter mix (8:4:2:1 over four
+//! adapters) — at two offered-load points, plus a closed-loop multi-turn
+//! session-reuse point over the durable session store. Per-request
+//! latency comes from the scheduler's span traces; TTFT and inter-token
+//! percentiles are exact (computed from the raw sorted samples, not the
+//! log2 histogram buckets).
+//!
+//! The whole harness runs on a [`VirtualClock`] advanced one
+//! [`TICK_NS`] tick per scheduler tick, so every emitted number is a pure
+//! function of the seed (`SSM_PEFT_SERVING_SEED`) and the scale
+//! (`SSM_PEFT_BENCH_SCALE`): the same seed produces a byte-identical
+//! `BENCH_serving.json`, run to run and across worker counts. The JSON
+//! schema is documented in rust/docs/observability.md.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::Result;
+
+use crate::eval::testing::Accum;
+use crate::json::{self, Value};
+use crate::obs::{rate_per_s, VirtualClock, TICK_NS};
+use crate::serve::{LaneModel, Request, Scheduler, ServeModel, SessionStore};
+use crate::tensor::Rng;
+
+/// `BENCH_serving.json` schema version. The lint pins this against the
+/// example payload in rust/docs/observability.md, so bumping it without a
+/// docs update fails `cargo run -- lint`.
+pub const BENCH_SERVING_SCHEMA: u32 = 1;
+
+/// Number of adapters in the skewed mix.
+const ADAPTERS: usize = 4;
+
+/// Uniform draw in (0, 1] — never 0, so `ln` is always finite.
+fn unit(rng: &mut Rng) -> f64 {
+    ((rng.next_u64() >> 11) + 1) as f64 / (1u64 << 53) as f64
+}
+
+/// Exponential inter-arrival gap in whole ticks for an offered load of
+/// `lambda` requests/tick (Poisson process), floored at 1 tick.
+pub(crate) fn poisson_gap_ticks(rng: &mut Rng, lambda: f64) -> u64 {
+    let gap = (-unit(rng).ln() / lambda).ceil();
+    (gap as u64).max(1)
+}
+
+/// Draw an adapter index with 8:4:2:1 skew over [`ADAPTERS`] adapters.
+fn skewed_adapter(rng: &mut Rng) -> usize {
+    match rng.next_u64() % 15 {
+        0..=7 => 0,
+        8..=11 => 1,
+        12..=13 => 2,
+        _ => 3,
+    }
+}
+
+/// Exact percentile (nearest-rank) of an ascending-sorted sample set.
+pub(crate) fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn pctl_obj(mut samples: Vec<u64>) -> Value {
+    samples.sort_unstable();
+    json::obj(vec![
+        ("p50", json::num(percentile(&samples, 0.50) as f64)),
+        ("p95", json::num(percentile(&samples, 0.95) as f64)),
+        ("p99", json::num(percentile(&samples, 0.99) as f64)),
+        ("max", json::num(samples.last().copied().unwrap_or(0) as f64)),
+        ("samples", json::num(samples.len() as f64)),
+    ])
+}
+
+/// Per-adapter mock factory: each adapter gets a distinct hash offset so
+/// outputs differ per adapter (as real per-adapter deltas would).
+fn mock_factory() -> crate::serve::ServeFactory<'static> {
+    Box::new(move |adapter: &str| {
+        let idx = adapter.bytes().map(u64::from).sum::<u64>() % ADAPTERS as u64;
+        let model = Arc::new(Accum::with_off(1, &[8, 32], 1.0 + idx as f32));
+        Ok(ServeModel::Merged(LaneModel { model, h0: None }))
+    })
+}
+
+/// Aggregate one load point's responses + traces into its JSON record.
+fn aggregate(
+    label: &str,
+    offered_rps: f64,
+    requests: usize,
+    sched: &Scheduler,
+    clean: usize,
+    output_bytes: usize,
+    elapsed_s: f64,
+) -> Value {
+    let mut ttft = Vec::new();
+    let mut itl = Vec::new();
+    let mut queued = Vec::new();
+    for t in sched.traces().iter() {
+        queued.push(t.span.queued_ns());
+        if t.span.first_token_ns > 0 {
+            ttft.push(t.span.ttft_ns());
+            if t.new_tokens >= 2 {
+                itl.push(t.span.decode_ns() / (t.new_tokens as u64 - 1));
+            }
+        }
+    }
+    json::obj(vec![
+        ("label", json::s(label)),
+        ("offered_rps", json::num(offered_rps)),
+        ("requests", json::num(requests as f64)),
+        ("completed_clean", json::num(clean as f64)),
+        ("failed", json::num((requests - clean) as f64)),
+        ("elapsed_s", json::num(elapsed_s)),
+        ("output_bytes", json::num(output_bytes as f64)),
+        ("ttft_ns", pctl_obj(ttft)),
+        ("itl_ns", pctl_obj(itl)),
+        ("queued_ns", pctl_obj(queued)),
+        ("tok_per_s", json::num(rate_per_s(output_bytes as f64, elapsed_s))),
+        ("goodput_rps", json::num(rate_per_s(clean as f64, elapsed_s))),
+        ("resurrections", json::num(sched.session_resurrections as f64)),
+        ("demotions", json::num(sched.demotions as f64)),
+    ])
+}
+
+/// One open-loop Poisson point: `requests` arrivals at `lambda` req/tick,
+/// run to drain on a virtual clock.
+fn run_open_loop(label: &str, lambda: f64, requests: usize, seed: u64) -> Result<Value> {
+    let mut rng = Rng::new(seed ^ 0x5E11);
+    // pre-generate the arrival schedule so the load is independent of
+    // scheduler behavior (open loop)
+    let mut arrivals: Vec<(u64, Request)> = Vec::with_capacity(requests);
+    let mut at = 0u64;
+    for id in 0..requests {
+        at += poisson_gap_ticks(&mut rng, lambda);
+        let prompt_len = 4 + (rng.next_u64() % 29) as usize;
+        let prompt: Vec<u8> =
+            (0..prompt_len).map(|i| ((id * 31 + i * 7) % 199 + 1) as u8).collect();
+        let max_new = 2 + (rng.next_u64() % 9) as usize;
+        let req = Request {
+            id: id as u64,
+            adapter: format!("a{}", skewed_adapter(&mut rng)),
+            prompt,
+            max_new,
+            stop_byte: 0,
+            beam: 1,
+            deadline: 0,
+            session: None,
+        };
+        arrivals.push((at, req));
+    }
+
+    let clock = Arc::new(VirtualClock::new());
+    let mut sched = Scheduler::new(mock_factory(), ADAPTERS);
+    sched.set_clock(clock.clone());
+    sched.set_trace_capacity(requests + 16);
+    let backstop = arrivals.last().map_or(0, |(t, _)| *t) + (requests as u64 + 8) * 64;
+    let mut responses = Vec::with_capacity(requests);
+    let mut next = 0usize;
+    let mut tick = 0u64;
+    while next < arrivals.len() || !sched.is_idle() {
+        while next < arrivals.len() && arrivals[next].0 <= tick {
+            let (_, req) = arrivals[next].clone();
+            sched.submit(req);
+            next += 1;
+        }
+        clock.advance_ticks(1);
+        responses.append(&mut sched.tick());
+        tick += 1;
+        if tick > backstop {
+            crate::bail!("bench serving point {label:?} did not drain in {backstop} ticks");
+        }
+    }
+    let clean = responses.iter().filter(|r| r.error.is_none()).count();
+    let bytes: usize = responses.iter().map(|r| r.output.len()).sum();
+    let elapsed_s = clock.now_ns() as f64 * 1e-9;
+    // offered load in req/s of virtual time: lambda per tick, TICK_NS ticks
+    let offered_rps = lambda * (1e9 / TICK_NS as f64);
+    Ok(aggregate(label, offered_rps, requests, &sched, clean, bytes, elapsed_s))
+}
+
+/// The closed-loop session-reuse point: a pool of conversations, each run
+/// turn by turn over the durable session store (turn N+1's prompt = full
+/// prior history + fresh bytes), so later turns resurrect state instead
+/// of re-prefilling.
+fn run_session_reuse(pool: usize, turns: usize, seed: u64) -> Result<Value> {
+    let mut rng = Rng::new(seed ^ 0x5E55);
+    let clock = Arc::new(VirtualClock::new());
+    let mut sched = Scheduler::new(mock_factory(), ADAPTERS);
+    sched.set_clock(clock.clone());
+    sched.set_trace_capacity(pool * turns + 16);
+    sched.set_session_store(Arc::new(SessionStore::new(pool * 2)));
+    let mut histories: Vec<Vec<u8>> = (0..pool)
+        .map(|s| (0..8).map(|i| ((s * 47 + i * 7 + 3) % 199 + 1) as u8).collect())
+        .collect();
+    let requests = pool * turns;
+    let mut clean = 0usize;
+    let mut bytes = 0usize;
+    let mut id = 0u64;
+    for t in 0..turns {
+        for s in 0..pool {
+            sched.submit(Request {
+                id,
+                adapter: format!("a{}", s % ADAPTERS),
+                prompt: histories[s].clone(),
+                max_new: 2 + (rng.next_u64() % 4) as usize,
+                stop_byte: 0,
+                beam: 1,
+                deadline: 0,
+                session: Some(format!("conv-{s}")),
+            });
+            id += 1;
+            // closed loop: run this turn to completion before the next
+            let mut got = Vec::new();
+            while !sched.is_idle() {
+                clock.advance_ticks(1);
+                got.append(&mut sched.tick());
+            }
+            let Some(r) = got.pop() else {
+                crate::bail!("session turn {t}/{s} did not retire");
+            };
+            if r.error.is_none() {
+                clean += 1;
+            }
+            bytes += r.output.len();
+            histories[s].extend_from_slice(&r.output);
+            histories[s].extend((0..3).map(|i| ((t * 29 + i * 7 + 11) % 199 + 1) as u8));
+        }
+    }
+    let elapsed_s = clock.now_ns() as f64 * 1e-9;
+    let offered = rate_per_s(requests as f64, elapsed_s);
+    Ok(aggregate("session_reuse", offered, requests, &sched, clean, bytes, elapsed_s))
+}
+
+/// Run the serving load harness and write `results/BENCH_serving.json`.
+pub fn run(_kvs: &BTreeMap<String, String>) -> Result<()> {
+    let scale = crate::knobs::bench_scale();
+    let seed = crate::knobs::serving_seed();
+    let requests = ((48.0 * scale).round() as usize).max(12);
+    let turns = ((6.0 * scale).round() as usize).max(3);
+
+    // two offered-load points (req/tick of the 1 ms virtual tick):
+    // moderate load, then pressure well past the mock's service rate
+    let points = vec![
+        run_open_loop("load_low", 0.05, requests, seed)?,
+        run_open_loop("load_high", 0.25, requests, seed)?,
+        run_session_reuse(3, turns, seed)?,
+    ];
+
+    println!("\n=== bench serving (scale {scale}, seed {seed}) ===");
+    for p in &points {
+        let gets = |k: &str| p.get(k).and_then(Value::as_str).unwrap_or("?").to_string();
+        let get = |k: &str| p.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        let sub = |k: &str, q: &str| {
+            p.get(k).and_then(|v| v.get(q)).and_then(Value::as_f64).unwrap_or(0.0)
+        };
+        println!(
+            "{:<14} offered {:>7.1} rps | goodput {:>7.1} rps | {:>8.0} tok/s | \
+             TTFT p50/p95/p99 {:.1}/{:.1}/{:.1} ms | ITL p50 {:.2} ms | {} ok / {} req",
+            gets("label"),
+            get("offered_rps"),
+            get("goodput_rps"),
+            get("tok_per_s"),
+            sub("ttft_ns", "p50") / 1e6,
+            sub("ttft_ns", "p95") / 1e6,
+            sub("ttft_ns", "p99") / 1e6,
+            sub("itl_ns", "p50") / 1e6,
+            get("completed_clean"),
+            get("requests"),
+        );
+    }
+
+    let root = json::obj(vec![
+        ("schema", json::num(BENCH_SERVING_SCHEMA as f64)),
+        ("scale", json::num(scale as f64)),
+        ("seed", json::num(seed as f64)),
+        ("tick_ns", json::num(TICK_NS as f64)),
+        ("points", Value::Arr(points)),
+    ]);
+    let path = crate::results_dir().join("BENCH_serving.json");
+    std::fs::write(&path, json::emit(&root))?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_gaps_are_positive_and_seeded() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let ga: Vec<u64> = (0..200).map(|_| poisson_gap_ticks(&mut a, 0.1)).collect();
+        let gb: Vec<u64> = (0..200).map(|_| poisson_gap_ticks(&mut b, 0.1)).collect();
+        assert_eq!(ga, gb, "same seed, same schedule");
+        assert!(ga.iter().all(|&g| g >= 1));
+        // mean gap ~ 1/lambda = 10 ticks; allow wide slack, the point is
+        // "roughly exponential", not a statistical test
+        let mean = ga.iter().sum::<u64>() as f64 / ga.len() as f64;
+        assert!((3.0..30.0).contains(&mean), "mean gap {mean}");
+    }
+
+    #[test]
+    fn percentile_is_exact_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.95), 95);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&v, 0.0), 1, "rank floors at the first sample");
+        assert_eq!(percentile(&[], 0.5), 0, "empty = 0");
+        assert_eq!(percentile(&[42], 0.99), 42);
+    }
+
+    #[test]
+    fn open_loop_point_is_byte_identical_across_runs() {
+        // acceptance: virtual clock + fixed seed => identical JSON bytes
+        let a = run_open_loop("t", 0.2, 12, 99).unwrap();
+        let b = run_open_loop("t", 0.2, 12, 99).unwrap();
+        assert_eq!(json::emit(&a), json::emit(&b));
+        // and the shape carries the SLO aggregates the CI smoke asserts
+        for k in ["ttft_ns", "itl_ns", "tok_per_s", "goodput_rps", "offered_rps"] {
+            assert!(a.get(k).is_some(), "missing {k}");
+        }
+        for q in ["p50", "p95", "p99"] {
+            assert!(a.get("ttft_ns").unwrap().get(q).is_some(), "ttft {q}");
+        }
+        let req = a.get("requests").unwrap().as_usize().unwrap();
+        let clean = a.get("completed_clean").unwrap().as_usize().unwrap();
+        assert_eq!((req, clean), (12, 12), "mock load completes cleanly");
+        assert!(a.get("tok_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn session_reuse_point_resurrects_and_is_deterministic() {
+        let a = run_session_reuse(2, 3, 5).unwrap();
+        let b = run_session_reuse(2, 3, 5).unwrap();
+        assert_eq!(json::emit(&a), json::emit(&b));
+        let res = a.get("resurrections").unwrap().as_usize().unwrap();
+        assert!(res >= 2, "later turns resume from the store (got {res})");
+        assert_eq!(
+            a.get("requests").unwrap().as_usize(),
+            a.get("completed_clean").unwrap().as_usize(),
+        );
+    }
+
+    #[test]
+    fn different_seeds_change_the_schedule_not_the_shape() {
+        let a = run_open_loop("t", 0.2, 12, 1).unwrap();
+        let b = run_open_loop("t", 0.2, 12, 2).unwrap();
+        assert_ne!(json::emit(&a), json::emit(&b), "seed actually feeds the load");
+        assert_eq!(a.get("requests"), b.get("requests"));
+    }
+}

@@ -886,6 +886,12 @@ impl DecodeCore {
         self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Publish this core's dispatch counter into a metrics registry as
+    /// `core.dispatches` (rust/docs/observability.md § Registry).
+    pub fn publish_metrics(&self, m: &crate::obs::Metrics) {
+        m.counter("core.dispatches").set(self.dispatch_count());
+    }
+
     /// Reference step that re-serializes every parameter literal and
     /// forces the state through the host (the pre-arena behavior). Kept
     /// ONLY as the `bench hotpath` baseline — never use it to serve.

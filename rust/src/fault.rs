@@ -195,6 +195,17 @@ impl FaultPlan {
         self.injected[site.index()].load(Ordering::Relaxed)
     }
 
+    /// Publish every site's check/inject counters into a metrics registry
+    /// as `fault.<site label>.checks` / `fault.<site label>.injected`
+    /// (instrument names: rust/docs/observability.md § Registry).
+    pub fn publish(&self, m: &crate::obs::Metrics) {
+        for site in FaultSite::ALL {
+            let label = site.label();
+            m.counter(&format!("fault.{label}.checks")).set(self.checks(site));
+            m.counter(&format!("fault.{label}.injected")).set(self.injected(site));
+        }
+    }
+
     /// Would check `n` at `site` fault? Pure; does not advance counters.
     fn hits(&self, site: FaultSite, n: u64) -> bool {
         let i = site.index();

@@ -167,6 +167,24 @@ pub const KNOBS: &[Knob] = &[
         default: "64",
         doc: "In-memory LRU capacity (entries) of the serve session-state store.",
     },
+    Knob {
+        name: "SSM_PEFT_OBS_TRACE_CAP",
+        kind: KnobKind::Usize,
+        default: "256",
+        doc: "Capacity of the scheduler's ring of recent request traces.",
+    },
+    Knob {
+        name: "SSM_PEFT_OBS_IDLE_BACKOFF_US",
+        kind: KnobKind::Usize,
+        default: "2000",
+        doc: "Max serve-loop parked sleep between idle ticks, in microseconds (0 = spin).",
+    },
+    Knob {
+        name: "SSM_PEFT_SERVING_SEED",
+        kind: KnobKind::Usize,
+        default: "0",
+        doc: "Seed for the bench serving load generator (arrivals, lengths, adapter skew).",
+    },
 ];
 
 /// Registry lookup by full name.
@@ -290,6 +308,26 @@ pub fn sessions_cap() -> usize {
     parsed("SSM_PEFT_SESSIONS_CAP", KnobKind::Usize).unwrap_or(64).max(1)
 }
 
+/// `SSM_PEFT_OBS_TRACE_CAP`: capacity of the scheduler's trace ring,
+/// default 256; floored at 1.
+pub fn obs_trace_cap() -> usize {
+    parsed("SSM_PEFT_OBS_TRACE_CAP", KnobKind::Usize).unwrap_or(256).max(1)
+}
+
+/// `SSM_PEFT_OBS_IDLE_BACKOFF_US`: the serve loop's max parked sleep
+/// between unproductive ticks, in microseconds; default 2000, 0 disables
+/// parking (busy-spin, the pre-backoff behavior).
+pub fn obs_idle_backoff_us() -> u64 {
+    parsed::<usize>("SSM_PEFT_OBS_IDLE_BACKOFF_US", KnobKind::Usize)
+        .unwrap_or(2000) as u64
+}
+
+/// `SSM_PEFT_SERVING_SEED`: seed for the `bench serving` load generator,
+/// default 0.
+pub fn serving_seed() -> u64 {
+    parsed::<usize>("SSM_PEFT_SERVING_SEED", KnobKind::Usize).unwrap_or(0) as u64
+}
+
 /// Per-site injected fault rates, in [`crate::fault::FaultSite::ALL`]
 /// order: `SSM_PEFT_FAULT_EXEC`, `SSM_PEFT_FAULT_ADAPTER_LOAD`,
 /// `SSM_PEFT_FAULT_ARTIFACT_READ`, `SSM_PEFT_FAULT_STATE_READBACK`,
@@ -354,6 +392,16 @@ mod tests {
         assert!(lookup("SSM_PEFT_SESSIONS_DIR").is_some());
         assert!(lookup("SSM_PEFT_SESSIONS_CAP").is_some());
         assert!(sessions_cap() >= 1);
+    }
+
+    #[test]
+    fn obs_and_serving_knobs_registered() {
+        assert!(lookup("SSM_PEFT_OBS_TRACE_CAP").is_some());
+        assert!(lookup("SSM_PEFT_OBS_IDLE_BACKOFF_US").is_some());
+        assert!(lookup("SSM_PEFT_SERVING_SEED").is_some());
+        assert!(obs_trace_cap() >= 1);
+        let _ = obs_idle_backoff_us(); // 0 is a valid (spin) setting
+        let _ = serving_seed();
     }
 
     #[test]

@@ -28,8 +28,11 @@
 //!   + the parallel suite runner + JSONL `RunRecord` streams
 //! - [`serve`] — online multi-adapter generation: LRU adapter registry,
 //!   continuous-batching scheduler, `serve` CLI loop (stdin/TCP)
+//! - [`obs`] — serving observability: metrics registry, span tracing
+//!   behind the [`obs::Clock`] trait (rust/docs/observability.md)
 //! - [`bench`] — timing harness used by `cargo bench` targets + the
-//!   `bench hotpath` telemetry ([`bench::hotpath`])
+//!   `bench hotpath` telemetry ([`bench::hotpath`]) + the `bench serving`
+//!   load harness ([`bench::serving`])
 //! - [`error`] — the crate-wide [`error::Error`]/[`error::Result`] taxonomy
 //! - [`fault`] — deterministic seeded fault injection for the serve stack
 //!   (rust/docs/robustness.md)
@@ -51,6 +54,7 @@ pub mod knobs;
 pub mod lint;
 pub mod manifest;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod peft;
 pub mod runtime;

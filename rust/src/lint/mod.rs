@@ -11,7 +11,10 @@
 //! - every registered knob must be documented by name in `rust/docs/`;
 //! - the `BENCH_hotpath.json` schema constant
 //!   ([`crate::bench::hotpath::BENCH_HOTPATH_SCHEMA`]) must match the
-//!   schema shown in `rust/docs/performance.md`.
+//!   schema shown in `rust/docs/performance.md`, and the
+//!   `BENCH_serving.json` constant
+//!   ([`crate::bench::serving::BENCH_SERVING_SCHEMA`]) must match
+//!   `rust/docs/observability.md`.
 //!
 //! Run with `cargo run --release -- lint`; rule catalogue and waiver
 //! etiquette live in `rust/docs/linting.md`.
@@ -197,17 +200,26 @@ fn knob_registry_check(
     }
 }
 
-/// `BENCH_hotpath.json` schema constant must match the docs.
+/// Emitted-JSON schema constants must match their docs: one pin per
+/// (constant, doc) pair, so a schema bump without a docs update is drift.
 fn schema_pin_check(root: &Path, drift: &mut Vec<String>) {
-    let pin = format!("\"schema\": {}", crate::bench::hotpath::BENCH_HOTPATH_SCHEMA);
-    let path = root.join("rust/docs/performance.md");
-    match std::fs::read_to_string(&path) {
-        Ok(text) if text.contains(&pin) => {}
-        Ok(_) => drift.push(format!(
-            "rust/docs/performance.md does not show `{pin}` — BENCH_hotpath.json \
-             schema constant and docs have diverged"
-        )),
-        Err(e) => drift.push(format!("cannot read {}: {e}", path.display())),
+    let pins: &[(u32, &str, &str)] = &[
+        (crate::bench::hotpath::BENCH_HOTPATH_SCHEMA, "rust/docs/performance.md",
+         "BENCH_hotpath.json"),
+        (crate::bench::serving::BENCH_SERVING_SCHEMA, "rust/docs/observability.md",
+         "BENCH_serving.json"),
+    ];
+    for (schema, doc, artifact) in pins {
+        let pin = format!("\"schema\": {schema}");
+        let path = root.join(doc);
+        match std::fs::read_to_string(&path) {
+            Ok(text) if text.contains(&pin) => {}
+            Ok(_) => drift.push(format!(
+                "{doc} does not show `{pin}` — {artifact} schema constant and docs \
+                 have diverged"
+            )),
+            Err(e) => drift.push(format!("cannot read {}: {e}", path.display())),
+        }
     }
 }
 

@@ -6,7 +6,7 @@
 //! |------------------|----------------------------|------------------------------------------|
 //! | `unsafe-safety`  | every `.rs` file           | `unsafe` carries a `// SAFETY:` comment  |
 //! | `no-panic`       | `rust/src`, non-test code  | no `.unwrap()` / `.expect(` / `panic!` / `todo!` / `unimplemented!` |
-//! | `determinism`    | suite-record + optimizer + trainer files | no `Instant` / `SystemTime` / `HashMap`  |
+//! | `determinism`    | suite-record + optimizer + trainer + obs files | no `Instant` / `SystemTime` / `HashMap`  |
 //! | `knob-registry`  | `rust/src` minus `knobs.rs`| no direct `env::var` reads               |
 //!
 //! A site can be waived with `// lint: allow(<rule>)` on the same line or
@@ -79,14 +79,19 @@ pub struct UnsafeSite {
 }
 
 /// Files the determinism rule covers: the fused-optimizer step, the
-/// training loop that feeds suite records, the record writer itself, and
-/// the fault-injection schedule (whose whole contract is seeded
-/// reproducibility). (Workspace-relative paths.)
+/// training loop that feeds suite records, the record writer itself, the
+/// fault-injection schedule (whose whole contract is seeded
+/// reproducibility), and the observability layer — spans, the metrics
+/// registry, and the clock abstraction itself, where the only sanctioned
+/// wall-time read lives behind a waiver. (Workspace-relative paths.)
 pub const DETERMINISM_SCOPE: &[&str] = &[
     "rust/src/optim.rs",
     "rust/src/train/mod.rs",
     "rust/src/suite/record.rs",
     "rust/src/fault.rs",
+    "rust/src/obs/clock.rs",
+    "rust/src/obs/span.rs",
+    "rust/src/obs/mod.rs",
 ];
 
 /// Scope flags for one file, derived from its workspace-relative path.

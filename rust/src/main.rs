@@ -26,6 +26,12 @@
 //!                                SSM_PEFT_BENCH_SCALE=0.1; falls back to a
 //!                                mock host-optimizer comparison when no
 //!                                artifacts exist — rust/docs/performance.md)
+//!   bench serving                SLO load harness: seeded Poisson arrivals
+//!                                + adapter skew against the in-process
+//!                                scheduler on a virtual clock; percentile
+//!                                TTFT/ITL + goodput per offered-load point,
+//!                                written to results/BENCH_serving.json
+//!                                (rust/docs/observability.md)
 //!   lint                         repolint: first-party static analysis
 //!                                (unsafe-safety, no-panic, determinism,
 //!                                knob-registry) + unsafe inventory report,
@@ -215,7 +221,8 @@ fn suite(kvs: &BTreeMap<String, String>) -> Result<()> {
 fn bench(kvs: &BTreeMap<String, String>, pos: &[String]) -> Result<()> {
     match pos.get(1).map(String::as_str) {
         Some("hotpath") => ssm_peft::bench::hotpath::run(kvs),
-        other => Err(err!("unknown bench target {other:?}; available: hotpath")),
+        Some("serving") => ssm_peft::bench::serving::run(kvs),
+        other => Err(err!("unknown bench target {other:?}; available: hotpath, serving")),
     }
 }
 

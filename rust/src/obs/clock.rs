@@ -1,0 +1,120 @@
+//! The clock contract behind span tracing.
+//!
+//! Every timestamp in `obs` is a `u64` nanosecond count since the clock's
+//! origin, read through the [`Clock`] trait. Production code runs on
+//! [`WallClock`] (monotonic wall time); tests and `bench serving` run on
+//! [`VirtualClock`], which only moves when the driver advances it — so a
+//! traced run is a pure function of its inputs and its emitted JSON is
+//! byte-identical run to run (rust/docs/observability.md § Clock contract).
+//!
+//! `WallClock` is the single non-deterministic corner of the module, which
+//! is why the repolint determinism waivers below are scoped to exactly the
+//! lines that touch the OS clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Nanoseconds one [`VirtualClock`] tick advances (1 ms). One scheduler
+/// tick under the virtual clock models a 1 ms decode step.
+pub const TICK_NS: u64 = 1_000_000;
+
+/// A monotonic nanosecond clock. `now_ns` must never decrease between
+/// calls on the same instance; 0 is the clock's origin.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since this clock's origin.
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: monotonic wall time since construction.
+pub struct WallClock {
+    // lint: allow(determinism)
+    origin: std::time::Instant,
+}
+
+impl WallClock {
+    /// A clock whose origin is "now".
+    pub fn new() -> WallClock {
+        // lint: allow(determinism)
+        WallClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ns(&self) -> u64 {
+        // u64 holds ~584 years of nanoseconds; saturate rather than wrap
+        u64::try_from(self.origin.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Deterministic clock for tests and `bench serving`: virtual time that
+/// only moves when the driver calls [`VirtualClock::advance_ticks`] /
+/// [`VirtualClock::advance_ns`]. Reads are lock-free atomic loads, so the
+/// clock can be shared (`Arc`) between a driver and a scheduler without
+/// perturbing the traced run.
+pub struct VirtualClock {
+    now: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A virtual clock at origin (0 ns).
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: AtomicU64::new(0) }
+    }
+    /// Advance by `n` ticks of [`TICK_NS`] each.
+    pub fn advance_ticks(&self, n: u64) {
+        self.now.fetch_add(n.saturating_mul(TICK_NS), Ordering::Relaxed);
+    }
+    /// Advance by raw nanoseconds.
+    pub fn advance_ns(&self, ns: u64) {
+        self.now.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        self.now.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a, "monotonic reads: {b} < {a}");
+    }
+
+    #[test]
+    fn virtual_clock_moves_only_when_advanced() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        assert_eq!(c.now_ns(), 0, "reads do not advance virtual time");
+        c.advance_ticks(3);
+        assert_eq!(c.now_ns(), 3 * TICK_NS);
+        c.advance_ns(7);
+        assert_eq!(c.now_ns(), 3 * TICK_NS + 7);
+    }
+
+    #[test]
+    fn virtual_clock_shared_through_trait_object() {
+        let c: std::sync::Arc<VirtualClock> = std::sync::Arc::new(VirtualClock::new());
+        let dynref: std::sync::Arc<dyn Clock> = c.clone();
+        c.advance_ticks(1);
+        assert_eq!(dynref.now_ns(), TICK_NS);
+    }
+}

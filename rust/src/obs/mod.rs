@@ -1,0 +1,426 @@
+//! Serving observability: a lock-light metrics registry, per-request span
+//! tracing behind a [`Clock`] trait, and the shared rate-guard helper.
+//!
+//! Design contract (rust/docs/observability.md):
+//!
+//! - **Registry** ([`Metrics`]): named counters, gauges, and fixed-log2-
+//!   bucket histograms. Registration takes a short mutex once per name;
+//!   the returned handles ([`Counter`], [`Gauge`], [`Hist`]) are plain
+//!   `Arc`'d atomics, so recording on a hot path is a relaxed atomic op —
+//!   no lock, no allocation. Snapshots serialize every instrument in
+//!   `BTreeMap` key order, so two registries with the same contents emit
+//!   identical JSON.
+//! - **Histograms** ([`Histogram`]): 64 deterministic log2 buckets
+//!   (bucket 0 = {0}, bucket i = [2^(i−1), 2^i), top bucket open). Bucket
+//!   edges are a pure function of the value, so merges are associative and
+//!   parallel recording is order-independent.
+//! - **Spans** ([`Span`], [`Trace`], [`TraceRing`]): see [`span`].
+//! - **Clocks** ([`WallClock`], [`VirtualClock`]): see [`clock`]. This
+//!   module sits in repolint's determinism scope; only the wall-clock
+//!   lines carry waivers.
+
+pub mod clock;
+pub mod span;
+
+pub use clock::{Clock, VirtualClock, WallClock, TICK_NS};
+pub use span::{Span, Trace, TraceRing};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::json::{self, Value};
+
+/// `count / elapsed_s` with zero, negative, or non-finite elapsed time
+/// clamped to a rate of 0.0 — the single shared guard for every
+/// throughput/rate computation (`Response::tok_per_s`, `bench serving`
+/// aggregation, snapshot summaries), so the div-zero class can't reappear
+/// per call site.
+pub fn rate_per_s(count: f64, elapsed_s: f64) -> f64 {
+    if elapsed_s > 0.0 && elapsed_s.is_finite() {
+        count / elapsed_s
+    } else {
+        0.0
+    }
+}
+
+/// Number of log2 buckets in a [`Histogram`].
+pub const HIST_BUCKETS: usize = 64;
+
+/// A fixed-bucket log2 histogram over `u64` samples. Buckets are
+/// deterministic: bucket 0 holds exactly {0}, bucket `i` (1 ≤ i < 63)
+/// holds [2^(i−1), 2^i), and bucket 63 is open-ended from 2^62. All
+/// recording is relaxed-atomic, so histograms can be shared across
+/// threads; merge order never changes the result.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+    /// The bucket index `v` lands in (pure; see the type docs).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+    /// `[lo, hi)` bounds of bucket `i`; the top bucket reports
+    /// `hi = u64::MAX` (open-ended).
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        if i == 0 {
+            (0, 1)
+        } else if i >= HIST_BUCKETS - 1 {
+            (1u64 << 62, u64::MAX)
+        } else {
+            (1u64 << (i - 1), 1u64 << i)
+        }
+    }
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+    /// Fold another histogram's samples in. Associative and commutative:
+    /// `(a ⊕ b) ⊕ c` and `a ⊕ (b ⊕ c)` snapshot identically.
+    pub fn merge_from(&self, other: &Histogram) {
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    /// Sum of all samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+    /// Bucket-resolution quantile: the inclusive upper edge of the bucket
+    /// containing the q-th sample, clamped to the observed max (exact for
+    /// the distributions the log2 edges can represent; `bench serving`
+    /// computes exact percentiles from raw samples instead).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                let (_, hi) = Self::bucket_bounds(i);
+                return hi.saturating_sub(1).min(self.max());
+            }
+        }
+        self.max()
+    }
+    /// Snapshot: count/sum/min/max, p50/p95/p99, and the non-empty
+    /// buckets as `[lower_edge, count]` pairs in edge order.
+    pub fn to_json(&self) -> Value {
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                buckets.push(Value::Arr(vec![
+                    json::num(Self::bucket_bounds(i).0 as f64),
+                    json::num(c as f64),
+                ]));
+            }
+        }
+        json::obj(vec![
+            ("count", json::num(self.count() as f64)),
+            ("sum", json::num(self.sum() as f64)),
+            ("min", json::num(self.min() as f64)),
+            ("max", json::num(self.max() as f64)),
+            ("p50", json::num(self.quantile(0.50) as f64)),
+            ("p95", json::num(self.quantile(0.95) as f64)),
+            ("p99", json::num(self.quantile(0.99) as f64)),
+            ("buckets", Value::Arr(buckets)),
+        ])
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A monotonically increasing counter handle (relaxed atomic; clone-cheap).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Overwrite with an externally tracked absolute value (used when
+    /// republishing pre-existing counters into the registry).
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge handle (relaxed atomic; clone-cheap).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Overwrite the gauge.
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A histogram handle (clone-cheap; see [`Histogram`]).
+#[derive(Clone)]
+pub struct Hist(Arc<Histogram>);
+
+impl Hist {
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+    /// The shared histogram.
+    pub fn inner(&self) -> &Histogram {
+        &self.0
+    }
+}
+
+#[derive(Default)]
+struct Tables {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>,
+    hists: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// The metrics registry: named instruments, registered under a short
+/// mutex, recorded lock-free through their handles, snapshotted to
+/// key-ordered JSON. Two registries fed the same values emit identical
+/// snapshots (`BTreeMap` ordering end to end).
+pub struct Metrics {
+    tables: Mutex<Tables>,
+}
+
+impl Metrics {
+    /// An empty registry.
+    pub fn new() -> Metrics {
+        Metrics { tables: Mutex::new(Tables::default()) }
+    }
+    fn lock(&self) -> std::sync::MutexGuard<'_, Tables> {
+        self.tables.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+    /// The counter named `name`, created on first use. Same name → same
+    /// underlying atomic, from any thread.
+    pub fn counter(&self, name: &str) -> Counter {
+        Counter(self.lock().counters.entry(name.to_string()).or_default().clone())
+    }
+    /// The gauge named `name`, created on first use.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        Gauge(self.lock().gauges.entry(name.to_string()).or_default().clone())
+    }
+    /// The histogram named `name`, created on first use.
+    pub fn histogram(&self, name: &str) -> Hist {
+        Hist(self.lock().hists.entry(name.to_string()).or_default().clone())
+    }
+    /// Snapshot every instrument as
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`,
+    /// keys sorted (deterministic emission).
+    pub fn snapshot(&self) -> Value {
+        let t = self.lock();
+        let counters = Value::Obj(
+            t.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), json::num(v.load(Ordering::Relaxed) as f64)))
+                .collect(),
+        );
+        let gauges = Value::Obj(
+            t.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), json::num(v.load(Ordering::Relaxed) as f64)))
+                .collect(),
+        );
+        let hists =
+            Value::Obj(t.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect());
+        json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rate_guard_clamps_degenerate_elapsed() {
+        assert_eq!(rate_per_s(10.0, 2.0), 5.0);
+        assert_eq!(rate_per_s(10.0, 0.0), 0.0, "zero elapsed");
+        assert_eq!(rate_per_s(10.0, -1.0), 0.0, "negative elapsed");
+        assert_eq!(rate_per_s(10.0, f64::NAN), 0.0, "NaN elapsed");
+        assert_eq!(rate_per_s(10.0, f64::INFINITY), 0.0, "infinite elapsed");
+        assert_eq!(rate_per_s(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn bucket_edges_are_deterministic_and_cover_u64() {
+        // property: every sample lands in exactly the bucket whose bounds
+        // contain it, across seeded random draws and the edge values
+        let mut rng = Rng::new(41);
+        let mut samples: Vec<u64> = (0..2000).map(|_| rng.next_u64()).collect();
+        samples.extend([0, 1, 2, 3, 4, u64::MAX, u64::MAX - 1]);
+        for i in 0..63 {
+            samples.push(1u64 << i);
+            samples.push((1u64 << i) + 1);
+            samples.push((1u64 << i) - 1);
+        }
+        for &v in &samples {
+            let b = Histogram::bucket_of(v);
+            let (lo, hi) = Histogram::bucket_bounds(b);
+            assert!(v >= lo, "{v} below bucket {b} lower edge {lo}");
+            if b < HIST_BUCKETS - 1 {
+                assert!(v < hi, "{v} at/above bucket {b} upper edge {hi}");
+            }
+        }
+        // edges partition: bucket i's hi is bucket i+1's lo (below the top)
+        for i in 1..HIST_BUCKETS - 2 {
+            assert_eq!(Histogram::bucket_bounds(i).1, Histogram::bucket_bounds(i + 1).0);
+        }
+    }
+
+    #[test]
+    fn histogram_merge_is_associative() {
+        let mut rng = Rng::new(17);
+        let parts: Vec<Vec<u64>> =
+            (0..3).map(|_| (0..500).map(|_| rng.next_u64() >> (rng.next_u64() % 40)).collect()).collect();
+        let fill = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        // (a ⊕ b) ⊕ c
+        let left = fill(&parts[0]);
+        left.merge_from(&fill(&parts[1]));
+        left.merge_from(&fill(&parts[2]));
+        // a ⊕ (b ⊕ c)
+        let bc = fill(&parts[1]);
+        bc.merge_from(&fill(&parts[2]));
+        let right = fill(&parts[0]);
+        right.merge_from(&bc);
+        // flat recording of everything
+        let flat = fill(&parts.concat());
+        assert_eq!(json::emit(&left.to_json()), json::emit(&right.to_json()));
+        assert_eq!(json::emit(&left.to_json()), json::emit(&flat.to_json()));
+    }
+
+    #[test]
+    fn histogram_summary_and_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram");
+        assert_eq!(h.min(), 0);
+        for v in [1u64, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1106);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        assert!(h.quantile(0.5) >= 3, "median at least the 3rd sample's bucket");
+        assert_eq!(h.quantile(1.0), 1000, "p100 clamps to the observed max");
+        let v = h.to_json();
+        assert_eq!(v.path("count").unwrap().as_usize(), Some(5));
+        assert!(!v.path("buckets").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn registry_handles_share_state_and_snapshot_is_ordered() {
+        let m = Metrics::new();
+        let c1 = m.counter("sched.decode_steps");
+        let c2 = m.counter("sched.decode_steps");
+        c1.inc();
+        c2.add(4);
+        assert_eq!(c1.get(), 5, "same name, same atomic");
+        m.gauge("sched.idle_ticks").set(7);
+        m.histogram("serve.ttft_ns").record(1500);
+        let snap = json::emit(&m.snapshot());
+        let again = json::emit(&m.snapshot());
+        assert_eq!(snap, again, "snapshots are stable");
+        let v = json::parse(&snap).unwrap();
+        // instrument names contain dots, so index with get(), not path()
+        let counters = v.path("counters").unwrap();
+        assert_eq!(counters.get("sched.decode_steps").unwrap().as_usize(), Some(5));
+        let gauges = v.path("gauges").unwrap();
+        assert_eq!(gauges.get("sched.idle_ticks").unwrap().as_usize(), Some(7));
+        let hists = v.path("histograms").unwrap();
+        assert_eq!(
+            hists.get("serve.ttft_ns").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        // two registries fed identically emit identical bytes
+        let m2 = Metrics::new();
+        m2.counter("sched.decode_steps").add(5);
+        m2.gauge("sched.idle_ticks").set(7);
+        m2.histogram("serve.ttft_ns").record(1500);
+        assert_eq!(snap, json::emit(&m2.snapshot()));
+    }
+}

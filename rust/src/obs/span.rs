@@ -1,0 +1,253 @@
+//! Per-request span timelines and the bounded ring of recent traces.
+//!
+//! A [`Span`] is the preallocated timeline embedded in a scheduler slot:
+//! recording a phase transition is a plain `u64` store into a field that
+//! already exists, so the decode hot path allocates nothing per step. When
+//! a request retires, the span plus its identity/outcome is frozen into a
+//! [`Trace`] (one `String` clone, once per request) and pushed into the
+//! scheduler's [`TraceRing`], where the `"cmd":"stats"` wire request and
+//! `bench serving` read it back (rust/docs/observability.md § Spans).
+
+use std::collections::VecDeque;
+
+use crate::json::{self, Value};
+
+/// Nanosecond stamps for one request's lifecycle, in clock order:
+/// `enqueued → admitted (prefill starts) → first_token → retired`.
+/// A stamp of 0 means the phase was never reached (except `enqueued_ns`,
+/// which may legitimately be 0 at a virtual clock's origin).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Span {
+    /// When the request entered the admission queue.
+    pub enqueued_ns: u64,
+    /// When a lane admitted it (prefill begins immediately after).
+    pub admitted_ns: u64,
+    /// When the first output byte was emitted (0 = no output).
+    pub first_token_ns: u64,
+    /// When the slot retired (finish, failure, or drain).
+    pub retired_ns: u64,
+    /// Came back through the queue after a shared-batch demotion.
+    pub demoted: bool,
+    /// Session state was resurrected from the store (no re-prefill).
+    pub resurrected: bool,
+}
+
+impl Span {
+    /// A span for a request admitted `admitted_ns` after being queued at
+    /// `enqueued_ns`; later stamps start unset.
+    pub fn started(enqueued_ns: u64, admitted_ns: u64) -> Span {
+        Span { enqueued_ns, admitted_ns, ..Span::default() }
+    }
+    /// Queue-phase duration (submit → admit).
+    pub fn queued_ns(&self) -> u64 {
+        self.admitted_ns.saturating_sub(self.enqueued_ns)
+    }
+    /// Time to first token (submit → first output byte); 0 if no output.
+    pub fn ttft_ns(&self) -> u64 {
+        if self.first_token_ns == 0 {
+            0
+        } else {
+            self.first_token_ns.saturating_sub(self.enqueued_ns)
+        }
+    }
+    /// Resident decode time after the first token; 0 if no output.
+    pub fn decode_ns(&self) -> u64 {
+        if self.first_token_ns == 0 {
+            0
+        } else {
+            self.retired_ns.saturating_sub(self.first_token_ns)
+        }
+    }
+    /// Submit → retire.
+    pub fn total_ns(&self) -> u64 {
+        self.retired_ns.saturating_sub(self.enqueued_ns)
+    }
+}
+
+/// A retired request's frozen timeline plus identity and outcome — the
+/// unit the [`TraceRing`] stores and `"cmd":"stats"` returns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Scheduler-assigned request id.
+    pub id: u64,
+    /// Adapter the request ran under.
+    pub adapter: String,
+    /// Prompt length in bytes.
+    pub prompt_len: usize,
+    /// Output bytes produced.
+    pub new_tokens: usize,
+    /// Decode steps this request was resident for.
+    pub steps: u64,
+    /// Admission attempts beyond the first (retry cascade).
+    pub retries: u32,
+    /// Finish label (`FinishReason::label`).
+    pub finish: &'static str,
+    /// The phase timeline.
+    pub span: Span,
+}
+
+impl Trace {
+    /// Serialize for `"cmd":"stats"` replies and `METRICS_serve.json`
+    /// (schema: rust/docs/observability.md § Trace records).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("adapter", json::s(&self.adapter)),
+            ("prompt_len", json::num(self.prompt_len as f64)),
+            ("new_tokens", json::num(self.new_tokens as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("retries", json::num(f64::from(self.retries))),
+            ("finish", json::s(self.finish)),
+            ("demoted", Value::Bool(self.span.demoted)),
+            ("resurrected", Value::Bool(self.span.resurrected)),
+            ("enqueued_ns", json::num(self.span.enqueued_ns as f64)),
+            ("admitted_ns", json::num(self.span.admitted_ns as f64)),
+            ("first_token_ns", json::num(self.span.first_token_ns as f64)),
+            ("retired_ns", json::num(self.span.retired_ns as f64)),
+            ("queued_ns", json::num(self.span.queued_ns() as f64)),
+            ("ttft_ns", json::num(self.span.ttft_ns() as f64)),
+            ("decode_ns", json::num(self.span.decode_ns() as f64)),
+            ("total_ns", json::num(self.span.total_ns() as f64)),
+        ])
+    }
+}
+
+/// A bounded ring of the most recent [`Trace`]s. Pushes past capacity
+/// evict the oldest; `pushed()` counts every push ever, so a reader can
+/// hold a cursor and fetch only what arrived since its last visit
+/// ([`TraceRing::since`]).
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<Trace>,
+    pushed: u64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `cap` traces (clamped to ≥ 1).
+    pub fn new(cap: usize) -> TraceRing {
+        let cap = cap.max(1);
+        TraceRing { cap, buf: VecDeque::with_capacity(cap), pushed: 0 }
+    }
+    /// Append, evicting the oldest past capacity.
+    pub fn push(&mut self, t: Trace) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(t);
+        self.pushed += 1;
+    }
+    /// Traces currently resident.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+    /// Total pushes ever (the cursor space for [`TraceRing::since`]).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+    /// Oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &Trace> {
+        self.buf.iter()
+    }
+    /// The traces pushed after cursor `cursor` (a previous [`pushed`]
+    /// reading) that are still resident; evicted ones are gone. Pass the
+    /// current `pushed()` back as the next cursor.
+    ///
+    /// [`pushed`]: TraceRing::pushed
+    pub fn since(&self, cursor: u64) -> impl Iterator<Item = &Trace> {
+        let fresh = self.pushed.saturating_sub(cursor).min(self.buf.len() as u64) as usize;
+        self.buf.iter().skip(self.buf.len() - fresh)
+    }
+    /// Serialize the resident traces oldest → newest.
+    pub fn to_json(&self) -> Value {
+        Value::Arr(self.buf.iter().map(Trace::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: u64) -> Trace {
+        Trace {
+            id,
+            adapter: "a".into(),
+            prompt_len: 4,
+            new_tokens: 2,
+            steps: 6,
+            retries: 0,
+            finish: "stop",
+            span: Span {
+                enqueued_ns: 10,
+                admitted_ns: 30,
+                first_token_ns: 70,
+                retired_ns: 100,
+                demoted: false,
+                resurrected: false,
+            },
+        }
+    }
+
+    #[test]
+    fn span_phase_durations() {
+        let sp = t(1).span;
+        assert_eq!(sp.queued_ns(), 20);
+        assert_eq!(sp.ttft_ns(), 60);
+        assert_eq!(sp.decode_ns(), 30);
+        assert_eq!(sp.total_ns(), 90);
+        let none = Span::started(5, 9);
+        assert_eq!(none.queued_ns(), 4);
+        assert_eq!(none.ttft_ns(), 0, "no first token → no TTFT");
+        assert_eq!(none.decode_ns(), 0);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_pushes() {
+        let mut r = TraceRing::new(3);
+        for id in 0..5 {
+            r.push(t(id));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.pushed(), 5);
+        let ids: Vec<u64> = r.iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn since_cursor_returns_only_fresh_traces() {
+        let mut r = TraceRing::new(4);
+        r.push(t(0));
+        r.push(t(1));
+        let cursor = r.pushed();
+        assert_eq!(r.since(cursor).count(), 0);
+        r.push(t(2));
+        r.push(t(3));
+        let fresh: Vec<u64> = r.since(cursor).map(|x| x.id).collect();
+        assert_eq!(fresh, vec![2, 3]);
+        // cursor older than anything resident: clamped to what survives
+        let mut small = TraceRing::new(2);
+        for id in 0..6 {
+            small.push(t(id));
+        }
+        let all: Vec<u64> = small.since(0).map(|x| x.id).collect();
+        assert_eq!(all, vec![4, 5], "evicted traces are not resurrected");
+    }
+
+    #[test]
+    fn trace_json_round_trips() {
+        let v = t(9).to_json();
+        assert_eq!(v.path("id").unwrap().as_usize(), Some(9));
+        assert_eq!(v.path("finish").unwrap().as_str(), Some("stop"));
+        assert_eq!(v.path("ttft_ns").unwrap().as_usize(), Some(60));
+        assert_eq!(v.path("demoted").unwrap().as_bool(), Some(false));
+        let back = crate::json::parse(&crate::json::emit(&v)).unwrap();
+        assert_eq!(back.path("queued_ns").unwrap().as_usize(), Some(20));
+    }
+}

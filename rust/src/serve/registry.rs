@@ -126,6 +126,22 @@ pub struct RegistryStats {
     pub pins: usize,
 }
 
+impl RegistryStats {
+    /// Publish this snapshot into a metrics registry under `registry.*`
+    /// (instrument names: rust/docs/observability.md § Registry).
+    pub fn publish(&self, m: &crate::obs::Metrics) {
+        m.counter("registry.hits").set(self.hits as u64);
+        m.counter("registry.misses").set(self.misses as u64);
+        m.counter("registry.evictions").set(self.evictions as u64);
+        m.counter("registry.probations").set(self.probations as u64);
+        m.counter("registry.reinstated").set(self.reinstated as u64);
+        m.gauge("registry.resident").set(self.resident as u64);
+        m.gauge("registry.resident_bytes").set(self.resident_bytes as u64);
+        m.gauge("registry.quarantined").set(self.quarantined as u64);
+        m.gauge("registry.pins").set(self.pins as u64);
+    }
+}
+
 /// Circuit state for one quarantined adapter.
 struct Quarantine {
     /// Scheduler ticks observed since the circuit (re-)opened

@@ -87,7 +87,6 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::error::{ErrorKind, Result};
 
@@ -95,6 +94,7 @@ use crate::data::{BOS, PAD};
 use crate::eval::{
     beam_search, AdapterRow, AdapterStepDecode, DecodeState, PinnedAdapter, StepDecode,
 };
+use crate::obs::{Clock, Span, Trace, TraceRing, WallClock};
 use crate::serve::sessions::{history_digest, SessionSnapshot, SessionStore};
 use crate::tensor::{argmax, IntTensor, Tensor};
 
@@ -200,12 +200,8 @@ impl Response {
     /// (queue wait excluded — `total_s` includes it, so a backpressured
     /// request must not look slower than the lane actually ran it).
     pub fn tok_per_s(&self) -> f64 {
-        let occupancy = self.total_s - self.queued_s;
-        if occupancy > 0.0 {
-            self.output.len() as f64 / occupancy
-        } else {
-            0.0
-        }
+        // [`crate::obs::rate_per_s`] clamps zero/negative occupancy to 0.0
+        crate::obs::rate_per_s(self.output.len() as f64, self.total_s - self.queued_s)
     }
 }
 
@@ -254,8 +250,9 @@ struct Slot {
     /// Decode steps taken for this slot (tokens consumed, incl. BOS).
     t: usize,
     out: Vec<u8>,
-    enqueued: Instant,
-    admitted: Instant,
+    /// Preallocated span timeline (obs): phase stamps are plain `u64`
+    /// stores into this field — zero per-step allocation.
+    span: Span,
     /// The tick the request was submitted on (deadline watchdog input).
     submit_tick: u64,
     /// Requeues the request went through before this admission.
@@ -311,7 +308,7 @@ impl Lane {
     /// step-wise path expects (`t = 0`, `cur = BOS`); a following
     /// [`Lane::flush_prefill`] — or a session resurrection — may
     /// fast-forward it past its prompt prefix.
-    fn admit(&mut self, req: Request, enqueued: Instant, submit_tick: u64,
+    fn admit(&mut self, req: Request, span: Span, submit_tick: u64,
              attempts: u32)
         -> std::result::Result<usize, (Request, crate::error::Error)> {
         let Some(r) = self.free_slot() else {
@@ -328,8 +325,7 @@ impl Lane {
             req,
             t: 0,
             out: Vec::new(),
-            enqueued,
-            admitted: Instant::now(),
+            span,
             submit_tick,
             attempts,
         });
@@ -438,9 +434,9 @@ impl Lane {
     }
 
     /// One decode step for every occupied slot; returns retired rows.
-    fn step(&mut self) -> Result<Vec<Retired>> {
+    fn step(&mut self, now_ns: u64) -> Result<Vec<Retired>> {
         let logits = self.model.step(&self.cur, &mut self.state)?;
-        Ok(advance_rows(&logits, &mut self.slots, &mut self.cur))
+        Ok(advance_rows(&logits, &mut self.slots, &mut self.cur, now_ns))
     }
 }
 
@@ -489,7 +485,7 @@ impl SharedLane {
     /// Seed the recycled row with this adapter's `h0`, bind its delta, and
     /// install the request; returns the row index. Hands the request back
     /// on failure.
-    fn admit(&mut self, req: Request, enqueued: Instant, submit_tick: u64,
+    fn admit(&mut self, req: Request, span: Span, submit_tick: u64,
              attempts: u32, delta: AdapterRow,
              h0: Option<Arc<BTreeMap<String, Tensor>>>)
         -> std::result::Result<usize, (Request, crate::error::Error)> {
@@ -507,8 +503,7 @@ impl SharedLane {
             req,
             t: 0,
             out: Vec::new(),
-            enqueued,
-            admitted: Instant::now(),
+            span,
             submit_tick,
             attempts,
         });
@@ -517,9 +512,9 @@ impl SharedLane {
 
     /// One mixed-adapter decode step; retired rows drop their delta so the
     /// next admission starts clean (and the delta's `Arc` can be freed).
-    fn step(&mut self) -> Result<Vec<Retired>> {
+    fn step(&mut self, now_ns: u64) -> Result<Vec<Retired>> {
         let logits = self.model.step_rows(&self.cur, &mut self.state, &self.rows)?;
-        let retired = advance_rows(&logits, &mut self.slots, &mut self.cur);
+        let retired = advance_rows(&logits, &mut self.slots, &mut self.cur, now_ns);
         for r in 0..self.slots.len() {
             if self.slots[r].is_none() {
                 self.rows[r] = None;
@@ -541,13 +536,17 @@ struct Retired {
     /// `None` for stateless requests.
     tag: Option<(String, u64, u64)>,
     response: Response,
+    /// The request's frozen span timeline, pushed into the scheduler's
+    /// [`TraceRing`] alongside the response.
+    trace: Trace,
 }
 
 /// The shared retire loop: feed one step's logits to every occupied slot,
 /// advance prompts, emit greedy tokens, retire finished rows. Used by both
 /// merged lanes and the shared unmerged lane so the two paths cannot drift
 /// in stop/`max_new`/accounting semantics.
-fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor)
+fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor,
+                now_ns: u64)
     -> Vec<Retired> {
     let v = logits.shape[1];
     let mut retired = Vec::new();
@@ -568,6 +567,11 @@ fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor
                     (PAD, Some(FinishReason::Stop))
                 } else {
                     slot.out.push(tok);
+                    if slot.span.first_token_ns == 0 {
+                        // TTFT stamp: a plain store into the preallocated
+                        // span — the hot path allocates nothing here
+                        slot.span.first_token_ns = now_ns;
+                    }
                     if slot.out.len() >= slot.req.max_new {
                         (PAD, Some(FinishReason::Length))
                     } else {
@@ -586,7 +590,8 @@ fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor
                     (sid, slot.t as u64,
                      history_digest(&slot.req.prompt, &slot.out, h))
                 });
-                retired.push(Retired { row: r, tag, response: finish(slot, reason) });
+                let (response, trace) = finish(slot, reason, now_ns);
+                retired.push(Retired { row: r, tag, response, trace });
             }
         }
         cur.data[r] = next;
@@ -594,21 +599,38 @@ fn advance_rows(logits: &Tensor, slots: &mut [Option<Slot>], cur: &mut IntTensor
     retired
 }
 
-fn finish(slot: Slot, finish: FinishReason) -> Response {
-    let now = Instant::now();
-    Response {
+/// Nanosecond difference as non-negative seconds.
+fn secs_between(start_ns: u64, end_ns: u64) -> f64 {
+    end_ns.saturating_sub(start_ns) as f64 * 1e-9
+}
+
+fn finish(slot: Slot, finish: FinishReason, now_ns: u64) -> (Response, Trace) {
+    let mut span = slot.span;
+    span.retired_ns = now_ns;
+    let response = Response {
         id: slot.req.id,
         session: slot.req.session.clone(),
         adapter: slot.req.adapter,
         prompt_len: slot.req.prompt.len(),
         output: slot.out,
-        queued_s: slot.admitted.duration_since(slot.enqueued).as_secs_f64(),
-        total_s: now.duration_since(slot.enqueued).as_secs_f64(),
+        queued_s: secs_between(span.enqueued_ns, span.admitted_ns),
+        total_s: secs_between(span.enqueued_ns, now_ns),
         steps: slot.t as u64,
         finish,
         error: None,
         retries: slot.attempts as u64,
-    }
+    };
+    let trace = Trace {
+        id: response.id,
+        adapter: response.adapter.clone(),
+        prompt_len: response.prompt_len,
+        new_tokens: response.output.len(),
+        steps: response.steps,
+        retries: slot.attempts,
+        finish: response.finish.label(),
+        span,
+    };
+    (response, trace)
 }
 
 /// The classification boundary between the legacy and typed failure
@@ -624,16 +646,20 @@ fn failed_reason(kind: ErrorKind) -> FinishReason {
 }
 
 /// Retire an un-admitted request as failed, classified by the error kind.
-fn fail_err(req: Request, enqueued: Instant, e: &crate::error::Error, retries: u64)
+/// Never-admitted requests have no span timeline — traces cover admitted
+/// requests only (rust/docs/observability.md § Spans).
+fn fail_err(req: Request, enqueued_ns: u64, e: &crate::error::Error, retries: u64,
+            now_ns: u64)
     -> Response {
+    let waited = secs_between(enqueued_ns, now_ns);
     Response {
         id: req.id,
         session: req.session.clone(),
         adapter: req.adapter,
         prompt_len: req.prompt.len(),
         output: Vec::new(),
-        queued_s: enqueued.elapsed().as_secs_f64(),
-        total_s: enqueued.elapsed().as_secs_f64(),
+        queued_s: waited,
+        total_s: waited,
         steps: 0,
         finish: failed_reason(e.kind()),
         error: Some(format!("{e:#}")),
@@ -641,28 +667,41 @@ fn fail_err(req: Request, enqueued: Instant, e: &crate::error::Error, retries: u
     }
 }
 
-fn fail(req: Request, enqueued: Instant, msg: String) -> Response {
-    fail_err(req, enqueued, &crate::error::Error::msg(msg), 0)
+fn fail(req: Request, enqueued_ns: u64, msg: String, now_ns: u64) -> Response {
+    fail_err(req, enqueued_ns, &crate::error::Error::msg(msg), 0, now_ns)
 }
 
 /// Retire an in-flight slot as failed, keeping its queue/occupancy
 /// accounting (unlike [`fail_err`], the request was admitted and consumed
-/// `slot.t` steps before the error).
-fn slot_failed(slot: Slot, e: &crate::error::Error) -> Response {
-    let now = Instant::now();
-    Response {
+/// `slot.t` steps before the error). Returns the response plus the
+/// failure-annotated trace.
+fn slot_failed(slot: Slot, e: &crate::error::Error, now_ns: u64) -> (Response, Trace) {
+    let mut span = slot.span;
+    span.retired_ns = now_ns;
+    let response = Response {
         id: slot.req.id,
         session: slot.req.session.clone(),
         adapter: slot.req.adapter,
         prompt_len: slot.req.prompt.len(),
         output: Vec::new(),
-        queued_s: slot.admitted.duration_since(slot.enqueued).as_secs_f64(),
-        total_s: now.duration_since(slot.enqueued).as_secs_f64(),
+        queued_s: secs_between(span.enqueued_ns, span.admitted_ns),
+        total_s: secs_between(span.enqueued_ns, now_ns),
         steps: slot.t as u64,
         finish: failed_reason(e.kind()),
         error: Some(format!("{e:#}")),
         retries: slot.attempts as u64,
-    }
+    };
+    let trace = Trace {
+        id: response.id,
+        adapter: response.adapter.clone(),
+        prompt_len: response.prompt_len,
+        new_tokens: 0,
+        steps: response.steps,
+        retries: slot.attempts,
+        finish: response.finish.label(),
+        span,
+    };
+    (response, trace)
 }
 
 /// Outcome of a session resurrection attempt on a freshly admitted row.
@@ -725,6 +764,7 @@ fn try_resume_row(
     }
     slot.t = consumed;
     cur.data[r] = slot.req.prompt[h] as i32;
+    slot.span.resurrected = true;
     Resume::Resumed
 }
 
@@ -761,7 +801,8 @@ enum SharedAdmit {
 /// A queued request plus its lifecycle bookkeeping.
 struct QueueEntry {
     req: Request,
-    enqueued: Instant,
+    /// Clock stamp at submission ([`Clock::now_ns`]).
+    enqueued_ns: u64,
     /// Tick the request was submitted on (deadline + fairness input).
     submit_tick: u64,
     /// Requeues so far (transient factory errors, shared-batch demotions).
@@ -814,6 +855,23 @@ pub struct Scheduler<'a> {
     /// Called once at the top of every [`Scheduler::tick`] — the server
     /// uses it to advance the registry circuit breaker's probation clock.
     tick_hook: Option<Box<dyn Fn() + 'a>>,
+    /// The clock every span stamp reads ([`WallClock`] by default;
+    /// [`Scheduler::set_clock`] installs a [`crate::obs::VirtualClock`]
+    /// for deterministic traced runs). ONE read per tick, threaded to
+    /// every stamp taken during it.
+    clock: Arc<dyn Clock>,
+    /// Ring of recently retired request traces (admitted requests only;
+    /// never-admitted failures carry no timeline).
+    traces: TraceRing,
+    /// True when the previous tick made no progress (no admission, no
+    /// decode step, no prefill dispatch, nothing retired) — the server's
+    /// idle-backoff signal.
+    last_tick_idle: bool,
+    /// Ticks that made no progress (published as the `sched.idle_ticks`
+    /// gauge).
+    pub idle_ticks: u64,
+    /// Successful slot admissions (merged lanes + the shared batch).
+    pub admissions: u64,
     /// Total decode steps executed (across all lanes; the shared lane
     /// counts ONE step per tick however many adapters its rows mix).
     pub decode_steps: u64,
@@ -869,6 +927,11 @@ impl<'a> Scheduler<'a> {
             merged_fallback: None,
             sessions: None,
             tick_hook: None,
+            clock: Arc::new(WallClock::new()),
+            traces: TraceRing::new(crate::knobs::obs_trace_cap()),
+            last_tick_idle: false,
+            idle_ticks: 0,
+            admissions: 0,
             decode_steps: 0,
             ticks: 0,
             prefill_dispatches: 0,
@@ -894,6 +957,55 @@ impl<'a> Scheduler<'a> {
     /// The installed session store, if any.
     pub fn session_store(&self) -> Option<&Arc<SessionStore>> {
         self.sessions.as_ref()
+    }
+
+    /// Install the clock span stamps read (default: [`WallClock`]).
+    /// Tests and `bench serving` install a [`crate::obs::VirtualClock`]
+    /// so traced runs are byte-identical run to run.
+    pub fn set_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.clock = clock;
+    }
+
+    /// Resize the trace ring (default: the `SSM_PEFT_OBS_TRACE_CAP` knob).
+    /// Existing traces are dropped.
+    pub fn set_trace_capacity(&mut self, cap: usize) {
+        self.traces = TraceRing::new(cap);
+    }
+
+    /// The ring of recently retired request traces.
+    pub fn traces(&self) -> &TraceRing {
+        &self.traces
+    }
+
+    /// Did the previous [`Scheduler::tick`] make no progress? The serve
+    /// loop uses this to park with a bounded backoff instead of busy-
+    /// spinning through unproductive ticks.
+    pub fn last_tick_idle(&self) -> bool {
+        self.last_tick_idle
+    }
+
+    /// Publish the scheduler's counters/gauges into a metrics registry
+    /// (instrument names: rust/docs/observability.md § Registry).
+    pub fn publish_metrics(&self, m: &crate::obs::Metrics) {
+        m.counter("sched.ticks").set(self.ticks);
+        m.counter("sched.decode_steps").set(self.decode_steps);
+        m.counter("sched.admissions").set(self.admissions);
+        m.counter("sched.prefill_dispatches").set(self.prefill_dispatches);
+        m.counter("sched.prefill_tokens").set(self.prefill_tokens);
+        m.counter("sched.step_faults").set(self.step_faults);
+        m.counter("sched.step_retries").set(self.step_retries);
+        m.counter("sched.demotions").set(self.demotions);
+        m.counter("sched.deadline_failures").set(self.deadline_failures);
+        m.counter("sched.session_resurrections").set(self.session_resurrections);
+        m.counter("sched.session_fallbacks").set(self.session_fallbacks);
+        m.counter("sched.session_persists").set(self.session_persists);
+        m.counter("sched.session_persist_failures")
+            .set(self.session_persist_failures);
+        m.counter("sched.traces_recorded").set(self.traces.pushed());
+        m.gauge("sched.max_admit_wait_ticks").set(self.max_admit_wait_ticks);
+        m.gauge("sched.idle_ticks").set(self.idle_ticks);
+        m.gauge("sched.queued").set(self.queue.len() as u64);
+        m.gauge("sched.active").set(self.active() as u64);
     }
 
     /// Install the [`RetireHook`] (shared-delta release notifications).
@@ -949,7 +1061,7 @@ impl<'a> Scheduler<'a> {
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(QueueEntry {
             req,
-            enqueued: Instant::now(),
+            enqueued_ns: self.clock.now_ns(),
             submit_tick: self.ticks,
             attempts: 0,
             demoted: false,
@@ -986,15 +1098,18 @@ impl<'a> Scheduler<'a> {
     /// don't fit stay queued (in order) without blocking later requests
     /// for other adapters. Beam requests run to completion here (dedicated
     /// pass).
-    fn admit(&mut self, out: &mut Vec<Response>) {
+    fn admit(&mut self, out: &mut Vec<Response>, now: u64) {
         let store = self.sessions.clone();
         let mut still_queued = VecDeque::new();
         while let Some(entry) = self.queue.pop_front() {
-            let QueueEntry { req, enqueued: enq, submit_tick, attempts, demoted } =
+            let QueueEntry { req, enqueued_ns: enq, submit_tick, attempts, demoted } =
                 entry;
             if req.beam > 1 {
                 match self.run_beam(&req) {
                     Ok(bytes) => {
+                        // a beam pass runs synchronously: re-read the
+                        // clock so total_s covers the pass itself
+                        let done = self.clock.now_ns();
                         let n = (req.prompt.len() + bytes.len() + 1) as u64;
                         let stopped = bytes.len() < req.max_new;
                         out.push(Response {
@@ -1003,8 +1118,8 @@ impl<'a> Scheduler<'a> {
                             adapter: req.adapter,
                             prompt_len: req.prompt.len(),
                             output: bytes,
-                            queued_s: enq.elapsed().as_secs_f64(),
-                            total_s: enq.elapsed().as_secs_f64(),
+                            queued_s: secs_between(enq, done),
+                            total_s: secs_between(enq, done),
                             steps: n,
                             finish: if stopped {
                                 FinishReason::Stop
@@ -1015,20 +1130,27 @@ impl<'a> Scheduler<'a> {
                             retries: 0,
                         });
                     }
-                    Err(e) => out.push(fail_err(req, enq, &e, 0)),
+                    Err(e) => {
+                        let done = self.clock.now_ns();
+                        out.push(fail_err(req, enq, &e, 0, done));
+                    }
                 }
                 continue;
             }
             let wait = self.ticks.saturating_sub(submit_tick);
+            let mut span = Span::started(enq, now);
+            span.demoted = demoted;
             // 1) a merged lane already exists for this adapter
             if self.lanes.contains_key(&req.adapter) {
                 let Some(lane) = self.lanes.get_mut(&req.adapter) else { continue };
                 if lane.free_slot().is_some() {
-                    match lane.admit(req, enq, submit_tick, attempts) {
+                    match lane.admit(req, span, submit_tick, attempts) {
                         Err((req, e)) => {
-                            out.push(fail(req, enq, format!("admit failed: {e:#}")));
+                            out.push(fail(req, enq, format!("admit failed: {e:#}"),
+                                          now));
                         }
                         Ok(r) => {
+                            self.admissions += 1;
                             self.max_admit_wait_ticks =
                                 self.max_admit_wait_ticks.max(wait);
                             if let Some(store) = &store {
@@ -1042,7 +1164,7 @@ impl<'a> Scheduler<'a> {
                     }
                 } else {
                     still_queued.push_back(QueueEntry {
-                        req, enqueued: enq, submit_tick, attempts, demoted,
+                        req, enqueued_ns: enq, submit_tick, attempts, demoted,
                     }); // backpressure
                 }
                 continue;
@@ -1052,7 +1174,7 @@ impl<'a> Scheduler<'a> {
             // consulting the factory (the pre-shared contract).
             if self.shared.is_none() && !self.merged_capacity() {
                 still_queued.push_back(QueueEntry {
-                    req, enqueued: enq, submit_tick, attempts, demoted,
+                    req, enqueued_ns: enq, submit_tick, attempts, demoted,
                 });
                 continue;
             }
@@ -1061,7 +1183,7 @@ impl<'a> Scheduler<'a> {
                     ErrorKind::Exhausted,
                     format!("request retry budget ({REQUEST_RETRY_BUDGET}) exhausted"),
                 );
-                out.push(fail_err(req, enq, &e, attempts as u64));
+                out.push(fail_err(req, enq, &e, attempts as u64, now));
                 continue;
             }
             // A demoted request bypasses the factory's Shared mapping: its
@@ -1085,13 +1207,13 @@ impl<'a> Scheduler<'a> {
                     if e.kind().is_transient() && attempts < REQUEST_RETRY_BUDGET {
                         still_queued.push_back(QueueEntry {
                             req,
-                            enqueued: enq,
+                            enqueued_ns: enq,
                             submit_tick,
                             attempts: attempts + 1,
                             demoted,
                         });
                     } else {
-                        out.push(fail_err(req, enq, &e, attempts as u64));
+                        out.push(fail_err(req, enq, &e, attempts as u64, now));
                     }
                 }
                 Ok(ServeModel::Merged(lm)) => {
@@ -1111,7 +1233,8 @@ impl<'a> Scheduler<'a> {
                                 // when the shared lane exists alongside a
                                 // full merged-lane table)
                                 still_queued.push_back(QueueEntry {
-                                    req, enqueued: enq, submit_tick, attempts, demoted,
+                                    req, enqueued_ns: enq, submit_tick, attempts,
+                                    demoted,
                                 });
                                 continue;
                             }
@@ -1121,11 +1244,13 @@ impl<'a> Scheduler<'a> {
                         .lanes
                         .entry(req.adapter.clone())
                         .or_insert_with(|| Lane::new(lm));
-                    match lane.admit(req, enq, submit_tick, attempts) {
+                    match lane.admit(req, span, submit_tick, attempts) {
                         Err((req, e)) => {
-                            out.push(fail(req, enq, format!("admit failed: {e:#}")));
+                            out.push(fail(req, enq, format!("admit failed: {e:#}"),
+                                          now));
                         }
                         Ok(r) => {
+                            self.admissions += 1;
                             self.max_admit_wait_ticks =
                                 self.max_admit_wait_ticks.max(wait);
                             if let Some(store) = &store {
@@ -1145,7 +1270,8 @@ impl<'a> Scheduler<'a> {
                     let adapter = req.adapter.clone();
                     let placed = match self.shared.as_mut() {
                         Some(sl) if sl.free_slot().is_some() => {
-                            match sl.admit(req, enq, submit_tick, attempts, delta, h0) {
+                            match sl.admit(req, span, submit_tick, attempts, delta, h0)
+                            {
                                 Ok(r) => SharedAdmit::Admitted(r),
                                 Err((req, e)) => SharedAdmit::Failed(req, e),
                             }
@@ -1154,6 +1280,7 @@ impl<'a> Scheduler<'a> {
                     };
                     match placed {
                         SharedAdmit::Admitted(r) => {
+                            self.admissions += 1;
                             self.max_admit_wait_ticks =
                                 self.max_admit_wait_ticks.max(wait);
                             if let (Some(store), Some(sl)) =
@@ -1169,12 +1296,15 @@ impl<'a> Scheduler<'a> {
                         SharedAdmit::Failed(req, e) => {
                             // the delta never made it onto a row
                             self.release(&adapter);
-                            out.push(fail(req, enq, format!("admit failed: {e:#}")));
+                            out.push(fail(
+                                req, enq, format!("admit failed: {e:#}"), now,
+                            ));
                         }
                         SharedAdmit::Full(req) => {
                             self.release(&adapter);
                             still_queued.push_back(QueueEntry {
-                                req, enqueued: enq, submit_tick, attempts, demoted,
+                                req, enqueued_ns: enq, submit_tick, attempts,
+                                demoted,
                             });
                         }
                     }
@@ -1240,7 +1370,7 @@ impl<'a> Scheduler<'a> {
     /// Deadline watchdog: retire every queued or resident request whose
     /// tick budget expired, before admission or decode spends work on it.
     /// `deadline == 0` means no deadline (the default).
-    fn enforce_deadlines(&mut self, out: &mut Vec<Response>) {
+    fn enforce_deadlines(&mut self, out: &mut Vec<Response>, now: u64) {
         let ticks = self.ticks;
         let expired = |deadline: usize, submit: u64| {
             deadline > 0 && ticks.saturating_sub(submit) >= deadline as u64
@@ -1257,8 +1387,8 @@ impl<'a> Scheduler<'a> {
             if expired(entry.req.deadline, entry.submit_tick) {
                 self.deadline_failures += 1;
                 let e = budget_err(entry.req.deadline);
-                out.push(fail_err(entry.req, entry.enqueued, &e,
-                                  entry.attempts as u64));
+                out.push(fail_err(entry.req, entry.enqueued_ns, &e,
+                                  entry.attempts as u64, now));
             } else {
                 self.queue.push_back(entry);
             }
@@ -1269,7 +1399,11 @@ impl<'a> Scheduler<'a> {
                 if slot.as_ref().is_some_and(|s| expired(s.req.deadline, s.submit_tick)) {
                     if let Some(s) = slot.take() {
                         self.deadline_failures += 1;
-                        out.push(slot_failed(s, &budget_err(s.req.deadline)));
+                        let deadline = s.req.deadline;
+                        let (resp, trace) =
+                            slot_failed(s, &budget_err(deadline), now);
+                        self.traces.push(trace);
+                        out.push(resp);
                     }
                 }
             }
@@ -1287,7 +1421,11 @@ impl<'a> Scheduler<'a> {
                         sl.rows[r] = None;
                         self.deadline_failures += 1;
                         released.push(s.req.adapter.clone());
-                        out.push(slot_failed(s, &budget_err(s.req.deadline)));
+                        let deadline = s.req.deadline;
+                        let (resp, trace) =
+                            slot_failed(s, &budget_err(deadline), now);
+                        self.traces.push(trace);
+                        out.push(resp);
                     }
                 }
             }
@@ -1307,10 +1445,16 @@ impl<'a> Scheduler<'a> {
         if let Some(hook) = &self.tick_hook {
             hook();
         }
+        // one clock read per tick: every span stamped this tick shares it,
+        // so tracing adds no per-row clock syscalls to the hot path
+        let now = self.clock.now_ns();
+        let steps_before = self.decode_steps;
+        let prefill_before = self.prefill_dispatches;
+        let admissions_before = self.admissions;
         let store = self.sessions.clone();
         let mut out = Vec::new();
-        self.enforce_deadlines(&mut out);
-        self.admit(&mut out);
+        self.enforce_deadlines(&mut out, now);
+        self.admit(&mut out, now);
         let adapters: Vec<String> = self
             .lanes
             .iter()
@@ -1333,7 +1477,7 @@ impl<'a> Scheduler<'a> {
                     .ok(),
                 None => None,
             };
-            match lane.step() {
+            match lane.step(now) {
                 Ok(retired) => {
                     self.decode_steps += 1;
                     lane.attempts = 0;
@@ -1362,6 +1506,7 @@ impl<'a> Scheduler<'a> {
                                 Err(_) => self.session_persist_failures += 1,
                             }
                         }
+                        self.traces.push(t.trace);
                         out.push(t.response);
                     }
                 }
@@ -1386,7 +1531,9 @@ impl<'a> Scheduler<'a> {
                         }
                         let e = e.context("decode step failed");
                         for slot in lane.slots.iter_mut().filter_map(Option::take) {
-                            out.push(slot_failed(slot, &e));
+                            let (resp, trace) = slot_failed(slot, &e, now);
+                            self.traces.push(trace);
+                            out.push(resp);
                         }
                         self.lanes.remove(&a);
                     }
@@ -1408,7 +1555,7 @@ impl<'a> Scheduler<'a> {
                             .ok(),
                         None => None,
                     };
-                    let res = sl.step();
+                    let res = sl.step(now);
                     let rolled = res.is_err()
                         && ck.as_ref().is_some_and(|c| sl.state.rollback(c).is_ok());
                     Some((res, rolled))
@@ -1450,6 +1597,7 @@ impl<'a> Scheduler<'a> {
                 }
                 for t in retired {
                     self.release(&t.response.adapter);
+                    self.traces.push(t.trace);
                     out.push(t.response);
                 }
             }
@@ -1483,8 +1631,8 @@ impl<'a> Scheduler<'a> {
                         for slot in slots.into_iter().rev() {
                             self.release(&slot.req.adapter);
                             self.queue.push_front(QueueEntry {
+                                enqueued_ns: slot.span.enqueued_ns,
                                 req: slot.req,
-                                enqueued: slot.enqueued,
                                 submit_tick: slot.submit_tick,
                                 attempts: slot.attempts + 1,
                                 demoted: true,
@@ -1499,13 +1647,26 @@ impl<'a> Scheduler<'a> {
                     if let Some(mut sl) = self.shared.take() {
                         for slot in sl.slots.iter_mut().filter_map(Option::take) {
                             let adapter = slot.req.adapter.clone();
-                            out.push(slot_failed(slot, &e));
+                            let (resp, trace) = slot_failed(slot, &e, now);
+                            self.traces.push(trace);
+                            out.push(resp);
                             self.release(&adapter);
                         }
                     }
                 }
             }
             None => {}
+        }
+        // a tick that produced nothing and moved nothing is idle — the
+        // server's parked backoff (rust/docs/observability.md § Idle
+        // backoff) keys off this instead of busy-spinning
+        let idle = out.is_empty()
+            && self.decode_steps == steps_before
+            && self.prefill_dispatches == prefill_before
+            && self.admissions == admissions_before;
+        self.last_tick_idle = idle;
+        if idle {
+            self.idle_ticks += 1;
         }
         self.ticks += 1;
         out
@@ -1547,22 +1708,28 @@ impl<'a> Scheduler<'a> {
     /// The max-tick budget ran out: fail everything still queued or
     /// resident (shared rows release their pins) and drop the batches.
     fn drain_failed(&mut self, out: &mut Vec<Response>) {
+        let now = self.clock.now_ns();
         let e = crate::error::Error::new(
             ErrorKind::Exhausted,
             format!("scheduler tick budget ({}) exhausted", self.max_run_ticks),
         );
         while let Some(entry) = self.queue.pop_front() {
-            out.push(fail_err(entry.req, entry.enqueued, &e, entry.attempts as u64));
+            out.push(fail_err(entry.req, entry.enqueued_ns, &e,
+                              entry.attempts as u64, now));
         }
         for (_, mut lane) in std::mem::take(&mut self.lanes) {
             for slot in lane.slots.iter_mut().filter_map(Option::take) {
-                out.push(slot_failed(slot, &e));
+                let (resp, trace) = slot_failed(slot, &e, now);
+                self.traces.push(trace);
+                out.push(resp);
             }
         }
         if let Some(mut sl) = self.shared.take() {
             for slot in sl.slots.iter_mut().filter_map(Option::take) {
                 let adapter = slot.req.adapter.clone();
-                out.push(slot_failed(slot, &e));
+                let (resp, trace) = slot_failed(slot, &e, now);
+                self.traces.push(trace);
+                out.push(resp);
                 self.release(&adapter);
             }
         }
@@ -2638,5 +2805,111 @@ mod tests {
         assert!(!reg.is_quarantined("flaky"));
         let st = reg.stats();
         assert_eq!((st.probations, st.reinstated), (2, 1));
+    }
+
+    #[test]
+    fn idle_tick_is_flagged_and_queued_request_admits_next_tick() {
+        // regression for the parked-backoff serve loop: an unproductive
+        // tick must raise the idle flag, and a request arriving while
+        // parked must be admitted by the very next tick — backoff can
+        // delay polling, never admission.
+        let mut s = Scheduler::new(counter_factory(2), 2);
+        assert!(!s.last_tick_idle(), "fresh scheduler has not ticked");
+        s.tick();
+        s.tick();
+        assert!(s.last_tick_idle());
+        assert_eq!(s.idle_ticks, 2);
+        s.submit(req(1, "a", vec![10], 2, 0));
+        s.tick();
+        assert!(!s.last_tick_idle(), "admission tick is not idle");
+        assert_eq!(s.admissions, 1);
+        let out = s.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(s.idle_ticks, 2, "productive ticks never count as idle");
+        assert_eq!(s.traces().len(), 1, "the retired request left a trace");
+    }
+
+    #[test]
+    fn virtual_clock_traces_are_byte_identical_across_runs() {
+        // acceptance: under a VirtualClock the span timeline is a pure
+        // function of the tick sequence, so the emitted trace JSON is
+        // byte-identical run to run
+        let run = || {
+            let clock = Arc::new(crate::obs::VirtualClock::new());
+            let mut s = Scheduler::new(counter_factory(2), 2);
+            s.set_clock(clock.clone());
+            s.submit(req(1, "a", vec![10, 20], 3, 0));
+            s.submit(req(2, "b", vec![30], 2, 0));
+            let mut out = Vec::new();
+            while !s.is_idle() {
+                clock.advance_ticks(1);
+                out.append(&mut s.tick());
+            }
+            assert_eq!(out.len(), 2);
+            crate::json::emit(&s.traces().to_json())
+        };
+        let a = run();
+        assert_eq!(a, run(), "trace JSON must not vary across runs");
+        // the timeline is in whole virtual ticks and well-ordered
+        let v = crate::json::parse(&a).expect("trace json parses");
+        for t in v.as_arr().expect("trace array") {
+            let ns = |k: &str| t.get(k).and_then(|x| x.as_usize()).expect(k) as u64;
+            assert_eq!(ns("enqueued_ns") % crate::obs::TICK_NS, 0);
+            assert!(ns("admitted_ns") >= ns("enqueued_ns"));
+            assert!(ns("first_token_ns") >= ns("admitted_ns"));
+            assert!(ns("retired_ns") >= ns("first_token_ns"));
+            assert!(ns("ttft_ns") > 0, "first token was produced");
+        }
+    }
+
+    #[test]
+    fn tracing_is_dispatch_neutral_across_clocks() {
+        // acceptance pin: with no stats consumer attached, tracing adds
+        // zero model dispatches — the same workload under the wall clock
+        // and the virtual clock issues identical step/chunk counts and
+        // byte-identical outputs (only timestamps differ)
+        let run = |virt: bool| {
+            let model = Arc::new(Accum::new(2, &[]));
+            let mut s = Scheduler::new(accum_factory(model.clone()), 2);
+            if virt {
+                s.set_clock(Arc::new(crate::obs::VirtualClock::new()));
+            }
+            for id in 0..4u64 {
+                let adapter = if id % 2 == 0 { "a" } else { "b" };
+                s.submit(req(id, adapter, vec![id as u8 + 1; 3], 4, 255));
+            }
+            let mut out = s.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            let bytes: Vec<Vec<u8>> = out.iter().map(|r| r.output.clone()).collect();
+            (
+                bytes,
+                model.steps.load(Ordering::Relaxed),
+                model.chunks.load(Ordering::Relaxed),
+                s.traces().len(),
+            )
+        };
+        let wall = run(false);
+        let virt = run(true);
+        assert_eq!(wall, virt, "clock choice changes timestamps only");
+        assert_eq!(wall.3, 4, "every retired request leaves a trace");
+    }
+
+    #[test]
+    fn publish_metrics_mirrors_scheduler_counters() {
+        let m = crate::obs::Metrics::new();
+        let mut s = Scheduler::new(counter_factory(2), 2);
+        s.submit(req(1, "a", vec![10], 2, 0));
+        let out = s.run_to_completion();
+        assert_eq!(out.len(), 1);
+        s.publish_metrics(&m);
+        let snap = m.snapshot();
+        let counters = snap.path("counters").expect("counters section");
+        let c = |k: &str| counters.get(k).and_then(|v| v.as_usize()).expect(k);
+        assert_eq!(c("sched.admissions"), 1);
+        assert_eq!(c("sched.traces_recorded"), 1);
+        assert_eq!(c("sched.decode_steps"), s.decode_steps as usize);
+        assert_eq!(c("sched.ticks"), s.ticks as usize);
+        let gauges = snap.path("gauges").expect("gauges section");
+        assert_eq!(gauges.get("sched.queued").and_then(|v| v.as_usize()), Some(0));
     }
 }

@@ -166,6 +166,37 @@ struct WireRequest {
 const REQUEST_KEYS: &[&str] =
     &["id", "adapter", "prompt", "max_new", "stop", "beam", "deadline", "session"];
 
+/// Allowed keys of a `{"cmd": ...}` control line.
+const COMMAND_KEYS: &[&str] = &["cmd", "id"];
+
+/// Detect a control line. `None` = not a command (a normal generation
+/// request, or not JSON — both handled by [`parse_request`]).
+/// `Some(Ok(client_id))` = a well-formed `{"cmd": "stats"}` line;
+/// `Some(Err(_))` = a command with an unknown `cmd` or extra keys —
+/// rejected loudly, mirroring the request contract
+/// (rust/docs/serving.md § Stats).
+fn parse_stats_command(line: &str) -> Option<Result<Value>> {
+    let v = json::parse(line).ok()?;
+    let obj = match &v {
+        Value::Obj(m) => m,
+        _ => return None,
+    };
+    let cmd = obj.get("cmd")?.clone();
+    let parsed = (|| {
+        let cmd = cmd.as_str().ok_or_else(|| err!("cmd: expected string"))?;
+        if cmd != "stats" {
+            bail!("unknown cmd {cmd:?} (expected \"stats\")");
+        }
+        for k in obj.keys() {
+            if !COMMAND_KEYS.contains(&k.as_str()) {
+                bail!("unknown command key {k:?} (expected one of {COMMAND_KEYS:?})");
+            }
+        }
+        Ok(obj.get("id").cloned().unwrap_or(Value::Null))
+    })();
+    Some(parsed)
+}
+
 fn parse_request(line: &str, default_max_new: usize) -> Result<WireRequest> {
     let v = json::parse(line).map_err(|e| err!("bad request JSON: {e}"))?;
     let obj = match &v {
@@ -477,8 +508,49 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
     let mut inflight: HashMap<u64, (Value, Sink)> = HashMap::new();
     let mut next_id = 1u64;
     let mut served = 0usize;
+    // the observability registry: scheduler/registry/session/fault counters
+    // republished on demand, latency histograms fed from retired traces
+    // (rust/docs/observability.md). With no stats consumer the only hot-
+    // path cost is the span stamps the scheduler records anyway.
+    let metrics = crate::obs::Metrics::new();
+    let ttft_hist = metrics.histogram("serve.ttft_ns");
+    let itl_hist = metrics.histogram("serve.itl_ns");
+    let queued_hist = metrics.histogram("serve.queued_ns");
+    let mut trace_cursor = 0u64;
+    let publish_all = |sched: &Scheduler| {
+        sched.publish_metrics(&metrics);
+        registry.stats().publish(&metrics);
+        sessions.stats().publish(&metrics);
+        if let Some(p) = &fault_plan {
+            p.publish(&metrics);
+        }
+        if let Some(core) = &shared_core {
+            core.publish_metrics(&metrics);
+        }
+    };
     let mut ingest = |line: String, sink: Sink,
                       sched: &mut Scheduler, inflight: &mut HashMap<u64, (Value, Sink)>| {
+        if let Some(cmd) = parse_stats_command(&line) {
+            match cmd {
+                Ok(client_id) => {
+                    publish_all(sched);
+                    let v = json::obj(vec![
+                        ("id", client_id),
+                        ("stats", metrics.snapshot()),
+                        ("traces", sched.traces().to_json()),
+                    ]);
+                    sink.send(&json::emit(&v));
+                }
+                Err(e) => {
+                    let v = json::obj(vec![
+                        ("error", json::s(&format!("{e:#}"))),
+                        ("finish", json::s("error")),
+                    ]);
+                    sink.send(&json::emit(&v));
+                }
+            }
+            return;
+        }
         match parse_request(&line, opts.default_max_new) {
             Ok(w) => {
                 let id = next_id;
@@ -505,6 +577,13 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
         }
     };
 
+    // parked backoff between unproductive ticks: a scheduler that has
+    // work resident but makes no progress (lane cooldowns, probation
+    // windows) used to busy-spin here; now it sleeps a bounded,
+    // exponentially growing interval instead. Arriving requests are
+    // still admitted on the very next tick after the sleep.
+    let backoff_cap_us = crate::knobs::obs_idle_backoff_us();
+    let mut idle_streak = 0u32;
     loop {
         if sched.is_idle() {
             // nothing to decode: block for the next request (or exit when
@@ -513,6 +592,10 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
                 Ok((line, sink)) => ingest(line, sink, &mut sched, &mut inflight),
                 Err(_) => break,
             }
+        } else if sched.last_tick_idle() && backoff_cap_us > 0 {
+            idle_streak = idle_streak.saturating_add(1);
+            let us = (1u64 << idle_streak.min(10)).min(backoff_cap_us);
+            std::thread::sleep(std::time::Duration::from_micros(us));
         }
         while let Ok((line, sink)) = rx.try_recv() {
             ingest(line, sink, &mut sched, &mut inflight);
@@ -540,6 +623,21 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
                 sched.active(),
             );
         }
+        if !sched.last_tick_idle() {
+            idle_streak = 0;
+        }
+        // fold this tick's retired traces into the latency histograms
+        // (cursor-based: each trace is recorded exactly once)
+        for t in sched.traces().since(trace_cursor) {
+            queued_hist.record(t.span.queued_ns());
+            if t.span.first_token_ns > 0 {
+                ttft_hist.record(t.span.ttft_ns());
+                if t.new_tokens >= 2 {
+                    itl_hist.record(t.span.decode_ns() / (t.new_tokens as u64 - 1));
+                }
+            }
+        }
+        trace_cursor = sched.traces().pushed();
     }
     // graceful drain (stdin EOF / every source hung up): retire whatever
     // is still in flight — retirement persists its session snapshot —
@@ -555,6 +653,34 @@ pub fn run(engine: &Engine, manifest: &Manifest, opts: &ServeOptions) -> Result<
                 .to_json())
             .ok();
         served += 1;
+    }
+    // final metrics dump: fold the drained traces in, republish every
+    // producer, and write the whole snapshot + trace ring to
+    // results/METRICS_serve.json (schema: rust/docs/observability.md)
+    for t in sched.traces().since(trace_cursor) {
+        queued_hist.record(t.span.queued_ns());
+        if t.span.first_token_ns > 0 {
+            ttft_hist.record(t.span.ttft_ns());
+            if t.new_tokens >= 2 {
+                itl_hist.record(t.span.decode_ns() / (t.new_tokens as u64 - 1));
+            }
+        }
+    }
+    publish_all(&sched);
+    let dump = json::obj(vec![
+        ("schema", json::num(1.0)),
+        ("serve", json::s(&opts.stats_name)),
+        ("git", json::s(&git)),
+        ("metrics", metrics.snapshot()),
+        ("traces", sched.traces().to_json()),
+    ]);
+    let metrics_path = crate::results_dir().join("METRICS_serve.json");
+    match std::fs::write(&metrics_path, json::emit(&dump)) {
+        Ok(()) => eprintln!("[serve] metrics written to {}", metrics_path.display()),
+        Err(e) => eprintln!(
+            "[serve] warning: failed to write {}: {e}",
+            metrics_path.display()
+        ),
     }
     let st = registry.stats();
     eprintln!(
@@ -692,6 +818,65 @@ mod tests {
         // round-trips through the emitter
         let back = json::parse(&json::emit(&rec)).unwrap();
         assert_eq!(back.path("adapter").unwrap().as_str(), Some("a_lora_lin"));
+    }
+
+    #[test]
+    fn stats_command_contract() {
+        // normal requests and non-JSON lines are not commands
+        assert!(parse_stats_command(r#"{"adapter": "a", "prompt": "x"}"#).is_none());
+        assert!(parse_stats_command("not json").is_none());
+        // well-formed stats command, with and without a client id
+        let id = parse_stats_command(r#"{"cmd": "stats", "id": 3}"#)
+            .expect("is a command")
+            .expect("is well-formed");
+        assert_eq!(id, Value::Num(3.0));
+        let id = parse_stats_command(r#"{"cmd": "stats"}"#).unwrap().unwrap();
+        assert_eq!(id, Value::Null);
+        // unknown-key rejection is preserved on the command path
+        assert!(
+            parse_stats_command(r#"{"cmd": "stats", "nope": 1}"#).unwrap().is_err(),
+            "unknown command keys fail loudly"
+        );
+        assert!(
+            parse_stats_command(r#"{"cmd": "reset"}"#).unwrap().is_err(),
+            "unknown cmd fails loudly"
+        );
+        assert!(
+            parse_stats_command(r#"{"cmd": 7}"#).unwrap().is_err(),
+            "non-string cmd fails loudly"
+        );
+    }
+
+    #[test]
+    fn stats_reply_shape_round_trips() {
+        // the reply the ingest path sends for {"cmd":"stats"}: metrics
+        // snapshot + trace ring, keyed by the echoed client id
+        let m = crate::obs::Metrics::new();
+        m.counter("sched.ticks").set(4);
+        m.histogram("serve.ttft_ns").record(2_000_000);
+        let mut ring = crate::obs::TraceRing::new(4);
+        ring.push(crate::obs::Trace {
+            id: 1,
+            adapter: "a".into(),
+            prompt_len: 2,
+            new_tokens: 3,
+            steps: 5,
+            retries: 0,
+            finish: "stop",
+            span: crate::obs::Span::started(0, 1_000_000),
+        });
+        let v = json::obj(vec![
+            ("id", Value::Num(9.0)),
+            ("stats", m.snapshot()),
+            ("traces", ring.to_json()),
+        ]);
+        let back = json::parse(&json::emit(&v)).unwrap();
+        assert_eq!(back.path("id").unwrap().as_usize(), Some(9));
+        let counters = back.path("stats").unwrap().path("counters").unwrap();
+        assert_eq!(counters.get("sched.ticks").unwrap().as_usize(), Some(4));
+        let traces = back.path("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].get("adapter").unwrap().as_str(), Some("a"));
     }
 
     #[test]

@@ -254,6 +254,21 @@ pub struct SessionStats {
     pub load_failures: u64,
 }
 
+impl SessionStats {
+    /// Publish this snapshot into a metrics registry under `sessions.*`
+    /// (instrument names: rust/docs/observability.md § Registry).
+    pub fn publish(&self, m: &crate::obs::Metrics) {
+        m.counter("sessions.hits").set(self.hits);
+        m.counter("sessions.misses").set(self.misses);
+        m.counter("sessions.spills").set(self.spills);
+        m.counter("sessions.quarantined").set(self.quarantined);
+        m.counter("sessions.persist_failures").set(self.persist_failures);
+        m.counter("sessions.load_failures").set(self.load_failures);
+        m.gauge("sessions.resident").set(self.resident as u64);
+        m.gauge("sessions.resident_bytes").set(self.resident_bytes as u64);
+    }
+}
+
 /// What the startup recovery scan found (see [`SessionStore::recover`]).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RecoveryReport {
